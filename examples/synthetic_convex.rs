@@ -1,0 +1,46 @@
+//! The paper's Figure-3 synthetic convex experiment, interactively:
+//! minimize f(w) = (w − 0.5)² for 1000 parameters under FP / LPT-DR /
+//! LPT-SR and watch the distributions + the DR stall counter.
+//!
+//! ```bash
+//! cargo run --release --example synthetic_convex
+//! ```
+
+use alpt::analysis::{run_convex, ConvexMode, ConvexSpec};
+
+fn main() {
+    let spec = ConvexSpec::default();
+    let record = [10usize, 100, 1000];
+    println!(
+        "=== Figure 3: f(w) = (w - 0.5)^2, {} params, delta = {}, \
+         eta = {} ===",
+        spec.n_params, spec.delta, spec.eta0
+    );
+    println!(
+        "(histograms span [{:.2}, {:.2}] around the optimum)\n",
+        spec.target - 0.15,
+        spec.target + 0.15
+    );
+
+    for mode in [ConvexMode::FullPrecision, ConvexMode::LptDr,
+                 ConvexMode::LptSr] {
+        let snaps = run_convex(&spec, mode, 1000, &record);
+        println!("--- {} ---", mode.name());
+        for s in &snaps {
+            println!(
+                "  t={:<5} mean obj {:.3e}  stalled {:>4}  |{}|",
+                s.iteration,
+                s.mean_obj,
+                s.stalled,
+                s.histogram.sparkline()
+            );
+        }
+        println!();
+    }
+    println!(
+        "Expected shape (paper §3.1): SR tracks FP and concentrates at the \
+         optimum; DR freezes once |eta grad| < delta/2 (Remark 1) and its \
+         histogram stops moving — the stalled counter saturates at {}.",
+        spec.n_params
+    );
+}

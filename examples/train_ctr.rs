@@ -1,0 +1,141 @@
+//! Config-driven training launcher — the "real" entrypoint a user would
+//! run for any Table-1/2/3 cell.
+//!
+//! ```bash
+//! cargo run --release --example train_ctr -- \
+//!     --dataset avazu --method alpt-sr --bits 8 --epochs 5 \
+//!     --samples 200000 --out results/alpt8_avazu.json
+//! # or from a config file (+ CLI overrides):
+//! cargo run --release --example train_ctr -- --config exp.toml --bits 4
+//! ```
+
+use alpt::cli::Args;
+use alpt::config::{Experiment, Method};
+use alpt::coordinator::Trainer;
+use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-runtime", "quiet"])?;
+
+    // config file first, CLI overrides second
+    let mut exp = if let Some(path) = args.get("config") {
+        let doc = alpt::config::toml::TomlDoc::parse_file(
+            std::path::Path::new(path),
+        )
+        .with_context(|| format!("reading {path}"))?;
+        Experiment::from_toml(&doc)?
+    } else {
+        Experiment::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        exp = exp.with_dataset_defaults(ds);
+    }
+    if let Some(m) = args.get("method") {
+        exp.method = Method::parse(m)?;
+    }
+    exp.bits = args.get_parse("bits", exp.bits)?;
+    exp.epochs = args.get_parse("epochs", exp.epochs)?;
+    exp.seed = args.get_parse("seed", exp.seed)?;
+    exp.n_samples = args.get_parse("samples", exp.n_samples)?;
+    exp.lr_delta = args.get_parse("lr-delta", exp.lr_delta)?;
+    exp.lr_emb = args.get_parse("lr-emb", exp.lr_emb)?;
+    exp.clip = args.get_parse("clip", exp.clip)?;
+    exp.vocab_scale = args.get_parse("vocab-scale", exp.vocab_scale)?;
+    if let Some(m) = args.get("model") {
+        exp.model = m.to_string();
+    }
+    if args.flag("no-runtime") {
+        exp.use_runtime = false;
+    }
+    let verbose = !args.flag("quiet");
+
+    // dataset
+    let spec = match exp.dataset.as_str() {
+        "avazu" => SyntheticSpec::avazu(exp.seed),
+        "criteo" => SyntheticSpec::criteo(exp.seed),
+        "tiny" => SyntheticSpec::tiny(exp.seed),
+        other => bail!("unknown dataset {other:?}"),
+    };
+    let spec = if (exp.vocab_scale - 1.0).abs() > 1e-9 {
+        spec.scale_vocabs(exp.vocab_scale)
+    } else {
+        spec
+    };
+    if verbose {
+        println!(
+            "generating {} samples of {} ({} fields, {} features)...",
+            exp.n_samples,
+            spec.name,
+            spec.vocabs.len(),
+            spec.vocabs.iter().map(|&v| v as u64).sum::<u64>()
+        );
+    }
+    let ds = generate(&spec, exp.n_samples);
+    let (train, val, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
+
+    // train
+    let mut trainer = Trainer::new(exp.clone(), ds.schema.n_features())?;
+    if verbose {
+        println!(
+            "training {} on {} ({} bits, model {}, {} epochs, runtime={})",
+            trainer.store.method_name(),
+            spec.name,
+            exp.bits,
+            exp.model,
+            exp.epochs,
+            trainer.uses_runtime()
+        );
+    }
+    let res = trainer.train(&train, &val, verbose)?;
+    let test_ev = trainer.evaluate(&test)?;
+
+    println!(
+        "\n{}: test auc {:.4}  logloss {:.5}  best-epoch {}  \
+         {:.1}s/epoch  train-compress {:.1}x  infer-compress {:.1}x",
+        res.method,
+        test_ev.auc,
+        test_ev.logloss,
+        res.best_epoch,
+        res.seconds_per_epoch,
+        res.train_compression,
+        res.infer_compression
+    );
+
+    // optional JSON dump
+    if let Some(out) = args.get("out") {
+        let history = Json::Array(
+            res.history
+                .iter()
+                .map(|h| {
+                    Json::obj(vec![
+                        ("epoch", Json::num(h.epoch as f64)),
+                        ("loss", Json::num(h.mean_loss)),
+                        ("val_auc", Json::num(h.val_auc)),
+                        ("val_logloss", Json::num(h.val_logloss)),
+                        ("seconds", Json::num(h.seconds)),
+                    ])
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("method", Json::str(res.method)),
+            ("dataset", Json::str(&spec.name)),
+            ("bits", Json::num(exp.bits as f64)),
+            ("test_auc", Json::num(test_ev.auc)),
+            ("test_logloss", Json::num(test_ev.logloss)),
+            ("best_epoch", Json::num(res.best_epoch as f64)),
+            ("seconds_per_epoch", Json::num(res.seconds_per_epoch)),
+            ("train_compression", Json::num(res.train_compression)),
+            ("infer_compression", Json::num(res.infer_compression)),
+            ("history", history),
+        ]);
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(out, doc.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+"""AOT compiler: lowers every (config x variant) step function to HLO text
+and writes the artifact manifest the Rust runtime consumes.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--configs tiny,avazu,criteo,avazu_d32,criteo_d32]
+
+Python runs exactly once, at build time. The Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, n_params, param_layout
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variant_signatures(cfg):
+    """(input specs, human-readable input names) per exported variant."""
+    u, d, b, f = cfg.umax, cfg.emb_dim, cfg.batch, cfg.fields
+    p = n_params(cfg)
+    m = cfg.mlp_mask_dim
+    i32 = jnp.int32
+    return {
+        "train_fp": (
+            [_spec((u, d)), _spec((b, f), i32), _spec((b,)), _spec((p,)),
+             _spec((b, m))],
+            ["emb", "idx", "labels", "params", "mlp_mask"],
+            ["loss", "logits", "d_emb", "d_params"],
+        ),
+        "train_lpt": (
+            [_spec((u, d), i32), _spec((u,)), _spec((b, f), i32),
+             _spec((b,)), _spec((p,)), _spec((b, m))],
+            ["codes", "delta", "idx", "labels", "params", "mlp_mask"],
+            ["loss", "logits", "d_emb", "d_params"],
+        ),
+        "train_fq": (
+            [_spec((u, d)), _spec((u,)), _spec((b, f), i32), _spec((b,)),
+             _spec((p,)), _spec((b, m)), _spec(()), _spec(())],
+            ["w", "delta", "idx", "labels", "params", "mlp_mask", "qn", "qp"],
+            ["loss", "logits", "d_w", "d_delta", "d_params"],
+        ),
+        "delta_grad": (
+            [_spec((u, d)), _spec((u,)), _spec((b, f), i32), _spec((b,)),
+             _spec((p,)), _spec((b, m)), _spec(()), _spec(())],
+            ["w", "delta", "idx", "labels", "params", "mlp_mask", "qn", "qp"],
+            ["d_delta"],
+        ),
+        "eval_fp": (
+            [_spec((u, d)), _spec((b, f), i32), _spec((p,))],
+            ["emb", "idx", "params"],
+            ["logits"],
+        ),
+        "eval_lpt": (
+            [_spec((u, d), i32), _spec((u,)), _spec((b, f), i32),
+             _spec((p,))],
+            ["codes", "delta", "idx", "params"],
+            ["logits"],
+        ),
+        "quantize": (
+            [_spec((u, d)), _spec((u,)), _spec((u, d)), _spec(()),
+             _spec(())],
+            ["w", "delta", "noise", "qn", "qp"],
+            ["codes"],
+        ),
+    }
+
+
+def step_fn(cfg, variant, use_pallas=True):
+    fns = {
+        "train_fp": model.train_fp,
+        "train_lpt": model.train_lpt,
+        "train_fq": model.train_fq,
+        "delta_grad": model.delta_grad,
+        "eval_fp": model.eval_fp,
+        "eval_lpt": model.eval_lpt,
+        "quantize": model.quantize_sr,
+    }
+    fn = fns[variant](cfg, use_pallas=use_pallas)
+    if variant in ("eval_fp", "eval_lpt", "quantize"):
+        # Tuple-ify single outputs so every artifact unwraps uniformly.
+        inner = fn
+        if variant == "quantize":
+            return lambda *a: (inner(*a),)
+        return lambda *a: (inner(*a),)
+    return fn
+
+
+def lower_variant(cfg, variant, use_pallas=True):
+    specs, in_names, out_names = variant_signatures(cfg)[variant]
+    fn = step_fn(cfg, variant, use_pallas)
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), specs, in_names, out_names
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,avazu,criteo,avazu_d32,criteo_d32")
+    ap.add_argument("--variants",
+                    default="train_fp,train_lpt,train_fq,delta_grad,eval_fp,eval_lpt,quantize")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead (debugging)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "generated_unix": int(time.time()),
+                "configs": {}}
+
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        arts = {}
+        io_sig = {}
+        for variant in args.variants.split(","):
+            t0 = time.time()
+            text, specs, in_names, out_names = lower_variant(
+                cfg, variant, use_pallas=not args.no_pallas)
+            fname = f"{cname}_{variant}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            arts[variant] = fname
+            io_sig[variant] = {
+                "inputs": [
+                    {"name": n, "shape": list(s.shape),
+                     "dtype": str(s.dtype)}
+                    for n, s in zip(in_names, specs)
+                ],
+                "outputs": out_names,
+            }
+            print(f"[aot] {cname}/{variant}: {len(text)} chars "
+                  f"({time.time() - t0:.1f}s)")
+
+        manifest["configs"][cname] = {
+            "fields": cfg.fields,
+            "emb_dim": cfg.emb_dim,
+            "batch": cfg.batch,
+            "umax": cfg.umax,
+            "cross_depth": cfg.cross_depth,
+            "mlp": list(cfg.mlp),
+            "dropout": cfg.dropout,
+            "input_dim": cfg.input_dim,
+            "mlp_mask_dim": cfg.mlp_mask_dim,
+            "n_params": n_params(cfg),
+            "params": [
+                {"name": name, "shape": list(shape), "init": init}
+                for name, shape, init in param_layout(cfg)
+            ],
+            "artifacts": arts,
+            "signatures": io_sig,
+        }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

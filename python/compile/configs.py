@@ -1,0 +1,98 @@
+"""Model/artifact configurations shared by aot.py and the test suite.
+
+Each `ModelConfig` describes one DCN (Deep & Cross Network, Wang et al. 2017)
+geometry that gets AOT-lowered to a set of HLO artifacts. The Rust coordinator
+reads `artifacts/manifest.json` (written by aot.py) to learn shapes, the dense
+parameter layout and initialization spec, so Python never runs at train time.
+
+Geometry notes
+--------------
+* `batch` and `umax` are baked into the HLO (XLA is shape-static). `umax` is
+  the padded number of *unique* feature rows per batch; the coordinator dedups
+  features Rust-side and scatters gradients back, so `umax = batch * fields`
+  is always sufficient.
+* The quantization range (qn, qp) is a *runtime input*, so a single artifact
+  serves every bit width m (qn = -2^{m-1}, qp = 2^{m-1}-1).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    fields: int          # number of categorical feature fields F
+    emb_dim: int         # embedding dimension d
+    batch: int           # train/eval batch size B
+    cross_depth: int     # number of DCN cross layers
+    mlp: tuple           # deep-tower widths
+    dropout: float = 0.0  # MLP dropout prob (mask supplied by the coordinator)
+
+    @property
+    def umax(self) -> int:
+        return self.batch * self.fields
+
+    @property
+    def input_dim(self) -> int:
+        return self.fields * self.emb_dim
+
+    @property
+    def mlp_mask_dim(self) -> int:
+        """Total width of the concatenated per-layer dropout masks."""
+        return sum(self.mlp)
+
+
+# The paper trains on Avazu (24 fields after timestamp expansion) and Criteo
+# (39 fields) with DCN depth 3 / MLP 1024-512-256 (Avazu) and depth 5 / MLP
+# 1000x5 (Criteo). We keep the field counts and depths and scale the MLP
+# widths for the CPU-PJRT testbed (see DESIGN.md section 5).
+CONFIGS = {
+    # test/CI-sized config: fast to lower, fast to execute.
+    "tiny": ModelConfig("tiny", fields=8, emb_dim=8, batch=64,
+                        cross_depth=2, mlp=(32, 16)),
+    "avazu": ModelConfig("avazu", fields=24, emb_dim=16, batch=256,
+                         cross_depth=3, mlp=(256, 128, 64)),
+    "criteo": ModelConfig("criteo", fields=39, emb_dim=16, batch=256,
+                          cross_depth=5, mlp=(200, 200, 200, 200, 200),
+                          dropout=0.2),
+    # Table-3 variants: larger embedding dimension.
+    "avazu_d32": ModelConfig("avazu_d32", fields=24, emb_dim=32, batch=256,
+                             cross_depth=3, mlp=(256, 128, 64)),
+    "criteo_d32": ModelConfig("criteo_d32", fields=39, emb_dim=32, batch=256,
+                              cross_depth=5, mlp=(200, 200, 200, 200, 200),
+                              dropout=0.2),
+}
+
+
+def param_layout(cfg: ModelConfig):
+    """Dense-parameter layout: list of (name, shape, init) in flat order.
+
+    init is one of:
+      "xavier"  — U(-a, a) with a = sqrt(6 / (fan_in + fan_out))
+      "normal"  — N(0, 0.01)  (cross-layer weight vectors)
+      "zero"    — zeros (biases)
+    The Rust side materializes the flat vector from this spec.
+    """
+    k = cfg.input_dim
+    layout = []
+    for i in range(cfg.cross_depth):
+        layout.append((f"cross_{i}_w", (k,), "normal"))
+        layout.append((f"cross_{i}_b", (k,), "zero"))
+    prev = k
+    for i, w in enumerate(cfg.mlp):
+        layout.append((f"mlp_{i}_w", (prev, w), "xavier"))
+        layout.append((f"mlp_{i}_b", (w,), "zero"))
+        prev = w
+    layout.append(("final_w", (k + prev, 1), "xavier"))
+    layout.append(("final_b", (1,), "zero"))
+    return layout
+
+
+def n_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape, _ in param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total

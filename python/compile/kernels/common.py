@@ -1,0 +1,31 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode lowers the kernel body to plain HLO ops that
+any backend runs (see DESIGN.md section 4). The BlockSpec tiling below is
+still written TPU-style: row blocks sized for VMEM (~16 MiB budget), grid
+over the row dimension, fp32 accumulation.
+"""
+
+INTERPRET = True
+
+# Default row-block target. 256 rows x 1248 cols x 4 B = ~1.2 MiB per input
+# block — three live blocks stay far below the 16 MiB VMEM budget while
+# giving the (8,128)-lane vector unit full tiles at d >= 16.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def row_block(n_rows: int, target: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Largest power-of-two-ish divisor of n_rows not exceeding target.
+
+    XLA shapes are static and Pallas grids must tile exactly, so the block
+    size has to divide the row count. Falls back to n_rows (single block)
+    for awkward sizes — correctness first, the sweep in benches/micro picks
+    the fast shape for round sizes.
+    """
+    if n_rows <= target:
+        return n_rows
+    b = target
+    while b > 1 and n_rows % b != 0:
+        b //= 2
+    return b if n_rows % b == 0 else n_rows

@@ -1,0 +1,64 @@
+"""DCN cross-layer interaction as a Pallas kernel.
+
+x_{l+1} = x0 * (x_l . w) + b + x_l        (Wang et al. 2017)
+
+This is the dense hot-spot of the backbone model outside the MLP matmuls
+(which XLA already maps to the MXU); the cross layer's rank-1 structure is
+what a naive lowering turns into a [B,K]x[K,K] outer-product matmul — the
+kernel instead computes the [B]-vector of row dots and a fused
+multiply-add, tiled over batch-row blocks sized for VMEM.
+
+The backward pass is closed-form (see ref.cross_layer_bwd) and cheap —
+plain jnp there lets XLA fuse it into the surrounding backprop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, row_block
+from . import ref
+
+
+def _cross_kernel(x0_ref, xl_ref, w_ref, b_ref, o_ref):
+    x0 = x0_ref[...]
+    xl = xl_ref[...]
+    s = xl @ w_ref[...]          # [bb, 1] row dots
+    o_ref[...] = x0 * s + b_ref[...] + xl
+
+
+def _cross_forward(x0, xl, w, b):
+    bsz, k = x0.shape
+    bb = row_block(bsz, 128)
+    return pl.pallas_call(
+        _cross_kernel,
+        grid=(bsz // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), jnp.float32),
+        interpret=INTERPRET,
+    )(x0, xl, w.reshape(k, 1), b.reshape(1, k))
+
+
+@jax.custom_vjp
+def cross_layer(x0, xl, w, b):
+    """Pallas forward + closed-form backward DCN cross layer."""
+    return _cross_forward(x0, xl, w, b)
+
+
+def _vjp_fwd(x0, xl, w, b):
+    return _cross_forward(x0, xl, w, b), (x0, xl, w)
+
+
+def _vjp_bwd(res, g):
+    x0, xl, w = res
+    dx0, dxl, dw, db = ref.cross_layer_bwd(x0, xl, w, g)
+    return dx0, dxl, dw, db
+
+
+cross_layer.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,111 @@
+"""Differentiable LSQ fake quantization (paper Eq. 6-7) as Pallas kernels.
+
+This is the kernel that makes ALPT's step-size learning work: Algorithm 1
+step 2 runs the forward pass through Q_D(w^{t+1}, delta^t) and needs
+d f / d delta. The gradient estimator is LSQ's (Esser et al. 2020), extended
+to a per-row (feature-wise) step size:
+
+    dQ/ddelta = qn                    if w/delta <= qn
+                qp                    if w/delta >= qp
+                R_D(w/delta) - w/delta   otherwise            (Eq. 7)
+
+and the weight gradient uses the straight-through estimator restricted to
+the clip range. Both forward and backward bodies are Pallas kernels wired
+through jax.custom_vjp, so the whole thing lowers into the train_fq HLO
+artifact and runs on the PJRT hot path with no Python.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, row_block
+
+
+def _fq_fwd_kernel(w_ref, delta_ref, qn_ref, qp_ref, o_ref):
+    delta = delta_ref[...]
+    x = jnp.clip(w_ref[...] / delta, qn_ref[0, 0], qp_ref[0, 0])
+    o_ref[...] = jnp.floor(x + 0.5) * delta
+
+
+def _fq_bwd_kernel(w_ref, delta_ref, qn_ref, qp_ref, g_ref, dw_ref, dd_ref):
+    qn = qn_ref[0, 0]
+    qp = qp_ref[0, 0]
+    x = w_ref[...] / delta_ref[...]
+    g = g_ref[...]
+    in_range = (x > qn) & (x < qp)
+    dw_ref[...] = g * in_range.astype(g.dtype)
+    dq_dd = jnp.where(x <= qn, qn,
+                      jnp.where(x >= qp, qp, jnp.floor(x + 0.5) - x))
+    dd_ref[...] = jnp.sum(g * dq_dd, axis=1, keepdims=True)
+
+
+def _scalar(v):
+    return jnp.asarray(v, dtype=jnp.float32).reshape(1, 1)
+
+
+def _fq_forward(w, delta, qn, qp):
+    u, d = w.shape
+    bu = row_block(u)
+    return pl.pallas_call(
+        _fq_fwd_kernel,
+        grid=(u // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, d), jnp.float32),
+        interpret=INTERPRET,
+    )(w, delta.reshape(u, 1), _scalar(qn), _scalar(qp))
+
+
+def _fq_backward(w, delta, qn, qp, g):
+    u, d = w.shape
+    bu = row_block(u)
+    dw, dd = pl.pallas_call(
+        _fq_bwd_kernel,
+        grid=(u // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u, d), jnp.float32),
+            jax.ShapeDtypeStruct((u, 1), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(w, delta.reshape(u, 1), _scalar(qn), _scalar(qp), g)
+    return dw, dd.reshape(u)
+
+
+@jax.custom_vjp
+def fake_quant(w, delta, qn, qp):
+    """Q_D(w, delta) = delta * R_D(clip(w/delta, qn, qp)), differentiable
+    w.r.t. w (STE) and delta (Eq. 7). qn/qp get zero cotangents."""
+    return _fq_forward(w, delta, qn, qp)
+
+
+def _vjp_fwd(w, delta, qn, qp):
+    return _fq_forward(w, delta, qn, qp), (w, delta, qn, qp)
+
+
+def _vjp_bwd(res, g):
+    w, delta, qn, qp = res
+    dw, dd = _fq_backward(w, delta, qn, qp, g)
+    return dw, dd, jnp.zeros_like(jnp.asarray(qn, jnp.float32)), \
+        jnp.zeros_like(jnp.asarray(qp, jnp.float32))
+
+
+fake_quant.defvjp(_vjp_fwd, _vjp_bwd)

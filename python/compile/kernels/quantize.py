@@ -1,0 +1,98 @@
+"""Pallas kernels for the paper's quantization ops (Eq. 1-4).
+
+Layout convention: weight rows are [U, d] with a per-row (feature-wise,
+paper section 3.2) step size delta [U]. The quantization range (qn, qp) is a
+runtime (1,1) scalar input so a single lowered artifact serves every bit
+width m: qn = -2^{m-1}, qp = 2^{m-1}-1.
+
+These ops are never differentiated: `dequant` feeds the forward pass from
+integer storage (grads are taken w.r.t. its *output*), and `quant_*` run
+after the update step (LPT Eq. 8). The differentiable fake-quant lives in
+lsq.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, row_block
+
+
+def _dequant_kernel(wi_ref, delta_ref, o_ref):
+    o_ref[...] = wi_ref[...].astype(jnp.float32) * delta_ref[...]
+
+
+def dequant(w_int, delta):
+    """w^ = delta * w~  for integer rows [U, d], per-row delta [U]."""
+    u, d = w_int.shape
+    bu = row_block(u)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(u // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, d), jnp.float32),
+        interpret=INTERPRET,
+    )(w_int, delta.reshape(u, 1))
+
+
+def _quant_dr_kernel(w_ref, delta_ref, qn_ref, qp_ref, o_ref):
+    x = w_ref[...] / delta_ref[...]
+    x = jnp.clip(x, qn_ref[0, 0], qp_ref[0, 0])
+    # R_D (Eq. 3): round half towards +inf == floor(x + 0.5).
+    o_ref[...] = jnp.floor(x + 0.5).astype(jnp.int32)
+
+
+def quant_dr(w, delta, qn, qp):
+    """Integer codes w~ = R_D(clip(w/delta, qn, qp)) (Eq. 1, deterministic)."""
+    u, d = w.shape
+    bu = row_block(u)
+    return pl.pallas_call(
+        _quant_dr_kernel,
+        grid=(u // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, d), jnp.int32),
+        interpret=INTERPRET,
+    )(w, delta.reshape(u, 1), _scalar(qn), _scalar(qp))
+
+
+def _quant_sr_kernel(w_ref, delta_ref, noise_ref, qn_ref, qp_ref, o_ref):
+    x = w_ref[...] / delta_ref[...]
+    x = jnp.clip(x, qn_ref[0, 0], qp_ref[0, 0])
+    f = jnp.floor(x)
+    # R_S (Eq. 4): floor + Bernoulli(frac), with the U[0,1) draw supplied by
+    # the caller so the lowered computation stays a pure function.
+    o_ref[...] = (f + (noise_ref[...] < (x - f)).astype(x.dtype)).astype(jnp.int32)
+
+
+def quant_sr(w, delta, noise, qn, qp):
+    """Integer codes w~ = R_S(clip(w/delta, qn, qp)) (Eq. 1, stochastic)."""
+    u, d = w.shape
+    bu = row_block(u)
+    return pl.pallas_call(
+        _quant_sr_kernel,
+        grid=(u // bu,),
+        in_specs=[
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bu, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, d), jnp.int32),
+        interpret=INTERPRET,
+    )(w, delta.reshape(u, 1), noise, _scalar(qn), _scalar(qp))
+
+
+def _scalar(v):
+    return jnp.asarray(v, dtype=jnp.float32).reshape(1, 1)

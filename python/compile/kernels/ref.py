@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis), and they double as a kernel-free model implementation used to
+cross-check the lowered HLO. All functions mirror the paper's equations:
+
+  Eq. 1-2  uniform symmetric quantization  w~ = R(clip(w/D, qn, qp)),
+           w^ = D * w~
+  Eq. 3    deterministic rounding R_D  (round half towards +inf)
+  Eq. 4    stochastic rounding  R_S  (floor + Bernoulli(frac))
+  Eq. 6-7  LSQ fake quantization and its step-size gradient estimator
+"""
+
+import jax.numpy as jnp
+
+
+def round_det(x):
+    """Paper Eq. 3: floor(x)+1 when frac >= 0.5, floor(x) otherwise."""
+    return jnp.floor(x + 0.5)
+
+
+def round_stoch(x, noise):
+    """Paper Eq. 4 with an explicit U[0,1) noise tensor (no RNG state here:
+    the caller supplies noise so the op stays a pure function for AOT)."""
+    f = jnp.floor(x)
+    return f + (noise < (x - f)).astype(x.dtype)
+
+
+def dequant(w_int, delta):
+    """w^ = D * w~ for a [U, d] integer row block with per-row step size."""
+    return w_int.astype(jnp.float32) * delta[:, None]
+
+
+def quant_dr(w, delta, qn, qp):
+    """Integer codes via deterministic rounding (Eq. 1 with R_D)."""
+    x = jnp.clip(w / delta[:, None], qn, qp)
+    return round_det(x).astype(jnp.int32)
+
+
+def quant_sr(w, delta, noise, qn, qp):
+    """Integer codes via stochastic rounding (Eq. 1 with R_S)."""
+    x = jnp.clip(w / delta[:, None], qn, qp)
+    return round_stoch(x, noise).astype(jnp.int32)
+
+
+def lsq_fake_quant(w, delta, qn, qp):
+    """Eq. 6: w^ = D * R_D(clip(w/D, qn, qp)) with a per-row step size."""
+    x = jnp.clip(w / delta[:, None], qn, qp)
+    return round_det(x) * delta[:, None]
+
+
+def lsq_bwd(w, delta, qn, qp, g):
+    """Backward of Eq. 6 under LSQ's estimators.
+
+    dw     : straight-through — pass gradient where w/D lies strictly inside
+             (qn, qp), zero outside (clipped weights get no weight gradient).
+    ddelta : Eq. 7 summed over the row:
+               qn                      if w/D <= qn
+               qp                      if w/D >= qp
+               R_D(w/D) - w/D          otherwise
+    """
+    x = w / delta[:, None]
+    in_range = (x > qn) & (x < qp)
+    dw = g * in_range.astype(g.dtype)
+    dq_dd = jnp.where(x <= qn, qn,
+                      jnp.where(x >= qp, qp, round_det(x) - x))
+    ddelta = jnp.sum(g * dq_dd, axis=1)
+    return dw, ddelta
+
+
+def cross_layer(x0, xl, w, b):
+    """DCN cross interaction: x_{l+1} = x0 * (x_l . w) + b + x_l."""
+    s = xl @ w  # [B]
+    return x0 * s[:, None] + b[None, :] + xl
+
+
+def cross_layer_bwd(x0, xl, w, g):
+    """Backward of the cross layer.
+
+    s   = xl @ w
+    dx0 = g * s[:, None]
+    dxl = g + r[:, None] * w[None, :]   with r = sum_k g[:,k] * x0[:,k]
+    dw  = xl^T @ r
+    db  = sum_b g
+    """
+    s = xl @ w
+    r = jnp.sum(g * x0, axis=1)
+    dx0 = g * s[:, None]
+    dxl = g + r[:, None] * w[None, :]
+    dw = xl.T @ r
+    db = jnp.sum(g, axis=0)
+    return dx0, dxl, dw, db

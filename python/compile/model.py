@@ -1,0 +1,202 @@
+"""L2: the DCN backbone (Wang et al. 2017) and the AOT-exported step
+functions for every training variant the Rust coordinator needs.
+
+All functions are pure and shape-static. Dense parameters travel as one flat
+f32[P] vector (layout from configs.param_layout) so the Rust side handles a
+single buffer; embedding rows travel as padded per-batch *unique* rows
+[U, d] plus an int32 index matrix [B, F] (the coordinator dedups the batch's
+features; JAX's gather VJP gives the scatter-add back to unique rows for
+free).
+
+Exported variants (see aot.py):
+  train_fp   : f32 embeddings in          -> loss, logits, d emb, d dense
+  train_lpt  : int32 codes + delta in     -> same (dequant kernel in-graph)
+  train_fq   : f32 w + delta + (qn,qp) in -> loss, logits, d w (STE),
+               d delta (Eq. 7), d dense   (ALPT Alg. 1 step 2 / QAT-LSQ)
+  eval_fp    : f32 embeddings in          -> logits
+  eval_lpt   : int32 codes + delta in     -> logits
+  quantize   : w, delta, noise, qn, qp    -> int32 codes (SR, Eq. 4)
+
+Dropout (paper: 0.2 on the Criteo MLP) is an explicit mask input of shape
+[B, sum(mlp)] holding {0, 1/(1-p)} so the lowered HLO stays deterministic;
+the coordinator draws the mask from its own PRNG (ones at eval).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, param_layout
+from .kernels import cross as cross_k
+from .kernels import lsq as lsq_k
+from .kernels import quantize as quant_k
+from .kernels import ref
+
+
+def unpack_params(cfg: ModelConfig, flat):
+    """Flat f32[P] -> dict of named parameter arrays (layout order)."""
+    params = {}
+    off = 0
+    for name, shape, _ in param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def pack_params(cfg: ModelConfig, params):
+    """Inverse of unpack_params (used by tests)."""
+    leaves = []
+    for name, shape, _ in param_layout(cfg):
+        leaves.append(params[name].reshape(-1))
+    return jnp.concatenate(leaves)
+
+
+def forward(cfg: ModelConfig, emb_rows, idx, flat_params, mlp_mask,
+            use_pallas=True):
+    """DCN forward from unique embedding rows to logits [B].
+
+    emb_rows : f32[U, d] unique (dequantized) embedding rows
+    idx      : i32[B, F] positions into emb_rows
+    mlp_mask : f32[B, sum(mlp)] dropout mask ({0, 1/(1-p)}; ones = no dropout)
+    """
+    p = unpack_params(cfg, flat_params)
+    x = emb_rows[idx]                              # [B, F, d] gather
+    x0 = x.reshape(cfg.batch, cfg.input_dim)
+
+    cross_fn = cross_k.cross_layer if use_pallas else ref.cross_layer
+    xl = x0
+    for i in range(cfg.cross_depth):
+        xl = cross_fn(x0, xl, p[f"cross_{i}_w"], p[f"cross_{i}_b"])
+
+    h = x0
+    moff = 0
+    for i, width in enumerate(cfg.mlp):
+        h = jnp.maximum(h @ p[f"mlp_{i}_w"] + p[f"mlp_{i}_b"], 0.0)
+        h = h * mlp_mask[:, moff:moff + width]
+        moff += width
+
+    out = jnp.concatenate([xl, h], axis=1)
+    logits = (out @ p["final_w"]).reshape(-1) + p["final_b"][0]
+    return logits
+
+
+def bce_with_logits(logits, labels):
+    """Numerically-stable mean binary cross-entropy."""
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def _loss_fn(cfg, emb_rows, flat_params, idx, labels, mlp_mask, use_pallas):
+    logits = forward(cfg, emb_rows, idx, flat_params, mlp_mask, use_pallas)
+    return bce_with_logits(logits, labels), logits
+
+
+def train_fp(cfg: ModelConfig, use_pallas=True):
+    """(emb, idx, labels, params, mask) -> (loss, logits, d emb, d params)."""
+    def step(emb, idx, labels, flat_params, mlp_mask):
+        (loss, logits), (demb, dparams) = jax.value_and_grad(
+            _loss_fn, argnums=(1, 2), has_aux=True)(
+                cfg, emb, flat_params, idx, labels, mlp_mask, use_pallas)
+        return loss, logits, demb, dparams
+    return step
+
+
+def train_lpt(cfg: ModelConfig, use_pallas=True):
+    """(codes, delta, idx, labels, params, mask) -> (loss, logits,
+    d emb_hat, d params). Gradients are w.r.t. the *dequantized* rows
+    (paper Eq. 8: the update applies to w^, requantization is the
+    coordinator's job)."""
+    dq = quant_k.dequant if use_pallas else ref.dequant
+
+    def step(codes, delta, idx, labels, flat_params, mlp_mask):
+        emb_hat = dq(codes, delta)
+        (loss, logits), (demb, dparams) = jax.value_and_grad(
+            _loss_fn, argnums=(1, 2), has_aux=True)(
+                cfg, emb_hat, flat_params, idx, labels, mlp_mask, use_pallas)
+        return loss, logits, demb, dparams
+    return step
+
+
+def train_fq(cfg: ModelConfig, use_pallas=True):
+    """Fake-quant training step (ALPT Alg. 1 step 2 and QAT-LSQ).
+
+    (w, delta, idx, labels, params, mask, qn, qp) ->
+        (loss, logits, d w (STE), d delta (Eq. 7), d params)
+    """
+    def step(w, delta, idx, labels, flat_params, mlp_mask, qn, qp):
+        if use_pallas:
+            def inner(w_, delta_, flat_):
+                emb_hat = lsq_k.fake_quant(w_, delta_, qn, qp)
+                return _loss_fn(cfg, emb_hat, flat_, idx, labels, mlp_mask,
+                                use_pallas)
+        else:
+            # Reference path: same math with the STE expressed via
+            # stop_gradient identities.
+            def inner(w_, delta_, flat_):
+                x = w_ / delta_[:, None]
+                inr = ((x > qn) & (x < qp)).astype(w_.dtype)
+                dq_dd = jnp.where(x <= qn, qn,
+                                  jnp.where(x >= qp, qp,
+                                            ref.round_det(x) - x))
+                q = ref.lsq_fake_quant(w_, delta_, qn, qp)
+                emb_hat = (jax.lax.stop_gradient(q)
+                           + inr * (w_ - jax.lax.stop_gradient(w_))
+                           + jax.lax.stop_gradient(dq_dd)
+                           * (delta_[:, None]
+                              - jax.lax.stop_gradient(delta_[:, None])))
+                return _loss_fn(cfg, emb_hat, flat_, idx, labels, mlp_mask,
+                                use_pallas)
+
+        (loss, logits), (dw, ddelta, dparams) = jax.value_and_grad(
+            inner, argnums=(0, 1, 2), has_aux=True)(w, delta, flat_params)
+        return loss, logits, dw, ddelta, dparams
+    return step
+
+
+def delta_grad(cfg: ModelConfig, use_pallas=True):
+    """Lean ALPT step-2 artifact: only d loss / d delta.
+
+    Same math as train_fq but XLA dead-code-eliminates the dense-parameter
+    and weight backward paths plus their host transfers — the §Perf
+    optimization that brings ALPT's per-step overhead towards the paper's
+    ~1.2x (Table 1 time column).
+    """
+    full = train_fq(cfg, use_pallas=use_pallas)
+
+    def step(w, delta, idx, labels, flat_params, mlp_mask, qn, qp):
+        _, _, _, ddelta, _ = full(w, delta, idx, labels, flat_params,
+                                  mlp_mask, qn, qp)
+        return (ddelta,)
+    return step
+
+
+def eval_fp(cfg: ModelConfig, use_pallas=True):
+    """(emb, idx, params) -> logits (masks = ones: no dropout at eval)."""
+    ones = jnp.ones((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+
+    def step(emb, idx, flat_params):
+        return forward(cfg, emb, idx, flat_params, ones, use_pallas)
+    return step
+
+
+def eval_lpt(cfg: ModelConfig, use_pallas=True):
+    """(codes, delta, idx, params) -> logits — the int-native serving path."""
+    dq = quant_k.dequant if use_pallas else ref.dequant
+    ones = jnp.ones((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+
+    def step(codes, delta, idx, flat_params):
+        return forward(cfg, dq(codes, delta), idx, flat_params, ones,
+                       use_pallas)
+    return step
+
+
+def quantize_sr(cfg: ModelConfig, use_pallas=True):
+    """(w, delta, noise, qn, qp) -> int32 codes. On-device (re)quantization
+    used by the serve example to convert an FP table to LPT storage."""
+    q = quant_k.quant_sr if use_pallas else ref.quant_sr
+
+    def step(w, delta, noise, qn, qp):
+        return q(w, delta, noise, qn, qp)
+    return step

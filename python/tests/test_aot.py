@@ -1,0 +1,74 @@
+"""AOT export: manifest consistency and HLO-text well-formedness."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, n_params
+
+
+def test_signatures_cover_all_variants():
+    cfg = CONFIGS["tiny"]
+    sigs = aot.variant_signatures(cfg)
+    assert set(sigs) == {"train_fp", "train_lpt", "train_fq", "delta_grad",
+                         "eval_fp", "eval_lpt", "quantize"}
+    for variant, (specs, in_names, out_names) in sigs.items():
+        assert len(specs) == len(in_names), variant
+        assert len(out_names) >= 1, variant
+
+
+def test_signature_shapes_tiny():
+    cfg = CONFIGS["tiny"]
+    sigs = aot.variant_signatures(cfg)
+    specs, names, _ = sigs["train_lpt"]
+    by_name = dict(zip(names, specs))
+    assert by_name["codes"].shape == (cfg.umax, cfg.emb_dim)
+    assert str(by_name["codes"].dtype) == "int32"
+    assert by_name["delta"].shape == (cfg.umax,)
+    assert by_name["idx"].shape == (cfg.batch, cfg.fields)
+    assert by_name["params"].shape == (n_params(cfg),)
+    assert by_name["mlp_mask"].shape == (cfg.batch, cfg.mlp_mask_dim)
+
+
+def test_lowered_hlo_is_parseable_text():
+    text, specs, in_names, out_names = aot.lower_variant(
+        CONFIGS["tiny"], "quantize")
+    assert "ENTRY" in text and "ROOT" in text
+    # return_tuple=True: the root is a tuple even for single outputs
+    assert "(s32[" in text or "tuple" in text
+
+
+def test_lower_eval_variant_has_single_output():
+    text, _, _, out_names = aot.lower_variant(CONFIGS["tiny"], "eval_fp")
+    assert out_names == ["logits"]
+    assert "ENTRY" in text
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--configs", "tiny"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        check=True, env=env)
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert "tiny" in manifest["configs"]
+    entry = manifest["configs"]["tiny"]
+    assert entry["n_params"] == n_params(CONFIGS["tiny"])
+    for variant, fname in entry["artifacts"].items():
+        assert (out / fname).exists(), variant
+        assert variant in entry["signatures"]
+    # parameter layout offsets reconstruct n_params
+    total = 0
+    for p in entry["params"]:
+        n = 1
+        for s in p["shape"]:
+            n *= s
+        total += n
+    assert total == entry["n_params"]

@@ -1,0 +1,240 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes / bit widths / value ranges; assert_allclose with
+tight tolerances (the kernels are the same math, so exact or near-exact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import cross as cross_k
+from compile.kernels import lsq as lsq_k
+from compile.kernels import quantize as quant_k
+from compile.kernels import ref
+from compile.kernels.common import row_block
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def qrange(bits):
+    return float(-(2 ** (bits - 1))), float(2 ** (bits - 1) - 1)
+
+
+# ----------------------------------------------------------------- row_block
+@given(st.integers(1, 5000), st.sampled_from([64, 128, 256]))
+@settings(max_examples=60, deadline=None)
+def test_row_block_divides(n, target):
+    b = row_block(n, target)
+    assert n % b == 0
+    assert 1 <= b <= n
+
+
+# ------------------------------------------------------------------- dequant
+@given(st.integers(1, 300), st.sampled_from([1, 4, 8, 16, 17]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_dequant_matches_ref(u, d, seed):
+    r = rng(seed)
+    codes = r.integers(-128, 128, size=(u, d)).astype(np.int32)
+    delta = r.uniform(1e-4, 0.1, size=(u,)).astype(np.float32)
+    got = quant_k.dequant(jnp.asarray(codes), jnp.asarray(delta))
+    want = ref.dequant(jnp.asarray(codes), jnp.asarray(delta))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ------------------------------------------------------------------ quant_dr
+@given(st.integers(1, 200), st.sampled_from([1, 3, 8, 16]),
+       st.sampled_from([2, 4, 8, 16]), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quant_dr_matches_ref(u, d, bits, seed):
+    r = rng(seed)
+    w = r.normal(0, 0.05, size=(u, d)).astype(np.float32)
+    delta = r.uniform(1e-3, 0.05, size=(u,)).astype(np.float32)
+    qn, qp = qrange(bits)
+    got = quant_k.quant_dr(jnp.asarray(w), jnp.asarray(delta), qn, qp)
+    want = ref.quant_dr(jnp.asarray(w), jnp.asarray(delta), qn, qp)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # codes stay in the integer range of the bit width
+    assert np.asarray(got).min() >= qn and np.asarray(got).max() <= qp
+
+
+def test_quant_dr_round_half_up():
+    # R_D ties: 0.5 -> 1, -0.5 -> 0, -1.5 -> -1 (paper Eq. 3).
+    w = jnp.asarray([[0.5, -0.5, -1.5, 1.5]], jnp.float32)
+    delta = jnp.asarray([1.0], jnp.float32)
+    got = np.asarray(quant_k.quant_dr(w, delta, -8.0, 7.0)).ravel()
+    assert got.tolist() == [1, 0, -1, 2]
+
+
+# ------------------------------------------------------------------ quant_sr
+@given(st.integers(1, 200), st.sampled_from([2, 8]),
+       st.sampled_from([2, 4, 8]), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quant_sr_matches_ref(u, d, bits, seed):
+    r = rng(seed)
+    w = r.normal(0, 0.05, size=(u, d)).astype(np.float32)
+    delta = r.uniform(1e-3, 0.05, size=(u,)).astype(np.float32)
+    noise = r.uniform(0, 1, size=(u, d)).astype(np.float32)
+    qn, qp = qrange(bits)
+    got = quant_k.quant_sr(jnp.asarray(w), jnp.asarray(delta),
+                           jnp.asarray(noise), qn, qp)
+    want = ref.quant_sr(jnp.asarray(w), jnp.asarray(delta),
+                        jnp.asarray(noise), qn, qp)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quant_sr_unbiased():
+    # E[R_S(x)] = x: average many independent SR draws of the same value.
+    r = rng(0)
+    u, d, n = 64, 8, 400
+    w = r.normal(0, 0.03, size=(u, d)).astype(np.float32)
+    delta = np.full((u,), 0.01, np.float32)
+    acc = np.zeros((u, d), np.float64)
+    for i in range(n):
+        noise = r.uniform(0, 1, size=(u, d)).astype(np.float32)
+        codes = ref.quant_sr(jnp.asarray(w), jnp.asarray(delta),
+                             jnp.asarray(noise), -128.0, 127.0)
+        acc += np.asarray(ref.dequant(codes, jnp.asarray(delta)))
+    # standard error of the mean is delta/sqrt(12 n) ~ 1.4e-4; allow 5 sigma
+    assert_allclose(acc / n, np.clip(w, -1.28, 1.27), atol=8e-4)
+
+
+def test_sr_dr_agree_when_exact():
+    # When w/delta is already an integer, SR == DR regardless of noise.
+    w = jnp.asarray([[0.02, -0.05, 0.0]], jnp.float32)
+    delta = jnp.asarray([0.01], jnp.float32)
+    noise = jnp.asarray([[0.999, 0.0, 0.5]], jnp.float32)
+    sr = quant_k.quant_sr(w, delta, noise, -128.0, 127.0)
+    dr = quant_k.quant_dr(w, delta, -128.0, 127.0)
+    assert np.array_equal(np.asarray(sr), np.asarray(dr))
+
+
+# ---------------------------------------------------------------- fake_quant
+@given(st.integers(1, 150), st.sampled_from([2, 8, 16]),
+       st.sampled_from([2, 4, 8]), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fake_quant_fwd_matches_ref(u, d, bits, seed):
+    r = rng(seed)
+    w = r.normal(0, 0.05, size=(u, d)).astype(np.float32)
+    delta = r.uniform(1e-3, 0.05, size=(u,)).astype(np.float32)
+    qn, qp = qrange(bits)
+    got = lsq_k.fake_quant(jnp.asarray(w), jnp.asarray(delta), qn, qp)
+    want = ref.lsq_fake_quant(jnp.asarray(w), jnp.asarray(delta), qn, qp)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@given(st.integers(1, 100), st.sampled_from([2, 8]),
+       st.sampled_from([2, 4, 8]), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fake_quant_bwd_matches_ref(u, d, bits, seed):
+    r = rng(seed)
+    w = r.normal(0, 0.05, size=(u, d)).astype(np.float32)
+    delta = r.uniform(1e-3, 0.05, size=(u,)).astype(np.float32)
+    g = r.normal(0, 1, size=(u, d)).astype(np.float32)
+    qn, qp = qrange(bits)
+
+    def f(w_, d_):
+        return jnp.sum(lsq_k.fake_quant(w_, d_, qn, qp) * jnp.asarray(g))
+
+    dw, dd = jax.grad(f, argnums=(0, 1))(jnp.asarray(w), jnp.asarray(delta))
+    dw_ref, dd_ref = ref.lsq_bwd(jnp.asarray(w), jnp.asarray(delta), qn, qp,
+                                 jnp.asarray(g))
+    assert_allclose(np.asarray(dw), np.asarray(dw_ref), rtol=1e-6, atol=1e-7)
+    assert_allclose(np.asarray(dd), np.asarray(dd_ref), rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_delta_grad_finite_diff_clipped():
+    """Eq. 7 is LSQ's *estimator* (it applies the STE to the rounding op, so
+    in-range it returns R(x)-x, not the true local derivative R(x)). In the
+    clipped region there is no rounding and Q = delta*qn (resp. qp) exactly,
+    so the estimator equals the true derivative — finite differences must
+    match there."""
+    w = jnp.asarray([[1.0, -2.0, 0.5]], jnp.float32)   # w/delta >> qp, << qn
+    delta = jnp.asarray([0.01], jnp.float32)
+    qn, qp = -8.0, 7.0
+
+    def f(d_):
+        return jnp.sum(lsq_k.fake_quant(w, d_, qn, qp))
+
+    g = jax.grad(f)(delta)
+    eps = 1e-5
+    fd = (f(delta + eps) - f(delta - eps)) / (2 * eps)
+    assert_allclose(np.asarray(g)[0], float(fd), rtol=1e-3)
+    assert_allclose(np.asarray(g)[0], qp + qn + qp, rtol=1e-6)
+
+
+def test_fake_quant_clip_gradients():
+    # Weights pushed beyond the clip range: dw = 0, d delta = qn/qp.
+    w = jnp.asarray([[1.0, -1.0]], jnp.float32)
+    delta = jnp.asarray([0.01], jnp.float32)   # w/delta = +-100, range 4-bit
+    qn, qp = -8.0, 7.0
+
+    def f(w_, d_):
+        return jnp.sum(lsq_k.fake_quant(w_, d_, qn, qp))
+
+    dw, dd = jax.grad(f, argnums=(0, 1))(w, delta)
+    assert np.asarray(dw).tolist() == [[0.0, 0.0]]
+    assert_allclose(np.asarray(dd)[0], qp + qn, rtol=1e-6)
+
+
+# --------------------------------------------------------------- cross layer
+@given(st.integers(1, 128), st.integers(1, 96), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_cross_fwd_matches_ref(b, k, seed):
+    r = rng(seed)
+    x0 = r.normal(0, 1, size=(b, k)).astype(np.float32)
+    xl = r.normal(0, 1, size=(b, k)).astype(np.float32)
+    w = r.normal(0, 0.1, size=(k,)).astype(np.float32)
+    bias = r.normal(0, 0.1, size=(k,)).astype(np.float32)
+    got = cross_k.cross_layer(*map(jnp.asarray, (x0, xl, w, bias)))
+    want = ref.cross_layer(*map(jnp.asarray, (x0, xl, w, bias)))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 64), st.integers(1, 48), st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cross_bwd_matches_autodiff_of_ref(b, k, seed):
+    r = rng(seed)
+    x0 = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+    xl = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 0.1, size=(k,)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 0.1, size=(k,)).astype(np.float32))
+    g = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+
+    def loss_pallas(a0, al, aw, ab):
+        return jnp.sum(cross_k.cross_layer(a0, al, aw, ab) * g)
+
+    def loss_ref(a0, al, aw, ab):
+        return jnp.sum(ref.cross_layer(a0, al, aw, ab) * g)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(x0, xl, w, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x0, xl, w, bias)
+    for a, b_ in zip(gp, gr):
+        assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4)
+
+
+def test_cross_layer_bwd_closed_form():
+    # the hand-derived backward in ref.py equals autodiff of the forward
+    r = rng(7)
+    b, k = 16, 24
+    x0 = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+    xl = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 0.1, size=(k,)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 0.1, size=(k,)).astype(np.float32))
+    g = jnp.asarray(r.normal(0, 1, size=(b, k)).astype(np.float32))
+
+    def loss(a0, al, aw, ab):
+        return jnp.sum(ref.cross_layer(a0, al, aw, ab) * g)
+
+    auto = jax.grad(loss, argnums=(0, 1, 2, 3))(x0, xl, w, bias)
+    manual = ref.cross_layer_bwd(x0, xl, w, g)
+    for a, m in zip(auto, manual):
+        assert_allclose(np.asarray(a), np.asarray(m), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,228 @@
+"""L2 correctness: the DCN model and the exported step functions.
+
+Checks: pallas-vs-ref forward equivalence, gradient correctness (custom-vjp
+path vs pure-autodiff reference path, plus finite differences on the loss),
+parameter pack/unpack, and an end-to-end "loss goes down" training smoke on
+a learnable synthetic batch distribution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.configs import CONFIGS, n_params, param_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["tiny"]
+
+
+def init_params(cfg, seed=0):
+    """Mirror of the Rust-side initializer (manifest init spec)."""
+    r = np.random.default_rng(seed)
+    chunks = []
+    for name, shape, init in param_layout(cfg):
+        n = int(np.prod(shape))
+        if init == "xavier":
+            fan_in, fan_out = shape[0], shape[1] if len(shape) > 1 else 1
+            a = np.sqrt(6.0 / (fan_in + fan_out))
+            chunks.append(r.uniform(-a, a, size=n))
+        elif init == "normal":
+            chunks.append(r.normal(0, 0.01, size=n))
+        else:
+            chunks.append(np.zeros(n))
+    return jnp.asarray(np.concatenate(chunks), jnp.float32)
+
+
+def random_batch(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    emb = jnp.asarray(r.normal(0, 0.1, size=(cfg.umax, cfg.emb_dim)),
+                      jnp.float32)
+    idx = jnp.asarray(r.integers(0, cfg.umax, size=(cfg.batch, cfg.fields)),
+                      jnp.int32)
+    labels = jnp.asarray(r.integers(0, 2, size=(cfg.batch,)), jnp.float32)
+    mask = jnp.ones((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+    return emb, idx, labels, mask
+
+
+def test_pack_unpack_roundtrip():
+    flat = init_params(CFG, 3)
+    params = model.unpack_params(CFG, flat)
+    assert set(params) == {n for n, _, _ in param_layout(CFG)}
+    back = model.pack_params(CFG, params)
+    assert np.array_equal(np.asarray(flat), np.asarray(back))
+    assert flat.shape[0] == n_params(CFG)
+
+
+def test_forward_pallas_matches_ref():
+    flat = init_params(CFG, 1)
+    emb, idx, labels, mask = random_batch(CFG, 1)
+    lp = model.forward(CFG, emb, idx, flat, mask, use_pallas=True)
+    lr = model.forward(CFG, emb, idx, flat, mask, use_pallas=False)
+    assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-5, atol=1e-5)
+    assert lp.shape == (CFG.batch,)
+
+
+def test_train_fp_grads_pallas_matches_ref():
+    flat = init_params(CFG, 2)
+    emb, idx, labels, mask = random_batch(CFG, 2)
+    out_p = model.train_fp(CFG, use_pallas=True)(emb, idx, labels, flat, mask)
+    out_r = model.train_fp(CFG, use_pallas=False)(emb, idx, labels, flat, mask)
+    names = ["loss", "logits", "d_emb", "d_params"]
+    for name, a, b in zip(names, out_p, out_r):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5,
+                        err_msg=name)
+
+
+def test_train_fp_finite_diff_emb():
+    """d loss / d emb via finite differences on a few coordinates."""
+    flat = init_params(CFG, 4)
+    emb, idx, labels, mask = random_batch(CFG, 4)
+    step = model.train_fp(CFG, use_pallas=True)
+    loss0, _, demb, _ = step(emb, idx, labels, flat, mask)
+
+    def loss_at(e):
+        return float(step(e, idx, labels, flat, mask)[0])
+
+    r = np.random.default_rng(0)
+    eps = 1e-3
+    for _ in range(4):
+        i = int(r.integers(0, CFG.umax))
+        j = int(r.integers(0, CFG.emb_dim))
+        e = np.asarray(emb).copy()
+        e[i, j] += eps
+        up = loss_at(jnp.asarray(e))
+        e[i, j] -= 2 * eps
+        dn = loss_at(jnp.asarray(e))
+        fd = (up - dn) / (2 * eps)
+        assert abs(fd - float(demb[i, j])) < 5e-3 + 0.05 * abs(fd)
+
+
+def test_train_lpt_equals_fp_on_dequantized():
+    """train_lpt(codes, delta) must equal train_fp(dequant(codes, delta)):
+    the LPT artifact just fuses the dequant kernel in front."""
+    flat = init_params(CFG, 5)
+    _, idx, labels, mask = random_batch(CFG, 5)
+    r = np.random.default_rng(5)
+    codes = jnp.asarray(r.integers(-128, 128, size=(CFG.umax, CFG.emb_dim)),
+                        jnp.int32)
+    delta = jnp.asarray(r.uniform(1e-3, 0.01, size=(CFG.umax,)), jnp.float32)
+    emb_hat = codes.astype(jnp.float32) * delta[:, None]
+
+    out_lpt = model.train_lpt(CFG)(codes, delta, idx, labels, flat, mask)
+    out_fp = model.train_fp(CFG)(emb_hat, idx, labels, flat, mask)
+    for name, a, b in zip(["loss", "logits", "d_emb", "d_params"],
+                          out_lpt, out_fp):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6,
+                        err_msg=name)
+
+
+def test_train_fq_grads_pallas_matches_ref():
+    flat = init_params(CFG, 6)
+    emb, idx, labels, mask = random_batch(CFG, 6)
+    r = np.random.default_rng(6)
+    delta = jnp.asarray(r.uniform(1e-3, 0.01, size=(CFG.umax,)), jnp.float32)
+    qn, qp = -128.0, 127.0
+    out_p = model.train_fq(CFG, use_pallas=True)(
+        emb, delta, idx, labels, flat, mask, qn, qp)
+    out_r = model.train_fq(CFG, use_pallas=False)(
+        emb, delta, idx, labels, flat, mask, qn, qp)
+    for name, a, b in zip(["loss", "logits", "d_w", "d_delta", "d_params"],
+                          out_p, out_r):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=2e-5,
+                        err_msg=name)
+
+
+def test_delta_grad_variant_matches_train_fq():
+    """The lean ALPT step-2 artifact must return exactly train_fq's
+    d_delta (it is the same graph with the other outputs DCE'd)."""
+    flat = init_params(CFG, 12)
+    emb, idx, labels, mask = random_batch(CFG, 12)
+    delta = jnp.full((CFG.umax,), 0.004, jnp.float32)
+    qn, qp = -128.0, 127.0
+    full = model.train_fq(CFG)(emb, delta, idx, labels, flat, mask, qn, qp)
+    lean = model.delta_grad(CFG)(emb, delta, idx, labels, flat, mask, qn, qp)
+    assert_allclose(np.asarray(lean[0]), np.asarray(full[3]), rtol=0,
+                    atol=0)
+
+
+def test_train_fq_delta_grad_nonzero():
+    flat = init_params(CFG, 7)
+    emb, idx, labels, mask = random_batch(CFG, 7)
+    delta = jnp.full((CFG.umax,), 0.005, jnp.float32)
+    out = model.train_fq(CFG)(emb, delta, idx, labels, flat, mask,
+                              -128.0, 127.0)
+    ddelta = np.asarray(out[3])
+    assert ddelta.shape == (CFG.umax,)
+    assert np.isfinite(ddelta).all()
+    assert np.abs(ddelta).max() > 0
+
+
+def test_eval_matches_forward():
+    flat = init_params(CFG, 8)
+    emb, idx, labels, mask = random_batch(CFG, 8)
+    logits = model.eval_fp(CFG)(emb, idx, flat)
+    want = model.forward(CFG, emb, idx, flat, mask, use_pallas=True)
+    assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-6)
+
+    r = np.random.default_rng(8)
+    codes = jnp.asarray(r.integers(-8, 8, size=(CFG.umax, CFG.emb_dim)),
+                        jnp.int32)
+    delta = jnp.asarray(r.uniform(1e-3, 0.05, size=(CFG.umax,)), jnp.float32)
+    le = model.eval_lpt(CFG)(codes, delta, idx, flat)
+    lf = model.eval_fp(CFG)(codes.astype(jnp.float32) * delta[:, None], idx,
+                            flat)
+    assert_allclose(np.asarray(le), np.asarray(lf), rtol=1e-5, atol=1e-6)
+
+
+def test_dropout_mask_applied():
+    cfg = CONFIGS["tiny"]
+    flat = init_params(cfg, 9)
+    emb, idx, labels, _ = random_batch(cfg, 9)
+    ones = jnp.ones((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+    zeros = jnp.zeros((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+    l1 = model.forward(cfg, emb, idx, flat, ones)
+    l0 = model.forward(cfg, emb, idx, flat, zeros)
+    # zero mask kills the deep tower -> different logits
+    assert not np.allclose(np.asarray(l1), np.asarray(l0))
+
+
+def test_bce_matches_numpy():
+    r = np.random.default_rng(0)
+    z = r.normal(0, 2, size=(64,)).astype(np.float32)
+    y = r.integers(0, 2, size=(64,)).astype(np.float32)
+    p = 1.0 / (1.0 + np.exp(-z))
+    want = -np.mean(y * np.log(p) + (1 - y) * np.log(1 - p))
+    got = float(model.bce_with_logits(jnp.asarray(z), jnp.asarray(y)))
+    assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    """End-to-end L2 smoke: SGD on a learnable synthetic pattern."""
+    cfg = CFG
+    r = np.random.default_rng(42)
+    flat = init_params(cfg, 42)
+    emb = jnp.asarray(r.normal(0, 0.05, size=(cfg.umax, cfg.emb_dim)),
+                      jnp.float32)
+    # ground truth: label depends on a latent weight per feature row
+    latent = r.normal(0, 1.5, size=(cfg.umax,))
+    step = jax.jit(model.train_fp(cfg, use_pallas=True))
+    mask = jnp.ones((cfg.batch, cfg.mlp_mask_dim), jnp.float32)
+
+    losses = []
+    for t in range(200):
+        idx = r.integers(0, cfg.umax, size=(cfg.batch, cfg.fields))
+        logit_true = latent[idx].sum(axis=1) * 0.6
+        y = (r.uniform(0, 1, size=cfg.batch)
+             < 1 / (1 + np.exp(-logit_true))).astype(np.float32)
+        loss, _, demb, dparams = step(emb, jnp.asarray(idx, jnp.int32),
+                                      jnp.asarray(y), flat, mask)
+        emb = emb - 5.0 * demb
+        flat = flat - 0.2 * dparams
+        losses.append(float(loss))
+    # measured headroom: ~0.69 -> ~0.50 in 200 steps with these LRs
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.05

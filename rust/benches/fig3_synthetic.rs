@@ -1,0 +1,73 @@
+//! Figure 3 — the synthetic convex experiment: parameter distributions of
+//! FP / LPT-DR / LPT-SR at t ∈ {10, 100, 1000} (panels a–c) and the count
+//! of parameters whose update DR erases, |η∇f| < Δ/2, over time (panel d).
+
+use alpt::analysis::{run_convex, ConvexMode, ConvexSpec};
+use alpt::util::json::Json;
+
+fn main() {
+    let spec = ConvexSpec::default();
+    println!(
+        "=== Figure 3: f(w) = (w-0.5)^2, {} params, delta = {}, eta = {} \
+         ===\n",
+        spec.n_params, spec.delta, spec.eta0
+    );
+
+    // panels (a)-(c): distributions at the paper's snapshots
+    let record = [10usize, 100, 1000];
+    let mut json_rows = Vec::new();
+    for mode in [ConvexMode::FullPrecision, ConvexMode::LptDr,
+                 ConvexMode::LptSr] {
+        let snaps = run_convex(&spec, mode, 1000, &record);
+        println!("--- {} ---", mode.name());
+        for s in &snaps {
+            println!(
+                "  t={:<5} mean obj {:.3e}  stalled {:>4}/{}  |{}|",
+                s.iteration,
+                s.mean_obj,
+                s.stalled,
+                spec.n_params,
+                s.histogram.sparkline()
+            );
+            json_rows.push(Json::obj(vec![
+                ("mode", Json::str(mode.name())),
+                ("t", Json::num(s.iteration as f64)),
+                ("mean_obj", Json::num(s.mean_obj)),
+                ("stalled", Json::num(s.stalled as f64)),
+                (
+                    "hist",
+                    Json::Array(
+                        s.histogram
+                            .counts
+                            .iter()
+                            .map(|&c| Json::num(c as f64))
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        println!();
+    }
+
+    // panel (d): DR stall counter over a fine time grid
+    let grid: Vec<usize> = (1..=100).map(|i| i * 10).collect();
+    let snaps = run_convex(&spec, ConvexMode::LptDr, 1000, &grid);
+    println!("--- (d) DR stalled-parameter count ---");
+    let mut curve = Vec::new();
+    for s in snaps.iter().step_by(10) {
+        println!("  t={:<5} stalled {:>4}", s.iteration, s.stalled);
+        curve.push(Json::arr_f64(&[s.iteration as f64, s.stalled as f64]));
+    }
+    std::fs::create_dir_all("results").ok();
+    let doc = Json::obj(vec![
+        ("panels_abc", Json::Array(json_rows)),
+        ("panel_d", Json::Array(curve)),
+    ]);
+    std::fs::write("results/fig3.json", doc.to_string()).ok();
+    println!("\n[saved results/fig3.json]");
+    println!(
+        "shape check (paper): SR final obj << DR final obj; DR stalled \
+         saturates at {}.",
+        spec.n_params
+    );
+}

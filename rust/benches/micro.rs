@@ -1,0 +1,189 @@
+//! Hot-path microbenchmarks (§Perf): table gather/dequant by bit width,
+//! SR/DR quantization, batch dedup, AUC, the Rust-nn training step, and
+//! PJRT artifact execution latency.
+//!
+//! Output feeds EXPERIMENTS.md §Perf; JSON mirror in results/micro.json.
+
+use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::coordinator::Trainer;
+use alpt::data::batcher::{make_batch, Batcher};
+use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::embedding::{AlptStore, EmbeddingStore, FpStore, LptStore};
+use alpt::nn::{Dcn, DcnConfig};
+use alpt::quant::{quantize_row, BitWidth, PackedTable, Rounding};
+use alpt::util::bench::{section, Bencher};
+use alpt::util::rng::Pcg32;
+
+fn main() {
+    let quick =
+        std::env::var("ALPT_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut b = if quick {
+        let mut b = Bencher::new();
+        b.target = std::time::Duration::from_millis(200);
+        b.samples = 5;
+        b
+    } else {
+        Bencher::new()
+    };
+    let mut rng = Pcg32::seeded(1);
+
+    // ------------------------------------------------ packed table access
+    section("packed table: read_row_dequant (rows/s), d=16");
+    let d = 16;
+    let n = 100_000;
+    for bits in [2u32, 4, 8, 16] {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        let mut t = PackedTable::new(n, d, bw);
+        let mut codes = vec![0i32; d];
+        for r in 0..n {
+            for (j, c) in codes.iter_mut().enumerate() {
+                *c = (((r * 31 + j * 7) % 255) as i32) - 128;
+                *c = (*c).clamp(bw.qn(), bw.qp());
+            }
+            t.write_row(r, &codes);
+        }
+        let mut out = vec![0.0f32; d];
+        let mut row = 0usize;
+        b.bench_units(&format!("dequant row {bits}-bit"), Some(1.0), || {
+            row = (row + 97) % n;
+            t.read_row_dequant(row, 0.01, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // ------------------------------------------------------- quantization
+    section("quantize rows (elems/s), d=16");
+    let w: Vec<f32> = (0..d).map(|i| (i as f32 - 8.0) * 0.003).collect();
+    let mut codes = vec![0i32; d];
+    for (name, rounding) in [("DR", Rounding::Deterministic),
+                             ("SR", Rounding::Stochastic)] {
+        b.bench_units(&format!("quantize_row 8-bit {name}"),
+                      Some(d as f64), || {
+            quantize_row(&w, 0.01, BitWidth::B8, rounding, &mut rng,
+                         &mut codes);
+            std::hint::black_box(&codes);
+        });
+    }
+
+    // --------------------------------------------------- store gathers
+    section("store gather: 144 unique rows x d=16 (rows/s)");
+    let ids: Vec<u32> = (0..144u32).map(|i| i * 613 % 100_000).collect();
+    let mut out = vec![0.0f32; ids.len() * d];
+    let mut rng2 = Pcg32::seeded(2);
+    let fp = FpStore::init(n, d, &mut rng2);
+    b.bench_units("FP gather", Some(ids.len() as f64), || {
+        fp.gather(&ids, &mut out);
+        std::hint::black_box(&out);
+    });
+    let lpt = LptStore::init(n, d, BitWidth::B8, 0.1, Rounding::Stochastic,
+                             &mut rng2);
+    b.bench_units("LPT-8bit gather (unpack+dequant)",
+                  Some(ids.len() as f64), || {
+        lpt.gather(&ids, &mut out);
+        std::hint::black_box(&out);
+    });
+    let alpt_store =
+        AlptStore::init(n, d, BitWidth::B2, Rounding::Stochastic, &mut rng2);
+    b.bench_units("ALPT-2bit gather (unpack+dequant)",
+                  Some(ids.len() as f64), || {
+        alpt_store.gather(&ids, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    // ------------------------------------------------------------- dedup
+    section("batch dedup (samples/s), avazu-syn B=256");
+    let spec = SyntheticSpec::avazu(3);
+    let ds = generate(&spec, 10_000);
+    let rows: Vec<usize> = (0..256).collect();
+    b.bench_units("make_batch B=256 F=24", Some(256.0), || {
+        let batch = make_batch(&ds, &rows, 256);
+        std::hint::black_box(batch.n_unique());
+    });
+
+    // --------------------------------------------------------------- auc
+    section("metrics (elems/s)");
+    let mut rng3 = Pcg32::seeded(3);
+    let scores: Vec<f32> = (0..100_000).map(|_| rng3.uniform_f32()).collect();
+    let labels: Vec<u8> =
+        (0..100_000).map(|_| rng3.bernoulli(0.2) as u8).collect();
+    b.bench_units("auc n=100k", Some(100_000.0), || {
+        std::hint::black_box(alpt::metrics::auc(&scores, &labels));
+    });
+
+    // --------------------------------------------------- rust-nn step
+    section("rust-nn DCN train step (tiny geometry)");
+    let cfg = DcnConfig::tiny();
+    let dcn = Dcn::new(cfg.clone());
+    let mut rng4 = Pcg32::seeded(4);
+    let params = cfg.init_params(&mut rng4);
+    let umax = cfg.batch * cfg.fields;
+    let emb: Vec<f32> =
+        (0..umax * cfg.emb_dim).map(|_| rng4.normal_scaled(0.0, 0.1)).collect();
+    let idx: Vec<i32> = (0..cfg.batch * cfg.fields)
+        .map(|_| rng4.below(umax as u32) as i32)
+        .collect();
+    let labels4: Vec<u8> =
+        (0..cfg.batch).map(|_| rng4.bernoulli(0.3) as u8).collect();
+    let mask = vec![1.0f32; cfg.batch * cfg.mlp_mask_dim()];
+    b.bench_units("nn train_step tiny (samples/s)",
+                  Some(cfg.batch as f64), || {
+        let o = dcn.train_step(&emb, &idx, &labels4, &params, &mask, umax);
+        std::hint::black_box(o.loss);
+    });
+
+    // --------------------------------------------- PJRT step latency
+    let have_artifacts =
+        std::path::Path::new("artifacts/manifest.json").exists();
+    if have_artifacts {
+        section("full coordinator step through PJRT (tiny, samples/s)");
+        let spec = SyntheticSpec::tiny(5);
+        let tiny_ds = generate(&spec, 4_000);
+        for (method, label) in [
+            (Method::Fp, "step FP (train_fp)"),
+            (Method::Lpt(RoundingMode::Sr), "step LPT-SR (train_lpt)"),
+            (Method::Alpt(RoundingMode::Sr),
+             "step ALPT-SR (train_lpt + train_fq)"),
+        ] {
+            let exp = Experiment {
+                method,
+                model: "tiny".into(),
+                use_runtime: true,
+                ..Experiment::default()
+            };
+            let mut tr = Trainer::new(exp, tiny_ds.schema.n_features())
+                .expect("trainer");
+            let batches: Vec<_> =
+                Batcher::new(&tiny_ds, tr.entry.batch, Some(1), true)
+                    .take(8)
+                    .collect();
+            let mut i = 0;
+            let bsz = tr.entry.batch as f64;
+            b.bench_units(label, Some(bsz), || {
+                let batch = &batches[i % batches.len()];
+                i += 1;
+                let o = tr.step(batch, 1).expect("step");
+                std::hint::black_box(o.loss);
+            });
+        }
+        section("eval step through PJRT (tiny)");
+        let exp = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            model: "tiny".into(),
+            use_runtime: true,
+            ..Experiment::default()
+        };
+        let mut tr =
+            Trainer::new(exp, tiny_ds.schema.n_features()).expect("trainer");
+        let (_, val, _) = tiny_ds.split((0.8, 0.1, 0.1), 1);
+        b.bench_units("evaluate 400 samples (eval_lpt)", Some(400.0), || {
+            let ev = tr.evaluate(&val).expect("eval");
+            std::hint::black_box(ev.auc);
+        });
+    } else {
+        eprintln!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/micro.json", b.to_json().to_string()).ok();
+    println!("\n[saved results/micro.json]");
+}

@@ -1,0 +1,76 @@
+//! Table 3 — scalability: larger embedding dimension (d = 32) and more
+//! categorical features (lower OOV threshold ⇒ ~2× vocab), 8-bit.
+//!
+//! Paper shape: ALPT(SR) stays lossless (≥ FP) in both settings; LPT(SR)
+//! trails slightly.
+
+use alpt::config::{Method, RoundingMode};
+use alpt::experiments::{
+    base_experiment, dataset_for, print_table, run_cell, save_cells,
+    GridScale,
+};
+
+fn main() {
+    let scale = GridScale::from_env();
+    println!("=== Table 3: d=32 and larger vocab (8-bit) ===");
+    let methods = [
+        Method::Fp,
+        Method::Lpt(RoundingMode::Sr),
+        Method::Alpt(RoundingMode::Sr),
+    ];
+    let mut all = Vec::new();
+    for dataset in ["avazu", "criteo"] {
+        // setting A: d = 32
+        {
+            let mut base = base_experiment(dataset, &scale);
+            base.model = format!("{dataset}_d32");
+            let ds = dataset_for(&base).expect("dataset");
+            let mut cells = Vec::new();
+            for method in methods {
+                let mut exp = base.clone();
+                exp.method = method;
+                match run_cell(&exp, &ds, false) {
+                    Ok(c) => {
+                        println!(
+                            "  [{dataset} d=32] {:<10} auc {:.4}  \
+                             logloss {:.5}",
+                            c.method, c.auc, c.logloss
+                        );
+                        cells.push(c);
+                    }
+                    Err(e) => eprintln!("  {method:?} failed: {e:#}"),
+                }
+            }
+            print_table(&format!("Table 3 — {dataset}-syn, d=32"), &cells);
+            all.extend(cells);
+        }
+        // setting B: ~2x vocabulary ("threshold lowered")
+        {
+            let mut base = base_experiment(dataset, &scale);
+            base.vocab_scale = 2.0;
+            let ds = dataset_for(&base).expect("dataset");
+            let mut cells = Vec::new();
+            for method in methods {
+                let mut exp = base.clone();
+                exp.method = method;
+                match run_cell(&exp, &ds, false) {
+                    Ok(c) => {
+                        println!(
+                            "  [{dataset} vocab x2] {:<10} auc {:.4}  \
+                             logloss {:.5}",
+                            c.method, c.auc, c.logloss
+                        );
+                        cells.push(c);
+                    }
+                    Err(e) => eprintln!("  {method:?} failed: {e:#}"),
+                }
+            }
+            print_table(
+                &format!("Table 3 — {dataset}-syn, vocab x2"),
+                &cells,
+            );
+            all.extend(cells);
+        }
+    }
+    save_cells("table3", &all).ok();
+}

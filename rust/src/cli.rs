@@ -1,0 +1,136 @@
+//! Tiny argument parser (offline: no `clap`). Supports subcommands,
+//! `--flag`, `--key value` / `--key=value`, and positional arguments, with
+//! generated usage text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = program name is
+    /// NOT expected). `known_flags` lists boolean options that take no
+    /// value; everything else starting with `--` consumes one.
+    pub fn parse_tokens(
+        tokens: &[String],
+        expect_subcommand: bool,
+        known_flags: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    args.subcommand = Some(it.next().unwrap().clone());
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            args.options.insert(name.to_string(), v.clone());
+                        }
+                        _ => bail!("option --{name} expects a value"),
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name).
+    pub fn from_env(expect_subcommand: bool, known_flags: &[&str]) -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_tokens(&tokens, expect_subcommand, known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("bad value for --{name}: {s}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse_tokens(
+            &toks("train --method alpt-sr --bits=4 --quick file.toml"),
+            true,
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("method"), Some("alpt-sr"));
+        assert_eq!(a.get("bits"), Some("4"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(
+            Args::parse_tokens(&toks("--method"), false, &[]).is_err()
+        );
+        assert!(Args::parse_tokens(&toks("--a --b"), false, &[]).is_err());
+    }
+
+    #[test]
+    fn get_parse_defaults() {
+        let a = Args::parse_tokens(&toks("--bits 4"), false, &[]).unwrap();
+        assert_eq!(a.get_parse::<u32>("bits", 8).unwrap(), 4);
+        assert_eq!(a.get_parse::<u32>("epochs", 15).unwrap(), 15);
+        assert!(a.get_parse::<u32>("bits", 8).is_ok());
+        let b =
+            Args::parse_tokens(&toks("--bits four"), false, &[]).unwrap();
+        assert!(b.get_parse::<u32>("bits", 8).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_dashes_first() {
+        let a = Args::parse_tokens(&toks("--x 1 pos"), true, &[]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Experiment configuration: typed config structs, a TOML-subset parser
+//! for config files, and CLI overrides. This is the "launcher" surface —
+//! every example, bench and the `alpt` binary build an [`Experiment`]
+//! and hand it to the coordinator.
+
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+use crate::quant::{BitWidth, GradScale};
+use toml::TomlDoc;
+
+/// Which embedding-compression method to train with (Table 1's rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Full-precision embeddings (no compression).
+    Fp,
+    /// Vanilla low-precision training (Xu et al. 2021), Eq. 8.
+    Lpt(RoundingMode),
+    /// The paper's contribution: LPT with learned per-feature step sizes.
+    Alpt(RoundingMode),
+    /// QAT baseline: learned step size, FP master weights (Esser et al.).
+    Lsq,
+    /// QAT baseline: learned clipping value (Choi et al. 2018).
+    Pact,
+    /// Quotient–remainder compositional hashing (Shi et al. 2020).
+    Hashing,
+    /// Magnitude pruning with retraining schedule (Deng et al. 2021).
+    Pruning,
+}
+
+/// Rounding selection for LPT/ALPT (the paper's SR-vs-DR axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RoundingMode {
+    Sr,
+    Dr,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fp" => Method::Fp,
+            "lpt-sr" | "lpt_sr" | "lpt" => Method::Lpt(RoundingMode::Sr),
+            "lpt-dr" | "lpt_dr" => Method::Lpt(RoundingMode::Dr),
+            "alpt-sr" | "alpt_sr" | "alpt" => Method::Alpt(RoundingMode::Sr),
+            "alpt-dr" | "alpt_dr" => Method::Alpt(RoundingMode::Dr),
+            "lsq" => Method::Lsq,
+            "pact" => Method::Pact,
+            "hashing" | "hash" => Method::Hashing,
+            "pruning" | "prune" => Method::Pruning,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "FP",
+            Method::Lpt(RoundingMode::Sr) => "LPT(SR)",
+            Method::Lpt(RoundingMode::Dr) => "LPT(DR)",
+            Method::Alpt(RoundingMode::Sr) => "ALPT(SR)",
+            Method::Alpt(RoundingMode::Dr) => "ALPT(DR)",
+            Method::Lsq => "LSQ",
+            Method::Pact => "PACT",
+            Method::Hashing => "Hashing",
+            Method::Pruning => "Pruning",
+        }
+    }
+
+    /// Does this method use quantized (integer) table storage at train
+    /// time? (Table 1's "training compression" column.)
+    pub fn trains_quantized(&self) -> bool {
+        matches!(self, Method::Lpt(_) | Method::Alpt(_))
+    }
+}
+
+/// A full training experiment (one Table-1 cell).
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    /// Dataset: "avazu" | "criteo" | "tiny" (synthetic specs), with
+    /// optional vocab scale for Table 3.
+    pub dataset: String,
+    pub vocab_scale: f64,
+    pub n_samples: usize,
+    /// Manifest model-config name ("avazu", "criteo", "tiny", "*_d32").
+    pub model: String,
+    pub method: Method,
+    pub bits: u32,
+    pub epochs: usize,
+    pub seed: u64,
+
+    // paper §4.1 training recipe
+    pub lr_dense: f32,
+    pub lr_emb: f32,
+    pub lr_delta: f32,
+    pub wd_emb: f32,
+    pub wd_delta: f32,
+    pub grad_scale: GradScale,
+    /// Fixed clipping value for vanilla LPT (tuned over
+    /// {1, 0.1, 0.01, 0.001} in the paper).
+    pub clip: f32,
+    pub lr_milestones: Vec<usize>,
+    pub lr_gamma: f32,
+    pub dropout_seed: u64,
+
+    /// Early-stop patience on validation AUC (0 = off).
+    pub patience: usize,
+    pub artifacts_dir: String,
+    /// Execute via the PJRT runtime (true) or the pure-Rust nn path.
+    pub use_runtime: bool,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Self {
+            dataset: "tiny".into(),
+            vocab_scale: 1.0,
+            n_samples: 50_000,
+            model: "tiny".into(),
+            method: Method::Alpt(RoundingMode::Sr),
+            bits: 8,
+            epochs: 3,
+            seed: 42,
+            lr_dense: 1e-3,
+            lr_emb: 1e-2,
+            lr_delta: 2e-5,
+            wd_emb: 5e-8,
+            wd_delta: 5e-8,
+            grad_scale: GradScale::InvSqrtBdq,
+            clip: 0.1,
+            lr_milestones: vec![6, 9],
+            lr_gamma: 0.1,
+            dropout_seed: 1234,
+            patience: 2,
+            artifacts_dir: "artifacts".into(),
+            use_runtime: true,
+        }
+    }
+}
+
+impl Experiment {
+    pub fn bit_width(&self) -> Result<BitWidth> {
+        BitWidth::from_bits(self.bits)
+            .ok_or_else(|| anyhow::anyhow!("unsupported bit width {}",
+                                           self.bits))
+    }
+
+    /// Load from a TOML document, starting from defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Experiment> {
+        let mut e = Experiment::default();
+        for (key, value) in doc.flat_items() {
+            e.apply(&key, &value)?;
+        }
+        Ok(e)
+    }
+
+    /// Apply a single `key = value` override (also used for CLI flags).
+    pub fn apply(&mut self, key: &str, value: &toml::TomlValue) -> Result<()> {
+        use toml::TomlValue as V;
+        let as_f = |v: &V| -> Result<f64> {
+            match v {
+                V::Num(x) => Ok(*x),
+                V::Str(s) => Ok(s.parse()?),
+                _ => bail!("{key}: expected number"),
+            }
+        };
+        let as_s = |v: &V| -> Result<String> {
+            match v {
+                V::Str(s) => Ok(s.clone()),
+                _ => bail!("{key}: expected string"),
+            }
+        };
+        match key {
+            "dataset" => self.dataset = as_s(value)?,
+            "vocab_scale" => self.vocab_scale = as_f(value)?,
+            "n_samples" => self.n_samples = as_f(value)? as usize,
+            "model" => self.model = as_s(value)?,
+            "method" => self.method = Method::parse(&as_s(value)?)?,
+            "bits" => self.bits = as_f(value)? as u32,
+            "epochs" => self.epochs = as_f(value)? as usize,
+            "seed" => self.seed = as_f(value)? as u64,
+            "lr_dense" => self.lr_dense = as_f(value)? as f32,
+            "lr_emb" => self.lr_emb = as_f(value)? as f32,
+            "lr_delta" => self.lr_delta = as_f(value)? as f32,
+            "wd_emb" => self.wd_emb = as_f(value)? as f32,
+            "wd_delta" => self.wd_delta = as_f(value)? as f32,
+            "clip" => self.clip = as_f(value)? as f32,
+            "lr_gamma" => self.lr_gamma = as_f(value)? as f32,
+            "patience" => self.patience = as_f(value)? as usize,
+            "dropout_seed" => self.dropout_seed = as_f(value)? as u64,
+            "artifacts_dir" => self.artifacts_dir = as_s(value)?,
+            "use_runtime" => {
+                self.use_runtime = matches!(value, V::Bool(true))
+                    || matches!(value, V::Str(s) if s == "true")
+            }
+            "grad_scale" => {
+                self.grad_scale = match as_s(value)?.as_str() {
+                    "1" | "one" => GradScale::One,
+                    "inv_sqrt_dq" => GradScale::InvSqrtDq,
+                    "inv_sqrt_bdq" => GradScale::InvSqrtBdq,
+                    other => bail!("unknown grad_scale {other:?}"),
+                }
+            }
+            "lr_milestones" => match value {
+                V::Array(items) => {
+                    self.lr_milestones = items
+                        .iter()
+                        .map(|v| as_f(v).map(|x| x as usize))
+                        .collect::<Result<_>>()?;
+                }
+                _ => bail!("lr_milestones: expected array"),
+            },
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Paper defaults per dataset (§4.1): weight decay and dropout differ
+    /// between Avazu and Criteo.
+    pub fn with_dataset_defaults(mut self, dataset: &str) -> Self {
+        self.dataset = dataset.to_string();
+        match dataset {
+            "avazu" => {
+                self.wd_emb = 5e-8;
+                self.model = "avazu".into();
+            }
+            "criteo" => {
+                self.wd_emb = 1e-5;
+                self.model = "criteo".into();
+            }
+            _ => {}
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("fp", Method::Fp),
+            ("lpt-sr", Method::Lpt(RoundingMode::Sr)),
+            ("LPT_DR", Method::Lpt(RoundingMode::Dr)),
+            ("alpt", Method::Alpt(RoundingMode::Sr)),
+            ("lsq", Method::Lsq),
+            ("pact", Method::Pact),
+            ("hashing", Method::Hashing),
+            ("prune", Method::Pruning),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m, "{s}");
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn experiment_from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+            # Table-1 cell
+            dataset = "avazu"
+            method = "alpt-sr"
+            bits = 4
+            epochs = 15
+            lr_delta = 2e-5
+            lr_milestones = [6, 9]
+            use_runtime = true
+            "#,
+        )
+        .unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.dataset, "avazu");
+        assert_eq!(e.method, Method::Alpt(RoundingMode::Sr));
+        assert_eq!(e.bits, 4);
+        assert_eq!(e.epochs, 15);
+        assert_eq!(e.lr_milestones, vec![6, 9]);
+        assert!((e.lr_delta - 2e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = TomlDoc::parse("nonsense = 1").unwrap();
+        assert!(Experiment::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn dataset_defaults() {
+        let e = Experiment::default().with_dataset_defaults("criteo");
+        assert!((e.wd_emb - 1e-5).abs() < 1e-12);
+        assert_eq!(e.model, "criteo");
+    }
+
+    #[test]
+    fn bit_width_validation() {
+        let mut e = Experiment::default();
+        e.bits = 8;
+        assert!(e.bit_width().is_ok());
+        e.bits = 7;
+        assert!(e.bit_width().is_err());
+    }
+}

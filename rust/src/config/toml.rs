@@ -1,0 +1,250 @@
+//! TOML-subset parser (offline: no `toml` crate).
+//!
+//! Supported grammar — the subset experiment configs actually use:
+//! `key = value` lines, `[section]` headers (flattened to `section.key`),
+//! `#` comments, strings, numbers, booleans, and flat arrays. No
+//! multi-line strings, no inline tables, no datetimes.
+
+use anyhow::{bail, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// Parsed document: ordered `(flattened_key, value)` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    items: Vec<(String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut items = Vec::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = find_top_level_eq(line) else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            items.push((full, value));
+        }
+        Ok(TomlDoc { items })
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.items.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// All items, flattened keys, in document order.
+    pub fn flat_items(&self) -> impl Iterator<Item = (String, TomlValue)> + '_ {
+        self.items.iter().cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = text.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) =
+        text.strip_prefix('[').and_then(|t| t.strip_suffix(']'))
+    {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|piece| parse_value(piece.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let cleaned = text.replace('_', "");
+    match cleaned.parse::<f64>() {
+        Ok(x) => Ok(TomlValue::Num(x)),
+        Err(_) => bail!("cannot parse value {text:?}"),
+    }
+}
+
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&text[start..]);
+    out
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = \"two\"\nc = true\nd = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Num(1.0)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Str("two".into())));
+        assert_eq!(doc.get("c"), Some(&TomlValue::Bool(true)));
+        assert_eq!(
+            doc.get("d"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Num(1.0),
+                TomlValue::Num(2.0),
+                TomlValue::Num(3.0)
+            ]))
+        );
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc =
+            TomlDoc::parse("[train]\nlr = 0.1\n[eval]\nlr = 0.2").unwrap();
+        assert_eq!(doc.get("train.lr"), Some(&TomlValue::Num(0.1)));
+        assert_eq!(doc.get("eval.lr"), Some(&TomlValue::Num(0.2)));
+    }
+
+    #[test]
+    fn comments_and_underscore_numbers() {
+        let doc = TomlDoc::parse(
+            "x = 1_000_000 # a million\ns = \"has # inside\" # trailing",
+        )
+        .unwrap();
+        assert_eq!(doc.get("x"), Some(&TomlValue::Num(1e6)));
+        assert_eq!(doc.get("s"), Some(&TomlValue::Str("has # inside".into())));
+    }
+
+    #[test]
+    fn scientific_numbers() {
+        let doc = TomlDoc::parse("lr = 2e-5\nneg = -1.5e3").unwrap();
+        assert_eq!(doc.get("lr"), Some(&TomlValue::Num(2e-5)));
+        assert_eq!(doc.get("neg"), Some(&TomlValue::Num(-1500.0)));
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let doc = TomlDoc::parse("a = 1\na = 2").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Num(2.0)));
+    }
+
+    #[test]
+    fn errors_reported_with_line() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+        assert!(TomlDoc::parse("x = @@").is_err());
+        assert!(TomlDoc::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = TomlDoc::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get("s"), Some(&TomlValue::Str("a\nb\t\"c\"".into())));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: training loop, evaluation, epoch scheduling, and
+//! the sharded leader/worker communication simulation.
+//!
+//! The [`Trainer`] owns everything stateful — the embedding store, the
+//! dense parameters + Adam state, the PJRT runtime (or the pure-Rust nn
+//! fallback), the PRNG streams — and drives the per-batch protocol:
+//!
+//! ```text
+//!   batcher ─▶ dedup ─▶ gather(store) ─▶ PJRT train artifact ─▶ grads
+//!                                            │
+//!              requantize ◀─ store.update ◀──┘   (+ ALPT second pass
+//!                                                  through train_fq)
+//! ```
+
+pub mod sharding;
+pub mod trainer;
+
+pub use sharding::{CommStats, ShardedStore};
+pub use trainer::{EpochReport, EvalReport, TrainResult, Trainer};

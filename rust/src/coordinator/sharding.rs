@@ -1,0 +1,265 @@
+//! Sharded leader/worker simulation with communication accounting.
+//!
+//! The paper's motivation (§1): compressing embeddings at training time
+//! cuts the cross-device traffic that dominates distributed CTR training.
+//! [`ShardedStore`] range-partitions a store across `W` simulated workers;
+//! every gather/update tallies the bytes a parameter-server deployment
+//! would move:
+//!
+//! * leader → compute: the batch's unique rows, in the store's wire format
+//!   (packed m-bit codes + Δ for LPT/ALPT, f32 rows otherwise);
+//! * compute → leader: f32 row gradients (gradients are not quantized in
+//!   the paper), plus one f32 Δ-gradient per row for ALPT.
+//!
+//! Byte counts are exact given the format; the time estimate divides by a
+//! configurable link bandwidth.
+
+use crate::config::{Experiment, Method};
+use crate::data::batcher::Batch;
+use crate::embedding::{build_store, EmbeddingStore};
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_map;
+use anyhow::Result;
+
+/// Accumulated communication statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub steps: u64,
+    pub rows_moved: u64,
+    pub bytes_down: u64, // leader -> compute (embedding rows)
+    pub bytes_up: u64,   // compute -> leader (gradients)
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_down + self.bytes_up
+    }
+
+    /// Seconds on a link of `gbps` gigabits/s.
+    pub fn seconds_at(&self, gbps: f64) -> f64 {
+        (self.total_bytes() as f64 * 8.0) / (gbps * 1e9)
+    }
+
+    pub fn add(&mut self, other: &CommStats) {
+        self.steps += other.steps;
+        self.rows_moved += other.rows_moved;
+        self.bytes_down += other.bytes_down;
+        self.bytes_up += other.bytes_up;
+    }
+}
+
+/// Per-row wire cost (bytes) of a method's embedding payload.
+pub fn row_wire_bytes(method: Method, bits: u32, dim: usize) -> usize {
+    match method {
+        // packed codes + one f32 delta per row
+        m if m.trains_quantized() => {
+            (dim * bits as usize).div_ceil(8) + 4
+        }
+        // everything float-backed ships f32 rows
+        _ => dim * 4,
+    }
+}
+
+/// Gradient wire cost (bytes) per row: f32 grads (+ f32 dΔ for ALPT).
+pub fn grad_wire_bytes(method: Method, dim: usize) -> usize {
+    let base = dim * 4;
+    match method {
+        Method::Alpt(_) => base + 4,
+        _ => base,
+    }
+}
+
+/// Account one training step's traffic for a batch.
+pub fn step_comm(
+    method: Method,
+    bits: u32,
+    dim: usize,
+    batch: &Batch,
+) -> CommStats {
+    let rows = batch.n_unique() as u64;
+    CommStats {
+        steps: 1,
+        rows_moved: rows,
+        bytes_down: rows * row_wire_bytes(method, bits, dim) as u64,
+        bytes_up: rows * grad_wire_bytes(method, dim) as u64,
+    }
+}
+
+/// A table sharded across `W` simulated workers (id % W), gathering in
+/// parallel threads and accounting per-shard traffic.
+pub struct ShardedStore {
+    shards: Vec<Box<dyn EmbeddingStore>>,
+    method: Method,
+    bits: u32,
+    dim: usize,
+    pub n_workers: usize,
+    pub stats: CommStats,
+}
+
+impl ShardedStore {
+    /// Build `n_workers` shard stores over id-partitioned feature spaces
+    /// (each worker holds ~n/W rows).
+    pub fn new(
+        exp: &Experiment,
+        n_features: usize,
+        dim: usize,
+        n_workers: usize,
+    ) -> Result<Self> {
+        assert!(n_workers >= 1);
+        let shard_features = n_features.div_ceil(n_workers);
+        let shards = (0..n_workers)
+            .map(|w| {
+                let mut rng =
+                    Pcg32::new(exp.seed.wrapping_add(w as u64), 0x5A4D);
+                build_store(exp, shard_features, dim, &mut rng)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            shards,
+            method: exp.method,
+            bits: exp.bits,
+            dim,
+            n_workers,
+            stats: CommStats::default(),
+        })
+    }
+
+    pub fn shard(&self, w: usize) -> &dyn EmbeddingStore {
+        self.shards[w].as_ref()
+    }
+
+    /// Total table bytes across shards.
+    pub fn train_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.train_bytes()).sum()
+    }
+
+    /// Parallel gather across shards: each worker extracts its rows, the
+    /// leader reassembles (and the traffic is tallied).
+    pub fn gather(&mut self, ids: &[u32], out: &mut [f32]) {
+        let n_workers = self.n_workers;
+        let dim = self.dim;
+        // per-worker (positions, local ids)
+        let mut assign: Vec<(Vec<usize>, Vec<u32>)> =
+            vec![(Vec::new(), Vec::new()); n_workers];
+        for (pos, &id) in ids.iter().enumerate() {
+            let w = (id as usize) % n_workers;
+            assign[w].0.push(pos);
+            assign[w].1.push(id / n_workers as u32);
+        }
+        let shards = &self.shards;
+        let gathered: Vec<Vec<f32>> = parallel_map(n_workers, n_workers, |w| {
+            let (_, locals) = &assign[w];
+            let mut buf = vec![0.0f32; locals.len() * dim];
+            if !locals.is_empty() {
+                shards[w].gather(locals, &mut buf);
+            }
+            buf
+        });
+        for (w, buf) in gathered.into_iter().enumerate() {
+            for (k, &pos) in assign[w].0.iter().enumerate() {
+                out[pos * dim..(pos + 1) * dim]
+                    .copy_from_slice(&buf[k * dim..(k + 1) * dim]);
+            }
+        }
+        self.stats.add(&CommStats {
+            steps: 1,
+            rows_moved: ids.len() as u64,
+            bytes_down: (ids.len()
+                * row_wire_bytes(self.method, self.bits, dim))
+                as u64,
+            bytes_up: (ids.len() * grad_wire_bytes(self.method, dim)) as u64,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoundingMode;
+    use crate::data::batcher::make_batch;
+    use crate::data::{Dataset, Schema};
+
+    fn toy_batch() -> Batch {
+        let schema = Schema::new(vec![8, 8]);
+        let ds = Dataset {
+            schema,
+            features: vec![0, 8, 1, 9, 2, 10, 0, 8],
+            labels: vec![1, 0, 1, 0],
+        };
+        make_batch(&ds, &[0, 1, 2, 3], 4)
+    }
+
+    #[test]
+    fn wire_bytes_follow_bit_width() {
+        let d = 16;
+        let fp = row_wire_bytes(Method::Fp, 32, d);
+        assert_eq!(fp, 64);
+        let alpt8 =
+            row_wire_bytes(Method::Alpt(RoundingMode::Sr), 8, d);
+        assert_eq!(alpt8, 16 + 4);
+        let alpt2 =
+            row_wire_bytes(Method::Alpt(RoundingMode::Sr), 2, d);
+        assert_eq!(alpt2, 4 + 4);
+        // QAT ships fp rows at train time
+        assert_eq!(row_wire_bytes(Method::Lsq, 8, d), 64);
+    }
+
+    #[test]
+    fn step_comm_counts_uniques_not_slots() {
+        let batch = toy_batch();
+        assert_eq!(batch.n_unique(), 6); // ids {0,8,1,9,2,10}
+        let s = step_comm(Method::Fp, 32, 4, &batch);
+        assert_eq!(s.rows_moved, 6);
+        assert_eq!(s.bytes_down, 6 * 16);
+        assert_eq!(s.bytes_up, 6 * 16);
+    }
+
+    #[test]
+    fn quantized_comm_smaller_than_fp() {
+        let batch = toy_batch();
+        let fp = step_comm(Method::Fp, 32, 16, &batch);
+        let q8 =
+            step_comm(Method::Alpt(RoundingMode::Sr), 8, 16, &batch);
+        let q2 =
+            step_comm(Method::Alpt(RoundingMode::Sr), 2, 16, &batch);
+        assert!(q8.bytes_down < fp.bytes_down);
+        assert!(q2.bytes_down < q8.bytes_down);
+        // uplink (f32 grads) identical up to the delta-grad float
+        assert!(q8.bytes_up >= fp.bytes_up);
+    }
+
+    #[test]
+    fn seconds_scale_with_bandwidth() {
+        let mut s = CommStats::default();
+        s.bytes_down = 1_000_000_000;
+        assert!((s.seconds_at(8.0) - 1.0).abs() < 1e-9);
+        assert!((s.seconds_at(80.0) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_gather_matches_single_store() {
+        use crate::config::Experiment;
+        let exp = Experiment {
+            method: Method::Fp,
+            model: "tiny".into(),
+            use_runtime: false,
+            ..Experiment::default()
+        };
+        let (n_features, dim) = (64, 8);
+        let mut sharded =
+            ShardedStore::new(&exp, n_features, dim, 4).unwrap();
+        let ids: Vec<u32> = vec![0, 5, 17, 33, 63, 2];
+        let mut out = vec![0.0f32; ids.len() * dim];
+        sharded.gather(&ids, &mut out);
+        // every row must be that worker's row for local id
+        for (i, &id) in ids.iter().enumerate() {
+            let w = (id as usize) % 4;
+            let local = id / 4;
+            let mut want = vec![0.0f32; dim];
+            sharded.shard(w).gather(&[local], &mut want);
+            assert_eq!(&out[i * dim..(i + 1) * dim], &want[..], "id {id}");
+        }
+        assert_eq!(sharded.stats.steps, 1);
+        assert_eq!(sharded.stats.rows_moved, 6);
+    }
+}

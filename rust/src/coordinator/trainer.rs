@@ -1,0 +1,673 @@
+//! The training coordinator.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::Experiment;
+use crate::data::batcher::{Batch, Batcher};
+use crate::data::Dataset;
+use crate::embedding::{build_store, EmbeddingStore, UpdateHp};
+use crate::metrics::EvalAccumulator;
+use crate::nn::Dcn;
+use crate::optim::{Adam, LrSchedule};
+use crate::quant::{lsq_delta_grad_row, BitWidth};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar, to_f32, to_scalar_f32, ModelEntry, Runtime,
+};
+use crate::util::rng::Pcg32;
+
+/// Per-epoch training report.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub steps: usize,
+    pub seconds: f64,
+    pub val_auc: f64,
+    pub val_logloss: f64,
+}
+
+/// Evaluation metrics.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub auc: f64,
+    pub logloss: f64,
+    pub samples: usize,
+}
+
+/// Final result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub method: &'static str,
+    pub best_auc: f64,
+    pub best_logloss: f64,
+    pub best_epoch: usize,
+    pub epochs_run: usize,
+    pub total_seconds: f64,
+    pub seconds_per_epoch: f64,
+    pub train_compression: f64,
+    pub infer_compression: f64,
+    pub history: Vec<EpochReport>,
+}
+
+/// One training step's outputs (diagnostics).
+pub struct StepOutput {
+    pub loss: f32,
+    pub n_unique: usize,
+}
+
+/// The coordinator. See module docs for the per-batch protocol.
+pub struct Trainer {
+    pub exp: Experiment,
+    pub entry: ModelEntry,
+    runtime: Option<Runtime>,
+    dcn: Dcn,
+    pub store: Box<dyn EmbeddingStore>,
+    pub dense: Vec<f32>,
+    adam: Adam,
+    schedule: LrSchedule,
+    rng: Pcg32,
+    mask_rng: Pcg32,
+    // scratch buffers reused across steps (hot-path allocations)
+    emb_buf: Vec<f32>,
+    codes_buf: Vec<i32>,
+    delta_buf: Vec<f32>,
+    mask_buf: Vec<f32>,
+    labels_buf: Vec<f32>,
+    grad_scale_val: f32,
+}
+
+impl Trainer {
+    /// Build a trainer for `exp` over a feature space of `n_features`.
+    pub fn new(exp: Experiment, n_features: usize) -> Result<Self> {
+        let mut rng = Pcg32::new(exp.seed, 0x7A11);
+        let runtime = if exp.use_runtime {
+            Some(Runtime::load(Path::new(&exp.artifacts_dir))?)
+        } else {
+            None
+        };
+        let entry = match &runtime {
+            Some(rt) => rt.entry(&exp.model)?.clone(),
+            None => {
+                // PJRT-free path still needs the geometry; use the static
+                // configs mirrored in DcnConfig.
+                builtin_entry(&exp.model)?
+            }
+        };
+        ensure!(
+            entry.layout_matches_rust(),
+            "manifest layout disagrees with the Rust DCN layout"
+        );
+        let dcn = Dcn::new(entry.dcn_config());
+        let dense = entry.init_params(&mut rng);
+        let adam = Adam::new(dense.len(), exp.lr_dense);
+        let store = build_store(&exp, n_features, entry.emb_dim, &mut rng)?;
+        let bw = exp.bit_width().unwrap_or(BitWidth::B8);
+        let grad_scale_val =
+            exp.grad_scale.value(entry.batch, entry.emb_dim, bw);
+        let schedule = LrSchedule {
+            milestones: exp.lr_milestones.clone(),
+            gamma: exp.lr_gamma,
+        };
+        let umax = entry.umax;
+        let (b, mmd) = (entry.batch, entry.mlp_mask_dim);
+        let d = entry.emb_dim;
+        Ok(Self {
+            exp,
+            entry,
+            runtime,
+            dcn,
+            store,
+            dense,
+            adam,
+            schedule,
+            mask_rng: Pcg32::new(rng.next_u64(), 0xD0),
+            rng,
+            emb_buf: vec![0.0; umax * d],
+            codes_buf: vec![0i32; umax * d],
+            delta_buf: vec![1.0; umax],
+            mask_buf: vec![1.0; b * mmd],
+            labels_buf: vec![0.0; b],
+            grad_scale_val,
+        })
+    }
+
+    /// Current LR decay multiplier for `epoch` (1-based).
+    pub fn lr_scale(&self, epoch: usize) -> f32 {
+        self.schedule.scale(epoch)
+    }
+
+    fn fill_mask(&mut self) {
+        let p = self.entry.dropout as f32;
+        if p <= 0.0 {
+            // stays all-ones
+            return;
+        }
+        let keep = 1.0 - p;
+        let inv = 1.0 / keep;
+        for v in self.mask_buf.iter_mut() {
+            *v = if self.mask_rng.bernoulli(keep) { inv } else { 0.0 };
+        }
+    }
+
+    fn eval_mask_ones(&mut self) {
+        for v in self.mask_buf.iter_mut() {
+            *v = 1.0;
+        }
+    }
+
+    /// One training step on a prepared batch. `epoch` is 1-based.
+    pub fn step(&mut self, batch: &Batch, epoch: usize) -> Result<StepOutput> {
+        let (umax, d, b, fields, mmd) = (
+            self.entry.umax,
+            self.entry.emb_dim,
+            self.entry.batch,
+            self.entry.fields,
+            self.entry.mlp_mask_dim,
+        );
+        let n_unique = batch.unique.len();
+        ensure!(n_unique <= umax, "batch uniques exceed umax");
+        ensure!(batch.idx.len() == b * fields, "bad batch shape");
+
+        // labels + dropout mask
+        for (o, &l) in self.labels_buf.iter_mut().zip(&batch.labels) {
+            *o = l as f32;
+        }
+        self.fill_mask();
+
+        // gather the dequantized rows (needed for the update regardless of
+        // which artifact runs the forward)
+        self.emb_buf[n_unique * d..umax * d].fill(0.0);
+        self.store
+            .gather(&batch.unique, &mut self.emb_buf[..n_unique * d]);
+
+        let quantized = self.store.quantized_view(
+            &batch.unique,
+            &mut self.codes_buf[..n_unique * d],
+            &mut self.delta_buf[..n_unique],
+        );
+        if quantized {
+            self.codes_buf[n_unique * d..umax * d].fill(0);
+            self.delta_buf[n_unique..umax].fill(1.0);
+        }
+
+        let lr_scale = self.schedule.scale(epoch);
+        let hp = UpdateHp {
+            lr_emb: self.exp.lr_emb,
+            wd_emb: self.exp.wd_emb,
+            lr_delta: self.exp.lr_delta,
+            wd_delta: self.exp.wd_delta,
+            grad_scale: self.grad_scale_val,
+            lr_scale,
+        };
+        let bw = self.exp.bit_width()?;
+
+        let (loss, d_emb, d_params) = if let Some(rt) = self.runtime.as_mut()
+        {
+            let (udim, ddim) = (umax as i64, d as i64);
+            let idx_lit =
+                lit_i32(&batch.idx, &[b as i64, fields as i64])?;
+            let labels_lit = lit_f32(&self.labels_buf, &[b as i64])?;
+            let params_lit = lit_f32(&self.dense, &[self.dense.len() as i64])?;
+            let mask_lit =
+                lit_f32(&self.mask_buf, &[b as i64, mmd as i64])?;
+            let outs = if quantized {
+                rt.exec(
+                    &self.exp.model,
+                    "train_lpt",
+                    &[
+                        lit_i32(&self.codes_buf, &[udim, ddim])?,
+                        lit_f32(&self.delta_buf, &[udim])?,
+                        idx_lit,
+                        labels_lit,
+                        params_lit,
+                        mask_lit,
+                    ],
+                )?
+            } else {
+                rt.exec(
+                    &self.exp.model,
+                    "train_fp",
+                    &[
+                        lit_f32(&self.emb_buf, &[udim, ddim])?,
+                        idx_lit,
+                        labels_lit,
+                        params_lit,
+                        mask_lit,
+                    ],
+                )?
+            };
+            ensure!(outs.len() == 4, "train artifact returned {} outputs",
+                    outs.len());
+            let loss = to_scalar_f32(&outs[0])?;
+            let d_emb = to_f32(&outs[2])?;
+            let d_params = to_f32(&outs[3])?;
+            (loss, d_emb, d_params)
+        } else {
+            let out = self.dcn.train_step(
+                &self.emb_buf,
+                &batch.idx,
+                &batch.labels,
+                &self.dense,
+                &self.mask_buf,
+                umax,
+            );
+            (out.loss, out.d_emb, out.d_params)
+        };
+
+        // dense update first: Algorithm 1 step 2 evaluates at w_o^{t+1}
+        self.adam.step(&mut self.dense, &d_params, lr_scale);
+
+        // embedding update (+ ALPT's second pass through train_fq)
+        let model = self.exp.model.clone();
+        let runtime = &mut self.runtime;
+        let dcn = &self.dcn;
+        let dense = &self.dense;
+        let mask_buf = &self.mask_buf;
+        let labels_buf = &self.labels_buf;
+        let labels_u8 = &batch.labels;
+        let idx = &batch.idx;
+        let mut second_pass = |w_new: &[f32],
+                               delta: &[f32]|
+         -> Result<Vec<f32>> {
+            debug_assert_eq!(w_new.len(), delta.len() * d);
+            let n_u = delta.len();
+            if let Some(rt) = runtime.as_mut() {
+                let mut w_pad = vec![0.0f32; umax * d];
+                w_pad[..n_u * d].copy_from_slice(w_new);
+                let mut d_pad = vec![1.0f32; umax];
+                d_pad[..n_u].copy_from_slice(delta);
+                // `delta_grad` is the lean variant of train_fq: XLA DCEs
+                // the weight/dense backward and only d_delta crosses the
+                // host boundary (see EXPERIMENTS.md §Perf).
+                let outs = rt.exec(
+                    &model,
+                    "delta_grad",
+                    &[
+                        lit_f32(&w_pad, &[umax as i64, d as i64])?,
+                        lit_f32(&d_pad, &[umax as i64])?,
+                        lit_i32(idx, &[b as i64, fields as i64])?,
+                        lit_f32(labels_buf, &[b as i64])?,
+                        lit_f32(dense, &[dense.len() as i64])?,
+                        lit_f32(mask_buf, &[b as i64, mmd as i64])?,
+                        lit_scalar(bw.qn() as f32),
+                        lit_scalar(bw.qp() as f32),
+                    ],
+                )?;
+                ensure!(outs.len() == 1, "delta_grad returned {} outputs",
+                        outs.len());
+                let mut d_delta = to_f32(&outs[0])?;
+                d_delta.truncate(n_u);
+                Ok(d_delta)
+            } else {
+                // Rust fallback: fake-quant forward + Eq. 7 reduction —
+                // the same math the train_fq artifact performs.
+                let mut w_pad = vec![0.0f32; umax * d];
+                for i in 0..n_u {
+                    let dl = delta[i];
+                    for j in 0..d {
+                        let x = (w_new[i * d + j] / dl)
+                            .clamp(bw.qn() as f32, bw.qp() as f32);
+                        w_pad[i * d + j] = (x + 0.5).floor() * dl;
+                    }
+                }
+                let out = dcn.train_step(&w_pad, idx, labels_u8, dense,
+                                         mask_buf, umax);
+                Ok((0..n_u)
+                    .map(|i| {
+                        lsq_delta_grad_row(
+                            &w_new[i * d..(i + 1) * d],
+                            delta[i],
+                            bw,
+                            &out.d_emb[i * d..(i + 1) * d],
+                        )
+                    })
+                    .collect())
+            }
+        };
+
+        self.store.update(
+            &batch.unique,
+            &self.emb_buf[..n_unique * d],
+            &d_emb[..n_unique * d],
+            &hp,
+            &mut self.rng,
+            &mut second_pass,
+        )?;
+        self.store.end_step();
+
+        Ok(StepOutput { loss, n_unique })
+    }
+
+    /// Evaluate on a dataset (deterministic order, padded final batch).
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<EvalReport> {
+        let (umax, d, b, fields) = (
+            self.entry.umax,
+            self.entry.emb_dim,
+            self.entry.batch,
+            self.entry.fields,
+        );
+        self.eval_mask_ones();
+        let mut acc = EvalAccumulator::new();
+        let batches: Vec<Batch> =
+            Batcher::new(ds, b, None, false).collect();
+        for batch in &batches {
+            let n_unique = batch.unique.len();
+            self.emb_buf[n_unique * d..umax * d].fill(0.0);
+            self.store
+                .gather(&batch.unique, &mut self.emb_buf[..n_unique * d]);
+            let quantized = self.store.quantized_view(
+                &batch.unique,
+                &mut self.codes_buf[..n_unique * d],
+                &mut self.delta_buf[..n_unique],
+            );
+            if quantized {
+                self.codes_buf[n_unique * d..umax * d].fill(0);
+                self.delta_buf[n_unique..umax].fill(1.0);
+            }
+            let logits = if let Some(rt) = self.runtime.as_mut() {
+                let idx_lit =
+                    lit_i32(&batch.idx, &[b as i64, fields as i64])?;
+                let params_lit =
+                    lit_f32(&self.dense, &[self.dense.len() as i64])?;
+                let outs = if quantized {
+                    rt.exec(
+                        &self.exp.model,
+                        "eval_lpt",
+                        &[
+                            lit_i32(&self.codes_buf,
+                                    &[umax as i64, d as i64])?,
+                            lit_f32(&self.delta_buf, &[umax as i64])?,
+                            idx_lit,
+                            params_lit,
+                        ],
+                    )?
+                } else {
+                    rt.exec(
+                        &self.exp.model,
+                        "eval_fp",
+                        &[
+                            lit_f32(&self.emb_buf, &[umax as i64, d as i64])?,
+                            idx_lit,
+                            params_lit,
+                        ],
+                    )?
+                };
+                to_f32(&outs[0])?
+            } else {
+                self.dcn.infer(&self.emb_buf, &batch.idx, &self.dense)
+            };
+            acc.push(&logits, &batch.labels, batch.valid);
+        }
+        Ok(EvalReport {
+            auc: acc.auc(),
+            logloss: acc.logloss(),
+            samples: acc.len(),
+        })
+    }
+
+    /// Full training run: epochs, per-epoch validation, early stop on val
+    /// AUC with the configured patience, final metrics from the best epoch.
+    pub fn train(
+        &mut self,
+        train: &Dataset,
+        val: &Dataset,
+        verbose: bool,
+    ) -> Result<TrainResult> {
+        let t0 = Instant::now();
+        let mut history = Vec::new();
+        let (mut best_auc, mut best_logloss, mut best_epoch) =
+            (0.0f64, f64::INFINITY, 0usize);
+        let mut bad_epochs = 0usize;
+
+        for epoch in 1..=self.exp.epochs {
+            let e0 = Instant::now();
+            let seed = self.exp.seed ^ (epoch as u64).wrapping_mul(0x9E37);
+            let batches: Vec<Batch> =
+                Batcher::new(train, self.entry.batch, Some(seed), true)
+                    .collect();
+            let mut loss_sum = 0.0f64;
+            let mut steps = 0usize;
+            for batch in &batches {
+                let out = self.step(batch, epoch)?;
+                loss_sum += out.loss as f64;
+                steps += 1;
+            }
+            let ev = self.evaluate(val)?;
+            let report = EpochReport {
+                epoch,
+                mean_loss: loss_sum / steps.max(1) as f64,
+                steps,
+                seconds: e0.elapsed().as_secs_f64(),
+                val_auc: ev.auc,
+                val_logloss: ev.logloss,
+            };
+            if verbose {
+                println!(
+                    "  [{}] epoch {epoch:>2}: loss {:.5}  val auc {:.4}  \
+                     val logloss {:.5}  ({:.1}s, {} steps)",
+                    self.store.method_name(),
+                    report.mean_loss,
+                    report.val_auc,
+                    report.val_logloss,
+                    report.seconds,
+                    report.steps
+                );
+            }
+            history.push(report);
+            if ev.auc > best_auc {
+                best_auc = ev.auc;
+                best_logloss = ev.logloss;
+                best_epoch = epoch;
+                bad_epochs = 0;
+            } else {
+                bad_epochs += 1;
+                if self.exp.patience > 0 && bad_epochs >= self.exp.patience {
+                    break;
+                }
+            }
+        }
+
+        let total = t0.elapsed().as_secs_f64();
+        let fp =
+            crate::embedding::fp_bytes(self.store.n_features(),
+                                       self.entry.emb_dim) as f64;
+        let epochs_run = history.len();
+        Ok(TrainResult {
+            method: self.store.method_name(),
+            best_auc,
+            best_logloss,
+            best_epoch,
+            epochs_run,
+            total_seconds: total,
+            seconds_per_epoch: total / epochs_run.max(1) as f64,
+            train_compression: fp / self.store.train_bytes() as f64,
+            infer_compression: fp / self.store.infer_bytes() as f64,
+            history,
+        })
+    }
+
+    /// Is this trainer using the PJRT runtime (vs the Rust nn fallback)?
+    pub fn uses_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+}
+
+/// Static geometries for the PJRT-free path (must mirror
+/// `python/compile/configs.py`).
+fn builtin_entry(model: &str) -> Result<ModelEntry> {
+    use crate::nn::DcnConfig;
+    let (cfg, dropout) = match model {
+        "tiny" => (DcnConfig::tiny(), 0.0),
+        "avazu" => (
+            DcnConfig {
+                fields: 24,
+                emb_dim: 16,
+                batch: 256,
+                cross_depth: 3,
+                mlp: vec![256, 128, 64],
+            },
+            0.0,
+        ),
+        "criteo" => (
+            DcnConfig {
+                fields: 39,
+                emb_dim: 16,
+                batch: 256,
+                cross_depth: 5,
+                mlp: vec![200, 200, 200, 200, 200],
+            },
+            0.2,
+        ),
+        "avazu_d32" => (
+            DcnConfig {
+                fields: 24,
+                emb_dim: 32,
+                batch: 256,
+                cross_depth: 3,
+                mlp: vec![256, 128, 64],
+            },
+            0.0,
+        ),
+        "criteo_d32" => (
+            DcnConfig {
+                fields: 39,
+                emb_dim: 32,
+                batch: 256,
+                cross_depth: 5,
+                mlp: vec![200, 200, 200, 200, 200],
+            },
+            0.2,
+        ),
+        other => bail!("unknown model config {other:?}"),
+    };
+    Ok(entry_from_dcn(model, &cfg, dropout))
+}
+
+/// Build a `ModelEntry` from a Rust-side DcnConfig (no manifest needed).
+pub fn entry_from_dcn(
+    name: &str,
+    cfg: &crate::nn::DcnConfig,
+    dropout: f64,
+) -> ModelEntry {
+    use crate::nn::dcn::Init;
+    let mut params = cfg
+        .param_layout()
+        .into_iter()
+        .map(|(pname, r, c, init)| crate::runtime::ParamSpec {
+            name: pname,
+            shape: if c == 1 { vec![r] } else { vec![r, c] },
+            init: match init {
+                Init::Xavier => "xavier".into(),
+                Init::Normal => "normal".into(),
+                Init::Zero => "zero".into(),
+            },
+        })
+        .collect::<Vec<_>>();
+    // vectors are 1-D in the python layout except final_w: [k+m, 1]
+    for p in params.iter_mut() {
+        if p.name == "final_w" && p.shape.len() == 1 {
+            p.shape = vec![p.shape[0], 1];
+        }
+    }
+    ModelEntry {
+        name: name.to_string(),
+        fields: cfg.fields,
+        emb_dim: cfg.emb_dim,
+        batch: cfg.batch,
+        umax: cfg.batch * cfg.fields,
+        cross_depth: cfg.cross_depth,
+        mlp: cfg.mlp.clone(),
+        dropout,
+        input_dim: cfg.input_dim(),
+        mlp_mask_dim: cfg.mlp_mask_dim(),
+        n_params: cfg.n_params(),
+        params,
+        artifacts: Default::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, RoundingMode};
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn tiny_exp(method: Method, use_runtime: bool) -> Experiment {
+        Experiment {
+            method,
+            model: "tiny".into(),
+            dataset: "tiny".into(),
+            epochs: 1,
+            use_runtime,
+            lr_emb: 0.5,
+            lr_delta: 1e-4,
+            patience: 0,
+            ..Experiment::default()
+        }
+    }
+
+    #[test]
+    fn builtin_entries_match_rust_layout() {
+        for model in ["tiny", "avazu", "criteo", "avazu_d32", "criteo_d32"] {
+            let e = builtin_entry(model).unwrap();
+            assert!(e.layout_matches_rust(), "{model}");
+            assert_eq!(e.umax, e.batch * e.fields);
+        }
+    }
+
+    #[test]
+    fn nn_path_trains_every_method() {
+        let spec = SyntheticSpec::tiny(3);
+        let ds = generate(&spec, 2000);
+        let (train, val, _) = ds.split((0.8, 0.1, 0.1), 1);
+        for method in [
+            Method::Fp,
+            Method::Lpt(RoundingMode::Sr),
+            Method::Alpt(RoundingMode::Sr),
+            Method::Lsq,
+            Method::Pact,
+            Method::Hashing,
+            Method::Pruning,
+        ] {
+            let exp = tiny_exp(method, false);
+            let mut tr =
+                Trainer::new(exp, ds.schema.n_features()).unwrap();
+            let res = tr.train(&train, &val, false).unwrap();
+            assert!(res.best_auc > 0.4, "{method:?}: auc={}", res.best_auc);
+            assert!(res.best_logloss.is_finite());
+            assert_eq!(res.epochs_run, 1);
+        }
+    }
+
+    #[test]
+    fn nn_path_loss_decreases_over_epochs() {
+        let spec = SyntheticSpec::tiny(5);
+        let ds = generate(&spec, 4000);
+        let (train, val, _) = ds.split((0.8, 0.1, 0.1), 1);
+        let mut exp = tiny_exp(Method::Fp, false);
+        exp.epochs = 3;
+        let mut tr = Trainer::new(exp, ds.schema.n_features()).unwrap();
+        let res = tr.train(&train, &val, false).unwrap();
+        let first = res.history.first().unwrap().mean_loss;
+        let last = res.history.last().unwrap().mean_loss;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn lr_schedule_applied() {
+        let exp = Experiment {
+            lr_milestones: vec![2],
+            lr_gamma: 0.5,
+            use_runtime: false,
+            model: "tiny".into(),
+            ..Experiment::default()
+        };
+        let tr = Trainer::new(exp, 100).unwrap();
+        assert_eq!(tr.lr_scale(1), 1.0);
+        assert_eq!(tr.lr_scale(2), 1.0);
+        assert_eq!(tr.lr_scale(3), 0.5);
+    }
+}

@@ -1,0 +1,279 @@
+//! CTR data pipeline: schema, in-memory dataset, on-disk binary format,
+//! train/val/test splits.
+//!
+//! The paper trains on Kaggle Criteo/Avazu, which are download-gated; the
+//! [`synthetic`] module generates datasets with the properties the paper's
+//! experiments exercise (long-tailed Zipf features, learnable interaction
+//! structure — DESIGN.md §5.1). Everything downstream is agnostic to where
+//! the samples came from.
+//!
+//! Feature ids are *global*: field `f`'s local id `j` maps to
+//! `field_offset[f] + j`, so one embedding table serves all fields — the
+//! same layout CTR systems and the paper use (one row per feature).
+
+pub mod batcher;
+pub mod synthetic;
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Dataset schema: per-field vocabulary sizes and global-id offsets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    /// Vocabulary size per field (id 0 of every field is its OOV token).
+    pub vocabs: Vec<u32>,
+    /// Exclusive prefix sum of `vocabs`.
+    pub offsets: Vec<u32>,
+}
+
+impl Schema {
+    pub fn new(vocabs: Vec<u32>) -> Self {
+        assert!(!vocabs.is_empty());
+        let mut offsets = Vec::with_capacity(vocabs.len());
+        let mut acc = 0u32;
+        for &v in &vocabs {
+            assert!(v > 0, "empty field vocabulary");
+            offsets.push(acc);
+            acc = acc.checked_add(v).expect("feature space overflows u32");
+        }
+        Self { vocabs, offsets }
+    }
+
+    pub fn n_fields(&self) -> usize {
+        self.vocabs.len()
+    }
+
+    /// Total number of features across all fields = embedding-table rows.
+    pub fn n_features(&self) -> usize {
+        (*self.offsets.last().unwrap() + *self.vocabs.last().unwrap())
+            as usize
+    }
+
+    /// Global feature id for (field, local id).
+    #[inline]
+    pub fn global_id(&self, field: usize, local: u32) -> u32 {
+        debug_assert!(local < self.vocabs[field]);
+        self.offsets[field] + local
+    }
+
+    /// Which field a global id belongs to.
+    pub fn field_of(&self, global: u32) -> usize {
+        match self.offsets.binary_search(&global) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+}
+
+/// In-memory CTR dataset: `[n, F]` global feature ids + binary labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub schema: Schema,
+    /// Row-major `[n_samples × n_fields]` global feature ids.
+    pub features: Vec<u32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn n_fields(&self) -> usize {
+        self.schema.n_fields()
+    }
+
+    /// Feature ids of sample `i`.
+    #[inline]
+    pub fn sample(&self, i: usize) -> &[u32] {
+        let f = self.n_fields();
+        &self.features[i * f..(i + 1) * f]
+    }
+
+    /// Empirical CTR.
+    pub fn ctr(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().map(|&l| l as f64).sum::<f64>()
+            / self.labels.len() as f64
+    }
+
+    /// Split into (train, val, test) by a shuffled permutation with the
+    /// paper's 8:1:1 default.
+    pub fn split(
+        &self,
+        ratios: (f64, f64, f64),
+        seed: u64,
+    ) -> (Dataset, Dataset, Dataset) {
+        let n = self.n_samples();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = crate::util::rng::Pcg32::new(seed, 0x5917);
+        rng.shuffle(&mut order);
+        let n_train = (n as f64 * ratios.0).round() as usize;
+        let n_val = (n as f64 * ratios.1).round() as usize;
+        let take = |idx: &[usize]| -> Dataset {
+            let f = self.n_fields();
+            let mut features = Vec::with_capacity(idx.len() * f);
+            let mut labels = Vec::with_capacity(idx.len());
+            for &i in idx {
+                features.extend_from_slice(self.sample(i));
+                labels.push(self.labels[i]);
+            }
+            Dataset { schema: self.schema.clone(), features, labels }
+        };
+        (
+            take(&order[..n_train]),
+            take(&order[n_train..(n_train + n_val).min(n)]),
+            take(&order[(n_train + n_val).min(n)..]),
+        )
+    }
+
+    // ------------------------------------------------------ binary on-disk
+
+    const MAGIC: &'static [u8; 8] = b"ALPTDS01";
+
+    /// Write the dataset in the project's binary format (little endian):
+    /// magic, F, n, vocabs[F], features[n*F], labels[n].
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.n_fields() as u32).to_le_bytes())?;
+        w.write_all(&(self.n_samples() as u64).to_le_bytes())?;
+        for &v in &self.schema.vocabs {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &f in &self.features {
+            w.write_all(&f.to_le_bytes())?;
+        }
+        w.write_all(&self.labels)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read a dataset written by [`Dataset::write`].
+    pub fn read(path: &Path) -> Result<Dataset> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{} is not an ALPT dataset file", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4)?;
+        let n_fields = u32::from_le_bytes(b4) as usize;
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let mut vocabs = Vec::with_capacity(n_fields);
+        for _ in 0..n_fields {
+            r.read_exact(&mut b4)?;
+            vocabs.push(u32::from_le_bytes(b4));
+        }
+        let schema = Schema::new(vocabs);
+        let mut feat_bytes = vec![0u8; n * n_fields * 4];
+        r.read_exact(&mut feat_bytes)?;
+        let features = feat_bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect::<Vec<_>>();
+        let mut labels = vec![0u8; n];
+        r.read_exact(&mut labels)?;
+        // validate ids
+        for (i, &f) in features.iter().enumerate() {
+            if (f as usize) >= schema.n_features() {
+                bail!("feature id {f} out of range at element {i}");
+            }
+        }
+        Ok(Dataset { schema, features, labels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let schema = Schema::new(vec![3, 2, 4]);
+        let features = vec![
+            0, 3, 5, // sample 0: field ids (0,0) (1,0) (2,0)
+            2, 4, 8, // sample 1
+            1, 3, 6, // sample 2
+            0, 4, 7, // sample 3
+        ];
+        Dataset { schema, features, labels: vec![1, 0, 0, 1] }
+    }
+
+    #[test]
+    fn schema_offsets_and_ids() {
+        let s = Schema::new(vec![3, 2, 4]);
+        assert_eq!(s.offsets, vec![0, 3, 5]);
+        assert_eq!(s.n_features(), 9);
+        assert_eq!(s.global_id(0, 2), 2);
+        assert_eq!(s.global_id(1, 0), 3);
+        assert_eq!(s.global_id(2, 3), 8);
+        assert_eq!(s.field_of(0), 0);
+        assert_eq!(s.field_of(2), 0);
+        assert_eq!(s.field_of(3), 1);
+        assert_eq!(s.field_of(8), 2);
+    }
+
+    #[test]
+    fn dataset_accessors() {
+        let d = toy();
+        assert_eq!(d.n_samples(), 4);
+        assert_eq!(d.sample(1), &[2, 4, 8]);
+        assert!((d.ctr() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let d = toy();
+        let (tr, va, te) = d.split((0.5, 0.25, 0.25), 7);
+        assert_eq!(tr.n_samples() + va.n_samples() + te.n_samples(), 4);
+        assert_eq!(tr.n_samples(), 2);
+        // schema preserved
+        assert_eq!(tr.schema, d.schema);
+    }
+
+    #[test]
+    fn split_deterministic_by_seed() {
+        let d = toy();
+        let (a, _, _) = d.split((0.5, 0.25, 0.25), 42);
+        let (b, _, _) = d.split((0.5, 0.25, 0.25), 42);
+        assert_eq!(a.features, b.features);
+        let (c, _, _) = d.split((0.5, 0.25, 0.25), 43);
+        // with 4 samples different seeds *may* coincide; just check both ok
+        assert_eq!(c.n_samples(), 2);
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let d = toy();
+        let dir = std::env::temp_dir().join("alpt_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ds");
+        d.write(&path).unwrap();
+        let back = Dataset::read(&path).unwrap();
+        assert_eq!(back.schema, d.schema);
+        assert_eq!(back.features, d.features);
+        assert_eq!(back.labels, d.labels);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn io_rejects_garbage() {
+        let dir = std::env::temp_dir().join("alpt_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ds");
+        std::fs::write(&path, b"NOTADATASET").unwrap();
+        assert!(Dataset::read(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,116 @@
+//! Full-precision embedding table (the FP baseline, no compression).
+
+use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use crate::optim::sgd_update;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Plain `[n, d]` f32 table updated by SGD (+ decoupled weight decay).
+pub struct FpStore {
+    n: usize,
+    d: usize,
+    table: Vec<f32>,
+}
+
+impl FpStore {
+    pub fn init(n: usize, d: usize, rng: &mut Pcg32) -> Self {
+        Self { n, d, table: init_weights(n, d, rng) }
+    }
+
+    /// Direct row access (used by the serve example to quantize a trained
+    /// FP table through the `quantize` artifact).
+    pub fn row(&self, id: u32) -> &[f32] {
+        let id = id as usize;
+        &self.table[id * self.d..(id + 1) * self.d]
+    }
+
+    pub fn table(&self) -> &[f32] {
+        &self.table
+    }
+}
+
+impl EmbeddingStore for FpStore {
+    fn method_name(&self) -> &'static str {
+        "FP"
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.d);
+        for (i, &id) in ids.iter().enumerate() {
+            out[i * self.d..(i + 1) * self.d]
+                .copy_from_slice(self.row(id));
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        _emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        _rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let lr = hp.lr_emb * hp.lr_scale;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let row = &mut self.table[id * self.d..(id + 1) * self.d];
+            sgd_update(row, &grads[i * self.d..(i + 1) * self.d], lr,
+                       hp.wd_emb);
+        }
+        Ok(())
+    }
+
+    fn train_bytes(&self) -> usize {
+        self.table.len() * 4
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.table.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{hp, no_second_pass};
+    use super::*;
+
+    #[test]
+    fn gather_then_update_moves_rows() {
+        let mut rng = Pcg32::seeded(1);
+        let mut store = FpStore::init(10, 4, &mut rng);
+        let ids = [3u32, 7];
+        let mut before = vec![0.0; 8];
+        store.gather(&ids, &mut before);
+        let grads = vec![1.0f32; 8];
+        store
+            .update(&ids, &before, &grads, &hp(), &mut rng,
+                    &mut no_second_pass())
+            .unwrap();
+        let mut after = vec![0.0; 8];
+        store.gather(&ids, &mut after);
+        for (b, a) in before.iter().zip(&after) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+        // untouched rows stay put
+        let mut other = vec![0.0; 4];
+        store.gather(&[0], &mut other);
+        assert_eq!(other, store.row(0));
+    }
+
+    #[test]
+    fn bytes_are_fp() {
+        let mut rng = Pcg32::seeded(2);
+        let store = FpStore::init(100, 16, &mut rng);
+        assert_eq!(store.train_bytes(), 100 * 16 * 4);
+        assert_eq!(store.infer_bytes(), 100 * 16 * 4);
+    }
+}

@@ -1,0 +1,168 @@
+//! Quotient–remainder compositional embeddings (Shi et al. 2020) — the
+//! paper's hashing baseline (appendix B.2).
+//!
+//! Two tables: E1 ∈ R^{r×d} indexed by `id % r` and E2 ∈ R^{⌈n/r⌉×d}
+//! indexed by `id / r`; the final embedding is their element-wise product.
+//! With r = 2 the parameter count is ~n/2 ⇒ 2× compression at train AND
+//! inference, at the cost of forced parameter sharing (the accuracy hit
+//! Table 1 shows).
+
+use super::{EmbeddingStore, SecondPass, UpdateHp};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+pub struct HashingStore {
+    n: usize,
+    d: usize,
+    r: usize,
+    /// remainder table `[r, d]`
+    e1: Vec<f32>,
+    /// quotient table `[ceil(n/r), d]`
+    e2: Vec<f32>,
+}
+
+impl HashingStore {
+    pub fn init(n: usize, d: usize, r: usize, rng: &mut Pcg32) -> Self {
+        assert!(r >= 1);
+        let q_rows = n.div_ceil(r);
+        // init near 1 x small so products start near the usual N(0, 0.01):
+        // e1 ~ N(1, 0.1) (gating), e2 ~ N(0, 0.01) (content)
+        let e1 = (0..r * d).map(|_| rng.normal_scaled(1.0, 0.1)).collect();
+        let e2 =
+            (0..q_rows * d).map(|_| rng.normal_scaled(0.0, 0.01)).collect();
+        Self { n, d, r, e1, e2 }
+    }
+
+    #[inline]
+    fn split(&self, id: u32) -> (usize, usize) {
+        ((id as usize % self.r), (id as usize / self.r))
+    }
+}
+
+impl EmbeddingStore for HashingStore {
+    fn method_name(&self) -> &'static str {
+        "Hashing"
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        let d = self.d;
+        for (i, &id) in ids.iter().enumerate() {
+            let (rem, quo) = self.split(id);
+            let a = &self.e1[rem * d..(rem + 1) * d];
+            let b = &self.e2[quo * d..(quo + 1) * d];
+            let o = &mut out[i * d..(i + 1) * d];
+            for j in 0..d {
+                o[j] = a[j] * b[j];
+            }
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        _emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        _rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let lr = hp.lr_emb * hp.lr_scale;
+        for (i, &id) in ids.iter().enumerate() {
+            let (rem, quo) = self.split(id);
+            let g = &grads[i * d..(i + 1) * d];
+            // chain rule through the product, with decoupled weight decay
+            for j in 0..d {
+                let a = self.e1[rem * d + j];
+                let b = self.e2[quo * d + j];
+                self.e1[rem * d + j] -=
+                    lr * (g[j] * b + hp.wd_emb * a);
+                self.e2[quo * d + j] -=
+                    lr * (g[j] * a + hp.wd_emb * b);
+            }
+        }
+        Ok(())
+    }
+
+    fn train_bytes(&self) -> usize {
+        (self.e1.len() + self.e2.len()) * 4
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.train_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{hp, no_second_pass};
+    use super::*;
+    use crate::embedding::fp_bytes;
+
+    #[test]
+    fn compression_is_about_r() {
+        let mut rng = Pcg32::seeded(1);
+        let store = HashingStore::init(10_000, 16, 2, &mut rng);
+        let ratio = fp_bytes(10_000, 16) as f64 / store.train_bytes() as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn collisions_share_parameters() {
+        let mut rng = Pcg32::seeded(2);
+        let mut store = HashingStore::init(100, 4, 2, &mut rng);
+        // ids 4 and 5 share the quotient row 2 with r=2
+        let mut before = vec![0.0f32; 2 * 4];
+        store.gather(&[4, 5], &mut before);
+        // update id 4 only
+        let grads = vec![1.0f32; 4];
+        let emb = before[..4].to_vec();
+        store
+            .update(&[4], &emb, &grads, &hp(), &mut rng,
+                    &mut no_second_pass())
+            .unwrap();
+        let mut after = vec![0.0f32; 2 * 4];
+        store.gather(&[4, 5], &mut after);
+        // id 5's embedding must have moved too (shared quotient row)
+        assert_ne!(&before[4..], &after[4..], "no sharing happened");
+    }
+
+    #[test]
+    fn gradient_descends_product_loss() {
+        // minimize ||e(id) - target||^2 through the composed embedding
+        let mut rng = Pcg32::seeded(3);
+        let mut store = HashingStore::init(50, 4, 2, &mut rng);
+        let target = [0.5f32, -0.3, 0.2, 0.1];
+        let ids = [7u32];
+        let mut h = hp();
+        h.lr_emb = 0.2;
+        let mut first = f32::NAN;
+        let mut last = 0.0;
+        for step in 0..300 {
+            let mut e = vec![0.0f32; 4];
+            store.gather(&ids, &mut e);
+            let mut g = vec![0.0f32; 4];
+            let mut loss = 0.0;
+            for j in 0..4 {
+                g[j] = 2.0 * (e[j] - target[j]);
+                loss += (e[j] - target[j]).powi(2);
+            }
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            store
+                .update(&ids, &e, &g, &h, &mut rng, &mut no_second_pass())
+                .unwrap();
+        }
+        assert!(last < first * 0.01, "loss {first} -> {last}");
+    }
+}

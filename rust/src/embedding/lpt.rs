@@ -1,0 +1,269 @@
+//! Vanilla low-precision training (paper §2.3, Eq. 8; Xu et al. 2021).
+//!
+//! The table lives as bit-packed integer codes with one *fixed* step size
+//! shared by every feature: Δ = clip / 2^{m-1}, with the clipping value
+//! tuned as a hyper-parameter (the paper sweeps {1, 0.1, 0.01, 0.001}).
+//! Each step de-quantizes the batch's rows, applies the SGD update in
+//! float, and re-quantizes with SR or DR — there is no full-precision
+//! copy anywhere, which is the entire point.
+
+use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use crate::quant::{
+    delta_from_clip, quantize_row, BitWidth, PackedTable, Rounding,
+};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+pub struct LptStore {
+    n: usize,
+    d: usize,
+    bw: BitWidth,
+    rounding: Rounding,
+    delta: f32,
+    codes: PackedTable,
+    /// scratch row to avoid per-update allocation
+    scratch: Vec<i32>,
+}
+
+impl LptStore {
+    pub fn init(
+        n: usize,
+        d: usize,
+        bw: BitWidth,
+        clip: f32,
+        rounding: Rounding,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let delta = delta_from_clip(clip, bw);
+        let mut codes = PackedTable::new(n, d, bw);
+        // quantize the standard N(0, 0.01) init (SR keeps it unbiased)
+        let init = init_weights(n, d, rng);
+        let mut row_codes = vec![0i32; d];
+        for r in 0..n {
+            quantize_row(
+                &init[r * d..(r + 1) * d],
+                delta,
+                bw,
+                Rounding::Stochastic,
+                rng,
+                &mut row_codes,
+            );
+            codes.write_row(r, &row_codes);
+        }
+        Self { n, d, bw, rounding, delta, codes, scratch: vec![0i32; d] }
+    }
+
+    pub fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    pub fn bit_width(&self) -> BitWidth {
+        self.bw
+    }
+}
+
+impl EmbeddingStore for LptStore {
+    fn method_name(&self) -> &'static str {
+        match self.rounding {
+            Rounding::Stochastic => "LPT(SR)",
+            Rounding::Deterministic => "LPT(DR)",
+        }
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.d);
+        for (i, &id) in ids.iter().enumerate() {
+            self.codes.read_row_dequant(
+                id as usize,
+                self.delta,
+                &mut out[i * self.d..(i + 1) * self.d],
+            );
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        // Eq. 8: w^{t+1} = Q(w^ - eta (grad + wd w^))
+        let lr = hp.lr_emb * hp.lr_scale;
+        let d = self.d;
+        let mut w_new = vec![0.0f32; d];
+        for (i, &id) in ids.iter().enumerate() {
+            let what = &emb_hat[i * d..(i + 1) * d];
+            let g = &grads[i * d..(i + 1) * d];
+            for j in 0..d {
+                w_new[j] = what[j] - lr * (g[j] + hp.wd_emb * what[j]);
+            }
+            quantize_row(&w_new, self.delta, self.bw, self.rounding, rng,
+                         &mut self.scratch);
+            self.codes.write_row(id as usize, &self.scratch);
+        }
+        Ok(())
+    }
+
+    fn quantized_view(
+        &self,
+        ids: &[u32],
+        codes: &mut [i32],
+        delta: &mut [f32],
+    ) -> bool {
+        debug_assert_eq!(codes.len(), ids.len() * self.d);
+        debug_assert_eq!(delta.len(), ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            self.codes
+                .read_row(id as usize, &mut codes[i * self.d..(i + 1) * self.d]);
+            delta[i] = self.delta;
+        }
+        true
+    }
+
+    fn train_bytes(&self) -> usize {
+        self.codes.storage_bytes() + 4 // + the one shared delta
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.train_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{hp, no_second_pass};
+    use super::*;
+    use crate::embedding::fp_bytes;
+
+    #[test]
+    fn compression_ratio_4x_at_8bit() {
+        let mut rng = Pcg32::seeded(1);
+        let store = LptStore::init(1000, 16, BitWidth::B8, 0.1,
+                                   Rounding::Stochastic, &mut rng);
+        let ratio = fp_bytes(1000, 16) as f64 / store.train_bytes() as f64;
+        assert!((ratio - 4.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn gather_values_on_quantization_grid() {
+        let mut rng = Pcg32::seeded(2);
+        let store = LptStore::init(50, 8, BitWidth::B8, 0.1,
+                                   Rounding::Stochastic, &mut rng);
+        let ids: Vec<u32> = (0..50).collect();
+        let mut out = vec![0.0f32; 50 * 8];
+        store.gather(&ids, &mut out);
+        for &v in &out {
+            let x = v / store.delta();
+            assert!((x - x.round()).abs() < 1e-4, "{v} not on grid");
+        }
+    }
+
+    #[test]
+    fn update_moves_toward_gradient_direction() {
+        let mut rng = Pcg32::seeded(3);
+        let mut store = LptStore::init(10, 4, BitWidth::B8, 1.0,
+                                       Rounding::Stochastic, &mut rng);
+        let ids = [5u32];
+        let mut what = vec![0.0f32; 4];
+        store.gather(&ids, &mut what);
+        // strong positive grad: w must decrease on average
+        let grads = vec![1.0f32; 4];
+        let mut h = hp();
+        h.lr_emb = 0.05;
+        let mut acc = vec![0.0f64; 4];
+        for _ in 0..50 {
+            store
+                .update(&ids, &what, &grads, &h, &mut rng,
+                        &mut no_second_pass())
+                .unwrap();
+            let mut now = vec![0.0f32; 4];
+            store.gather(&ids, &mut now);
+            for j in 0..4 {
+                acc[j] += now[j] as f64;
+            }
+            store.gather(&ids, &mut what);
+        }
+        for j in 0..4 {
+            assert!(
+                acc[j] / 50.0 < -0.1,
+                "dim {j} did not move down: {}",
+                acc[j] / 50.0
+            );
+        }
+    }
+
+    #[test]
+    fn dr_erases_small_updates_sr_does_not() {
+        // Remark 1 at the store level: tiny gradient, many steps.
+        let mk = |rounding| {
+            let mut rng = Pcg32::seeded(7);
+            LptStore::init(4, 4, BitWidth::B8, 1.0, rounding, &mut rng)
+        };
+        let run = |mut store: LptStore| {
+            let mut rng = Pcg32::seeded(9);
+            let ids = [0u32];
+            let mut h = hp();
+            h.lr_emb = 1.0;
+            // |eta * g| = 1e-3 < delta/2 = 1/256
+            let grads = vec![1e-3f32; 4];
+            let mut what = vec![0.0f32; 4];
+            let mut start = vec![0.0f32; 4];
+            store.gather(&ids, &mut start);
+            for _ in 0..200 {
+                store.gather(&ids, &mut what);
+                store
+                    .update(&ids, &what, &grads, &h, &mut rng,
+                            &mut no_second_pass())
+                    .unwrap();
+            }
+            let mut end = vec![0.0f32; 4];
+            store.gather(&ids, &mut end);
+            (start, end)
+        };
+        let (s_dr, e_dr) = run(mk(Rounding::Deterministic));
+        assert_eq!(s_dr, e_dr, "DR should freeze below delta/2");
+        let (s_sr, e_sr) = run(mk(Rounding::Stochastic));
+        let moved: f32 = s_sr
+            .iter()
+            .zip(&e_sr)
+            .map(|(a, b)| (a - b))
+            .sum();
+        // SR drifts down by ~ 200 * 1e-3 = 0.2 in expectation (sum over 4
+        // dims: 0.8); allow slack
+        assert!(moved > 0.3, "SR did not make progress: {moved}");
+    }
+
+    #[test]
+    fn quantized_view_roundtrips() {
+        let mut rng = Pcg32::seeded(4);
+        let store = LptStore::init(20, 8, BitWidth::B4, 0.1,
+                                   Rounding::Stochastic, &mut rng);
+        let ids = [1u32, 19, 5];
+        let mut codes = vec![0i32; 3 * 8];
+        let mut delta = vec![0.0f32; 3];
+        assert!(store.quantized_view(&ids, &mut codes, &mut delta));
+        let mut gathered = vec![0.0f32; 3 * 8];
+        store.gather(&ids, &mut gathered);
+        for i in 0..3 {
+            for j in 0..8 {
+                assert!(
+                    (codes[i * 8 + j] as f32 * delta[i]
+                        - gathered[i * 8 + j])
+                        .abs()
+                        < 1e-6
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Embedding table stores — one per Table-1 method.
+//!
+//! | store | storage at train | forward sees | step-size |
+//! |---|---|---|---|
+//! | [`FpStore`] | f32 | exact weights | – |
+//! | [`LptStore`] | packed ints + fixed Δ | dequantized | fixed (clip/2^{m-1}) |
+//! | [`AlptStore`] | packed ints + learned Δ | dequantized | learned per feature (Alg. 1) |
+//! | [`LsqStore`] | f32 master + learned Δ | fake-quantized | learned (Eq. 6–7) |
+//! | [`PactStore`] | f32 master + learned α | fake-quantized | α/2^{m-1}, PACT estimator |
+//! | [`HashingStore`] | two f32 tables | composed product | – |
+//! | [`PruningStore`] | f32 + mask | masked weights | – |
+//!
+//! The trainer drives every store through the same protocol: `gather`
+//! unique rows for the batch, execute the model (PJRT or the Rust nn
+//! path), then `update` with the returned gradients. ALPT's second
+//! forward/backward (Algorithm 1 step 2) is injected as the
+//! `second_pass` callback so the store stays runtime-agnostic.
+
+pub mod alpt;
+pub mod fp;
+pub mod hashing;
+pub mod lpt;
+pub mod pruning;
+pub mod qat;
+
+pub use alpt::AlptStore;
+pub use fp::FpStore;
+pub use hashing::HashingStore;
+pub use lpt::LptStore;
+pub use pruning::PruningStore;
+pub use qat::{LsqStore, PactStore};
+
+use crate::config::{Experiment, Method, RoundingMode};
+use crate::quant::Rounding;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Per-step hyperparameters handed to `update` (LR schedule applied by the
+/// trainer via `lr_scale`).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateHp {
+    pub lr_emb: f32,
+    pub wd_emb: f32,
+    pub lr_delta: f32,
+    pub wd_delta: f32,
+    /// Paper §3.2 gradient scale g (already evaluated).
+    pub grad_scale: f32,
+    /// Epoch LR decay multiplier.
+    pub lr_scale: f32,
+}
+
+/// Second-pass callback: `(w_new [U*d], delta [U]) -> d_delta [U]`.
+/// Implemented by the trainer as one execution of the `train_fq` artifact
+/// (or the Rust fallback); only ALPT invokes it.
+pub type SecondPass<'a> = dyn FnMut(&[f32], &[f32]) -> Result<Vec<f32>> + 'a;
+
+/// Common interface over all embedding-table variants. `Send + Sync` so
+/// sharded workers can gather from their partitions in parallel.
+pub trait EmbeddingStore: Send + Sync {
+    fn method_name(&self) -> &'static str;
+    fn n_features(&self) -> usize;
+    fn dim(&self) -> usize;
+
+    /// Write the (de-quantized / composed / fake-quantized) rows for
+    /// `ids` into `out` (`ids.len() * dim` floats) — what the model's
+    /// forward pass consumes.
+    fn gather(&self, ids: &[u32], out: &mut [f32]);
+
+    /// Apply one step of gradients `grads` (w.r.t. the gathered rows
+    /// `emb_hat`) for `ids`.
+    fn update(
+        &mut self,
+        ids: &[u32],
+        emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        rng: &mut Pcg32,
+        second_pass: &mut SecondPass,
+    ) -> Result<()>;
+
+    /// Integer codes + per-row Δ for `ids` if this store trains in
+    /// quantized form (drives the `train_lpt`/`eval_lpt` artifacts).
+    /// Returns false when the store is float-backed.
+    fn quantized_view(
+        &self,
+        _ids: &[u32],
+        _codes: &mut [i32],
+        _delta: &mut [f32],
+    ) -> bool {
+        false
+    }
+
+    /// Bytes of embedding-related state held during training
+    /// (Table 1's training-compression column numerator).
+    fn train_bytes(&self) -> usize;
+
+    /// Bytes needed to ship the table for inference.
+    fn infer_bytes(&self) -> usize;
+
+    /// Hook for per-step housekeeping (pruning schedules).
+    fn end_step(&mut self) {}
+}
+
+/// Full-precision byte count for `n` rows of `d` — the compression-ratio
+/// denominator.
+pub fn fp_bytes(n: usize, d: usize) -> usize {
+    n * d * std::mem::size_of::<f32>()
+}
+
+pub(crate) fn rounding_of(mode: RoundingMode) -> Rounding {
+    match mode {
+        RoundingMode::Sr => Rounding::Stochastic,
+        RoundingMode::Dr => Rounding::Deterministic,
+    }
+}
+
+/// Build the store an [`Experiment`] asks for.
+pub fn build_store(
+    exp: &Experiment,
+    n_features: usize,
+    dim: usize,
+    rng: &mut Pcg32,
+) -> Result<Box<dyn EmbeddingStore>> {
+    let bw = exp.bit_width()?;
+    Ok(match exp.method {
+        Method::Fp => Box::new(FpStore::init(n_features, dim, rng)),
+        Method::Lpt(mode) => Box::new(LptStore::init(
+            n_features,
+            dim,
+            bw,
+            exp.clip,
+            rounding_of(mode),
+            rng,
+        )),
+        Method::Alpt(mode) => Box::new(AlptStore::init_with_clip(
+            n_features,
+            dim,
+            bw,
+            rounding_of(mode),
+            exp.clip,
+            rng,
+        )),
+        Method::Lsq => Box::new(LsqStore::init(n_features, dim, bw, rng)),
+        Method::Pact => {
+            Box::new(PactStore::init(n_features, dim, bw, exp.clip, rng))
+        }
+        Method::Hashing => {
+            Box::new(HashingStore::init(n_features, dim, 2, rng))
+        }
+        Method::Pruning => Box::new(PruningStore::init(
+            n_features,
+            dim,
+            0.5,   // R_x, paper appendix B.2
+            0.99,  // D
+            3000.0, // U
+            rng,
+        )),
+    })
+}
+
+/// Shared initializer: embedding weights ~ N(0, 0.01) (the usual CTR
+/// embedding init; keeps |w| within 8-bit range for reasonable Δ).
+pub(crate) fn init_weights(n: usize, d: usize, rng: &mut Pcg32) -> Vec<f32> {
+    (0..n * d).map(|_| rng.normal_scaled(0.0, 0.01)).collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// No-op second pass for stores that never call it.
+    pub fn no_second_pass() -> impl FnMut(&[f32], &[f32]) -> Result<Vec<f32>>
+    {
+        |_: &[f32], _: &[f32]| -> Result<Vec<f32>> {
+            panic!("second_pass unexpectedly invoked")
+        }
+    }
+
+    /// Default hyperparameters for unit tests.
+    pub fn hp() -> UpdateHp {
+        UpdateHp {
+            lr_emb: 0.1,
+            wd_emb: 0.0,
+            lr_delta: 1e-3,
+            wd_delta: 0.0,
+            grad_scale: 1.0,
+            lr_scale: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_store_every_method() {
+        let mut rng = Pcg32::seeded(1);
+        for method in [
+            Method::Fp,
+            Method::Lpt(RoundingMode::Sr),
+            Method::Lpt(RoundingMode::Dr),
+            Method::Alpt(RoundingMode::Sr),
+            Method::Alpt(RoundingMode::Dr),
+            Method::Lsq,
+            Method::Pact,
+            Method::Hashing,
+            Method::Pruning,
+        ] {
+            let exp = Experiment { method, ..Experiment::default() };
+            let store = build_store(&exp, 100, 8, &mut rng).unwrap();
+            assert_eq!(store.n_features(), 100, "{method:?}");
+            assert_eq!(store.dim(), 8);
+            assert!(store.train_bytes() > 0);
+            assert!(store.infer_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn quantized_methods_compress_training_memory() {
+        let mut rng = Pcg32::seeded(2);
+        let (n, d) = (1000, 16);
+        let fp = fp_bytes(n, d);
+        let exp8 = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            bits: 8,
+            ..Experiment::default()
+        };
+        let store = build_store(&exp8, n, d, &mut rng).unwrap();
+        // ints (n*d) + delta (4n) < fp (4nd): ratio 3.2x at d=16 like Table 1
+        let ratio = fp as f64 / store.train_bytes() as f64;
+        assert!(
+            (ratio - 3.2).abs() < 0.05,
+            "8-bit ALPT train ratio = {ratio}"
+        );
+        let exp2 = Experiment { bits: 2, ..exp8.clone() };
+        let store2 = build_store(&exp2, n, d, &mut rng).unwrap();
+        assert!(store2.train_bytes() < store.train_bytes());
+    }
+}

@@ -1,0 +1,210 @@
+//! Magnitude pruning with a retraining schedule (Deng et al. 2021,
+//! DeepLight) — the paper's pruning baseline (appendix B.2).
+//!
+//! The sparsity ratio ramps as `R_x (1 − D^{k/U})` at optimizer step `k`
+//! (paper: R_x = 0.5, D = 0.99, U = 3000). Every `recompute_every` steps
+//! the global magnitude threshold is re-estimated and the mask refreshed —
+//! pruned weights may grow back if their gradient resurrects them
+//! (prune-and-retrain). Training memory stays full-precision (ratio 1× in
+//! Table 1); inference ships only surviving weights (≈2× at R_x = 0.5).
+
+use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use crate::optim::sgd_update;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+pub struct PruningStore {
+    n: usize,
+    d: usize,
+    table: Vec<f32>,
+    mask: Vec<bool>,
+    target_sparsity: f32,
+    damping: f32,
+    ramp_steps: f32,
+    step: u64,
+    recompute_every: u64,
+    current_sparsity: f32,
+}
+
+impl PruningStore {
+    pub fn init(
+        n: usize,
+        d: usize,
+        target_sparsity: f32,
+        damping: f32,
+        ramp_steps: f32,
+        rng: &mut Pcg32,
+    ) -> Self {
+        Self {
+            n,
+            d,
+            table: init_weights(n, d, rng),
+            mask: vec![true; n * d],
+            target_sparsity,
+            damping,
+            ramp_steps,
+            step: 0,
+            recompute_every: 100,
+            current_sparsity: 0.0,
+        }
+    }
+
+    /// Scheduled sparsity at step `k`: R_x (1 − D^{k/U}).
+    pub fn scheduled_sparsity(&self, k: u64) -> f32 {
+        self.target_sparsity
+            * (1.0 - self.damping.powf(k as f32 / self.ramp_steps))
+    }
+
+    pub fn sparsity(&self) -> f32 {
+        self.current_sparsity
+    }
+
+    fn refresh_mask(&mut self) {
+        let want = self.scheduled_sparsity(self.step);
+        if want <= 0.0 {
+            return;
+        }
+        // global magnitude threshold via select_nth on |w|
+        let k = ((self.table.len() as f32) * want) as usize;
+        if k == 0 || k >= self.table.len() {
+            return;
+        }
+        let mut mags: Vec<f32> =
+            self.table.iter().map(|x| x.abs()).collect();
+        let (_, nth, _) = mags.select_nth_unstable_by(k, |a, b| {
+            a.partial_cmp(b).unwrap()
+        });
+        let threshold = *nth;
+        let mut pruned = 0usize;
+        for (m, w) in self.mask.iter_mut().zip(self.table.iter_mut()) {
+            *m = w.abs() > threshold;
+            if !*m {
+                *w = 0.0;
+                pruned += 1;
+            }
+        }
+        self.current_sparsity = pruned as f32 / self.table.len() as f32;
+    }
+}
+
+impl EmbeddingStore for PruningStore {
+    fn method_name(&self) -> &'static str {
+        "Pruning"
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        let d = self.d;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            out[i * d..(i + 1) * d]
+                .copy_from_slice(&self.table[id * d..(id + 1) * d]);
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        _emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        _rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let lr = hp.lr_emb * hp.lr_scale;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let row = &mut self.table[id * d..(id + 1) * d];
+            // gradients flow into pruned slots too (grow-back), per the
+            // prune-and-retrain scheme
+            sgd_update(row, &grads[i * d..(i + 1) * d], lr, hp.wd_emb);
+        }
+        Ok(())
+    }
+
+    fn end_step(&mut self) {
+        self.step += 1;
+        if self.step % self.recompute_every == 0 {
+            self.refresh_mask();
+        }
+    }
+
+    fn train_bytes(&self) -> usize {
+        // full dense table + 1-bit mask
+        self.table.len() * 4 + self.mask.len() / 8
+    }
+
+    fn infer_bytes(&self) -> usize {
+        // surviving weights only (paper counts values, not index overhead)
+        let nnz = self.mask.iter().filter(|&&m| m).count();
+        nnz * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{hp, no_second_pass};
+    use super::*;
+
+    #[test]
+    fn schedule_ramps_to_target() {
+        let mut rng = Pcg32::seeded(1);
+        let store = PruningStore::init(100, 8, 0.5, 0.99, 3000.0, &mut rng);
+        assert_eq!(store.scheduled_sparsity(0), 0.0);
+        let mid = store.scheduled_sparsity(3000);
+        assert!(mid > 0.0 && mid < 0.5);
+        let late = store.scheduled_sparsity(2_000_000);
+        assert!((late - 0.5).abs() < 1e-3, "late={late}");
+        assert!(store.scheduled_sparsity(1000) < store.scheduled_sparsity(5000));
+    }
+
+    #[test]
+    fn mask_prunes_small_weights() {
+        let mut rng = Pcg32::seeded(2);
+        let mut store =
+            PruningStore::init(200, 8, 0.5, 0.99, 100.0, &mut rng);
+        // run enough steps for the schedule + refresh to bite
+        for _ in 0..12_000 {
+            store.end_step();
+        }
+        let s = store.sparsity();
+        assert!(s > 0.3, "sparsity={s}");
+        // pruned fraction of weights are exactly zero
+        let zeros =
+            store.table.iter().filter(|&&w| w == 0.0).count() as f32;
+        assert!((zeros / store.table.len() as f32 - s).abs() < 1e-6);
+        // inference shrinks accordingly
+        assert!(store.infer_bytes() < store.n * store.d * 4 * 7 / 10);
+    }
+
+    #[test]
+    fn pruned_weights_can_grow_back() {
+        let mut rng = Pcg32::seeded(3);
+        let mut store =
+            PruningStore::init(50, 4, 0.5, 0.99, 50.0, &mut rng);
+        for _ in 0..500 {
+            store.end_step();
+        }
+        // find a pruned slot in row 0, hit it with a gradient
+        let row0 = store.table[0..4].to_vec();
+        let slot = (0..4).find(|&j| row0[j] == 0.0);
+        if let Some(j) = slot {
+            let mut g = vec![0.0f32; 4];
+            g[j] = -1.0; // push the weight up
+            let emb = row0.clone();
+            store
+                .update(&[0], &emb, &g, &hp(), &mut rng,
+                        &mut no_second_pass())
+                .unwrap();
+            assert!(store.table[j] > 0.0, "weight did not grow back");
+        }
+    }
+}

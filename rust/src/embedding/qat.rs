@@ -1,0 +1,315 @@
+//! Quantization-aware-training baselines: LSQ (Esser et al. 2020) and
+//! PACT (Choi et al. 2018).
+//!
+//! Both keep a full-precision master table (that is QAT's defining
+//! property — and why Table 1 gives them a 1× *training* compression
+//! ratio) and fake-quantize in the forward pass with deterministic
+//! rounding. Gradients reach the master weights via the straight-through
+//! estimator; the quantizer parameter (Δ for LSQ, clipping value α for
+//! PACT) is learned from its own estimator. Inference ships packed
+//! integers + the quantizer parameter (4× at 8 bits).
+
+use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use crate::quant::{
+    init_delta, lsq_delta_grad_row, quantize_dr, ste_weight_grad_row,
+    BitWidth,
+};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// LSQ: learned per-feature step size, Eq. 6–7 with DR.
+pub struct LsqStore {
+    n: usize,
+    d: usize,
+    bw: BitWidth,
+    master: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl LsqStore {
+    pub fn init(n: usize, d: usize, bw: BitWidth, rng: &mut Pcg32) -> Self {
+        let master = init_weights(n, d, rng);
+        let delta = (0..n)
+            .map(|r| init_delta(&master[r * d..(r + 1) * d], bw))
+            .collect();
+        Self { n, d, bw, master, delta }
+    }
+
+    pub fn delta_of(&self, id: u32) -> f32 {
+        self.delta[id as usize]
+    }
+}
+
+impl EmbeddingStore for LsqStore {
+    fn method_name(&self) -> &'static str {
+        "LSQ"
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        // forward sees Q_D(w, delta) — fake quantization
+        let d = self.d;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let dl = self.delta[id];
+            let row = &self.master[id * d..(id + 1) * d];
+            let o = &mut out[i * d..(i + 1) * d];
+            for j in 0..d {
+                o[j] = quantize_dr(row[j], dl, self.bw) as f32 * dl;
+            }
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        _emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        _rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let lr = hp.lr_emb * hp.lr_scale;
+        let lr_d = hp.lr_delta * hp.lr_scale;
+        let mut ste = vec![0.0f32; d];
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let dl = self.delta[id];
+            let g = &grads[i * d..(i + 1) * d];
+            // delta gradient first (Eq. 7 needs the pre-update weights)
+            let row = &self.master[id * d..(id + 1) * d];
+            let dg = lsq_delta_grad_row(row, dl, self.bw, g);
+            // STE weight gradient (masked to the clip interior)
+            ste_weight_grad_row(row, dl, self.bw, g, &mut ste);
+            let row = &mut self.master[id * d..(id + 1) * d];
+            for j in 0..d {
+                row[j] -= lr * (ste[j] + hp.wd_emb * row[j]);
+            }
+            self.delta[id] = (self.delta[id]
+                - lr_d * (hp.grad_scale * dg + hp.wd_delta * self.delta[id]))
+                .max(1e-8);
+        }
+        Ok(())
+    }
+
+    fn train_bytes(&self) -> usize {
+        // FP master + delta: no training compression (the paper's point)
+        self.master.len() * 4 + self.delta.len() * 4
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.master.len() * (self.bw.bits() as usize) / 8
+            + self.delta.len() * 4
+    }
+}
+
+/// PACT: learned per-feature clipping value α; Δ = α / 2^{m-1}. The α
+/// estimator only receives gradient from *clipped* elements (its original
+/// formulation), which is why it trails LSQ at low bit widths (Table 2).
+pub struct PactStore {
+    n: usize,
+    d: usize,
+    bw: BitWidth,
+    master: Vec<f32>,
+    alpha: Vec<f32>,
+}
+
+impl PactStore {
+    pub fn init(
+        n: usize,
+        d: usize,
+        bw: BitWidth,
+        init_clip: f32,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let master = init_weights(n, d, rng);
+        Self { n, d, bw, master, alpha: vec![init_clip; n] }
+    }
+
+    pub fn alpha_of(&self, id: u32) -> f32 {
+        self.alpha[id as usize]
+    }
+
+    /// Test/debug helper: poke a master weight.
+    #[doc(hidden)]
+    pub fn set_master(&mut self, idx: usize, v: f32) {
+        self.master[idx] = v;
+    }
+
+    #[inline]
+    fn delta(&self, id: usize) -> f32 {
+        self.alpha[id] / (1u32 << (self.bw.bits() - 1)) as f32
+    }
+}
+
+impl EmbeddingStore for PactStore {
+    fn method_name(&self) -> &'static str {
+        "PACT"
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        let d = self.d;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let dl = self.delta(id);
+            let row = &self.master[id * d..(id + 1) * d];
+            let o = &mut out[i * d..(i + 1) * d];
+            for j in 0..d {
+                o[j] = quantize_dr(row[j], dl, self.bw) as f32 * dl;
+            }
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        _emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        _rng: &mut Pcg32,
+        _second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let lr = hp.lr_emb * hp.lr_scale;
+        let lr_a = hp.lr_delta * hp.lr_scale;
+        let qn = self.bw.qn() as f32;
+        let qp = self.bw.qp() as f32;
+        let mut ste = vec![0.0f32; d];
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let dl = self.delta(id);
+            let g = &grads[i * d..(i + 1) * d];
+            let row = &self.master[id * d..(id + 1) * d];
+            // PACT alpha grad: clipped-high elements pass +g, clipped-low
+            // pass -g (d clip(w, ±α)/dα = sign at the clip boundary,
+            // scaled by qp/2^{m-1} ≈ 1); interior contributes nothing.
+            let mut da = 0.0f32;
+            for j in 0..d {
+                let x = row[j] / dl;
+                if x >= qp {
+                    da += g[j];
+                } else if x <= qn {
+                    da -= g[j];
+                }
+            }
+            ste_weight_grad_row(row, dl, self.bw, g, &mut ste);
+            let row = &mut self.master[id * d..(id + 1) * d];
+            for j in 0..d {
+                row[j] -= lr * (ste[j] + hp.wd_emb * row[j]);
+            }
+            self.alpha[id] = (self.alpha[id]
+                - lr_a * (hp.grad_scale * da + hp.wd_delta * self.alpha[id]))
+                .max(1e-6);
+        }
+        Ok(())
+    }
+
+    fn train_bytes(&self) -> usize {
+        self.master.len() * 4 + self.alpha.len() * 4
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.master.len() * (self.bw.bits() as usize) / 8
+            + self.alpha.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{hp, no_second_pass};
+    use super::*;
+
+    #[test]
+    fn lsq_forward_is_quantized_master_is_not() {
+        let mut rng = Pcg32::seeded(1);
+        let store = LsqStore::init(10, 8, BitWidth::B4, &mut rng);
+        let mut out = vec![0.0f32; 8];
+        store.gather(&[3], &mut out);
+        let dl = store.delta_of(3);
+        for &v in &out {
+            let x = v / dl;
+            assert!((x - x.round()).abs() < 1e-4, "fake-quant off grid: {v}");
+        }
+        // master itself is full precision (almost surely off grid)
+        let off_grid = store.master[3 * 8..4 * 8]
+            .iter()
+            .filter(|&&w| ((w / dl) - (w / dl).round()).abs() > 1e-3)
+            .count();
+        assert!(off_grid > 0);
+    }
+
+    #[test]
+    fn lsq_update_moves_master_and_delta() {
+        let mut rng = Pcg32::seeded(2);
+        let mut store = LsqStore::init(10, 4, BitWidth::B8, &mut rng);
+        let m0 = store.master[4 * 4..5 * 4].to_vec();
+        let d0 = store.delta_of(4);
+        let grads = vec![0.5f32; 4];
+        let emb = vec![0.0f32; 4];
+        store
+            .update(&[4], &emb, &grads, &hp(), &mut rng,
+                    &mut no_second_pass())
+            .unwrap();
+        assert_ne!(m0, store.master[4 * 4..5 * 4].to_vec());
+        assert_ne!(d0, store.delta_of(4));
+    }
+
+    #[test]
+    fn lsq_train_ratio_is_1x_infer_4x() {
+        let mut rng = Pcg32::seeded(3);
+        let store = LsqStore::init(1000, 16, BitWidth::B8, &mut rng);
+        let fp = 1000 * 16 * 4;
+        assert!(store.train_bytes() >= fp, "QAT holds FP masters");
+        let infer_ratio = fp as f64 / store.infer_bytes() as f64;
+        assert!((infer_ratio - 3.2).abs() < 0.05, "ratio={infer_ratio}");
+    }
+
+    #[test]
+    fn pact_alpha_only_learns_from_clipped() {
+        let mut rng = Pcg32::seeded(4);
+        // alpha = 1.0 so only the weight we poke below ever clips
+        let mut store = PactStore::init(4, 4, BitWidth::B8, 1.0, &mut rng);
+        // master ~ N(0, 0.01), alpha = 1.0 -> nothing clipped
+        let a0 = store.alpha_of(0);
+        let grads = vec![1.0f32; 4];
+        let emb = vec![0.0f32; 4];
+        let mut h = hp();
+        h.wd_delta = 0.0;
+        store
+            .update(&[0], &emb, &grads, &h, &mut rng, &mut no_second_pass())
+            .unwrap();
+        assert_eq!(a0, store.alpha_of(0), "alpha moved without clipping");
+        // force clipping: blow up a master weight
+        store.master[0] = 1000.0;
+        store
+            .update(&[0], &emb, &grads, &h, &mut rng, &mut no_second_pass())
+            .unwrap();
+        assert_ne!(a0, store.alpha_of(0), "alpha should move when clipped");
+    }
+
+    #[test]
+    fn pact_forward_respects_clip() {
+        let mut rng = Pcg32::seeded(5);
+        let mut store = PactStore::init(2, 4, BitWidth::B8, 0.05, &mut rng);
+        store.master[0] = 3.0; // way beyond alpha
+        let mut out = vec![0.0f32; 4];
+        store.gather(&[0], &mut out);
+        assert!(out[0] <= 0.05 + 1e-6, "clip violated: {}", out[0]);
+    }
+}

@@ -1,0 +1,39 @@
+//! # ALPT — Adaptive Low-Precision Training for CTR embeddings
+//!
+//! Production-style reproduction of *Adaptive Low-Precision Training for
+//! Embeddings in Click-Through Rate Prediction* (AAAI 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the training system: quantized embedding
+//!   tables (bit-packed integers + per-feature learned step sizes), the
+//!   data pipeline, batching/dedup, optimizers, metrics, a sharded
+//!   leader/worker simulation with communication accounting, and the PJRT
+//!   runtime that executes the AOT-compiled model. Python never runs on
+//!   the training path.
+//! * **Layer 2** — the DCN backbone in JAX (`python/compile/model.py`),
+//!   lowered once to HLO text by `python/compile/aot.py`.
+//! * **Layer 1** — Pallas kernels for dequantize / SR-DR quantize / LSQ
+//!   fake-quant / DCN cross layer (`python/compile/kernels/`).
+//!
+//! Entry points: [`coordinator::Trainer`] for training,
+//! [`runtime::Runtime`] for artifact execution, [`embedding`] for the
+//! paper's table variants (FP / LPT / ALPT / hashing / pruning / QAT).
+
+pub mod analysis;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod experiments;
+pub mod metrics;
+pub mod nn;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,186 @@
+//! `alpt` — the command-line launcher.
+//!
+//! ```text
+//! alpt train   --dataset avazu --method alpt-sr --bits 8 [--config f.toml]
+//! alpt gen     --dataset criteo --samples 100000 --out data.ds
+//! alpt convex                      # the Figure-3 synthetic experiment
+//! alpt info                        # artifact manifest + environment
+//! ```
+
+use alpt::cli::Args;
+use alpt::config::{Experiment, Method};
+use alpt::coordinator::Trainer;
+use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::data::Dataset;
+use anyhow::{bail, Context, Result};
+
+const USAGE: &str = "\
+alpt — Adaptive Low-Precision Training for CTR embeddings (AAAI 2023)
+
+USAGE:
+  alpt train  [--config FILE] [--dataset avazu|criteo|tiny]
+              [--method fp|lpt-sr|lpt-dr|alpt-sr|alpt-dr|lsq|pact|hashing|pruning]
+              [--bits 2|4|8|16] [--epochs N] [--samples N] [--seed N]
+              [--model NAME] [--no-runtime]
+  alpt gen    --dataset NAME --samples N --out FILE.ds
+  alpt convex                                    (Figure-3 experiment)
+  alpt info                                      (manifest + environment)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(true, &["no-runtime", "quiet", "help"])?;
+    if args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => train(&args),
+        Some("gen") => gen(&args),
+        Some("convex") => {
+            convex();
+            Ok(())
+        }
+        Some("info") => info(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn build_experiment(args: &Args) -> Result<Experiment> {
+    let mut exp = if let Some(path) = args.get("config") {
+        let doc = alpt::config::toml::TomlDoc::parse_file(
+            std::path::Path::new(path),
+        )
+        .with_context(|| format!("reading {path}"))?;
+        Experiment::from_toml(&doc)?
+    } else {
+        Experiment::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        exp = exp.with_dataset_defaults(ds);
+    }
+    if let Some(m) = args.get("method") {
+        exp.method = Method::parse(m)?;
+    }
+    if let Some(m) = args.get("model") {
+        exp.model = m.to_string();
+    }
+    exp.bits = args.get_parse("bits", exp.bits)?;
+    exp.epochs = args.get_parse("epochs", exp.epochs)?;
+    exp.seed = args.get_parse("seed", exp.seed)?;
+    exp.n_samples = args.get_parse("samples", exp.n_samples)?;
+    if args.flag("no-runtime") {
+        exp.use_runtime = false;
+    }
+    Ok(exp)
+}
+
+fn make_spec(exp: &Experiment) -> Result<SyntheticSpec> {
+    Ok(match exp.dataset.as_str() {
+        "avazu" => SyntheticSpec::avazu(exp.seed),
+        "criteo" => SyntheticSpec::criteo(exp.seed),
+        "tiny" => SyntheticSpec::tiny(exp.seed),
+        other => bail!("unknown dataset {other:?}"),
+    })
+}
+
+fn train(args: &Args) -> Result<()> {
+    let exp = build_experiment(args)?;
+    let spec = make_spec(&exp)?;
+    println!("generating {} samples of {}...", exp.n_samples, spec.name);
+    let ds = generate(&spec, exp.n_samples);
+    let (train, val, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
+    let mut trainer = Trainer::new(exp.clone(), ds.schema.n_features())?;
+    println!(
+        "training {} ({} bits) on {} [{} runtime]",
+        trainer.store.method_name(),
+        exp.bits,
+        spec.name,
+        if trainer.uses_runtime() { "PJRT" } else { "rust-nn" }
+    );
+    let res = trainer.train(&train, &val, !args.flag("quiet"))?;
+    let ev = trainer.evaluate(&test)?;
+    println!(
+        "\n{}: test auc {:.4}  logloss {:.5}  compress {:.1}x train / \
+         {:.1}x infer  ({:.1}s/epoch)",
+        res.method,
+        ev.auc,
+        ev.logloss,
+        res.train_compression,
+        res.infer_compression,
+        res.seconds_per_epoch
+    );
+    Ok(())
+}
+
+fn gen(args: &Args) -> Result<()> {
+    let exp = build_experiment(args)?;
+    let spec = make_spec(&exp)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("gen requires --out FILE.ds"))?;
+    println!("generating {} samples of {}...", exp.n_samples, spec.name);
+    let ds = generate(&spec, exp.n_samples);
+    ds.write(std::path::Path::new(out))?;
+    println!(
+        "wrote {out}: {} samples, {} fields, {} features, ctr {:.4}",
+        ds.n_samples(),
+        ds.n_fields(),
+        ds.schema.n_features(),
+        ds.ctr()
+    );
+    // round-trip sanity
+    let back = Dataset::read(std::path::Path::new(out))?;
+    assert_eq!(back.n_samples(), ds.n_samples());
+    Ok(())
+}
+
+fn convex() {
+    use alpt::analysis::{run_convex, ConvexMode, ConvexSpec};
+    let spec = ConvexSpec::default();
+    for mode in [ConvexMode::FullPrecision, ConvexMode::LptDr,
+                 ConvexMode::LptSr] {
+        let snaps = run_convex(&spec, mode, 1000, &[10, 100, 1000]);
+        println!("--- {} ---", mode.name());
+        for s in &snaps {
+            println!(
+                "  t={:<5} mean obj {:.3e}  stalled {:>4}  |{}|",
+                s.iteration,
+                s.mean_obj,
+                s.stalled,
+                s.histogram.sparkline()
+            );
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    println!("alpt {}", alpt::version());
+    let dir = std::path::PathBuf::from(
+        args.get_or("artifacts-dir", "artifacts"),
+    );
+    match alpt::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts in {}:", dir.display());
+            for (name, entry) in &rt.manifest.configs {
+                println!(
+                    "  {name}: F={} d={} B={} cross={} mlp={:?} P={} \
+                     ({} variants)",
+                    entry.fields,
+                    entry.emb_dim,
+                    entry.batch,
+                    entry.cross_depth,
+                    entry.mlp,
+                    entry.n_params,
+                    entry.artifacts.len()
+                );
+            }
+        }
+        Err(e) => println!("no runtime: {e:#}"),
+    }
+    Ok(())
+}

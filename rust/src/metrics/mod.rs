@@ -1,0 +1,239 @@
+//! Evaluation metrics for CTR prediction: exact AUC (tie-aware
+//! Mann–Whitney), logloss, and calibration — the paper reports AUC and
+//! Logloss (§4.1; +0.001 AUC is considered significant).
+
+/// Exact ROC-AUC via the rank-sum formulation with average ranks for ties.
+///
+/// Returns 0.5 for degenerate inputs (all-one or all-zero labels).
+pub fn auc(scores: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l != 0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    // average ranks over tied groups; accumulate rank sum of positives
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0usize;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len()
+            && scores[order[j + 1]] == scores[order[i]]
+        {
+            j += 1;
+        }
+        // ranks are 1-based: group spans ranks (i+1)..=(j+1)
+        let avg_rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &k in &order[i..=j] {
+            if labels[k] != 0 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let n_pos_f = n_pos as f64;
+    let n_neg_f = n_neg as f64;
+    (rank_sum_pos - n_pos_f * (n_pos_f + 1.0) / 2.0) / (n_pos_f * n_neg_f)
+}
+
+/// Mean binary cross-entropy from *logits* (numerically stable; mirrors
+/// `model.bce_with_logits` in L2).
+pub fn logloss_from_logits(logits: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for (&z, &y) in logits.iter().zip(labels) {
+        let z = z as f64;
+        let y = y as f64;
+        total += z.max(0.0) - z * y + (-z.abs()).exp().ln_1p();
+    }
+    total / logits.len() as f64
+}
+
+/// sigmoid for score conversion.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Calibration: mean predicted CTR / empirical CTR (1.0 = perfectly
+/// calibrated on average).
+pub fn calibration(logits: &[f32], labels: &[u8]) -> f64 {
+    if logits.is_empty() {
+        return 1.0;
+    }
+    let pred: f64 =
+        logits.iter().map(|&z| sigmoid(z) as f64).sum::<f64>();
+    let actual: f64 = labels.iter().map(|&y| y as f64).sum::<f64>();
+    if actual == 0.0 {
+        return f64::INFINITY;
+    }
+    pred / actual
+}
+
+/// Accumulates logits/labels across eval batches, then computes metrics
+/// once at the end (AUC needs the full score set).
+#[derive(Default)]
+pub struct EvalAccumulator {
+    logits: Vec<f32>,
+    labels: Vec<u8>,
+}
+
+impl EvalAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `valid` limits to the un-padded prefix of the final batch.
+    pub fn push(&mut self, logits: &[f32], labels: &[u8], valid: usize) {
+        self.logits.extend_from_slice(&logits[..valid]);
+        self.labels.extend_from_slice(&labels[..valid]);
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn auc(&self) -> f64 {
+        auc(&self.logits, &self.labels)
+    }
+
+    pub fn logloss(&self) -> f64 {
+        logloss_from_logits(&self.logits, &self.labels)
+    }
+
+    pub fn calibration(&self) -> f64 {
+        calibration(&self.logits, &self.labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [0, 0, 1, 1];
+        assert_eq!(auc(&scores, &labels), 1.0);
+        let inv = [1, 1, 0, 0];
+        assert_eq!(auc(&scores, &inv), 0.0);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // hand-computed: pairs (pos > neg): scores pos {0.8, 0.4},
+        // neg {0.5, 0.3}. correct pairs: (0.8>0.5),(0.8>0.3),(0.4>0.3)=3 of 4
+        let scores = [0.8, 0.5, 0.4, 0.3];
+        let labels = [1, 0, 1, 0];
+        assert!((auc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_ties_average() {
+        // one tie between a pos and a neg counts half
+        let scores = [0.5, 0.5];
+        let labels = [1, 0];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_is_half() {
+        assert_eq!(auc(&[0.3, 0.7], &[1, 1]), 0.5);
+        assert_eq!(auc(&[0.3, 0.7], &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn auc_matches_pair_counting() {
+        check("auc == exhaustive pair count", 60, |g| {
+            let n = g.usize_in(2, 60);
+            let scores: Vec<f32> =
+                (0..n).map(|_| (g.usize_in(0, 9) as f32) / 10.0).collect();
+            let labels: Vec<u8> = (0..n).map(|_| g.bool() as u8).collect();
+            let n_pos = labels.iter().filter(|&&l| l == 1).count();
+            if n_pos == 0 || n_pos == n {
+                return Ok(());
+            }
+            let mut wins = 0.0f64;
+            let mut pairs = 0.0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    if labels[i] == 1 && labels[j] == 0 {
+                        pairs += 1.0;
+                        if scores[i] > scores[j] {
+                            wins += 1.0;
+                        } else if scores[i] == scores[j] {
+                            wins += 0.5;
+                        }
+                    }
+                }
+            }
+            let want = wins / pairs;
+            let got = auc(&scores, &labels);
+            if (got - want).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("got {got} want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn logloss_matches_direct() {
+        let logits = [0.0f32, 2.0, -1.0];
+        let labels = [1u8, 0, 1];
+        let mut want = 0.0f64;
+        for (&z, &y) in logits.iter().zip(&labels) {
+            let p = 1.0 / (1.0 + (-(z as f64)).exp());
+            want -= if y == 1 { p.ln() } else { (1.0 - p).ln() };
+        }
+        want /= 3.0;
+        assert!((logloss_from_logits(&logits, &labels) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn logloss_extreme_logits_finite() {
+        let l = logloss_from_logits(&[40.0, -40.0], &[0, 1]);
+        assert!(l.is_finite() && l > 10.0);
+        let good = logloss_from_logits(&[40.0, -40.0], &[1, 0]);
+        assert!(good >= 0.0 && good < 1e-6);
+    }
+
+    #[test]
+    fn accumulator_respects_valid() {
+        let mut acc = EvalAccumulator::new();
+        acc.push(&[1.0, 2.0, 3.0], &[1, 0, 1], 2);
+        assert_eq!(acc.len(), 2);
+        acc.push(&[0.5], &[0], 1);
+        assert_eq!(acc.len(), 3);
+        assert!(acc.auc() > 0.0);
+    }
+
+    #[test]
+    fn calibration_sane() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 20_000;
+        // perfectly calibrated: y ~ Bernoulli(sigmoid(z))
+        let logits: Vec<f32> =
+            (0..n).map(|_| rng.normal_scaled(0.0, 1.0)).collect();
+        let labels: Vec<u8> = logits
+            .iter()
+            .map(|&z| rng.bernoulli(sigmoid(z)) as u8)
+            .collect();
+        let c = calibration(&logits, &labels);
+        assert!((c - 1.0).abs() < 0.05, "calibration={c}");
+    }
+}

@@ -1,0 +1,624 @@
+//! DCN (Deep & Cross Network) forward/backward in Rust, mirroring
+//! `python/compile/model.py` layer for layer.
+
+use super::ops;
+
+/// Model geometry; identical fields to the Python `ModelConfig` and the
+//  manifest entries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DcnConfig {
+    pub fields: usize,
+    pub emb_dim: usize,
+    pub batch: usize,
+    pub cross_depth: usize,
+    pub mlp: Vec<usize>,
+}
+
+impl DcnConfig {
+    pub fn tiny() -> Self {
+        Self { fields: 8, emb_dim: 8, batch: 64, cross_depth: 2,
+               mlp: vec![32, 16] }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.fields * self.emb_dim
+    }
+
+    pub fn mlp_mask_dim(&self) -> usize {
+        self.mlp.iter().sum()
+    }
+
+    /// Dense parameter layout: (name, rows, cols, init) in flat order —
+    /// must match `configs.param_layout` in Python.
+    pub fn param_layout(&self) -> Vec<(String, usize, usize, Init)> {
+        let k = self.input_dim();
+        let mut layout = Vec::new();
+        for i in 0..self.cross_depth {
+            layout.push((format!("cross_{i}_w"), k, 1, Init::Normal));
+            layout.push((format!("cross_{i}_b"), k, 1, Init::Zero));
+        }
+        let mut prev = k;
+        for (i, &w) in self.mlp.iter().enumerate() {
+            layout.push((format!("mlp_{i}_w"), prev, w, Init::Xavier));
+            layout.push((format!("mlp_{i}_b"), w, 1, Init::Zero));
+            prev = w;
+        }
+        layout.push(("final_w".into(), k + prev, 1, Init::Xavier));
+        layout.push(("final_b".into(), 1, 1, Init::Zero));
+        layout
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_layout().iter().map(|(_, r, c, _)| r * c).sum()
+    }
+
+    /// Initialize a flat parameter vector per the layout's init spec
+    /// (Xavier-uniform for matrices, N(0, 0.01) for cross vectors, zeros
+    /// for biases) — the same scheme `python/tests` and the manifest use.
+    pub fn init_params(&self, rng: &mut crate::util::rng::Pcg32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for (_, rows, cols, init) in self.param_layout() {
+            let n = rows * cols;
+            match init {
+                Init::Xavier => {
+                    let a = (6.0 / (rows + cols) as f32).sqrt();
+                    out.extend((0..n).map(|_| rng.uniform_in(-a, a)));
+                }
+                Init::Normal => {
+                    out.extend((0..n).map(|_| rng.normal_scaled(0.0, 0.01)));
+                }
+                Init::Zero => out.extend(std::iter::repeat(0.0).take(n)),
+            }
+        }
+        out
+    }
+}
+
+/// Parameter initializer kinds (manifest `init` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    Xavier,
+    Normal,
+    Zero,
+}
+
+/// Offsets of each named parameter in the flat vector.
+fn offsets(cfg: &DcnConfig) -> Vec<(String, usize, usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for (name, r, c, _) in cfg.param_layout() {
+        out.push((name, off, r, c));
+        off += r * c;
+    }
+    out
+}
+
+/// Forward-pass activations kept for the backward pass.
+pub struct Cache {
+    x0: Vec<f32>,            // [B, K]
+    cross_xs: Vec<Vec<f32>>, // inputs to each cross layer + final output
+    mlp_pre: Vec<Vec<f32>>,  // pre-ReLU activations per MLP layer
+    mlp_act: Vec<Vec<f32>>,  // post-ReLU+mask activations
+    out: Vec<f32>,           // [B, K + last]
+    logits: Vec<f32>,        // [B]
+    mask: Vec<f32>,          // dropout mask copy
+}
+
+/// Training-step output (mirrors the `train_*` artifact outputs).
+pub struct TrainOutput {
+    pub loss: f32,
+    pub logits: Vec<f32>,
+    pub d_emb: Vec<f32>,    // [U, d]
+    pub d_params: Vec<f32>, // [P]
+}
+
+/// The Rust DCN engine.
+pub struct Dcn {
+    pub cfg: DcnConfig,
+    offs: Vec<(String, usize, usize, usize)>,
+}
+
+impl Dcn {
+    pub fn new(cfg: DcnConfig) -> Self {
+        let offs = offsets(&cfg);
+        Self { cfg, offs }
+    }
+
+    fn param<'a>(&self, params: &'a [f32], name: &str) -> &'a [f32] {
+        let (_, off, r, c) = self
+            .offs
+            .iter()
+            .find(|(n, ..)| n == name)
+            .unwrap_or_else(|| panic!("no param {name}"));
+        &params[*off..off + r * c]
+    }
+
+    fn param_mut<'a>(
+        &self,
+        params: &'a mut [f32],
+        name: &str,
+    ) -> &'a mut [f32] {
+        let (_, off, r, c) = self
+            .offs
+            .iter()
+            .find(|(n, ..)| n == name)
+            .unwrap_or_else(|| panic!("no param {name}"));
+        &mut params[*off..off + r * c]
+    }
+
+    /// Forward from unique embedding rows; returns logits and the cache.
+    ///
+    /// `emb`: `[U, d]` unique rows, `idx`: `[B, F]` positions into emb,
+    /// `mask`: `[B, mlp_mask_dim]` dropout mask ({0, 1/(1-p)}).
+    pub fn forward(
+        &self,
+        emb: &[f32],
+        idx: &[i32],
+        params: &[f32],
+        mask: &[f32],
+    ) -> Cache {
+        let cfg = &self.cfg;
+        let (b, f, d, k) = (cfg.batch, cfg.fields, cfg.emb_dim, cfg.input_dim());
+        assert_eq!(idx.len(), b * f);
+        assert_eq!(mask.len(), b * cfg.mlp_mask_dim());
+
+        // gather -> x0 [B, K]
+        let mut x0 = vec![0.0f32; b * k];
+        for bi in 0..b {
+            for fi in 0..f {
+                let u = idx[bi * f + fi] as usize;
+                x0[bi * k + fi * d..bi * k + (fi + 1) * d]
+                    .copy_from_slice(&emb[u * d..(u + 1) * d]);
+            }
+        }
+
+        // cross tower
+        let mut cross_xs = vec![x0.clone()];
+        let mut s = vec![0.0f32; b];
+        for l in 0..cfg.cross_depth {
+            let w = self.param(params, &format!("cross_{l}_w"));
+            let bias = self.param(params, &format!("cross_{l}_b"));
+            let xl = cross_xs.last().unwrap();
+            ops::rowdot(xl, w, &mut s, b, k);
+            let mut next = vec![0.0f32; b * k];
+            for bi in 0..b {
+                for j in 0..k {
+                    next[bi * k + j] =
+                        x0[bi * k + j] * s[bi] + bias[j] + xl[bi * k + j];
+                }
+            }
+            cross_xs.push(next);
+        }
+
+        // deep tower
+        let mut mlp_pre = Vec::with_capacity(cfg.mlp.len());
+        let mut mlp_act = Vec::with_capacity(cfg.mlp.len());
+        let mut h = x0.clone();
+        let mut prev = k;
+        let mut moff = 0usize;
+        for (i, &width) in cfg.mlp.iter().enumerate() {
+            let w = self.param(params, &format!("mlp_{i}_w"));
+            let bias = self.param(params, &format!("mlp_{i}_b"));
+            let mut z = vec![0.0f32; b * width];
+            ops::matmul_nn(&h, w, &mut z, b, prev, width);
+            ops::add_bias(&mut z, bias, b, width);
+            mlp_pre.push(z.clone());
+            ops::relu(&mut z);
+            // dropout mask slice
+            for bi in 0..b {
+                for j in 0..width {
+                    z[bi * width + j] *=
+                        mask[bi * cfg.mlp_mask_dim() + moff + j];
+                }
+            }
+            mlp_act.push(z.clone());
+            h = z;
+            prev = width;
+            moff += width;
+        }
+
+        // head
+        let last = *cfg.mlp.last().unwrap();
+        let xl = cross_xs.last().unwrap();
+        let mut out = vec![0.0f32; b * (k + last)];
+        for bi in 0..b {
+            out[bi * (k + last)..bi * (k + last) + k]
+                .copy_from_slice(&xl[bi * k..(bi + 1) * k]);
+            out[bi * (k + last) + k..(bi + 1) * (k + last)]
+                .copy_from_slice(&h[bi * last..(bi + 1) * last]);
+        }
+        let wf = self.param(params, "final_w");
+        let bf = self.param(params, "final_b")[0];
+        let mut logits = vec![0.0f32; b];
+        ops::rowdot(&out, wf, &mut logits, b, k + last);
+        for z in logits.iter_mut() {
+            *z += bf;
+        }
+
+        Cache { x0, cross_xs, mlp_pre, mlp_act, out, logits,
+                mask: mask.to_vec() }
+    }
+
+    /// Mean BCE loss from cached logits.
+    pub fn loss(&self, cache: &Cache, labels: &[u8]) -> f32 {
+        let b = self.cfg.batch;
+        let mut total = 0.0f64;
+        for (&z, &y) in cache.logits.iter().zip(labels) {
+            let z = z as f64;
+            total += z.max(0.0) - z * (y as f64) + (-z.abs()).exp().ln_1p();
+        }
+        (total / b as f64) as f32
+    }
+
+    /// Backward pass: gradients w.r.t. unique embedding rows and the flat
+    /// dense parameter vector.
+    pub fn backward(
+        &self,
+        cache: &Cache,
+        idx: &[i32],
+        labels: &[u8],
+        params: &[f32],
+        n_unique: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let (b, f, d, k) = (cfg.batch, cfg.fields, cfg.emb_dim, cfg.input_dim());
+        let last = *cfg.mlp.last().unwrap();
+        let mut d_params = vec![0.0f32; params.len()];
+
+        // d loss / d logit = (sigmoid(z) - y) / B
+        let mut dlogit = vec![0.0f32; b];
+        for i in 0..b {
+            dlogit[i] = (ops::sigmoid(cache.logits[i]) - labels[i] as f32)
+                / b as f32;
+        }
+
+        // head
+        {
+            let wf = self.param(params, "final_w").to_vec();
+            let dwf = self.param_mut(&mut d_params, "final_w");
+            // dWf[j] = sum_b out[b,j] * dlogit[b]
+            for bi in 0..b {
+                let row = &cache.out
+                    [bi * (k + last)..(bi + 1) * (k + last)];
+                for (j, &o) in row.iter().enumerate() {
+                    dwf[j] += o * dlogit[bi];
+                }
+            }
+            let dbf = self.param_mut(&mut d_params, "final_b");
+            dbf[0] = dlogit.iter().sum();
+            let _ = wf;
+        }
+        let wf = self.param(params, "final_w");
+        let mut dout = vec![0.0f32; b * (k + last)];
+        for bi in 0..b {
+            for j in 0..k + last {
+                dout[bi * (k + last) + j] = dlogit[bi] * wf[j];
+            }
+        }
+
+        // split: cross grad + deep grad
+        let mut dxl = vec![0.0f32; b * k];
+        let mut da = vec![0.0f32; b * last];
+        for bi in 0..b {
+            dxl[bi * k..(bi + 1) * k].copy_from_slice(
+                &dout[bi * (k + last)..bi * (k + last) + k],
+            );
+            da[bi * last..(bi + 1) * last].copy_from_slice(
+                &dout[bi * (k + last) + k..(bi + 1) * (k + last)],
+            );
+        }
+
+        // deep tower backward
+        let mut dx0 = vec![0.0f32; b * k];
+        {
+            let mut moff_ends = Vec::new();
+            let mut acc = 0;
+            for &w in &cfg.mlp {
+                moff_ends.push(acc);
+                acc += w;
+            }
+            let mut da_cur = da;
+            for i in (0..cfg.mlp.len()).rev() {
+                let width = cfg.mlp[i];
+                let prev_dim =
+                    if i == 0 { k } else { cfg.mlp[i - 1] };
+                let moff = moff_ends[i];
+                // through mask and relu
+                let mut dz = vec![0.0f32; b * width];
+                for bi in 0..b {
+                    for j in 0..width {
+                        let m = cache.mask
+                            [bi * cfg.mlp_mask_dim() + moff + j];
+                        let pre = cache.mlp_pre[i][bi * width + j];
+                        dz[bi * width + j] = da_cur[bi * width + j]
+                            * m
+                            * if pre > 0.0 { 1.0 } else { 0.0 };
+                    }
+                }
+                let h_prev: &[f32] = if i == 0 {
+                    &cache.x0
+                } else {
+                    &cache.mlp_act[i - 1]
+                };
+                // dW = h_prev^T dz ; db = sum dz ; da_prev = dz @ W^T
+                {
+                    let dw =
+                        self.param_mut(&mut d_params, &format!("mlp_{i}_w"));
+                    ops::matmul_tn(h_prev, &dz, dw, b, prev_dim, width);
+                }
+                {
+                    let db =
+                        self.param_mut(&mut d_params, &format!("mlp_{i}_b"));
+                    for bi in 0..b {
+                        for j in 0..width {
+                            db[j] += dz[bi * width + j];
+                        }
+                    }
+                }
+                let w = self.param(params, &format!("mlp_{i}_w"));
+                let mut da_prev = vec![0.0f32; b * prev_dim];
+                ops::matmul_nt(&dz, w, &mut da_prev, b, width, prev_dim);
+                if i == 0 {
+                    for (o, &v) in dx0.iter_mut().zip(&da_prev) {
+                        *o += v;
+                    }
+                } else {
+                    da_cur = da_prev;
+                }
+            }
+        }
+
+        // cross tower backward (see kernels/ref.py cross_layer_bwd)
+        {
+            let mut g = dxl;
+            let mut s = vec![0.0f32; b];
+            for l in (0..cfg.cross_depth).rev() {
+                let w = self.param(params, &format!("cross_{l}_w")).to_vec();
+                let xl = &cache.cross_xs[l];
+                ops::rowdot(xl, &w, &mut s, b, k);
+                // r[bi] = sum_j g[bi,j] * x0[bi,j]
+                let mut r = vec![0.0f32; b];
+                for bi in 0..b {
+                    let mut acc = 0.0f32;
+                    for j in 0..k {
+                        acc += g[bi * k + j] * cache.x0[bi * k + j];
+                    }
+                    r[bi] = acc;
+                }
+                {
+                    let dw =
+                        self.param_mut(&mut d_params, &format!("cross_{l}_w"));
+                    for bi in 0..b {
+                        for j in 0..k {
+                            dw[j] += xl[bi * k + j] * r[bi];
+                        }
+                    }
+                }
+                {
+                    let db =
+                        self.param_mut(&mut d_params, &format!("cross_{l}_b"));
+                    for bi in 0..b {
+                        for j in 0..k {
+                            db[j] += g[bi * k + j];
+                        }
+                    }
+                }
+                // dx0 += g * s ; g_next = g + r ⊗ w
+                let mut g_next = vec![0.0f32; b * k];
+                for bi in 0..b {
+                    for j in 0..k {
+                        dx0[bi * k + j] += g[bi * k + j] * s[bi];
+                        g_next[bi * k + j] =
+                            g[bi * k + j] + r[bi] * w[j];
+                    }
+                }
+                g = g_next;
+            }
+            // the chain bottoms out at x0
+            for (o, &v) in dx0.iter_mut().zip(&g) {
+                *o += v;
+            }
+        }
+
+        // scatter-add x0 grads back to unique embedding rows
+        let mut d_emb = vec![0.0f32; n_unique * d];
+        for bi in 0..b {
+            for fi in 0..f {
+                let u = idx[bi * f + fi] as usize;
+                for j in 0..d {
+                    d_emb[u * d + j] += dx0[bi * k + fi * d + j];
+                }
+            }
+        }
+
+        (d_emb, d_params)
+    }
+
+    /// Full training step (forward + loss + backward), mirroring the
+    /// `train_fp` artifact contract.
+    pub fn train_step(
+        &self,
+        emb: &[f32],
+        idx: &[i32],
+        labels: &[u8],
+        params: &[f32],
+        mask: &[f32],
+        n_unique: usize,
+    ) -> TrainOutput {
+        let cache = self.forward(emb, idx, params, mask);
+        let loss = self.loss(&cache, labels);
+        let (d_emb, d_params) =
+            self.backward(&cache, idx, labels, params, n_unique);
+        TrainOutput { loss, logits: cache.logits, d_emb, d_params }
+    }
+
+    /// Inference: logits only (mask of ones).
+    pub fn infer(&self, emb: &[f32], idx: &[i32], params: &[f32]) -> Vec<f32> {
+        let ones = vec![1.0f32; self.cfg.batch * self.cfg.mlp_mask_dim()];
+        self.forward(emb, idx, params, &ones).logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> (Dcn, Vec<f32>, Vec<f32>, Vec<i32>, Vec<u8>, Vec<f32>, usize) {
+        let cfg = DcnConfig {
+            fields: 3,
+            emb_dim: 4,
+            batch: 8,
+            cross_depth: 2,
+            mlp: vec![10, 6],
+        };
+        let n_unique = 12;
+        let mut rng = Pcg32::seeded(5);
+        let dcn = Dcn::new(cfg.clone());
+        let params = cfg.init_params(&mut rng);
+        let emb: Vec<f32> = (0..n_unique * cfg.emb_dim)
+            .map(|_| rng.normal_scaled(0.0, 0.2))
+            .collect();
+        let idx: Vec<i32> = (0..cfg.batch * cfg.fields)
+            .map(|_| rng.below(n_unique as u32) as i32)
+            .collect();
+        let labels: Vec<u8> =
+            (0..cfg.batch).map(|_| rng.bernoulli(0.4) as u8).collect();
+        let mask = vec![1.0f32; cfg.batch * cfg.mlp_mask_dim()];
+        (dcn, params, emb, idx, labels, mask, n_unique)
+    }
+
+    #[test]
+    fn layout_matches_python_counts() {
+        // tiny config: counted from configs.param_layout
+        let cfg = DcnConfig::tiny();
+        let k = 64;
+        let expect = 2 * (k + k)       // cross w+b, depth 2
+            + (k * 32 + 32) + (32 * 16 + 16)  // mlp
+            + (k + 16)                 // final w: (k+last) x 1
+            + 1;                       // final b
+        assert_eq!(cfg.n_params(), expect);
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let (dcn, params, emb, idx, _labels, mask, _u) = setup();
+        let cache = dcn.forward(&emb, &idx, &params, &mask);
+        assert_eq!(cache.logits.len(), 8);
+        assert!(cache.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn loss_matches_metrics_formula() {
+        let (dcn, params, emb, idx, labels, mask, _u) = setup();
+        let cache = dcn.forward(&emb, &idx, &params, &mask);
+        let want = crate::metrics::logloss_from_logits(
+            &cache.logits,
+            &labels,
+        ) as f32;
+        assert!((dcn.loss(&cache, &labels) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (dcn, mut params, mut emb, idx, labels, mask, n_unique) = setup();
+        let out = dcn.train_step(&emb, &idx, &labels, &params, &mask,
+                                 n_unique);
+        let eps = 3e-3f32;
+        let mut rng = Pcg32::seeded(17);
+
+        // a few random parameter coordinates
+        for _ in 0..6 {
+            let i = rng.below_usize(params.len());
+            let orig = params[i];
+            params[i] = orig + eps;
+            let up = dcn
+                .train_step(&emb, &idx, &labels, &params, &mask, n_unique)
+                .loss;
+            params[i] = orig - eps;
+            let dn = dcn
+                .train_step(&emb, &idx, &labels, &params, &mask, n_unique)
+                .loss;
+            params[i] = orig;
+            let fd = (up - dn) / (2.0 * eps);
+            let an = out.d_params[i];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs(),
+                "param {i}: fd={fd} analytic={an}"
+            );
+        }
+
+        // a few embedding coordinates
+        for _ in 0..6 {
+            let i = rng.below_usize(emb.len());
+            let orig = emb[i];
+            emb[i] = orig + eps;
+            let up = dcn
+                .train_step(&emb, &idx, &labels, &params, &mask, n_unique)
+                .loss;
+            emb[i] = orig - eps;
+            let dn = dcn
+                .train_step(&emb, &idx, &labels, &params, &mask, n_unique)
+                .loss;
+            emb[i] = orig;
+            let fd = (up - dn) / (2.0 * eps);
+            let an = out.d_emb[i];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs(),
+                "emb {i}: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn dropout_mask_zeroes_grad_flow() {
+        let (dcn, params, emb, idx, labels, _mask, n_unique) = setup();
+        let zero_mask = vec![0.0f32; dcn.cfg.batch * dcn.cfg.mlp_mask_dim()];
+        let out =
+            dcn.train_step(&emb, &idx, &labels, &params, &zero_mask, n_unique);
+        // with the deep tower masked out, mlp weight grads must be zero
+        let layout = dcn.cfg.param_layout();
+        let mut off = 0;
+        for (name, r, c, _) in layout {
+            let g = &out.d_params[off..off + r * c];
+            if name.starts_with("mlp_") && name.ends_with("_w") {
+                assert!(g.iter().all(|&x| x == 0.0), "{name} grads nonzero");
+            }
+            off += r * c;
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_rust_path() {
+        let (dcn, mut params, mut emb, _idx, _labels, mask, n_unique) =
+            setup();
+        let mut rng = Pcg32::seeded(23);
+        // learnable rule: label = 1 if unique row 0 appears in field 0
+        let mut first = f32::NAN;
+        let mut last = 0.0;
+        for step in 0..120 {
+            let idx: Vec<i32> = (0..dcn.cfg.batch * dcn.cfg.fields)
+                .map(|_| rng.below(n_unique as u32) as i32)
+                .collect();
+            let labels: Vec<u8> = (0..dcn.cfg.batch)
+                .map(|bi| (idx[bi * dcn.cfg.fields] == 0) as u8)
+                .collect();
+            let out =
+                dcn.train_step(&emb, &idx, &labels, &params, &mask, n_unique);
+            for (p, g) in params.iter_mut().zip(&out.d_params) {
+                *p -= 0.3 * g;
+            }
+            for (e, g) in emb.iter_mut().zip(&out.d_emb) {
+                *e -= 2.0 * g;
+            }
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+        }
+        assert!(
+            last < first - 0.1,
+            "loss did not decrease: {first} -> {last}"
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Pure-Rust DCN forward/backward — a PJRT-free twin of the L2 JAX model.
+//!
+//! Three jobs: (1) integration tests pin the AOT HLO's loss/gradients
+//! against this implementation on identical inputs; (2) a CPU fallback
+//! compute path for environments without the PJRT shared library; (3) a
+//! baseline for the §Perf comparisons. The parameter layout, math and
+//! even reduction order choices mirror `python/compile/model.py` (layout
+//! from `configs.param_layout`).
+
+pub mod dcn;
+pub mod ops;
+
+pub use dcn::{Dcn, DcnConfig, TrainOutput};

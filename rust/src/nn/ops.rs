@@ -1,0 +1,226 @@
+//! Dense linear-algebra primitives for the Rust DCN path.
+//!
+//! Shapes are `(rows, cols)` over flat `&[f32]` row-major buffers. The
+//! matmul kernels use the cache-friendly i–k–j loop order with an
+//! accumulate-into-output contract (callers zero or seed the output).
+
+/// `c[m,n] += a[m,k] @ b[k,n]`
+pub fn matmul_nn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (cj, &bj) in c_row.iter_mut().zip(b_row) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// `c[m,n] += a[p,m]^T @ b[p,n]` (used for weight grads `dW = h^T dz`)
+pub fn matmul_tn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    p: usize,
+    m: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), p * m);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(c.len(), m * n);
+    for row in 0..p {
+        let a_row = &a[row * m..(row + 1) * m];
+        let b_row = &b[row * n..(row + 1) * n];
+        for (i, &ai) in a_row.iter().enumerate() {
+            if ai == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (cj, &bj) in c_row.iter_mut().zip(b_row) {
+                *cj += ai * bj;
+            }
+        }
+    }
+}
+
+/// `c[m,n] += a[m,p] @ b[n,p]^T` (used for input grads `dx = dz @ W^T`)
+pub fn matmul_nt(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    p: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), n * p);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * p..(i + 1) * p];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (j, cj) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * p..(j + 1) * p];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in a_row.iter().zip(b_row) {
+                acc += av * bv;
+            }
+            *cj += acc;
+        }
+    }
+}
+
+/// Row-wise dot products: `out[i] = a[i,:] . v`
+pub fn rowdot(a: &[f32], v: &[f32], out: &mut [f32], m: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m);
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        let mut acc = 0.0f32;
+        for (&x, &y) in row.iter().zip(v) {
+            acc += x * y;
+        }
+        out[i] = acc;
+    }
+}
+
+/// In-place ReLU, returning the mask application to a paired grad later is
+/// the caller's job (they keep the pre-activation).
+pub fn relu(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Add `b` broadcast over rows: `x[i,:] += b`.
+pub fn add_bias(x: &mut [f32], b: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(b.len(), n);
+    for i in 0..m {
+        for (v, &bj) in x[i * n..(i + 1) * n].iter_mut().zip(b) {
+            *v += bj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let mut c = vec![0.0; 4];
+        matmul_nn(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        check("nn/tn/nt consistency", 40, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let a = g.vec_normal(m * k, 1.0);
+            let b = g.vec_normal(k * n, 1.0);
+            let want = naive_nn(&a, &b, m, k, n);
+
+            let mut c = vec![0.0; m * n];
+            matmul_nn(&a, &b, &mut c, m, k, n);
+            // a^T with a stored as [k, m]: transpose a manually
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut c2 = vec![0.0; m * n];
+            matmul_tn(&at, &b, &mut c2, k, m, n);
+            // b^T stored as [n, k]
+            let mut bt = vec![0.0; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            let mut c3 = vec![0.0; m * n];
+            matmul_nt(&a, &bt, &mut c3, m, k, n);
+
+            for (idx, &w) in want.iter().enumerate() {
+                for (which, got) in
+                    [(&c, "nn"), (&c2, "tn"), (&c3, "nt")].iter().map(
+                        |(v, s)| (*s, v[idx]),
+                    )
+                {
+                    if (got - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                        return Err(format!(
+                            "{which} mismatch at {idx}: {got} vs {w}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rowdot_matches() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = [1.0, -1.0];
+        let mut out = [0.0; 3];
+        rowdot(&a, &v, &mut out, 3, 2);
+        assert_eq!(out, [-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let mut x = vec![-1.0, 2.0, -3.0, 4.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0, 4.0]);
+        add_bias(&mut x, &[10.0, 20.0], 2, 2);
+        assert_eq!(x, vec![10.0, 22.0, 10.0, 24.0]);
+    }
+
+    #[test]
+    fn sigmoid_bounds() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(30.0) > 0.999_999);
+        assert!(sigmoid(-30.0) < 1e-6);
+    }
+}

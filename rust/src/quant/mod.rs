@@ -1,0 +1,400 @@
+//! Uniform symmetric quantization (paper §2.1, Eq. 1–4) and the learned
+//! step-size machinery (Eq. 6–7).
+//!
+//! This module is the Rust twin of `python/compile/kernels/`: the same
+//! math runs (a) here, on the table-update path, and (b) as Pallas kernels
+//! inside the AOT HLO on the model-execution path. Integration tests pin
+//! the two against each other.
+
+pub mod packed;
+
+pub use packed::PackedTable;
+
+use crate::util::rng::Pcg32;
+
+/// Quantization bit width. `qn = -2^{m-1}`, `qp = 2^{m-1} - 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BitWidth {
+    B2,
+    B4,
+    B8,
+    B16,
+}
+
+impl BitWidth {
+    pub fn from_bits(bits: u32) -> Option<Self> {
+        match bits {
+            2 => Some(Self::B2),
+            4 => Some(Self::B4),
+            8 => Some(Self::B8),
+            16 => Some(Self::B16),
+            _ => None,
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Self::B2 => 2,
+            Self::B4 => 4,
+            Self::B8 => 8,
+            Self::B16 => 16,
+        }
+    }
+
+    /// Most negative code `-2^{m-1}`.
+    pub fn qn(self) -> i32 {
+        -(1 << (self.bits() - 1))
+    }
+
+    /// Most positive code `2^{m-1} - 1`.
+    pub fn qp(self) -> i32 {
+        (1 << (self.bits() - 1)) - 1
+    }
+
+    /// `q = 2^{m-1} - 1` in the paper's gradient-scale formula.
+    pub fn q(self) -> f32 {
+        self.qp() as f32
+    }
+}
+
+/// Rounding mode (paper Eq. 3 vs Eq. 4). The paper's central theory result
+/// (Theorems 1–2) is that SR converges strictly better than DR in LPT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    Deterministic,
+    Stochastic,
+}
+
+/// R_D (Eq. 3): round half towards +inf — identical to the Pallas kernel's
+/// `floor(x + 0.5)`.
+#[inline]
+pub fn round_dr(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// R_S (Eq. 4): floor + Bernoulli(frac) with an explicit U[0,1) draw.
+#[inline]
+pub fn round_sr(x: f32, u: f32) -> f32 {
+    let f = x.floor();
+    f + ((u < x - f) as u32 as f32)
+}
+
+/// Quantize one weight to its integer code (Eq. 1).
+#[inline]
+pub fn quantize_dr(w: f32, delta: f32, bw: BitWidth) -> i32 {
+    let x = (w / delta).clamp(bw.qn() as f32, bw.qp() as f32);
+    round_dr(x) as i32
+}
+
+/// Quantize one weight with stochastic rounding.
+#[inline]
+pub fn quantize_sr(w: f32, delta: f32, bw: BitWidth, u: f32) -> i32 {
+    let x = (w / delta).clamp(bw.qn() as f32, bw.qp() as f32);
+    round_sr(x, u) as i32
+}
+
+/// De-quantize a code (Eq. 2).
+#[inline]
+pub fn dequantize(code: i32, delta: f32) -> f32 {
+    code as f32 * delta
+}
+
+/// Quantize a row in place into `codes` (one rng draw per element for SR).
+pub fn quantize_row(
+    w: &[f32],
+    delta: f32,
+    bw: BitWidth,
+    rounding: Rounding,
+    rng: &mut Pcg32,
+    codes: &mut [i32],
+) {
+    debug_assert_eq!(w.len(), codes.len());
+    match rounding {
+        Rounding::Deterministic => {
+            for (c, &x) in codes.iter_mut().zip(w) {
+                *c = quantize_dr(x, delta, bw);
+            }
+        }
+        Rounding::Stochastic => {
+            for (c, &x) in codes.iter_mut().zip(w) {
+                *c = quantize_sr(x, delta, bw, rng.uniform_f32());
+            }
+        }
+    }
+}
+
+/// De-quantize a row of codes into `out`.
+pub fn dequantize_row(codes: &[i32], delta: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * delta;
+    }
+}
+
+/// LSQ's step-size gradient estimator (Eq. 7) for one element:
+/// `d Q_D(w)/d delta`.
+#[inline]
+pub fn lsq_delta_grad_elem(w: f32, delta: f32, bw: BitWidth) -> f32 {
+    let qn = bw.qn() as f32;
+    let qp = bw.qp() as f32;
+    let x = w / delta;
+    if x <= qn {
+        qn
+    } else if x >= qp {
+        qp
+    } else {
+        round_dr(x) - x
+    }
+}
+
+/// `d f / d delta` for one row: sum of upstream grads times Eq. 7. Exactly
+/// the reduction the Pallas LSQ backward kernel performs.
+pub fn lsq_delta_grad_row(
+    w: &[f32],
+    delta: f32,
+    bw: BitWidth,
+    upstream: &[f32],
+) -> f32 {
+    debug_assert_eq!(w.len(), upstream.len());
+    w.iter()
+        .zip(upstream)
+        .map(|(&wi, &g)| g * lsq_delta_grad_elem(wi, delta, bw))
+        .sum()
+}
+
+/// STE weight gradient through Q_D: pass inside the open clip interval,
+/// zero outside (matches the Pallas LSQ backward).
+pub fn ste_weight_grad_row(
+    w: &[f32],
+    delta: f32,
+    bw: BitWidth,
+    upstream: &[f32],
+    out: &mut [f32],
+) {
+    let qn = bw.qn() as f32;
+    let qp = bw.qp() as f32;
+    for ((o, &wi), &g) in out.iter_mut().zip(w).zip(upstream) {
+        let x = wi / delta;
+        *o = if x > qn && x < qp { g } else { 0.0 };
+    }
+}
+
+/// LSQ-style step-size initialization: `2 * E|w| / sqrt(qp)` over the row
+/// (Esser et al. 2020), with a floor to keep Δ positive for all-zero rows.
+pub fn init_delta(w: &[f32], bw: BitWidth) -> f32 {
+    let mean_abs =
+        w.iter().map(|x| x.abs()).sum::<f32>() / w.len().max(1) as f32;
+    let d = 2.0 * mean_abs / (bw.q()).sqrt();
+    d.max(1e-8)
+}
+
+/// Fixed step size from a clipping value (vanilla-LPT style; the paper
+/// tunes clip ∈ {1, 0.1, 0.01, 0.001}): Δ = clip / 2^{m-1}.
+pub fn delta_from_clip(clip: f32, bw: BitWidth) -> f32 {
+    clip / (1 << (bw.bits() - 1)) as f32
+}
+
+/// Paper §3.2: gradient scale `g` options for the step-size update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradScale {
+    One,
+    /// `1/sqrt(d*q)`
+    InvSqrtDq,
+    /// `1/sqrt(b*d*q)` (the paper's default)
+    InvSqrtBdq,
+}
+
+impl GradScale {
+    pub fn value(self, batch: usize, dim: usize, bw: BitWidth) -> f32 {
+        match self {
+            GradScale::One => 1.0,
+            GradScale::InvSqrtDq => 1.0 / (dim as f32 * bw.q()).sqrt(),
+            GradScale::InvSqrtBdq => {
+                1.0 / (batch as f32 * dim as f32 * bw.q()).sqrt()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn bitwidth_ranges() {
+        assert_eq!(BitWidth::B2.qn(), -2);
+        assert_eq!(BitWidth::B2.qp(), 1);
+        assert_eq!(BitWidth::B4.qn(), -8);
+        assert_eq!(BitWidth::B4.qp(), 7);
+        assert_eq!(BitWidth::B8.qn(), -128);
+        assert_eq!(BitWidth::B8.qp(), 127);
+        assert_eq!(BitWidth::B16.qn(), -32768);
+        assert_eq!(BitWidth::B16.qp(), 32767);
+        assert_eq!(BitWidth::from_bits(8), Some(BitWidth::B8));
+        assert_eq!(BitWidth::from_bits(3), None);
+    }
+
+    #[test]
+    fn round_dr_ties_up() {
+        assert_eq!(round_dr(0.5), 1.0);
+        assert_eq!(round_dr(-0.5), 0.0);
+        assert_eq!(round_dr(-1.5), -1.0);
+        assert_eq!(round_dr(1.49), 1.0);
+        assert_eq!(round_dr(1.5), 2.0);
+    }
+
+    #[test]
+    fn round_sr_extremes() {
+        // u = 0.99…: round down unless frac > u; u = 0: always up for frac>0
+        assert_eq!(round_sr(1.3, 0.99), 1.0);
+        assert_eq!(round_sr(1.3, 0.0), 2.0);
+        assert_eq!(round_sr(2.0, 0.5), 2.0); // integer stays put
+    }
+
+    #[test]
+    fn dr_quantization_error_bounded() {
+        check("|dequant(quant_dr(w)) - w| <= delta/2 in range", 300, |g| {
+            let bw = *g.pick(&[BitWidth::B4, BitWidth::B8, BitWidth::B16]);
+            let delta = g.f32_in(1e-4, 0.1);
+            // keep w strictly inside the representable range
+            let lim = delta * (bw.qp() as f32 - 1.0);
+            let w = g.f32_in(-lim, lim);
+            let c = quantize_dr(w, delta, bw);
+            let err = (dequantize(c, delta) - w).abs();
+            if err <= delta / 2.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("w={w} delta={delta} err={err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn sr_quantization_error_bounded_by_delta() {
+        check("|dequant(quant_sr(w)) - w| < delta in range", 300, |g| {
+            let bw = BitWidth::B8;
+            let delta = g.f32_in(1e-4, 0.1);
+            let lim = delta * (bw.qp() as f32 - 1.0);
+            let w = g.f32_in(-lim, lim);
+            let u = g.f32_in(0.0, 1.0);
+            let c = quantize_sr(w, delta, bw, u);
+            let err = (dequantize(c, delta) - w).abs();
+            if err < delta + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("w={w} delta={delta} err={err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn codes_stay_in_range() {
+        check("codes within [qn, qp] even for huge w", 300, |g| {
+            let bw = *g.pick(&[
+                BitWidth::B2,
+                BitWidth::B4,
+                BitWidth::B8,
+                BitWidth::B16,
+            ]);
+            let delta = g.f32_in(1e-4, 0.01);
+            let w = g.f32_in(-100.0, 100.0);
+            let u = g.f32_in(0.0, 1.0);
+            for c in [quantize_dr(w, delta, bw), quantize_sr(w, delta, bw, u)]
+            {
+                if c < bw.qn() || c > bw.qp() {
+                    return Err(format!("code {c} out of range for {bw:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sr_unbiased_statistically() {
+        let mut rng = Pcg32::seeded(99);
+        let bw = BitWidth::B8;
+        let delta = 0.01f32;
+        let w = 0.0234f32; // frac(w/delta) = 0.34
+        let n = 200_000;
+        let mean: f64 = (0..n)
+            .map(|_| {
+                dequantize(quantize_sr(w, delta, bw, rng.uniform_f32()), delta)
+                    as f64
+            })
+            .sum::<f64>()
+            / n as f64;
+        // SE = delta * sqrt(p(1-p)/n) ≈ 1.06e-5; allow 5 sigma
+        assert!((mean - w as f64).abs() < 6e-5, "mean={mean}");
+    }
+
+    #[test]
+    fn lsq_grad_matches_eq7() {
+        let bw = BitWidth::B4; // qn=-8, qp=7
+        let delta = 0.1;
+        // clipped low
+        assert_eq!(lsq_delta_grad_elem(-5.0, delta, bw), -8.0);
+        // clipped high
+        assert_eq!(lsq_delta_grad_elem(5.0, delta, bw), 7.0);
+        // in range: R_D(x) - x with x = 3.4 -> 3 - 3.4 = -0.4
+        let g = lsq_delta_grad_elem(0.34, delta, bw);
+        assert!((g - (-0.4)).abs() < 1e-5, "g={g}");
+    }
+
+    #[test]
+    fn lsq_row_grad_is_weighted_sum() {
+        let bw = BitWidth::B8;
+        let w = [0.0234f32, -0.0711, 0.5];
+        let ups = [1.0f32, 2.0, -1.0];
+        let delta = 0.01;
+        let want: f32 = w
+            .iter()
+            .zip(&ups)
+            .map(|(&wi, &g)| g * lsq_delta_grad_elem(wi, delta, bw))
+            .sum();
+        assert_eq!(lsq_delta_grad_row(&w, delta, bw, &ups), want);
+    }
+
+    #[test]
+    fn ste_masks_clipped() {
+        let bw = BitWidth::B4;
+        let delta = 0.1;
+        let w = [0.0, 0.79, -0.85, 0.3];
+        let ups = [1.0, 1.0, 1.0, 1.0];
+        let mut out = [0.0f32; 4];
+        ste_weight_grad_row(&w, delta, bw, &ups, &mut out);
+        assert_eq!(out, [1.0, 0.0, 0.0, 1.0]); // 0.79/0.1=7.9 >= qp -> 0
+    }
+
+    #[test]
+    fn init_delta_positive_and_scales() {
+        let w = [0.1f32, -0.2, 0.3, -0.4];
+        let d8 = init_delta(&w, BitWidth::B8);
+        let d2 = init_delta(&w, BitWidth::B2);
+        assert!(d8 > 0.0 && d2 > 0.0);
+        assert!(d2 > d8, "lower bit width needs a larger step");
+        assert!(init_delta(&[0.0; 4], BitWidth::B8) >= 1e-8);
+    }
+
+    #[test]
+    fn grad_scale_values() {
+        let s = GradScale::InvSqrtBdq.value(256, 16, BitWidth::B8);
+        assert!((s - 1.0 / (256.0f32 * 16.0 * 127.0).sqrt()).abs() < 1e-9);
+        assert_eq!(GradScale::One.value(7, 5, BitWidth::B2), 1.0);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_row() {
+        let mut rng = Pcg32::seeded(3);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal_scaled(0.0, 0.05)).collect();
+        let delta = init_delta(&w, BitWidth::B8);
+        let mut codes = vec![0i32; 64];
+        quantize_row(&w, delta, BitWidth::B8, Rounding::Deterministic,
+                     &mut rng, &mut codes);
+        let mut back = vec![0.0f32; 64];
+        dequantize_row(&codes, delta, &mut back);
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= delta, "a={a} b={b} delta={delta}");
+        }
+    }
+}

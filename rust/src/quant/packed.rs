@@ -1,0 +1,348 @@
+//! Bit-packed integer storage for quantized embedding tables.
+//!
+//! This is where the paper's memory saving physically happens: the whole
+//! [n_features × dim] table lives as m-bit two's-complement codes packed
+//! into `u8` words (4:1 ratio at 8 bits vs f32, 16:1 at 2 bits), plus one
+//! f32 step size per feature row. Only the rows referenced by the current
+//! batch are expanded to f32 — and only transiently.
+//!
+//! Layout: row-major, rows padded to a whole byte so row accesses never
+//! straddle feature boundaries (keeps row loads branch-light and makes
+//! per-row parallel updates safe).
+
+use super::BitWidth;
+
+/// Packed `[rows × dim]` table of m-bit signed integer codes.
+#[derive(Clone, Debug)]
+pub struct PackedTable {
+    bits: u32,
+    rows: usize,
+    dim: usize,
+    row_bytes: usize,
+    data: Vec<u8>,
+}
+
+impl PackedTable {
+    pub fn new(rows: usize, dim: usize, bw: BitWidth) -> Self {
+        let bits = bw.bits();
+        let row_bytes = (dim * bits as usize).div_ceil(8);
+        Self { bits, rows, dim, row_bytes, data: vec![0u8; rows * row_bytes] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn bit_width(&self) -> BitWidth {
+        BitWidth::from_bits(self.bits).unwrap()
+    }
+
+    /// Bytes of backing storage (the compression-ratio numerator).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Read one element (sign-extended).
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> i32 {
+        debug_assert!(row < self.rows && col < self.dim);
+        let base = row * self.row_bytes;
+        match self.bits {
+            8 => self.data[base + col] as i8 as i32,
+            16 => {
+                let o = base + col * 2;
+                i16::from_le_bytes([self.data[o], self.data[o + 1]]) as i32
+            }
+            4 => {
+                let byte = self.data[base + col / 2];
+                let nib = if col % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                ((nib as i32) << 28) >> 28
+            }
+            2 => {
+                let byte = self.data[base + col / 4];
+                let two = (byte >> ((col % 4) * 2)) & 0b11;
+                ((two as i32) << 30) >> 30
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Write one element. `v` must be within the bit width's range.
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: i32) {
+        debug_assert!(row < self.rows && col < self.dim);
+        let bw = BitWidth::from_bits(self.bits).unwrap();
+        debug_assert!(
+            v >= bw.qn() && v <= bw.qp(),
+            "code {v} out of range for {} bits",
+            self.bits
+        );
+        let base = row * self.row_bytes;
+        match self.bits {
+            8 => self.data[base + col] = v as i8 as u8,
+            16 => {
+                let o = base + col * 2;
+                let b = (v as i16).to_le_bytes();
+                self.data[o] = b[0];
+                self.data[o + 1] = b[1];
+            }
+            4 => {
+                let o = base + col / 2;
+                let nib = (v as u8) & 0xF;
+                if col % 2 == 0 {
+                    self.data[o] = (self.data[o] & 0xF0) | nib;
+                } else {
+                    self.data[o] = (self.data[o] & 0x0F) | (nib << 4);
+                }
+            }
+            2 => {
+                let o = base + col / 4;
+                let shift = (col % 4) * 2;
+                let two = (v as u8) & 0b11;
+                self.data[o] =
+                    (self.data[o] & !(0b11 << shift)) | (two << shift);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Unpack a whole row into `out` as i32 codes.
+    pub fn read_row(&self, row: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let base = row * self.row_bytes;
+        match self.bits {
+            8 => {
+                for (o, &b) in out.iter_mut().zip(&self.data[base..]) {
+                    *o = b as i8 as i32;
+                }
+            }
+            16 => {
+                let src = &self.data[base..base + self.dim * 2];
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = i16::from_le_bytes([src[2 * i], src[2 * i + 1]])
+                        as i32;
+                }
+            }
+            4 => {
+                let src = &self.data[base..base + self.row_bytes];
+                let mut i = 0;
+                for &byte in src {
+                    if i < self.dim {
+                        out[i] = (((byte & 0xF) as i32) << 28) >> 28;
+                        i += 1;
+                    }
+                    if i < self.dim {
+                        out[i] = (((byte >> 4) as i32) << 28) >> 28;
+                        i += 1;
+                    }
+                }
+            }
+            2 => {
+                let src = &self.data[base..base + self.row_bytes];
+                let mut i = 0;
+                for &byte in src {
+                    for shift in [0u32, 2, 4, 6] {
+                        if i < self.dim {
+                            out[i] =
+                                ((((byte >> shift) & 0b11) as i32) << 30)
+                                    >> 30;
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Unpack a row straight to de-quantized f32 (`code * delta`) — the
+    /// gather hot path.
+    pub fn read_row_dequant(&self, row: usize, delta: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let base = row * self.row_bytes;
+        match self.bits {
+            8 => {
+                let src = &self.data[base..base + self.dim];
+                for (o, &b) in out.iter_mut().zip(src) {
+                    *o = (b as i8 as f32) * delta;
+                }
+            }
+            16 => {
+                let src = &self.data[base..base + self.dim * 2];
+                for (o, pair) in out.iter_mut().zip(src.chunks_exact(2)) {
+                    *o = i16::from_le_bytes([pair[0], pair[1]]) as f32
+                        * delta;
+                }
+            }
+            4 => {
+                // branch-free nibble unpack straight to f32 (no temp
+                // allocation — this is the gather hot path)
+                let src = &self.data[base..base + self.row_bytes];
+                let mut i = 0;
+                for &byte in src {
+                    if i < self.dim {
+                        out[i] = ((((byte & 0xF) as i32) << 28) >> 28)
+                            as f32
+                            * delta;
+                        i += 1;
+                    }
+                    if i < self.dim {
+                        out[i] =
+                            ((((byte >> 4) as i32) << 28) >> 28) as f32
+                                * delta;
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                // 2-bit: 4 codes per byte, sign-extend, scale
+                let src = &self.data[base..base + self.row_bytes];
+                let mut i = 0;
+                for &byte in src {
+                    for shift in [0u32, 2, 4, 6] {
+                        if i < self.dim {
+                            out[i] = ((((byte >> shift) & 0b11) as i32)
+                                << 30 >> 30)
+                                as f32
+                                * delta;
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pack a row of i32 codes.
+    pub fn write_row(&mut self, row: usize, codes: &[i32]) {
+        debug_assert_eq!(codes.len(), self.dim);
+        for (col, &c) in codes.iter().enumerate() {
+            self.set(row, col, c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn roundtrip_prop(bw: BitWidth) {
+        check(
+            &format!("packed roundtrip {}bit", bw.bits()),
+            120,
+            move |g: &mut Gen| {
+                let rows = g.usize_in(1, 40);
+                let dim = g.usize_in(1, 33);
+                let mut t = PackedTable::new(rows, dim, bw);
+                let mut want = vec![0i32; rows * dim];
+                for r in 0..rows {
+                    for c in 0..dim {
+                        let v = g.i32_in(bw.qn(), bw.qp());
+                        t.set(r, c, v);
+                        want[r * dim + c] = v;
+                    }
+                }
+                for r in 0..rows {
+                    let mut row = vec![0i32; dim];
+                    t.read_row(r, &mut row);
+                    for c in 0..dim {
+                        if t.get(r, c) != want[r * dim + c]
+                            || row[c] != want[r * dim + c]
+                        {
+                            return Err(format!(
+                                "mismatch at ({r},{c}): got {} / {} want {}",
+                                t.get(r, c),
+                                row[c],
+                                want[r * dim + c]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_2bit() {
+        roundtrip_prop(BitWidth::B2);
+    }
+
+    #[test]
+    fn roundtrip_4bit() {
+        roundtrip_prop(BitWidth::B4);
+    }
+
+    #[test]
+    fn roundtrip_8bit() {
+        roundtrip_prop(BitWidth::B8);
+    }
+
+    #[test]
+    fn roundtrip_16bit() {
+        roundtrip_prop(BitWidth::B16);
+    }
+
+    #[test]
+    fn storage_is_packed() {
+        // 1000 rows x 16 dims
+        assert_eq!(
+            PackedTable::new(1000, 16, BitWidth::B8).storage_bytes(),
+            16_000
+        );
+        assert_eq!(
+            PackedTable::new(1000, 16, BitWidth::B4).storage_bytes(),
+            8_000
+        );
+        assert_eq!(
+            PackedTable::new(1000, 16, BitWidth::B2).storage_bytes(),
+            4_000
+        );
+        assert_eq!(
+            PackedTable::new(1000, 16, BitWidth::B16).storage_bytes(),
+            32_000
+        );
+        // odd dim pads to byte boundary per row
+        assert_eq!(
+            PackedTable::new(10, 3, BitWidth::B2).storage_bytes(),
+            10 // 3*2=6 bits -> 1 byte per row
+        );
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let mut t = PackedTable::new(3, 5, BitWidth::B4);
+        t.write_row(1, &[-8, 7, 0, -1, 3]);
+        let mut row0 = vec![9i32; 5];
+        t.read_row(0, &mut row0);
+        assert_eq!(row0, vec![0; 5]);
+        let mut row1 = vec![0i32; 5];
+        t.read_row(1, &mut row1);
+        assert_eq!(row1, vec![-8, 7, 0, -1, 3]);
+    }
+
+    #[test]
+    fn dequant_row_matches_scalar() {
+        let mut t = PackedTable::new(2, 7, BitWidth::B8);
+        t.write_row(0, &[-128, -1, 0, 1, 2, 64, 127]);
+        let mut out = vec![0.0f32; 7];
+        t.read_row_dequant(0, 0.5, &mut out);
+        assert_eq!(out, vec![-64.0, -0.5, 0.0, 0.5, 1.0, 32.0, 63.5]);
+    }
+
+    #[test]
+    fn negative_codes_sign_extend() {
+        for bw in [BitWidth::B2, BitWidth::B4, BitWidth::B8, BitWidth::B16] {
+            let mut t = PackedTable::new(1, 2, bw);
+            t.set(0, 0, bw.qn());
+            t.set(0, 1, -1);
+            assert_eq!(t.get(0, 0), bw.qn(), "{bw:?}");
+            assert_eq!(t.get(0, 1), -1, "{bw:?}");
+        }
+    }
+}

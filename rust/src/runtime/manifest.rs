@@ -1,0 +1,238 @@
+//! The artifact manifest written by `python/compile/aot.py`: model
+//! geometries, dense-parameter layouts + init specs, and the artifact
+//! file per variant.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::dcn::{DcnConfig, Init};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// One dense parameter's spec (flat layout order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model config's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub fields: usize,
+    pub emb_dim: usize,
+    pub batch: usize,
+    pub umax: usize,
+    pub cross_depth: usize,
+    pub mlp: Vec<usize>,
+    pub dropout: f64,
+    pub input_dim: usize,
+    pub mlp_mask_dim: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    /// Initialize the flat dense-parameter vector from the manifest's
+    /// per-param init spec (mirrors python/tests init_params).
+    pub fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params);
+        for p in &self.params {
+            let n = p.numel();
+            match p.init.as_str() {
+                "xavier" => {
+                    let fan_in = p.shape[0];
+                    let fan_out =
+                        if p.shape.len() > 1 { p.shape[1] } else { 1 };
+                    let a = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                    out.extend((0..n).map(|_| rng.uniform_in(-a, a)));
+                }
+                "normal" => {
+                    out.extend((0..n).map(|_| rng.normal_scaled(0.0, 0.01)));
+                }
+                _ => out.extend(std::iter::repeat(0.0).take(n)),
+            }
+        }
+        debug_assert_eq!(out.len(), self.n_params);
+        out
+    }
+
+    /// Equivalent Rust-nn config (for the PJRT-free path and tests).
+    pub fn dcn_config(&self) -> DcnConfig {
+        DcnConfig {
+            fields: self.fields,
+            emb_dim: self.emb_dim,
+            batch: self.batch,
+            cross_depth: self.cross_depth,
+            mlp: self.mlp.clone(),
+        }
+    }
+
+    /// Layout check against the Rust-side DcnConfig (paranoid integration
+    /// guard: both sides must agree byte-for-byte on the flat layout).
+    pub fn layout_matches_rust(&self) -> bool {
+        let rust = self.dcn_config().param_layout();
+        if rust.len() != self.params.len() {
+            return false;
+        }
+        rust.iter().zip(&self.params).all(|((name, r, c, init), p)| {
+            let rust_shape: Vec<usize> = if *c == 1 && p.shape.len() == 1 {
+                vec![*r]
+            } else {
+                vec![*r, *c]
+            };
+            let init_name = match init {
+                Init::Xavier => "xavier",
+                Init::Normal => "normal",
+                Init::Zero => "zero",
+            };
+            *name == p.name && rust_shape == p.shape && init_name == p.init
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let json = Json::parse_file(path)?;
+        Self::from_json(&json)
+            .with_context(|| format!("interpreting {}", path.display()))
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let mut configs = BTreeMap::new();
+        for (name, entry) in json.get("configs")?.as_object()? {
+            let params = entry
+                .get("params")?
+                .as_array()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.usize_array()?,
+                        init: p.get("init")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let artifacts = entry
+                .get("artifacts")?
+                .as_object()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            configs.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    fields: entry.get("fields")?.as_usize()?,
+                    emb_dim: entry.get("emb_dim")?.as_usize()?,
+                    batch: entry.get("batch")?.as_usize()?,
+                    umax: entry.get("umax")?.as_usize()?,
+                    cross_depth: entry.get("cross_depth")?.as_usize()?,
+                    mlp: entry.get("mlp")?.usize_array()?,
+                    dropout: entry.get("dropout")?.as_f64()?,
+                    input_dim: entry.get("input_dim")?.as_usize()?,
+                    mlp_mask_dim: entry.get("mlp_mask_dim")?.as_usize()?,
+                    n_params: entry.get("n_params")?.as_usize()?,
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "toy": {
+          "fields": 2, "emb_dim": 4, "batch": 8, "umax": 16,
+          "cross_depth": 1, "mlp": [8], "dropout": 0.0,
+          "input_dim": 8, "mlp_mask_dim": 8, "n_params": 105,
+          "params": [
+            {"name": "cross_0_w", "shape": [8], "init": "normal"},
+            {"name": "cross_0_b", "shape": [8], "init": "zero"},
+            {"name": "mlp_0_w", "shape": [8, 8], "init": "xavier"},
+            {"name": "mlp_0_b", "shape": [8], "init": "zero"},
+            {"name": "final_w", "shape": [16, 1], "init": "xavier"},
+            {"name": "final_b", "shape": [1], "init": "zero"}
+          ],
+          "artifacts": {"train_fp": "toy_train_fp.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let e = &m.configs["toy"];
+        assert_eq!(e.fields, 2);
+        assert_eq!(e.mlp, vec![8]);
+        assert_eq!(e.params.len(), 6);
+        assert_eq!(e.params[2].numel(), 64);
+        assert_eq!(e.artifacts["train_fp"], "toy_train_fp.hlo.txt");
+    }
+
+    #[test]
+    fn init_params_respects_spec() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let e = &m.configs["toy"];
+        let mut rng = Pcg32::seeded(1);
+        let p = e.init_params(&mut rng);
+        assert_eq!(p.len(), 105);
+        // cross_0_b (offset 8..16) and final_b (last) are zeros
+        assert!(p[8..16].iter().all(|&x| x == 0.0));
+        assert_eq!(p[104], 0.0);
+        // xavier block is bounded by sqrt(6/16)
+        let bound = (6.0f32 / 16.0).sqrt() + 1e-6;
+        assert!(p[16..80].iter().all(|&x| x.abs() <= bound));
+        // normal block is not all zeros
+        assert!(p[0..8].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn layout_matches_rust_side() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert!(m.configs["toy"].layout_matches_rust());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for (name, entry) in &m.configs {
+            assert!(entry.layout_matches_rust(), "layout mismatch in {name}");
+            assert_eq!(
+                entry.n_params,
+                entry.params.iter().map(|p| p.numel()).sum::<usize>(),
+                "n_params mismatch in {name}"
+            );
+            assert_eq!(entry.umax, entry.batch * entry.fields);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Micro-benchmark harness (no `criterion` in the offline crate set).
+//!
+//! `cargo bench` targets are `harness = false` binaries that build a
+//! [`Bencher`], time closures with warmup + auto-tuned iteration counts,
+//! and print aligned rows (median, mean, p95, throughput). Results can be
+//! dumped as JSON for the EXPERIMENTS.md §Perf log.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats;
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    /// Optional work units per iteration (elements, samples, bytes…) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.median_ns * 1e-9))
+    }
+}
+
+/// Benchmark runner: measures closures and collects rows.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target: Duration,
+    pub samples: usize,
+    pub rows: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            target: Duration::from_millis(800),
+            samples: 12,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Quick profile for slow end-to-end cases (one sample, tiny warmup).
+    pub fn coarse() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            target: Duration::from_millis(1),
+            samples: 1,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, recording `units` work items per call for throughput.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        mut f: F,
+    ) -> &Measurement {
+        // Warmup + estimate per-iteration cost.
+        let wstart = Instant::now();
+        let mut wcalls = 0u64;
+        loop {
+            f();
+            wcalls += 1;
+            if wstart.elapsed() >= self.warmup || wcalls >= 1_000_000 {
+                break;
+            }
+        }
+        let per_call = wstart.elapsed().as_secs_f64() / wcalls as f64;
+        let iters = ((self.target.as_secs_f64() / self.samples as f64)
+            / per_call.max(1e-9))
+        .clamp(1.0, 1e8) as u64;
+
+        let mut sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            median_ns: stats::percentile_sorted(&sample_ns, 50.0),
+            mean_ns: stats::mean(&sample_ns),
+            p95_ns: stats::percentile_sorted(&sample_ns, 95.0),
+            units_per_iter: units,
+        };
+        println!("{}", format_row(&m));
+        self.rows.push(m);
+        self.rows.last().unwrap()
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.bench_units(name, None, f)
+    }
+
+    /// Dump all rows as a JSON array (perf log).
+    pub fn to_json(&self) -> Json {
+        Json::Array(
+            self.rows
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("name", Json::str(&m.name)),
+                        ("median_ns", Json::num(m.median_ns)),
+                        ("mean_ns", Json::num(m.mean_ns)),
+                        ("p95_ns", Json::num(m.p95_ns)),
+                        ("iters", Json::num(m.iters as f64)),
+                        (
+                            "throughput",
+                            m.throughput().map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1}ns")
+    } else if ns < 1e6 {
+        format!("{:7.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2}ms", ns / 1e6)
+    } else {
+        format!("{:7.2}s ", ns / 1e9)
+    }
+}
+
+/// Human-readable rate.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:6.2}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:6.2}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:6.2}K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:6.1}/s")
+    }
+}
+
+fn format_row(m: &Measurement) -> String {
+    let tp = m
+        .throughput()
+        .map(|t| format!("  {}", fmt_rate(t)))
+        .unwrap_or_default();
+    format!(
+        "  {:<44} {}  (mean {}, p95 {}, n={}){}",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.mean_ns),
+        fmt_ns(m.p95_ns),
+        m.iters,
+        tp
+    )
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            target: Duration::from_millis(20),
+            samples: 3,
+            rows: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench_units("noop-ish", Some(16.0), || {
+            for i in 0..16u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert_eq!(b.rows.len(), 1);
+        let m = &b.rows[0];
+        assert!(m.median_ns > 0.0);
+        assert!(m.throughput().unwrap() > 0.0);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12e3).contains("µs"));
+        assert!(fmt_ns(12e6).contains("ms"));
+        assert!(fmt_rate(2e6).contains("M/s"));
+    }
+
+    #[test]
+    fn json_dump_has_rows() {
+        let mut b = Bencher::coarse();
+        b.bench("x", || { std::hint::black_box(1 + 1); });
+        let j = b.to_json();
+        assert_eq!(j.as_array().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-tree because the build is fully
+//! offline (no `rand`, `serde`, `criterion`, `proptest`, `tokio` — see
+//! DESIGN.md §5.4).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,312 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so the crate carries its own
+//! generators: [`SplitMix64`] for seeding/stateless hashing and [`Pcg32`]
+//! (PCG-XSH-RR 64/32) as the workhorse stream. Everything that samples —
+//! data synthesis, initialization, stochastic rounding, dropout masks —
+//! takes an explicit generator, so every experiment is reproducible from
+//! its seed.
+
+/// SplitMix64: tiny, solid 64-bit mixer. Used to derive seeds and as a
+/// stateless hash for (id, id) interaction weights.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        mix64(self.state)
+    }
+}
+
+/// Stateless mix of a 64-bit value (SplitMix64 finalizer).
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small state, good statistical quality, fast.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Seeded constructor; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(mix64(seed));
+        rng.next_u32();
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform_f32()
+    }
+
+    /// Unbiased integer in `[0, n)` (Lemire's method with rejection).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(n as u64);
+            let lo = m as u32;
+            if lo >= n || lo >= (n.wrapping_neg() % n) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        self.below(n as u32) as usize
+    }
+
+    /// Standard normal via Box–Muller (pair not cached: branch-free hot use
+    /// sites draw in bulk anyway).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.uniform_f64()) as f64; // (0, 1]
+        let u2 = self.uniform_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    pub fn normal_scaled(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.uniform_f32() < p
+    }
+
+    /// Fill a slice with U[0,1) floats.
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.uniform_f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below_usize(i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+/// Zipf(s) sampler over `{0, 1, ..., n-1}` via rejection-inversion
+/// (Hörmann & Derflinger), the same algorithm `rand_distr` uses. Heavy
+/// head, long tail — the feature-frequency shape CTR datasets exhibit and
+/// the property the paper's quantization-sensitivity story depends on.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_lo: f64, // H(0.5)
+    h_hi: f64, // H(n + 0.5)
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1, "zipf needs n >= 1");
+        assert!(s > 0.0 && (s - 1.0).abs() > 1e-9, "use s != 1");
+        let z = Self { n: n as f64, s, h_lo: 0.0, h_hi: 0.0 };
+        let h_lo = z.h(0.5);
+        let h_hi = z.h(n as f64 + 0.5);
+        Self { h_lo, h_hi, ..z }
+    }
+
+    /// H(x) = (x^{1-s} - 1) / (1 - s), the antiderivative of x^{-s}.
+    #[inline]
+    fn h(&self, x: f64) -> f64 {
+        (x.powf(1.0 - self.s) - 1.0) / (1.0 - self.s)
+    }
+
+    #[inline]
+    fn h_inv(&self, y: f64) -> f64 {
+        (1.0 + y * (1.0 - self.s)).powf(1.0 / (1.0 - self.s))
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the most frequent.
+    ///
+    /// Rejection-inversion: propose a continuous x with density ∝ x^{-s}
+    /// over [0.5, n+0.5] (exact inversion through H), round to integer k,
+    /// accept w.p. k^{-s} / (H(k+0.5) - H(k-0.5)). Since x^{-s} is convex,
+    /// the bucket integral dominates the midpoint value, so the ratio is
+    /// a valid probability and acceptance is high (> 0.85 for s <= 1.5).
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        loop {
+            let u = self.h_lo + rng.uniform_f64() * (self.h_hi - self.h_lo);
+            let x = self.h_inv(u);
+            let k = x.round().clamp(1.0, self.n);
+            let bucket = self.h(k + 0.5) - self.h(k - 0.5);
+            let ratio = k.powf(-self.s) / bucket.max(1e-300);
+            if rng.uniform_f64() <= ratio {
+                return (k as usize) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::new(7, 1);
+        let mut b = Pcg32::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.uniform_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Pcg32::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased() {
+        let mut r = Pcg32::seeded(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<u32>>());
+        assert_ne!(v[..20], (0..20).collect::<Vec<u32>>()[..]);
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let z = Zipf::new(10_000, 1.1);
+        let mut r = Pcg32::seeded(13);
+        let mut head = 0usize;
+        let mut tail = 0usize;
+        for _ in 0..50_000 {
+            let k = z.sample(&mut r);
+            if k < 10 {
+                head += 1;
+            }
+            if k >= 5_000 {
+                tail += 1;
+            }
+        }
+        assert!(head > tail * 3, "head={head} tail={tail}");
+        // every draw in range
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 10_000);
+        }
+    }
+
+    #[test]
+    fn zipf_rank_zero_most_common() {
+        let z = Zipf::new(100, 1.2);
+        let mut r = Pcg32::seeded(17);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        let max_idx = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 0);
+        assert!(counts[0] > counts[10]);
+    }
+}

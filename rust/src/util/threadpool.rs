@@ -1,0 +1,197 @@
+//! Thread-based parallelism substrate (no `tokio`/`rayon` offline).
+//!
+//! Two tools: [`ThreadPool`] — a long-lived worker pool fed by an mpsc
+//! channel, used by the coordinator's sharded-worker simulation; and
+//! [`parallel_chunks`] — scoped fork/join over slices, used for data
+//! generation and table-wide operations.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are `FnOnce` closures; `join_idle` blocks
+/// until every submitted job has finished.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending: Arc<(Mutex<usize>, std::sync::Condvar)> =
+            Arc::new((Mutex::new(0), std::sync::Condvar::new()));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { sender: Some(tx), workers, pending }
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker hung up");
+    }
+
+    /// Block until all submitted jobs completed.
+    pub fn join_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close the channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `items` into `n_chunks` contiguous chunks and process them in
+/// scoped threads: `f(chunk_index, chunk)`.
+pub fn parallel_chunks<T: Send, F>(items: &mut [T], n_chunks: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let n_chunks = n_chunks.clamp(1, items.len().max(1));
+    let chunk_len = items.len().div_ceil(n_chunks);
+    if n_chunks <= 1 || items.len() < 2 {
+        f(0, items);
+        return;
+    }
+    thread::scope(|s| {
+        for (i, chunk) in items.chunks_mut(chunk_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
+/// Run `n` indexed tasks on up to `threads` scoped threads, collecting
+/// results in index order.
+pub fn parallel_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Send + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..threads.clamp(1, n.max(1)) {
+            let f = &f;
+            let next = &next;
+            let slots = &slots;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.join_idle();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_touches_everything() {
+        let mut v = vec![0u32; 1000];
+        parallel_chunks(&mut v, 7, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(50, 8, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_edge() {
+        assert_eq!(parallel_map(3, 1, |i| i), vec![0, 1, 2]);
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,315 @@
+//! Cross-layer integration tests: the AOT HLO artifacts (L1 Pallas + L2
+//! JAX, compiled through PJRT) against the pure-Rust nn implementation on
+//! identical inputs, and end-to-end training through the runtime.
+//!
+//! These tests require `make artifacts`; they skip (with a note) when the
+//! manifest is absent so `cargo test` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::coordinator::Trainer;
+use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::nn::Dcn;
+use alpt::quant::{lsq_delta_grad_row, BitWidth};
+use alpt::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_scalar_f32,
+                    Runtime};
+use alpt::util::rng::Pcg32;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+struct Fixture {
+    rt: Runtime,
+    dcn: Dcn,
+    umax: usize,
+    d: usize,
+    b: usize,
+    f: usize,
+    mmd: usize,
+    emb: Vec<f32>,
+    idx: Vec<i32>,
+    labels: Vec<u8>,
+    labels_f: Vec<f32>,
+    params: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+fn fixture(seed: u64) -> Fixture {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let entry = rt.entry("tiny").unwrap().clone();
+    let (umax, d, b, f, mmd) = (entry.umax, entry.emb_dim, entry.batch,
+                                entry.fields, entry.mlp_mask_dim);
+    let mut rng = Pcg32::seeded(seed);
+    let dcn = Dcn::new(entry.dcn_config());
+    let params = entry.init_params(&mut rng);
+    let emb: Vec<f32> =
+        (0..umax * d).map(|_| rng.normal_scaled(0.0, 0.1)).collect();
+    let idx: Vec<i32> =
+        (0..b * f).map(|_| rng.below(umax as u32) as i32).collect();
+    let labels: Vec<u8> = (0..b).map(|_| rng.bernoulli(0.3) as u8).collect();
+    let labels_f: Vec<f32> = labels.iter().map(|&x| x as f32).collect();
+    let mask = vec![1.0f32; b * mmd];
+    Fixture { rt, dcn, umax, d, b, f, mmd, emb, idx, labels, labels_f,
+              params, mask }
+}
+
+fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        let diff = (x - y).abs();
+        if diff > worst {
+            worst = diff;
+        }
+        assert!(
+            diff <= tol,
+            "{what}[{i}]: {x} vs {y} (diff {diff}, tol {tol})"
+        );
+    }
+    eprintln!("  {what}: max |diff| = {worst:.3e} over {} elems", a.len());
+}
+
+/// The headline integration check: loss, logits, embedding grads and
+/// dense-parameter grads from the PJRT-executed HLO must match the Rust
+/// nn implementation on the same inputs.
+#[test]
+fn hlo_train_fp_matches_rust_nn() {
+    require_artifacts!();
+    let mut fx = fixture(11);
+    let outs = fx
+        .rt
+        .exec(
+            "tiny",
+            "train_fp",
+            &[
+                lit_f32(&fx.emb, &[fx.umax as i64, fx.d as i64]).unwrap(),
+                lit_i32(&fx.idx, &[fx.b as i64, fx.f as i64]).unwrap(),
+                lit_f32(&fx.labels_f, &[fx.b as i64]).unwrap(),
+                lit_f32(&fx.params, &[fx.params.len() as i64]).unwrap(),
+                lit_f32(&fx.mask, &[fx.b as i64, fx.mmd as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let loss_hlo = to_scalar_f32(&outs[0]).unwrap();
+    let logits_hlo = to_f32(&outs[1]).unwrap();
+    let demb_hlo = to_f32(&outs[2]).unwrap();
+    let dparams_hlo = to_f32(&outs[3]).unwrap();
+
+    let out = fx.dcn.train_step(&fx.emb, &fx.idx, &fx.labels, &fx.params,
+                                &fx.mask, fx.umax);
+    assert!((loss_hlo - out.loss).abs() < 1e-5,
+            "loss: {loss_hlo} vs {}", out.loss);
+    assert_close(&logits_hlo, &out.logits, 1e-5, 1e-4, "logits");
+    assert_close(&demb_hlo, &out.d_emb, 1e-6, 1e-3, "d_emb");
+    assert_close(&dparams_hlo, &out.d_params, 1e-6, 2e-3, "d_params");
+}
+
+/// train_lpt = dequant-in-graph + train_fp: must agree with feeding the
+/// dequantized rows to the Rust nn.
+#[test]
+fn hlo_train_lpt_matches_rust_nn_on_dequantized() {
+    require_artifacts!();
+    let mut fx = fixture(13);
+    let mut rng = Pcg32::seeded(99);
+    let codes: Vec<i32> =
+        (0..fx.umax * fx.d).map(|_| rng.below(255) as i32 - 128).collect();
+    let delta: Vec<f32> =
+        (0..fx.umax).map(|_| rng.uniform_in(1e-3, 0.01)).collect();
+    let emb_hat: Vec<f32> = (0..fx.umax * fx.d)
+        .map(|i| codes[i] as f32 * delta[i / fx.d])
+        .collect();
+
+    let outs = fx
+        .rt
+        .exec(
+            "tiny",
+            "train_lpt",
+            &[
+                lit_i32(&codes, &[fx.umax as i64, fx.d as i64]).unwrap(),
+                lit_f32(&delta, &[fx.umax as i64]).unwrap(),
+                lit_i32(&fx.idx, &[fx.b as i64, fx.f as i64]).unwrap(),
+                lit_f32(&fx.labels_f, &[fx.b as i64]).unwrap(),
+                lit_f32(&fx.params, &[fx.params.len() as i64]).unwrap(),
+                lit_f32(&fx.mask, &[fx.b as i64, fx.mmd as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let loss_hlo = to_scalar_f32(&outs[0]).unwrap();
+    let demb_hlo = to_f32(&outs[2]).unwrap();
+
+    let out = fx.dcn.train_step(&emb_hat, &fx.idx, &fx.labels, &fx.params,
+                                &fx.mask, fx.umax);
+    assert!((loss_hlo - out.loss).abs() < 1e-5);
+    assert_close(&demb_hlo, &out.d_emb, 1e-6, 1e-3, "d_emb (lpt)");
+}
+
+/// train_fq's Δ gradient must equal the Rust Eq. 7 reduction applied to
+/// the gradients at the fake-quantized weights.
+#[test]
+fn hlo_train_fq_delta_grads_match_eq7() {
+    require_artifacts!();
+    let mut fx = fixture(17);
+    let mut rng = Pcg32::seeded(5);
+    let delta: Vec<f32> =
+        (0..fx.umax).map(|_| rng.uniform_in(2e-3, 8e-3)).collect();
+    let bw = BitWidth::B8;
+    let (qn, qp) = (bw.qn() as f32, bw.qp() as f32);
+
+    let outs = fx
+        .rt
+        .exec(
+            "tiny",
+            "train_fq",
+            &[
+                lit_f32(&fx.emb, &[fx.umax as i64, fx.d as i64]).unwrap(),
+                lit_f32(&delta, &[fx.umax as i64]).unwrap(),
+                lit_i32(&fx.idx, &[fx.b as i64, fx.f as i64]).unwrap(),
+                lit_f32(&fx.labels_f, &[fx.b as i64]).unwrap(),
+                lit_f32(&fx.params, &[fx.params.len() as i64]).unwrap(),
+                lit_f32(&fx.mask, &[fx.b as i64, fx.mmd as i64]).unwrap(),
+                lit_scalar(qn),
+                lit_scalar(qp),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 5);
+    let ddelta_hlo = to_f32(&outs[3]).unwrap();
+
+    // Rust replication: fake-quant forward, nn backward, Eq. 7 reduce.
+    let mut emb_q = vec![0.0f32; fx.umax * fx.d];
+    for i in 0..fx.umax {
+        for j in 0..fx.d {
+            let x = (fx.emb[i * fx.d + j] / delta[i]).clamp(qn, qp);
+            emb_q[i * fx.d + j] = (x + 0.5).floor() * delta[i];
+        }
+    }
+    let out = fx.dcn.train_step(&emb_q, &fx.idx, &fx.labels, &fx.params,
+                                &fx.mask, fx.umax);
+    let ddelta_rust: Vec<f32> = (0..fx.umax)
+        .map(|i| {
+            lsq_delta_grad_row(
+                &fx.emb[i * fx.d..(i + 1) * fx.d],
+                delta[i],
+                bw,
+                &out.d_emb[i * fx.d..(i + 1) * fx.d],
+            )
+        })
+        .collect();
+    assert_close(&ddelta_hlo, &ddelta_rust, 2e-6, 2e-3, "d_delta");
+}
+
+/// eval artifacts agree with the nn forward.
+#[test]
+fn hlo_eval_matches_rust_infer() {
+    require_artifacts!();
+    let mut fx = fixture(19);
+    let outs = fx
+        .rt
+        .exec(
+            "tiny",
+            "eval_fp",
+            &[
+                lit_f32(&fx.emb, &[fx.umax as i64, fx.d as i64]).unwrap(),
+                lit_i32(&fx.idx, &[fx.b as i64, fx.f as i64]).unwrap(),
+                lit_f32(&fx.params, &[fx.params.len() as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let logits_hlo = to_f32(&outs[0]).unwrap();
+    let logits_rust = fx.dcn.infer(&fx.emb, &fx.idx, &fx.params);
+    assert_close(&logits_hlo, &logits_rust, 1e-5, 1e-4, "eval logits");
+}
+
+/// End-to-end: train tiny ALPT(SR) through the PJRT runtime and confirm
+/// learning happens (loss falls, AUC beats random) and that the runtime
+/// and nn paths land in the same ballpark.
+#[test]
+fn runtime_training_learns_and_matches_nn_path() {
+    require_artifacts!();
+    let spec = SyntheticSpec::tiny(21);
+    let ds = generate(&spec, 6000);
+    let (train, val, _) = ds.split((0.8, 0.1, 0.1), 3);
+
+    let exp = |use_runtime: bool| Experiment {
+        method: Method::Alpt(RoundingMode::Sr),
+        model: "tiny".into(),
+        epochs: 2,
+        use_runtime,
+        lr_emb: 0.5,
+        lr_delta: 1e-4,
+        patience: 0,
+        artifacts_dir: artifacts_dir().to_str().unwrap().to_string(),
+        ..Experiment::default()
+    };
+
+    let mut tr_rt = Trainer::new(exp(true), ds.schema.n_features()).unwrap();
+    assert!(tr_rt.uses_runtime());
+    let res_rt = tr_rt.train(&train, &val, false).unwrap();
+    eprintln!("runtime path: auc={:.4} logloss={:.5}", res_rt.best_auc,
+              res_rt.best_logloss);
+    assert!(res_rt.best_auc > 0.60, "auc={}", res_rt.best_auc);
+    let h = &res_rt.history;
+    assert!(h.last().unwrap().mean_loss < h.first().unwrap().mean_loss
+            || h.len() == 1);
+
+    let mut tr_nn = Trainer::new(exp(false), ds.schema.n_features()).unwrap();
+    let res_nn = tr_nn.train(&train, &val, false).unwrap();
+    eprintln!("nn path:      auc={:.4} logloss={:.5}", res_nn.best_auc,
+              res_nn.best_logloss);
+    // same data, same seeds, SR noise differs only through execution
+    // rounding: the two paths must agree to training noise
+    assert!((res_rt.best_auc - res_nn.best_auc).abs() < 0.03,
+            "paths diverged: {} vs {}", res_rt.best_auc, res_nn.best_auc);
+}
+
+/// FP through the runtime should comfortably beat heavily-quantized 2-bit
+/// LPT(DR) — the qualitative Table 1 / Table 2 ordering.
+#[test]
+fn runtime_fp_beats_2bit_lpt_dr() {
+    require_artifacts!();
+    let spec = SyntheticSpec::tiny(23);
+    let ds = generate(&spec, 6000);
+    let (train, val, _) = ds.split((0.8, 0.1, 0.1), 3);
+    let base = Experiment {
+        model: "tiny".into(),
+        epochs: 2,
+        lr_emb: 0.5,
+        patience: 0,
+        artifacts_dir: artifacts_dir().to_str().unwrap().to_string(),
+        ..Experiment::default()
+    };
+    let mut fp = Trainer::new(
+        Experiment { method: Method::Fp, ..base.clone() },
+        ds.schema.n_features(),
+    )
+    .unwrap();
+    let r_fp = fp.train(&train, &val, false).unwrap();
+    let mut lpt = Trainer::new(
+        Experiment {
+            method: Method::Lpt(RoundingMode::Dr),
+            bits: 2,
+            clip: 0.1,
+            ..base
+        },
+        ds.schema.n_features(),
+    )
+    .unwrap();
+    let r_lpt = lpt.train(&train, &val, false).unwrap();
+    eprintln!("fp auc={:.4}  lpt2(dr) auc={:.4}", r_fp.best_auc,
+              r_lpt.best_auc);
+    assert!(r_fp.best_auc > r_lpt.best_auc,
+            "expected FP > 2-bit LPT(DR): {} vs {}", r_fp.best_auc,
+            r_lpt.best_auc);
+}
