@@ -16,7 +16,7 @@ use alpt::data::batcher::Batcher;
 use alpt::data::synthetic::{generate, SyntheticSpec};
 use alpt::metrics::EvalAccumulator;
 use alpt::quant::{init_delta, BitWidth};
-use alpt::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Runtime};
+use alpt::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_i32, Runtime};
 use alpt::util::rng::Pcg32;
 use alpt::util::stats::percentile;
 use anyhow::Result;
@@ -83,7 +83,7 @@ fn main() -> Result<()> {
                 lit_scalar(bw.qp() as f32),
             ],
         )?;
-        let chunk = out[0].to_vec::<i32>()?;
+        let chunk = to_i32(&out[0])?;
         codes[start * d..end * d]
             .copy_from_slice(&chunk[..(end - start) * d]);
     }

@@ -1,18 +1,39 @@
-//! Hot-path microbenchmarks (§Perf): table gather/dequant by bit width,
-//! SR/DR quantization, batch dedup, AUC, the Rust-nn training step, and
-//! PJRT artifact execution latency.
+//! Hot-path microbenchmarks (§Perf): packed-table row ops (word-at-a-time
+//! unpack, fused quantize→pack), counter-RNG stream throughput, serial vs
+//! sharded store gather/update at every bit width, batch dedup, AUC, the
+//! Rust-nn training step, and PJRT artifact execution latency.
 //!
-//! Output feeds EXPERIMENTS.md §Perf; JSON mirror in results/micro.json.
+//! Output feeds ROADMAP.md §Performance; machine-readable mirror in
+//! `BENCH_micro.json` at the repo root (cross-PR perf trajectory) plus
+//! the legacy `results/micro.json`. Quick mode: `ALPT_BENCH_QUICK=1`.
 
 use alpt::config::{Experiment, Method, RoundingMode};
 use alpt::coordinator::Trainer;
 use alpt::data::batcher::{make_batch, Batcher};
 use alpt::data::synthetic::{generate, SyntheticSpec};
-use alpt::embedding::{AlptStore, EmbeddingStore, FpStore, LptStore};
+use alpt::embedding::{
+    AlptStore, EmbeddingStore, FpStore, LptStore, UpdateHp,
+};
 use alpt::nn::{Dcn, DcnConfig};
 use alpt::quant::{quantize_row, BitWidth, PackedTable, Rounding};
 use alpt::util::bench::{section, Bencher};
-use alpt::util::rng::Pcg32;
+use alpt::util::json::Json;
+use alpt::util::rng::{Pcg32, StreamKey};
+use alpt::util::threadpool::default_threads;
+use anyhow::Result;
+
+const ALL_BITS: [u32; 4] = [2, 4, 8, 16];
+
+fn bench_hp() -> UpdateHp {
+    UpdateHp {
+        lr_emb: 0.05,
+        wd_emb: 1e-6,
+        lr_delta: 1e-4,
+        wd_delta: 1e-6,
+        grad_scale: 1.0,
+        lr_scale: 1.0,
+    }
+}
 
 fn main() {
     let quick =
@@ -26,12 +47,39 @@ fn main() {
         Bencher::new()
     };
     let mut rng = Pcg32::seeded(1);
+    let n_threads = default_threads();
+
+    // ------------------------------------------------------- counter rng
+    section("counter-based RNG streams (draws/s)");
+    {
+        let draws_per_row = 16usize;
+        let mut acc = 0u32;
+        let mut seq = Pcg32::seeded(7);
+        b.bench_units("sequential Pcg32 16 draws",
+                      Some(draws_per_row as f64), || {
+            for _ in 0..draws_per_row {
+                acc = acc.wrapping_add(seq.next_u32());
+            }
+            std::hint::black_box(acc);
+        });
+        let key = StreamKey::for_step(7, 3);
+        let mut row = 0u64;
+        b.bench_units("stream_for row setup + 16 draws",
+                      Some(draws_per_row as f64), || {
+            row = row.wrapping_add(1);
+            let mut r = key.row_rng(row);
+            for _ in 0..draws_per_row {
+                acc = acc.wrapping_add(r.next_u32());
+            }
+            std::hint::black_box(acc);
+        });
+    }
 
     // ------------------------------------------------ packed table access
-    section("packed table: read_row_dequant (rows/s), d=16");
+    section("packed table: row ops, d=16 (rows/s)");
     let d = 16;
     let n = 100_000;
-    for bits in [2u32, 4, 8, 16] {
+    for bits in ALL_BITS {
         let bw = BitWidth::from_bits(bits).unwrap();
         let mut t = PackedTable::new(n, d, bw);
         let mut codes = vec![0i32; d];
@@ -49,46 +97,154 @@ fn main() {
             t.read_row_dequant(row, 0.01, &mut out);
             std::hint::black_box(&out);
         });
-    }
-
-    // ------------------------------------------------------- quantization
-    section("quantize rows (elems/s), d=16");
-    let w: Vec<f32> = (0..d).map(|i| (i as f32 - 8.0) * 0.003).collect();
-    let mut codes = vec![0i32; d];
-    for (name, rounding) in [("DR", Rounding::Deterministic),
-                             ("SR", Rounding::Stochastic)] {
-        b.bench_units(&format!("quantize_row 8-bit {name}"),
-                      Some(d as f64), || {
-            quantize_row(&w, 0.01, BitWidth::B8, rounding, &mut rng,
-                         &mut codes);
-            std::hint::black_box(&codes);
+        let mut iout = vec![0i32; d];
+        b.bench_units(&format!("read_row codes {bits}-bit"), Some(1.0),
+                      || {
+            row = (row + 97) % n;
+            t.read_row(row, &mut iout);
+            std::hint::black_box(&iout);
+        });
+        b.bench_units(&format!("write_row {bits}-bit"), Some(1.0), || {
+            row = (row + 97) % n;
+            t.write_row(row, &codes);
+            std::hint::black_box(&t);
         });
     }
 
-    // --------------------------------------------------- store gathers
-    section("store gather: 144 unique rows x d=16 (rows/s)");
-    let ids: Vec<u32> = (0..144u32).map(|i| i * 613 % 100_000).collect();
-    let mut out = vec![0.0f32; ids.len() * d];
+    // --------------------------------------- quantize: scalar vs fused
+    section("quantize one row, d=16: scalar set() vs word write_row vs \
+             fused quantize_row_packed");
+    let w: Vec<f32> = (0..d).map(|i| (i as f32 - 8.0) * 0.003).collect();
+    for bits in ALL_BITS {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        let delta = 0.01f32;
+        let mut t = PackedTable::new(4, d, bw);
+        let mut codes = vec![0i32; d];
+        b.bench_units(&format!("quantize+set scalar {bits}-bit SR"),
+                      Some(d as f64), || {
+            quantize_row(&w, delta, bw, Rounding::Stochastic, &mut rng,
+                         &mut codes);
+            for (col, &c) in codes.iter().enumerate() {
+                t.set(1, col, c);
+            }
+            std::hint::black_box(&t);
+        });
+        b.bench_units(&format!("quantize+write_row word {bits}-bit SR"),
+                      Some(d as f64), || {
+            quantize_row(&w, delta, bw, Rounding::Stochastic, &mut rng,
+                         &mut codes);
+            t.write_row(1, &codes);
+            std::hint::black_box(&t);
+        });
+        b.bench_units(&format!("fused quantize_row_packed {bits}-bit SR"),
+                      Some(d as f64), || {
+            t.quantize_row_packed(1, &w, delta, Rounding::Stochastic,
+                                  &mut rng);
+            std::hint::black_box(&t);
+        });
+    }
+
+    // ------------------------------- store gather: serial vs sharded
+    section(&format!(
+        "store gather: 4096 unique rows x d=16, t1 vs t{n_threads} (rows/s)"
+    ));
+    let gids: Vec<u32> =
+        (0..4096u32).map(|i| i * 17).collect(); // strictly increasing: unique
+    let mut gout = vec![0.0f32; gids.len() * d];
     let mut rng2 = Pcg32::seeded(2);
-    let fp = FpStore::init(n, d, &mut rng2);
-    b.bench_units("FP gather", Some(ids.len() as f64), || {
-        fp.gather(&ids, &mut out);
-        std::hint::black_box(&out);
-    });
-    let lpt = LptStore::init(n, d, BitWidth::B8, 0.1, Rounding::Stochastic,
-                             &mut rng2);
-    b.bench_units("LPT-8bit gather (unpack+dequant)",
-                  Some(ids.len() as f64), || {
-        lpt.gather(&ids, &mut out);
-        std::hint::black_box(&out);
-    });
-    let alpt_store =
-        AlptStore::init(n, d, BitWidth::B2, Rounding::Stochastic, &mut rng2);
-    b.bench_units("ALPT-2bit gather (unpack+dequant)",
-                  Some(ids.len() as f64), || {
-        alpt_store.gather(&ids, &mut out);
-        std::hint::black_box(&out);
-    });
+    {
+        let mut fp = FpStore::init(n, d, &mut rng2);
+        fp.set_threads(1);
+        b.bench_units("FP gather t1", Some(gids.len() as f64), || {
+            fp.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+        fp.set_threads(0);
+        b.bench_units(&format!("FP gather t{n_threads}"),
+                      Some(gids.len() as f64), || {
+            fp.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+    }
+    for bits in ALL_BITS {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        let mut lpt = LptStore::init(n, d, bw, 0.1, Rounding::Stochastic,
+                                     &mut rng2);
+        lpt.set_threads(1);
+        let mut serial_out = vec![0.0f32; gids.len() * d];
+        lpt.gather(&gids, &mut serial_out);
+        b.bench_units(&format!("LPT-{bits}bit gather t1"),
+                      Some(gids.len() as f64), || {
+            lpt.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+        lpt.set_threads(0);
+        b.bench_units(&format!("LPT-{bits}bit gather t{n_threads}"),
+                      Some(gids.len() as f64), || {
+            lpt.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+        assert_eq!(serial_out, gout,
+                   "sharded gather must be bit-identical to serial");
+    }
+
+    // ------------------------------- store update: serial vs sharded
+    section(&format!(
+        "store update: 4096 unique rows x d=16, t1 vs t{n_threads} (rows/s)"
+    ));
+    let grads: Vec<f32> = (0..gids.len() * d)
+        .map(|i| ((i % 13) as f32 - 6.0) * 0.01)
+        .collect();
+    let hp = bench_hp();
+    let mut nop_sp =
+        |_: &[f32], _: &[f32]| -> Result<Vec<f32>> { unreachable!() };
+    for bits in [4u32, 8] {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        let mut lpt = LptStore::init(n, d, bw, 0.1, Rounding::Stochastic,
+                                     &mut rng2);
+        let mut what = vec![0.0f32; gids.len() * d];
+        lpt.gather(&gids, &mut what);
+        lpt.set_threads(1);
+        b.bench_units(&format!("LPT-{bits}bit update t1"),
+                      Some(gids.len() as f64), || {
+            lpt.update(&gids, &what, &grads, &hp, &mut rng2, &mut nop_sp)
+                .unwrap();
+        });
+        lpt.set_threads(0);
+        b.bench_units(&format!("LPT-{bits}bit update t{n_threads}"),
+                      Some(gids.len() as f64), || {
+            lpt.update(&gids, &what, &grads, &hp, &mut rng2, &mut nop_sp)
+                .unwrap();
+        });
+    }
+    let mut zero_sp = |_w: &[f32], dl: &[f32]| -> Result<Vec<f32>> {
+        Ok(vec![0.0f32; dl.len()])
+    };
+    for bits in [4u32, 8] {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        let mut alpt_store =
+            AlptStore::init(n, d, bw, Rounding::Stochastic, &mut rng2);
+        let mut what = vec![0.0f32; gids.len() * d];
+        alpt_store.gather(&gids, &mut what);
+        alpt_store.set_threads(1);
+        b.bench_units(&format!("ALPT-{bits}bit update t1 (zero-cost sp)"),
+                      Some(gids.len() as f64), || {
+            alpt_store
+                .update(&gids, &what, &grads, &hp, &mut rng2, &mut zero_sp)
+                .unwrap();
+        });
+        alpt_store.set_threads(0);
+        b.bench_units(
+            &format!("ALPT-{bits}bit update t{n_threads} (zero-cost sp)"),
+            Some(gids.len() as f64),
+            || {
+                alpt_store
+                    .update(&gids, &what, &grads, &hp, &mut rng2,
+                            &mut zero_sp)
+                    .unwrap();
+            },
+        );
+    }
 
     // ------------------------------------------------------------- dedup
     section("batch dedup (samples/s), avazu-syn B=256");
@@ -183,7 +339,22 @@ fn main() {
         eprintln!("(skipping PJRT benches: run `make artifacts`)");
     }
 
+    // ------------------------------------------------------------ output
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/micro.json", b.to_json().to_string()).ok();
-    println!("\n[saved results/micro.json]");
+    let meta = vec![
+        ("bench", Json::str("micro")),
+        ("quick", Json::Bool(quick)),
+        ("threads_avail", Json::num(n_threads as f64)),
+    ];
+    match b.write_report(std::path::Path::new("BENCH_micro.json"), meta) {
+        Ok(()) => println!(
+            "\n[saved BENCH_micro.json + results/micro.json]"
+        ),
+        Err(e) => {
+            // a stale report must not pass bench_smoke.sh silently
+            eprintln!("failed to write BENCH_micro.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -107,6 +107,10 @@ pub struct Experiment {
     pub artifacts_dir: String,
     /// Execute via the PJRT runtime (true) or the pure-Rust nn path.
     pub use_runtime: bool,
+    /// Worker threads for sharded embedding gather/update (0 = one per
+    /// hardware thread). Results are bit-identical at any value — the
+    /// stores draw SR noise from counter-based per-row streams.
+    pub threads: usize,
 }
 
 impl Default for Experiment {
@@ -133,6 +137,7 @@ impl Default for Experiment {
             patience: 2,
             artifacts_dir: "artifacts".into(),
             use_runtime: true,
+            threads: 0,
         }
     }
 }
@@ -186,6 +191,7 @@ impl Experiment {
             "clip" => self.clip = as_f(value)? as f32,
             "lr_gamma" => self.lr_gamma = as_f(value)? as f32,
             "patience" => self.patience = as_f(value)? as usize,
+            "threads" => self.threads = as_f(value)? as usize,
             "dropout_seed" => self.dropout_seed = as_f(value)? as u64,
             "artifacts_dir" => self.artifacts_dir = as_s(value)?,
             "use_runtime" => {

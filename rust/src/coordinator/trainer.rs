@@ -76,6 +76,10 @@ pub struct Trainer {
     delta_buf: Vec<f32>,
     mask_buf: Vec<f32>,
     labels_buf: Vec<f32>,
+    // second-pass (ALPT Δ-gradient) padded-input scratch, reused across
+    // steps instead of being reallocated inside every closure call
+    sp_w_pad: Vec<f32>,
+    sp_d_pad: Vec<f32>,
     grad_scale_val: f32,
 }
 
@@ -130,6 +134,8 @@ impl Trainer {
             delta_buf: vec![1.0; umax],
             mask_buf: vec![1.0; b * mmd],
             labels_buf: vec![0.0; b],
+            sp_w_pad: vec![0.0; umax * d],
+            sp_d_pad: vec![1.0; umax],
             grad_scale_val,
         })
     }
@@ -269,16 +275,20 @@ impl Trainer {
         let labels_buf = &self.labels_buf;
         let labels_u8 = &batch.labels;
         let idx = &batch.idx;
+        // padded second-pass inputs live in trainer scratch, not in fresh
+        // per-call allocations
+        let sp_w_pad = &mut self.sp_w_pad;
+        let sp_d_pad = &mut self.sp_d_pad;
         let mut second_pass = |w_new: &[f32],
                                delta: &[f32]|
          -> Result<Vec<f32>> {
             debug_assert_eq!(w_new.len(), delta.len() * d);
             let n_u = delta.len();
             if let Some(rt) = runtime.as_mut() {
-                let mut w_pad = vec![0.0f32; umax * d];
-                w_pad[..n_u * d].copy_from_slice(w_new);
-                let mut d_pad = vec![1.0f32; umax];
-                d_pad[..n_u].copy_from_slice(delta);
+                sp_w_pad[..n_u * d].copy_from_slice(w_new);
+                sp_w_pad[n_u * d..].fill(0.0);
+                sp_d_pad[..n_u].copy_from_slice(delta);
+                sp_d_pad[n_u..].fill(1.0);
                 // `delta_grad` is the lean variant of train_fq: XLA DCEs
                 // the weight/dense backward and only d_delta crosses the
                 // host boundary (see EXPERIMENTS.md §Perf).
@@ -286,8 +296,8 @@ impl Trainer {
                     &model,
                     "delta_grad",
                     &[
-                        lit_f32(&w_pad, &[umax as i64, d as i64])?,
-                        lit_f32(&d_pad, &[umax as i64])?,
+                        lit_f32(sp_w_pad, &[umax as i64, d as i64])?,
+                        lit_f32(sp_d_pad, &[umax as i64])?,
                         lit_i32(idx, &[b as i64, fields as i64])?,
                         lit_f32(labels_buf, &[b as i64])?,
                         lit_f32(dense, &[dense.len() as i64])?,
@@ -304,16 +314,16 @@ impl Trainer {
             } else {
                 // Rust fallback: fake-quant forward + Eq. 7 reduction —
                 // the same math the train_fq artifact performs.
-                let mut w_pad = vec![0.0f32; umax * d];
                 for i in 0..n_u {
                     let dl = delta[i];
                     for j in 0..d {
                         let x = (w_new[i * d + j] / dl)
                             .clamp(bw.qn() as f32, bw.qp() as f32);
-                        w_pad[i * d + j] = (x + 0.5).floor() * dl;
+                        sp_w_pad[i * d + j] = (x + 0.5).floor() * dl;
                     }
                 }
-                let out = dcn.train_step(&w_pad, idx, labels_u8, dense,
+                sp_w_pad[n_u * d..].fill(0.0);
+                let out = dcn.train_step(sp_w_pad, idx, labels_u8, dense,
                                          mask_buf, umax);
                 Ok((0..n_u)
                     .map(|i| {

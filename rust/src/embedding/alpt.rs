@@ -10,13 +10,21 @@
 //!      own LR / weight decay;
 //!   3. re-quantize w̃^{t+1} = Q̃_S(w^{t+1}, Δ^{t+1}).
 //!
+//! Steps 1 and 3 are sharded row-wise across threads (step 2 is a batch
+//! reduction that stays serial); SR noise comes from counter-based
+//! per-row streams so the packed result is bit-identical at any thread
+//! count. Step 3 uses the fused quantize→pack path — no i32 scratch.
+//!
 //! Storage is identical to LPT plus one learned f32 Δ per feature row —
 //! Table 1's 3.2× (vs 4×) training-compression ratio at d=16.
 
-use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
-use crate::quant::{delta_from_clip, init_delta, quantize_row, BitWidth,
-                   PackedTable, Rounding};
-use crate::util::rng::Pcg32;
+use super::lpt::ids_unique;
+use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
+            SecondPass, UpdateHp, MIN_ROWS_PER_THREAD};
+use crate::quant::{delta_from_clip, init_delta, BitWidth, PackedTable,
+                   Rounding};
+use crate::util::rng::{Pcg32, StreamKey};
+use crate::util::threadpool::parallel_ranges;
 use anyhow::Result;
 
 pub struct AlptStore {
@@ -27,7 +35,14 @@ pub struct AlptStore {
     /// learned per-feature step sizes
     delta: Vec<f32>,
     codes: PackedTable,
-    scratch: Vec<i32>,
+    /// sharding width for gather/update (resolved; >= 1)
+    threads: usize,
+    /// update-step counter feeding the per-step stream key
+    step: u64,
+    /// reusable w^{t+1} buffer (`U*d`, grown on demand)
+    w_new: Vec<f32>,
+    /// reusable gathered-Δ buffer (`U`, grown on demand)
+    delta_t: Vec<f32>,
 }
 
 impl AlptStore {
@@ -54,20 +69,88 @@ impl AlptStore {
         clip: f32,
         rng: &mut Pcg32,
     ) -> Self {
+        Self::init_with_clip_threads(n, d, bw, rounding, clip, 0, rng)
+    }
+
+    /// Like [`AlptStore::init_with_clip`] with an explicit sharding width
+    /// for the init quantization and subsequent gather/update (0 = one
+    /// worker per hardware thread). Results are bit-identical at any
+    /// value.
+    pub fn init_with_clip_threads(
+        n: usize,
+        d: usize,
+        bw: BitWidth,
+        rounding: Rounding,
+        clip: f32,
+        threads: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
         let init = init_weights(n, d, rng);
+        let key = StreamKey::new(rng.next_u64());
         let mut codes = PackedTable::new(n, d, bw);
         let mut delta = vec![0.0f32; n];
-        let mut row_codes = vec![0i32; d];
         let floor = delta_from_clip(clip, bw);
-        for r in 0..n {
+        let threads = resolve_threads(threads);
+        let init_threads =
+            threads.min(n.div_ceil(MIN_ROWS_PER_THREAD).max(1));
+        // per-row: LSQ-style Δ init with the clip floor, then SR-quantize
+        // the row from its counter stream. Each row is written exactly
+        // once (disjoint ranges), satisfying RowWriter's safety contract.
+        fn fill_row(
+            r: usize,
+            dl: &mut f32,
+            writer: &crate::quant::RowWriter<'_>,
+            init: &[f32],
+            d: usize,
+            bw: BitWidth,
+            floor: f32,
+            key: StreamKey,
+        ) {
             let row = &init[r * d..(r + 1) * d];
-            // LSQ-style init with the clip floor
-            delta[r] = init_delta(row, bw).max(floor);
-            quantize_row(row, delta[r], bw, Rounding::Stochastic, rng,
-                         &mut row_codes);
-            codes.write_row(r, &row_codes);
+            *dl = init_delta(row, bw).max(floor);
+            let mut rrng = key.row_rng(r as u64);
+            // Safety: callers fill disjoint rows (see above).
+            unsafe {
+                writer.quantize_row_packed(r, row, *dl,
+                                           Rounding::Stochastic, &mut rrng);
+            }
         }
-        Self { n, d, bw, rounding, delta, codes, scratch: vec![0i32; d] }
+        if init_threads <= 1 {
+            let writer = codes.row_writer();
+            for (r, dl) in delta.iter_mut().enumerate() {
+                fill_row(r, dl, &writer, &init, d, bw, floor, key);
+            }
+        } else {
+            // shard rows: each worker owns a contiguous Δ chunk and the
+            // matching (disjoint) packed rows
+            let writer = codes.row_writer();
+            let init_ref = &init;
+            let rows_per = n.div_ceil(init_threads);
+            std::thread::scope(|s| {
+                for (t, dchunk) in delta.chunks_mut(rows_per).enumerate() {
+                    let lo = t * rows_per;
+                    let writer = &writer;
+                    s.spawn(move || {
+                        for (k, dl) in dchunk.iter_mut().enumerate() {
+                            fill_row(lo + k, dl, writer, init_ref, d, bw,
+                                     floor, key);
+                        }
+                    });
+                }
+            });
+        }
+        Self {
+            n,
+            d,
+            bw,
+            rounding,
+            delta,
+            codes,
+            threads,
+            step: 0,
+            w_new: Vec::new(),
+            delta_t: Vec::new(),
+        }
     }
 
     pub fn delta_of(&self, id: u32) -> f32 {
@@ -82,6 +165,12 @@ impl AlptStore {
     pub fn mean_delta(&self) -> f64 {
         self.delta.iter().map(|&x| x as f64).sum::<f64>()
             / self.n.max(1) as f64
+    }
+
+    /// Configure the sharding width (0 = one worker per hardware thread).
+    /// Purely a performance knob: results are bit-identical at any value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = resolve_threads(threads);
     }
 }
 
@@ -103,13 +192,10 @@ impl EmbeddingStore for AlptStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
-        for (i, &id) in ids.iter().enumerate() {
-            self.codes.read_row_dequant(
-                id as usize,
-                self.delta[id as usize],
-                &mut out[i * self.d..(i + 1) * self.d],
-            );
-        }
+        par_gather(ids, self.d, out, self.threads, |_, id, row| {
+            self.codes
+                .read_row_dequant(id as usize, self.delta[id as usize], row);
+        });
     }
 
     fn update(
@@ -122,25 +208,51 @@ impl EmbeddingStore for AlptStore {
         second_pass: &mut SecondPass,
     ) -> Result<()> {
         let d = self.d;
+        let n_u = ids.len();
+        debug_assert_eq!(emb_hat.len(), n_u * d);
+        debug_assert_eq!(grads.len(), n_u * d);
         let lr = hp.lr_emb * hp.lr_scale;
+        let wd = hp.wd_emb;
+        // Step 3 writes rows by id, so sharding it requires unique ids
+        // (the trainer passes deduped `batch.unique`); duplicates fall
+        // back to the serial loop, preserving last-write-wins order.
+        // Steps 1–2 are indexed by batch position and stay safe either
+        // way.
+        let row_threads = if self.threads > 1
+            && n_u > super::MIN_ROWS_PER_THREAD
+            && ids_unique(ids)
+        {
+            self.threads
+        } else {
+            1
+        };
 
-        // Step 1: float update of the batch rows.
-        let mut w_new = vec![0.0f32; ids.len() * d];
-        for i in 0..ids.len() {
-            let what = &emb_hat[i * d..(i + 1) * d];
-            let g = &grads[i * d..(i + 1) * d];
-            let out = &mut w_new[i * d..(i + 1) * d];
-            for j in 0..d {
-                out[j] = what[j] - lr * (g[j] + hp.wd_emb * what[j]);
-            }
-        }
+        // Step 1: float update of the batch rows, sharded row-wise into
+        // the reusable w_new scratch.
+        self.w_new.resize(n_u * d, 0.0);
+        par_gather(
+            ids,
+            d,
+            &mut self.w_new[..n_u * d],
+            self.threads,
+            |i, _, out| {
+                let what = &emb_hat[i * d..(i + 1) * d];
+                let g = &grads[i * d..(i + 1) * d];
+                for j in 0..d {
+                    out[j] = what[j] - lr * (g[j] + wd * what[j]);
+                }
+            },
+        );
 
         // Step 2: d f / d Delta at (w^{t+1}, Delta^t) via the fake-quant
         // pass, then the Delta update (scaled gradient + weight decay).
-        let delta_t: Vec<f32> =
-            ids.iter().map(|&id| self.delta[id as usize]).collect();
-        let d_delta = second_pass(&w_new, &delta_t)?;
-        debug_assert_eq!(d_delta.len(), ids.len());
+        self.delta_t.resize(n_u, 0.0);
+        for (i, &id) in ids.iter().enumerate() {
+            self.delta_t[i] = self.delta[id as usize];
+        }
+        let d_delta =
+            second_pass(&self.w_new[..n_u * d], &self.delta_t[..n_u])?;
+        debug_assert_eq!(d_delta.len(), n_u);
         let lr_d = hp.lr_delta * hp.lr_scale;
         for (i, &id) in ids.iter().enumerate() {
             let id = id as usize;
@@ -150,19 +262,30 @@ impl EmbeddingStore for AlptStore {
             self.delta[id] = (self.delta[id] - lr_d * g).max(1e-8);
         }
 
-        // Step 3: re-quantize with Delta^{t+1}.
-        for (i, &id) in ids.iter().enumerate() {
-            let id = id as usize;
-            quantize_row(
-                &w_new[i * d..(i + 1) * d],
-                self.delta[id],
-                self.bw,
-                self.rounding,
-                rng,
-                &mut self.scratch,
-            );
-            self.codes.write_row(id, &self.scratch);
-        }
+        // Step 3: re-quantize with Delta^{t+1} — sharded, fused
+        // quantize→pack through disjoint-row writes.
+        let key = StreamKey::for_step(rng.next_u64(), self.step);
+        self.step = self.step.wrapping_add(1);
+        let rounding = self.rounding;
+        let w_new = &self.w_new[..n_u * d];
+        let delta = &self.delta;
+        let writer = self.codes.row_writer();
+        parallel_ranges(n_u, row_threads, MIN_ROWS_PER_THREAD, |range| {
+            for i in range {
+                let id = ids[i] as usize;
+                let mut rrng = key.row_rng(id as u64);
+                // Safety: ids are unique → rows are disjoint.
+                unsafe {
+                    writer.quantize_row_packed(
+                        id,
+                        &w_new[i * d..(i + 1) * d],
+                        delta[id],
+                        rounding,
+                        &mut rrng,
+                    );
+                }
+            }
+        });
         Ok(())
     }
 
@@ -320,5 +443,47 @@ mod tests {
             d0,
             store.delta_of(1)
         );
+    }
+
+    #[test]
+    fn parallel_engine_bit_identical_to_serial() {
+        // Sharded step-1/step-3 must reproduce the single-thread result
+        // exactly: packed bytes AND learned deltas.
+        let (n, d) = (260usize, 7usize);
+        let bw = BitWidth::B4;
+        let mk = || {
+            let mut rng = Pcg32::seeded(21);
+            AlptStore::init(n, d, bw, Rounding::Stochastic, &mut rng)
+        };
+        let mut serial = mk();
+        serial.set_threads(1);
+        let mut par = mk();
+        par.set_threads(4);
+        assert_eq!(serial.codes.bytes(), par.codes.bytes());
+
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut what_s = vec![0.0f32; n * d];
+        let mut what_p = vec![0.0f32; n * d];
+        let grads: Vec<f32> =
+            (0..n * d).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect();
+        let mut rng_s = Pcg32::seeded(33);
+        let mut rng_p = Pcg32::seeded(33);
+        let mut sp_s = eq7_second_pass(bw);
+        let mut sp_p = eq7_second_pass(bw);
+        for _ in 0..3 {
+            serial.gather(&ids, &mut what_s);
+            par.gather(&ids, &mut what_p);
+            assert_eq!(what_s, what_p, "gather diverged");
+            serial
+                .update(&ids, &what_s, &grads, &hp(), &mut rng_s,
+                        &mut sp_s)
+                .unwrap();
+            par.update(&ids, &what_p, &grads, &hp(), &mut rng_p,
+                       &mut sp_p)
+                .unwrap();
+            assert_eq!(serial.codes.bytes(), par.codes.bytes(),
+                       "packed bytes diverged");
+            assert_eq!(serial.delta, par.delta, "deltas diverged");
+        }
     }
 }

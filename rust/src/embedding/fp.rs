@@ -1,6 +1,7 @@
 //! Full-precision embedding table (the FP baseline, no compression).
 
-use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
+            SecondPass, UpdateHp};
 use crate::optim::sgd_update;
 use crate::util::rng::Pcg32;
 use anyhow::Result;
@@ -10,11 +11,23 @@ pub struct FpStore {
     n: usize,
     d: usize,
     table: Vec<f32>,
+    /// sharding width for gather (resolved; >= 1)
+    threads: usize,
 }
 
 impl FpStore {
     pub fn init(n: usize, d: usize, rng: &mut Pcg32) -> Self {
-        Self { n, d, table: init_weights(n, d, rng) }
+        Self {
+            n,
+            d,
+            table: init_weights(n, d, rng),
+            threads: resolve_threads(0),
+        }
+    }
+
+    /// Configure the sharding width (0 = one worker per hardware thread).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = resolve_threads(threads);
     }
 
     /// Direct row access (used by the serve example to quantize a trained
@@ -44,10 +57,9 @@ impl EmbeddingStore for FpStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
-        for (i, &id) in ids.iter().enumerate() {
-            out[i * self.d..(i + 1) * self.d]
-                .copy_from_slice(self.row(id));
-        }
+        par_gather(ids, self.d, out, self.threads, |_, id, row| {
+            row.copy_from_slice(self.row(id));
+        });
     }
 
     fn update(

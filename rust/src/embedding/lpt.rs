@@ -6,12 +6,18 @@
 //! Each step de-quantizes the batch's rows, applies the SGD update in
 //! float, and re-quantizes with SR or DR — there is no full-precision
 //! copy anywhere, which is the entire point.
+//!
+//! Hot paths are sharded across threads: `gather` splits the output
+//! row-wise, `update` fuses the SGD step with `quantize_row_packed` and
+//! writes disjoint rows through a [`RowWriter`](crate::quant::RowWriter).
+//! SR noise comes from counter-based per-row streams
+//! ([`StreamKey`]), so results are bit-identical at any thread count.
 
-use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
-use crate::quant::{
-    delta_from_clip, quantize_row, BitWidth, PackedTable, Rounding,
-};
-use crate::util::rng::Pcg32;
+use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
+            SecondPass, UpdateHp, MIN_ROWS_PER_THREAD};
+use crate::quant::{delta_from_clip, BitWidth, PackedTable, Rounding};
+use crate::util::rng::{Pcg32, StreamKey};
+use crate::util::threadpool::parallel_ranges;
 use anyhow::Result;
 
 pub struct LptStore {
@@ -21,8 +27,10 @@ pub struct LptStore {
     rounding: Rounding,
     delta: f32,
     codes: PackedTable,
-    /// scratch row to avoid per-update allocation
-    scratch: Vec<i32>,
+    /// sharding width for gather/update (resolved; >= 1)
+    threads: usize,
+    /// update-step counter feeding the per-step stream key
+    step: u64,
 }
 
 impl LptStore {
@@ -34,23 +42,48 @@ impl LptStore {
         rounding: Rounding,
         rng: &mut Pcg32,
     ) -> Self {
+        Self::init_with_threads(n, d, bw, clip, rounding, 0, rng)
+    }
+
+    /// Like [`LptStore::init`] with an explicit sharding width for the
+    /// init quantization and subsequent gather/update (0 = one worker per
+    /// hardware thread). Results are bit-identical at any value.
+    pub fn init_with_threads(
+        n: usize,
+        d: usize,
+        bw: BitWidth,
+        clip: f32,
+        rounding: Rounding,
+        threads: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
         let delta = delta_from_clip(clip, bw);
         let mut codes = PackedTable::new(n, d, bw);
-        // quantize the standard N(0, 0.01) init (SR keeps it unbiased)
+        // quantize the standard N(0, 0.01) init (SR keeps it unbiased);
+        // row streams make the init shardable and order-independent
         let init = init_weights(n, d, rng);
-        let mut row_codes = vec![0i32; d];
-        for r in 0..n {
-            quantize_row(
-                &init[r * d..(r + 1) * d],
-                delta,
-                bw,
-                Rounding::Stochastic,
-                rng,
-                &mut row_codes,
-            );
-            codes.write_row(r, &row_codes);
+        let key = StreamKey::new(rng.next_u64());
+        let threads = resolve_threads(threads);
+        {
+            let writer = codes.row_writer();
+            let init_ref = &init;
+            parallel_ranges(n, threads, MIN_ROWS_PER_THREAD, |range| {
+                for r in range {
+                    let mut rrng = key.row_rng(r as u64);
+                    // Safety: ranges are disjoint → rows are disjoint.
+                    unsafe {
+                        writer.quantize_row_packed(
+                            r,
+                            &init_ref[r * d..(r + 1) * d],
+                            delta,
+                            Rounding::Stochastic,
+                            &mut rrng,
+                        );
+                    }
+                }
+            });
         }
-        Self { n, d, bw, rounding, delta, codes, scratch: vec![0i32; d] }
+        Self { n, d, bw, rounding, delta, codes, threads, step: 0 }
     }
 
     pub fn delta(&self) -> f32 {
@@ -59,6 +92,12 @@ impl LptStore {
 
     pub fn bit_width(&self) -> BitWidth {
         self.bw
+    }
+
+    /// Configure the sharding width (0 = one worker per hardware thread).
+    /// Purely a performance knob: results are bit-identical at any value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = resolve_threads(threads);
     }
 }
 
@@ -80,13 +119,10 @@ impl EmbeddingStore for LptStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
-        for (i, &id) in ids.iter().enumerate() {
-            self.codes.read_row_dequant(
-                id as usize,
-                self.delta,
-                &mut out[i * self.d..(i + 1) * self.d],
-            );
-        }
+        let delta = self.delta;
+        par_gather(ids, self.d, out, self.threads, |_, id, row| {
+            self.codes.read_row_dequant(id as usize, delta, row);
+        });
     }
 
     fn update(
@@ -98,20 +134,50 @@ impl EmbeddingStore for LptStore {
         rng: &mut Pcg32,
         _second_pass: &mut SecondPass,
     ) -> Result<()> {
-        // Eq. 8: w^{t+1} = Q(w^ - eta (grad + wd w^))
+        debug_assert_eq!(emb_hat.len(), ids.len() * self.d);
+        debug_assert_eq!(grads.len(), ids.len() * self.d);
+        // Eq. 8: w^{t+1} = Q(ŵ − η(∇ + wd·ŵ)). One serial draw keys the
+        // step; every row then owns a counter-based SR stream, so shards
+        // may quantize rows in any order with bit-identical results.
+        //
+        // Sharding requires unique ids (two shards writing one row would
+        // race); the trainer always passes deduped `batch.unique`, and
+        // any other caller with duplicates falls back to the serial loop,
+        // which keeps the old last-write-wins-in-batch-order semantics.
         let lr = hp.lr_emb * hp.lr_scale;
+        let wd = hp.wd_emb;
         let d = self.d;
-        let mut w_new = vec![0.0f32; d];
-        for (i, &id) in ids.iter().enumerate() {
-            let what = &emb_hat[i * d..(i + 1) * d];
-            let g = &grads[i * d..(i + 1) * d];
-            for j in 0..d {
-                w_new[j] = what[j] - lr * (g[j] + hp.wd_emb * what[j]);
+        let delta = self.delta;
+        let rounding = self.rounding;
+        let threads = if self.threads > 1
+            && ids.len() > super::MIN_ROWS_PER_THREAD
+            && ids_unique(ids)
+        {
+            self.threads
+        } else {
+            1
+        };
+        let key = StreamKey::for_step(rng.next_u64(), self.step);
+        self.step = self.step.wrapping_add(1);
+        let writer = self.codes.row_writer();
+        parallel_ranges(ids.len(), threads, MIN_ROWS_PER_THREAD, |range| {
+            // one d-sized scratch per worker, not per row
+            let mut w_new = vec![0.0f32; d];
+            for i in range {
+                let id = ids[i] as usize;
+                let what = &emb_hat[i * d..(i + 1) * d];
+                let g = &grads[i * d..(i + 1) * d];
+                for j in 0..d {
+                    w_new[j] = what[j] - lr * (g[j] + wd * what[j]);
+                }
+                let mut rrng = key.row_rng(id as u64);
+                // Safety: ids are unique → rows are disjoint.
+                unsafe {
+                    writer.quantize_row_packed(id, &w_new, delta, rounding,
+                                               &mut rrng);
+                }
             }
-            quantize_row(&w_new, self.delta, self.bw, self.rounding, rng,
-                         &mut self.scratch);
-            self.codes.write_row(id as usize, &self.scratch);
-        }
+        });
         Ok(())
     }
 
@@ -138,6 +204,16 @@ impl EmbeddingStore for LptStore {
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+}
+
+/// Uniqueness check gating the sharded update path: duplicate rows may
+/// not be written from different shards (that would be a data race), so
+/// non-unique batches take the serial loop instead. Only evaluated when
+/// the batch is big enough to shard, so the hot path's cost is one hash
+/// per row against O(d) row work.
+pub(crate) fn ids_unique(ids: &[u32]) -> bool {
+    let mut seen = std::collections::HashSet::with_capacity(ids.len());
+    ids.iter().all(|&id| seen.insert(id))
 }
 
 #[cfg(test)]
@@ -263,6 +339,85 @@ mod tests {
                         .abs()
                         < 1e-6
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_ids_fall_back_to_serial_semantics() {
+        // Non-unique batches must not shard (data race) — they take the
+        // serial loop and reproduce last-write-wins in batch order.
+        let (n, d) = (200usize, 5usize);
+        let mk = || {
+            let mut rng = Pcg32::seeded(5);
+            LptStore::init(n, d, BitWidth::B8, 0.1, Rounding::Stochastic,
+                           &mut rng)
+        };
+        let mut serial = mk();
+        serial.set_threads(1);
+        let mut par = mk();
+        par.set_threads(4);
+        // big enough to shard, with one duplicated id
+        let mut ids: Vec<u32> = (0..n as u32 - 1).collect();
+        ids.push(7);
+        let what = vec![0.02f32; ids.len() * d];
+        let grads = vec![0.5f32; ids.len() * d];
+        let mut rng_s = Pcg32::seeded(6);
+        let mut rng_p = Pcg32::seeded(6);
+        serial
+            .update(&ids, &what, &grads, &hp(), &mut rng_s,
+                    &mut no_second_pass())
+            .unwrap();
+        par.update(&ids, &what, &grads, &hp(), &mut rng_p,
+                   &mut no_second_pass())
+            .unwrap();
+        assert_eq!(serial.codes.bytes(), par.codes.bytes());
+    }
+
+    #[test]
+    fn parallel_gather_update_bit_identical_to_serial() {
+        // The acceptance contract: for the same seed, the sharded engine
+        // must reproduce the single-thread bytes exactly — SR noise comes
+        // from per-row counter streams, not from thread order.
+        for bw in [BitWidth::B2, BitWidth::B4, BitWidth::B8, BitWidth::B16]
+        {
+            let (n, d) = (300usize, 9usize);
+            let mk = || {
+                let mut rng = Pcg32::seeded(11);
+                LptStore::init(n, d, bw, 0.1, Rounding::Stochastic,
+                               &mut rng)
+            };
+            let mut serial = mk();
+            serial.set_threads(1);
+            let mut par = mk();
+            par.set_threads(4);
+            assert_eq!(serial.codes.bytes(), par.codes.bytes(),
+                       "{bw:?}: init must not depend on sharding");
+
+            let ids: Vec<u32> = (0..n as u32).collect();
+            let mut out_s = vec![0.0f32; n * d];
+            let mut out_p = vec![0.0f32; n * d];
+            serial.gather(&ids, &mut out_s);
+            par.gather(&ids, &mut out_p);
+            assert_eq!(out_s, out_p, "{bw:?}: gather");
+
+            let grads: Vec<f32> =
+                (0..n * d).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+            let mut rng_s = Pcg32::seeded(77);
+            let mut rng_p = Pcg32::seeded(77);
+            for _ in 0..3 {
+                serial
+                    .update(&ids, &out_s, &grads, &hp(), &mut rng_s,
+                            &mut no_second_pass())
+                    .unwrap();
+                par.update(&ids, &out_p, &grads, &hp(), &mut rng_p,
+                           &mut no_second_pass())
+                    .unwrap();
+                assert_eq!(serial.codes.bytes(), par.codes.bytes(),
+                           "{bw:?}: update bytes diverged");
+                serial.gather(&ids, &mut out_s);
+                par.gather(&ids, &mut out_p);
+                assert_eq!(out_s, out_p, "{bw:?}: post-update gather");
             }
         }
     }

@@ -107,6 +107,67 @@ pub fn fp_bytes(n: usize, d: usize) -> usize {
     n * d * std::mem::size_of::<f32>()
 }
 
+/// Below this many rows per worker, spawn overhead beats the row work, so
+/// the sharded paths fall back to the serial loop (results are identical
+/// either way — see the counter-RNG determinism contract in `util::rng`).
+pub(crate) const MIN_ROWS_PER_THREAD: usize = 64;
+
+/// Resolve a configured thread count: `0` = one worker per hardware
+/// thread, anything else taken literally.
+pub(crate) fn resolve_threads(configured: usize) -> usize {
+    if configured == 0 {
+        crate::util::threadpool::default_threads()
+    } else {
+        configured
+    }
+}
+
+/// Sharded row-wise gather: split the `ids.len()` output rows into
+/// row-aligned chunks and fill them from up to `threads` scoped threads.
+/// `fill(batch_pos, id, out_row)` must be a pure function of its
+/// arguments plus shared store state, so the result is bit-identical at
+/// any thread count.
+pub(crate) fn par_gather<F>(
+    ids: &[u32],
+    d: usize,
+    out: &mut [f32],
+    threads: usize,
+    fill: F,
+) where
+    F: Fn(usize, u32, &mut [f32]) + Send + Sync,
+{
+    debug_assert_eq!(out.len(), ids.len() * d);
+    let n = ids.len();
+    if n == 0 || d == 0 {
+        return;
+    }
+    let max_useful = n.div_ceil(MIN_ROWS_PER_THREAD);
+    let threads = threads.max(1).min(max_useful);
+    if threads <= 1 {
+        for (i, (&id, row)) in
+            ids.iter().zip(out.chunks_mut(d)).enumerate()
+        {
+            fill(i, id, row);
+        }
+        return;
+    }
+    let rows_per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * d).enumerate() {
+            let lo = t * rows_per;
+            let chunk_ids = &ids[lo..lo + chunk.len() / d];
+            let fill = &fill;
+            s.spawn(move || {
+                for (k, (&id, row)) in
+                    chunk_ids.iter().zip(chunk.chunks_mut(d)).enumerate()
+                {
+                    fill(lo + k, id, row);
+                }
+            });
+        }
+    });
+}
+
 pub(crate) fn rounding_of(mode: RoundingMode) -> Rounding {
     match mode {
         RoundingMode::Sr => Rounding::Stochastic,
@@ -123,21 +184,27 @@ pub fn build_store(
 ) -> Result<Box<dyn EmbeddingStore>> {
     let bw = exp.bit_width()?;
     Ok(match exp.method {
-        Method::Fp => Box::new(FpStore::init(n_features, dim, rng)),
-        Method::Lpt(mode) => Box::new(LptStore::init(
+        Method::Fp => {
+            let mut s = FpStore::init(n_features, dim, rng);
+            s.set_threads(exp.threads);
+            Box::new(s)
+        }
+        Method::Lpt(mode) => Box::new(LptStore::init_with_threads(
             n_features,
             dim,
             bw,
             exp.clip,
             rounding_of(mode),
+            exp.threads,
             rng,
         )),
-        Method::Alpt(mode) => Box::new(AlptStore::init_with_clip(
+        Method::Alpt(mode) => Box::new(AlptStore::init_with_clip_threads(
             n_features,
             dim,
             bw,
             rounding_of(mode),
             exp.clip,
+            exp.threads,
             rng,
         )),
         Method::Lsq => Box::new(LsqStore::init(n_features, dim, bw, rng)),

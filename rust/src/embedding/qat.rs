@@ -24,6 +24,8 @@ pub struct LsqStore {
     bw: BitWidth,
     master: Vec<f32>,
     delta: Vec<f32>,
+    /// reusable STE-gradient scratch row (avoids a per-update alloc)
+    ste: Vec<f32>,
 }
 
 impl LsqStore {
@@ -32,7 +34,7 @@ impl LsqStore {
         let delta = (0..n)
             .map(|r| init_delta(&master[r * d..(r + 1) * d], bw))
             .collect();
-        Self { n, d, bw, master, delta }
+        Self { n, d, bw, master, delta, ste: vec![0.0; d] }
     }
 
     pub fn delta_of(&self, id: u32) -> f32 {
@@ -79,7 +81,6 @@ impl EmbeddingStore for LsqStore {
         let d = self.d;
         let lr = hp.lr_emb * hp.lr_scale;
         let lr_d = hp.lr_delta * hp.lr_scale;
-        let mut ste = vec![0.0f32; d];
         for (i, &id) in ids.iter().enumerate() {
             let id = id as usize;
             let dl = self.delta[id];
@@ -87,11 +88,12 @@ impl EmbeddingStore for LsqStore {
             // delta gradient first (Eq. 7 needs the pre-update weights)
             let row = &self.master[id * d..(id + 1) * d];
             let dg = lsq_delta_grad_row(row, dl, self.bw, g);
-            // STE weight gradient (masked to the clip interior)
-            ste_weight_grad_row(row, dl, self.bw, g, &mut ste);
+            // STE weight gradient (masked to the clip interior), into the
+            // store's scratch row
+            ste_weight_grad_row(row, dl, self.bw, g, &mut self.ste);
             let row = &mut self.master[id * d..(id + 1) * d];
             for j in 0..d {
-                row[j] -= lr * (ste[j] + hp.wd_emb * row[j]);
+                row[j] -= lr * (self.ste[j] + hp.wd_emb * row[j]);
             }
             self.delta[id] = (self.delta[id]
                 - lr_d * (hp.grad_scale * dg + hp.wd_delta * self.delta[id]))
@@ -120,6 +122,8 @@ pub struct PactStore {
     bw: BitWidth,
     master: Vec<f32>,
     alpha: Vec<f32>,
+    /// reusable STE-gradient scratch row (avoids a per-update alloc)
+    ste: Vec<f32>,
 }
 
 impl PactStore {
@@ -131,7 +135,14 @@ impl PactStore {
         rng: &mut Pcg32,
     ) -> Self {
         let master = init_weights(n, d, rng);
-        Self { n, d, bw, master, alpha: vec![init_clip; n] }
+        Self {
+            n,
+            d,
+            bw,
+            master,
+            alpha: vec![init_clip; n],
+            ste: vec![0.0; d],
+        }
     }
 
     pub fn alpha_of(&self, id: u32) -> f32 {
@@ -190,7 +201,6 @@ impl EmbeddingStore for PactStore {
         let lr_a = hp.lr_delta * hp.lr_scale;
         let qn = self.bw.qn() as f32;
         let qp = self.bw.qp() as f32;
-        let mut ste = vec![0.0f32; d];
         for (i, &id) in ids.iter().enumerate() {
             let id = id as usize;
             let dl = self.delta(id);
@@ -208,10 +218,10 @@ impl EmbeddingStore for PactStore {
                     da -= g[j];
                 }
             }
-            ste_weight_grad_row(row, dl, self.bw, g, &mut ste);
+            ste_weight_grad_row(row, dl, self.bw, g, &mut self.ste);
             let row = &mut self.master[id * d..(id + 1) * d];
             for j in 0..d {
-                row[j] -= lr * (ste[j] + hp.wd_emb * row[j]);
+                row[j] -= lr * (self.ste[j] + hp.wd_emb * row[j]);
             }
             self.alpha[id] = (self.alpha[id]
                 - lr_a * (hp.grad_scale * da + hp.wd_delta * self.alpha[id]))

@@ -8,7 +8,7 @@
 
 pub mod packed;
 
-pub use packed::PackedTable;
+pub use packed::{PackedTable, RowWriter};
 
 use crate::util::rng::Pcg32;
 

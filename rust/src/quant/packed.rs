@@ -7,10 +7,17 @@
 //! batch are expanded to f32 — and only transiently.
 //!
 //! Layout: row-major, rows padded to a whole byte so row accesses never
-//! straddle feature boundaries (keeps row loads branch-light and makes
-//! per-row parallel updates safe).
+//! straddle feature boundaries; padding bits are kept zero by every write
+//! path. Row readers and writers process *whole bytes at a time* — each
+//! sub-byte code is extracted with a constant shift/mask pair instead of
+//! a per-element position branch — and the fused
+//! [`PackedTable::quantize_row_packed`] quantizes f32 weights straight
+//! into packed bytes, skipping the i32 scratch round-trip entirely.
+//! [`RowWriter`] extends the same write paths to concurrent per-row use
+//! from the sharded update engine.
 
-use super::BitWidth;
+use super::{quantize_dr, quantize_sr, BitWidth, Rounding};
+use crate::util::rng::Pcg32;
 
 /// Packed `[rows × dim]` table of m-bit signed integer codes.
 #[derive(Clone, Debug)]
@@ -41,12 +48,23 @@ impl PackedTable {
         BitWidth::from_bits(self.bits).unwrap()
     }
 
+    /// Bytes per (byte-padded) row.
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    /// Raw packed storage (row-major, `row_bytes` per row).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
     /// Bytes of backing storage (the compression-ratio numerator).
     pub fn storage_bytes(&self) -> usize {
         self.data.len()
     }
 
-    /// Read one element (sign-extended).
+    /// Read one element (sign-extended). Scalar reference path — the
+    /// word-at-a-time row ops are property-tested against it.
     #[inline]
     pub fn get(&self, row: usize, col: usize) -> i32 {
         debug_assert!(row < self.rows && col < self.dim);
@@ -72,6 +90,7 @@ impl PackedTable {
     }
 
     /// Write one element. `v` must be within the bit width's range.
+    /// Scalar reference path (see [`PackedTable::get`]).
     #[inline]
     pub fn set(&mut self, row: usize, col: usize, v: i32) {
         debug_assert!(row < self.rows && col < self.dim);
@@ -110,126 +129,368 @@ impl PackedTable {
         }
     }
 
-    /// Unpack a whole row into `out` as i32 codes.
+    #[inline]
+    fn row_slice(&self, row: usize) -> &[u8] {
+        debug_assert!(row < self.rows);
+        let base = row * self.row_bytes;
+        &self.data[base..base + self.row_bytes]
+    }
+
+    #[inline]
+    fn row_slice_mut(&mut self, row: usize) -> &mut [u8] {
+        debug_assert!(row < self.rows);
+        let base = row * self.row_bytes;
+        &mut self.data[base..base + self.row_bytes]
+    }
+
+    /// Unpack a whole row into `out` as i32 codes (whole bytes at a time).
     pub fn read_row(&self, row: usize, out: &mut [i32]) {
         debug_assert_eq!(out.len(), self.dim);
-        let base = row * self.row_bytes;
-        match self.bits {
-            8 => {
-                for (o, &b) in out.iter_mut().zip(&self.data[base..]) {
-                    *o = b as i8 as i32;
-                }
-            }
-            16 => {
-                let src = &self.data[base..base + self.dim * 2];
-                for (i, o) in out.iter_mut().enumerate() {
-                    *o = i16::from_le_bytes([src[2 * i], src[2 * i + 1]])
-                        as i32;
-                }
-            }
-            4 => {
-                let src = &self.data[base..base + self.row_bytes];
-                let mut i = 0;
-                for &byte in src {
-                    if i < self.dim {
-                        out[i] = (((byte & 0xF) as i32) << 28) >> 28;
-                        i += 1;
-                    }
-                    if i < self.dim {
-                        out[i] = (((byte >> 4) as i32) << 28) >> 28;
-                        i += 1;
-                    }
-                }
-            }
-            2 => {
-                let src = &self.data[base..base + self.row_bytes];
-                let mut i = 0;
-                for &byte in src {
-                    for shift in [0u32, 2, 4, 6] {
-                        if i < self.dim {
-                            out[i] =
-                                ((((byte >> shift) & 0b11) as i32) << 30)
-                                    >> 30;
-                            i += 1;
-                        }
-                    }
-                }
-            }
-            _ => unreachable!(),
-        }
+        unpack_codes(self.row_slice(row), self.dim, self.bits, out);
     }
 
     /// Unpack a row straight to de-quantized f32 (`code * delta`) — the
-    /// gather hot path.
+    /// gather hot path. Same byte-wise walk as [`PackedTable::read_row`]
+    /// with the scale fused into the store.
     pub fn read_row_dequant(&self, row: usize, delta: f32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dim);
-        let base = row * self.row_bytes;
+        let src = self.row_slice(row);
         match self.bits {
             8 => {
-                let src = &self.data[base..base + self.dim];
                 for (o, &b) in out.iter_mut().zip(src) {
                     *o = (b as i8 as f32) * delta;
                 }
             }
             16 => {
-                let src = &self.data[base..base + self.dim * 2];
                 for (o, pair) in out.iter_mut().zip(src.chunks_exact(2)) {
                     *o = i16::from_le_bytes([pair[0], pair[1]]) as f32
                         * delta;
                 }
             }
             4 => {
-                // branch-free nibble unpack straight to f32 (no temp
-                // allocation — this is the gather hot path)
-                let src = &self.data[base..base + self.row_bytes];
-                let mut i = 0;
-                for &byte in src {
-                    if i < self.dim {
-                        out[i] = ((((byte & 0xF) as i32) << 28) >> 28)
-                            as f32
-                            * delta;
-                        i += 1;
-                    }
-                    if i < self.dim {
-                        out[i] =
-                            ((((byte >> 4) as i32) << 28) >> 28) as f32
-                                * delta;
-                        i += 1;
-                    }
+                let full = self.dim / 2;
+                let (head, tail) = out.split_at_mut(full * 2);
+                for (o2, &b) in
+                    head.chunks_exact_mut(2).zip(&src[..full])
+                {
+                    o2[0] = (((b as i32) << 28) >> 28) as f32 * delta;
+                    o2[1] = (((b as i32) << 24) >> 28) as f32 * delta;
+                }
+                if let [last] = tail {
+                    *last = (((src[full] as i32) << 28) >> 28) as f32
+                        * delta;
                 }
             }
-            _ => {
-                // 2-bit: 4 codes per byte, sign-extend, scale
-                let src = &self.data[base..base + self.row_bytes];
-                let mut i = 0;
-                for &byte in src {
-                    for shift in [0u32, 2, 4, 6] {
-                        if i < self.dim {
-                            out[i] = ((((byte >> shift) & 0b11) as i32)
-                                << 30 >> 30)
-                                as f32
-                                * delta;
-                            i += 1;
-                        }
-                    }
+            2 => {
+                let full = self.dim / 4;
+                let (head, tail) = out.split_at_mut(full * 4);
+                for (o4, &b) in
+                    head.chunks_exact_mut(4).zip(&src[..full])
+                {
+                    let b = b as i32;
+                    o4[0] = ((b << 30) >> 30) as f32 * delta;
+                    o4[1] = ((b << 28) >> 30) as f32 * delta;
+                    o4[2] = ((b << 26) >> 30) as f32 * delta;
+                    o4[3] = ((b << 24) >> 30) as f32 * delta;
+                }
+                for (k, o) in tail.iter_mut().enumerate() {
+                    *o = (((src[full] as i32) << (30 - 2 * k as i32))
+                        >> 30) as f32
+                        * delta;
                 }
             }
+            _ => unreachable!(),
         }
     }
 
-    /// Pack a row of i32 codes.
+    /// Pack a row of i32 codes (whole bytes at a time; padding bits in the
+    /// final byte are written as zero).
     pub fn write_row(&mut self, row: usize, codes: &[i32]) {
         debug_assert_eq!(codes.len(), self.dim);
-        for (col, &c) in codes.iter().enumerate() {
-            self.set(row, col, c);
+        let (dim, bits) = (self.dim, self.bits);
+        pack_codes(self.row_slice_mut(row), dim, bits, codes);
+    }
+
+    /// Fused quantize→pack: quantize the f32 row `w` (Eq. 1 with Eq. 3/4
+    /// rounding) straight into this row's packed bytes, skipping the i32
+    /// scratch round-trip. Stochastic draws come from `rng`, one per
+    /// element in column order — identical order (hence identical codes)
+    /// to `quantize_row` + `write_row` on the same generator state.
+    pub fn quantize_row_packed(
+        &mut self,
+        row: usize,
+        w: &[f32],
+        delta: f32,
+        rounding: Rounding,
+        rng: &mut Pcg32,
+    ) {
+        debug_assert_eq!(w.len(), self.dim);
+        let (dim, bits) = (self.dim, self.bits);
+        let bw = self.bit_width();
+        quantize_into(self.row_slice_mut(row), dim, bits, bw, w, delta,
+                      rounding, rng);
+    }
+
+    /// Shared handle for writing *disjoint* rows from multiple threads —
+    /// the sharded `update` path. Borrows the table mutably for its whole
+    /// lifetime, so no other access can race it; safety within the handle
+    /// reduces to callers never targeting the same row concurrently.
+    pub fn row_writer(&mut self) -> RowWriter<'_> {
+        RowWriter {
+            data: self.data.as_mut_ptr(),
+            rows: self.rows,
+            dim: self.dim,
+            row_bytes: self.row_bytes,
+            bits: self.bits,
+            _marker: std::marker::PhantomData,
         }
+    }
+}
+
+/// Concurrent per-row write handle produced by
+/// [`PackedTable::row_writer`]. `Send + Sync`: every method takes `&self`
+/// and is `unsafe fn`, with the contract that concurrent calls target
+/// disjoint rows (rows never share bytes — they are byte-padded).
+pub struct RowWriter<'a> {
+    data: *mut u8,
+    rows: usize,
+    dim: usize,
+    row_bytes: usize,
+    bits: u32,
+    _marker: std::marker::PhantomData<&'a mut [u8]>,
+}
+
+unsafe impl Send for RowWriter<'_> {}
+unsafe impl Sync for RowWriter<'_> {}
+
+impl RowWriter<'_> {
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_slice_mut(&self, row: usize) -> &mut [u8] {
+        debug_assert!(row < self.rows);
+        std::slice::from_raw_parts_mut(
+            self.data.add(row * self.row_bytes),
+            self.row_bytes,
+        )
+    }
+
+    /// Pack `codes` into `row`.
+    ///
+    /// # Safety
+    /// No concurrent call (on this writer) may target the same `row`.
+    pub unsafe fn write_row(&self, row: usize, codes: &[i32]) {
+        debug_assert_eq!(codes.len(), self.dim);
+        pack_codes(self.row_slice_mut(row), self.dim, self.bits, codes);
+    }
+
+    /// Fused quantize→pack into `row` (see
+    /// [`PackedTable::quantize_row_packed`]).
+    ///
+    /// # Safety
+    /// No concurrent call (on this writer) may target the same `row`.
+    pub unsafe fn quantize_row_packed(
+        &self,
+        row: usize,
+        w: &[f32],
+        delta: f32,
+        rounding: Rounding,
+        rng: &mut Pcg32,
+    ) {
+        debug_assert_eq!(w.len(), self.dim);
+        let bw = BitWidth::from_bits(self.bits).unwrap();
+        quantize_into(self.row_slice_mut(row), self.dim, self.bits, bw, w,
+                      delta, rounding, rng);
+    }
+}
+
+// ------------------------------------------------- byte-wise row kernels
+
+/// Unpack `dim` sign-extended codes from a byte-padded row.
+fn unpack_codes(src: &[u8], dim: usize, bits: u32, out: &mut [i32]) {
+    match bits {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(src) {
+                *o = b as i8 as i32;
+            }
+        }
+        16 => {
+            for (o, pair) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = i16::from_le_bytes([pair[0], pair[1]]) as i32;
+            }
+        }
+        4 => {
+            let full = dim / 2;
+            let (head, tail) = out.split_at_mut(full * 2);
+            for (o2, &b) in head.chunks_exact_mut(2).zip(&src[..full]) {
+                o2[0] = ((b as i32) << 28) >> 28;
+                o2[1] = ((b as i32) << 24) >> 28;
+            }
+            if let [last] = tail {
+                *last = ((src[full] as i32) << 28) >> 28;
+            }
+        }
+        2 => {
+            let full = dim / 4;
+            let (head, tail) = out.split_at_mut(full * 4);
+            for (o4, &b) in head.chunks_exact_mut(4).zip(&src[..full]) {
+                let b = b as i32;
+                o4[0] = (b << 30) >> 30;
+                o4[1] = (b << 28) >> 30;
+                o4[2] = (b << 26) >> 30;
+                o4[3] = (b << 24) >> 30;
+            }
+            for (k, o) in tail.iter_mut().enumerate() {
+                *o = ((src[full] as i32) << (30 - 2 * k as i32)) >> 30;
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Pack `dim` codes into a byte-padded row; padding bits end up zero.
+fn pack_codes(dst: &mut [u8], dim: usize, bits: u32, codes: &[i32]) {
+    #[cfg(debug_assertions)]
+    {
+        let bw = BitWidth::from_bits(bits).unwrap();
+        for &c in codes {
+            debug_assert!(
+                c >= bw.qn() && c <= bw.qp(),
+                "code {c} out of range for {bits} bits"
+            );
+        }
+    }
+    match bits {
+        8 => {
+            for (d, &c) in dst.iter_mut().zip(codes) {
+                *d = c as i8 as u8;
+            }
+        }
+        16 => {
+            for (d2, &c) in dst.chunks_exact_mut(2).zip(codes) {
+                d2.copy_from_slice(&(c as i16).to_le_bytes());
+            }
+        }
+        4 => {
+            let full = dim / 2;
+            for (d, c2) in
+                dst[..full].iter_mut().zip(codes.chunks_exact(2))
+            {
+                *d = (c2[0] as u8 & 0x0F) | ((c2[1] as u8) << 4);
+            }
+            if dim % 2 == 1 {
+                dst[full] = codes[dim - 1] as u8 & 0x0F;
+            }
+        }
+        2 => {
+            let full = dim / 4;
+            for (d, c4) in
+                dst[..full].iter_mut().zip(codes.chunks_exact(4))
+            {
+                *d = (c4[0] as u8 & 0b11)
+                    | ((c4[1] as u8 & 0b11) << 2)
+                    | ((c4[2] as u8 & 0b11) << 4)
+                    | ((c4[3] as u8 & 0b11) << 6);
+            }
+            if dim % 4 != 0 {
+                let mut b = 0u8;
+                for (k, &c) in codes[full * 4..].iter().enumerate() {
+                    b |= (c as u8 & 0b11) << (2 * k);
+                }
+                dst[full] = b;
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Quantize `w` and pack in one pass. SR draws happen in column order so
+/// the result is bit-identical to `quantize_row` + `write_row` run on the
+/// same generator state.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn quantize_into(
+    dst: &mut [u8],
+    dim: usize,
+    bits: u32,
+    bw: BitWidth,
+    w: &[f32],
+    delta: f32,
+    rounding: Rounding,
+    rng: &mut Pcg32,
+) {
+    match rounding {
+        Rounding::Deterministic => {
+            pack_with(dst, dim, bits, w, &mut |x| quantize_dr(x, delta, bw))
+        }
+        Rounding::Stochastic => {
+            pack_with(dst, dim, bits, w, &mut |x| {
+                quantize_sr(x, delta, bw, rng.uniform_f32())
+            })
+        }
+    }
+}
+
+/// Byte-wise packing driven by a per-element `code` closure, evaluated in
+/// strict column order (SR draw order must match the serial reference).
+#[inline]
+fn pack_with(
+    dst: &mut [u8],
+    dim: usize,
+    bits: u32,
+    w: &[f32],
+    code: &mut impl FnMut(f32) -> i32,
+) {
+    match bits {
+        8 => {
+            for (d, &x) in dst.iter_mut().zip(w) {
+                *d = code(x) as i8 as u8;
+            }
+        }
+        16 => {
+            for (d2, &x) in dst.chunks_exact_mut(2).zip(w) {
+                d2.copy_from_slice(&(code(x) as i16).to_le_bytes());
+            }
+        }
+        4 => {
+            let full = dim / 2;
+            for (d, x2) in dst[..full].iter_mut().zip(w.chunks_exact(2)) {
+                let lo = code(x2[0]) as u8 & 0x0F;
+                let hi = (code(x2[1]) as u8) << 4;
+                *d = lo | hi;
+            }
+            if dim % 2 == 1 {
+                dst[full] = code(w[dim - 1]) as u8 & 0x0F;
+            }
+        }
+        2 => {
+            let full = dim / 4;
+            for (d, x4) in dst[..full].iter_mut().zip(w.chunks_exact(4)) {
+                let c0 = code(x4[0]) as u8 & 0b11;
+                let c1 = code(x4[1]) as u8 & 0b11;
+                let c2 = code(x4[2]) as u8 & 0b11;
+                let c3 = code(x4[3]) as u8 & 0b11;
+                *d = c0 | (c1 << 2) | (c2 << 4) | (c3 << 6);
+            }
+            if dim % 4 != 0 {
+                let mut b = 0u8;
+                for (k, &x) in w[full * 4..].iter().enumerate() {
+                    b |= (code(x) as u8 & 0b11) << (2 * k);
+                }
+                dst[full] = b;
+            }
+        }
+        _ => unreachable!(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::quantize_row;
     use crate::util::prop::{check, Gen};
+
+    const ALL_WIDTHS: [BitWidth; 4] =
+        [BitWidth::B2, BitWidth::B4, BitWidth::B8, BitWidth::B16];
 
     fn roundtrip_prop(bw: BitWidth) {
         check(
@@ -289,6 +550,189 @@ mod tests {
     }
 
     #[test]
+    fn word_row_ops_match_scalar_reference() {
+        // write_row (word path) must agree element-wise with set/get (the
+        // scalar reference), for every width and odd/even dim.
+        check("write_row/read_row vs set/get", 160, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 37);
+            let rows = g.usize_in(1, 8);
+            let r = g.usize_in(0, rows - 1);
+            let codes: Vec<i32> = (0..dim)
+                .map(|_| g.i32_in(bw.qn(), bw.qp()))
+                .collect();
+
+            let mut word = PackedTable::new(rows, dim, bw);
+            word.write_row(r, &codes);
+            let mut scalar = PackedTable::new(rows, dim, bw);
+            for (c, &v) in codes.iter().enumerate() {
+                scalar.set(r, c, v);
+            }
+
+            for c in 0..dim {
+                if word.get(r, c) != codes[c] {
+                    return Err(format!(
+                        "write_row broke col {c}: {} vs {}",
+                        word.get(r, c),
+                        codes[c]
+                    ));
+                }
+            }
+            let mut back = vec![0i32; dim];
+            word.read_row(r, &mut back);
+            if back != codes {
+                return Err(format!("read_row mismatch: {back:?}"));
+            }
+            let mut deq = vec![0.0f32; dim];
+            let delta = 0.25f32;
+            word.read_row_dequant(r, delta, &mut deq);
+            for c in 0..dim {
+                let want = codes[c] as f32 * delta;
+                if deq[c] != want {
+                    return Err(format!(
+                        "dequant mismatch col {c}: {} vs {want}",
+                        deq[c]
+                    ));
+                }
+            }
+            if word.bytes() != scalar.bytes() {
+                return Err("byte layout differs from scalar sets".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_quantize_matches_scalar_pipeline() {
+        // quantize_row_packed == quantize_row + write_row, bit for bit,
+        // for DR and (same rng state) SR.
+        check("fused quantize+pack vs scalar", 120, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 37);
+            let delta = g.f32_in(1e-3, 0.1);
+            let w: Vec<f32> = (0..dim).map(|_| g.f32_normal(0.05)).collect();
+            let seed = g.u32_any() as u64;
+            for rounding in [Rounding::Deterministic, Rounding::Stochastic] {
+                let mut rng_a = Pcg32::seeded(seed);
+                let mut rng_b = Pcg32::seeded(seed);
+                let mut fused = PackedTable::new(2, dim, bw);
+                fused.quantize_row_packed(1, &w, delta, rounding,
+                                          &mut rng_a);
+                let mut codes = vec![0i32; dim];
+                quantize_row(&w, delta, bw, rounding, &mut rng_b,
+                             &mut codes);
+                let mut scalar = PackedTable::new(2, dim, bw);
+                scalar.write_row(1, &codes);
+                if fused.bytes() != scalar.bytes() {
+                    return Err(format!(
+                        "fused != scalar for {rounding:?} {}bit dim={dim}",
+                        bw.bits()
+                    ));
+                }
+                // identical draw counts: generators must end in the same
+                // state
+                if rng_a.next_u32() != rng_b.next_u32() {
+                    return Err("rng state diverged".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_bits_stay_zero_for_odd_dims() {
+        // rows whose dim is not a multiple of codes-per-byte must keep
+        // their padding bits zero after every write path, and writes must
+        // stay inside row_bytes.
+        check("padding bits zero", 120, |g: &mut Gen| {
+            let bw = *g.pick(&[BitWidth::B2, BitWidth::B4]);
+            let cpb = (8 / bw.bits()) as usize;
+            // force a ragged tail
+            let dim = {
+                let d = g.usize_in(1, 29);
+                if d % cpb == 0 {
+                    d + 1
+                } else {
+                    d
+                }
+            };
+            let rows = g.usize_in(1, 6);
+            let mut t = PackedTable::new(rows, dim, bw);
+            let mut rng = Pcg32::seeded(g.u32_any() as u64);
+            for r in 0..rows {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        let codes: Vec<i32> = (0..dim)
+                            .map(|_| g.i32_in(bw.qn(), bw.qp()))
+                            .collect();
+                        t.write_row(r, &codes);
+                    }
+                    1 => {
+                        let w: Vec<f32> =
+                            (0..dim).map(|_| g.f32_normal(0.1)).collect();
+                        t.quantize_row_packed(r, &w, 0.01,
+                                              Rounding::Stochastic,
+                                              &mut rng);
+                    }
+                    _ => {
+                        for c in 0..dim {
+                            t.set(r, c, g.i32_in(bw.qn(), bw.qp()));
+                        }
+                    }
+                }
+            }
+            let used_bits = dim * bw.bits() as usize;
+            let pad_bits = t.row_bytes() * 8 - used_bits;
+            assert!(pad_bits > 0 && pad_bits < 8);
+            for r in 0..rows {
+                let last = t.bytes()[r * t.row_bytes() + t.row_bytes() - 1];
+                let pad = last >> (8 - pad_bits);
+                if pad != 0 {
+                    return Err(format!(
+                        "row {r}: padding bits set ({last:#010b}, \
+                         {}bit dim={dim})",
+                        bw.bits()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_writer_matches_serial_writes() {
+        // concurrent disjoint-row writes through RowWriter must produce
+        // exactly the bytes serial write_row produces.
+        let bw = BitWidth::B4;
+        let (rows, dim) = (64, 11);
+        let codes: Vec<Vec<i32>> = (0..rows)
+            .map(|r| {
+                (0..dim)
+                    .map(|c| {
+                        ((r * 7 + c * 3) as i32 % 16) - 8
+                    })
+                    .map(|v| v.clamp(bw.qn(), bw.qp()))
+                    .collect()
+            })
+            .collect();
+        let mut serial = PackedTable::new(rows, dim, bw);
+        for (r, row_codes) in codes.iter().enumerate() {
+            serial.write_row(r, row_codes);
+        }
+        let mut parallel = PackedTable::new(rows, dim, bw);
+        {
+            let writer = parallel.row_writer();
+            crate::util::threadpool::parallel_ranges(rows, 4, 1, |range| {
+                for r in range {
+                    // Safety: ranges are disjoint, one writer per row.
+                    unsafe { writer.write_row(r, &codes[r]) };
+                }
+            });
+        }
+        assert_eq!(serial.bytes(), parallel.bytes());
+    }
+
+    #[test]
     fn storage_is_packed() {
         // 1000 rows x 16 dims
         assert_eq!(
@@ -324,6 +768,14 @@ mod tests {
         let mut row1 = vec![0i32; 5];
         t.read_row(1, &mut row1);
         assert_eq!(row1, vec![-8, 7, 0, -1, 3]);
+        // writing row 1 again (all widths of tail) must leave rows 0 and 2
+        // untouched: row writes stay within row_bytes
+        t.write_row(1, &[7, -8, 1, -2, -1]);
+        let mut row2 = vec![0i32; 5];
+        t.read_row(2, &mut row2);
+        assert_eq!(row2, vec![0; 5]);
+        t.read_row(0, &mut row0);
+        assert_eq!(row0, vec![0; 5]);
     }
 
     #[test]
@@ -337,7 +789,7 @@ mod tests {
 
     #[test]
     fn negative_codes_sign_extend() {
-        for bw in [BitWidth::B2, BitWidth::B4, BitWidth::B8, BitWidth::B16] {
+        for bw in ALL_WIDTHS {
             let mut t = PackedTable::new(1, 2, bw);
             t.set(0, 0, bw.qn());
             t.set(0, 1, -1);

@@ -1,0 +1,153 @@
+//! Host backend (default, no external deps): fully functional host
+//! [`Literal`] tensors plus a [`Runtime`] that refuses to load, so any
+//! `use_runtime = true` path fails fast with a clear message instead of
+//! crashing mid-training. Everything artifact-gated (integration tests,
+//! PJRT benches) checks for `artifacts/manifest.json` first and skips.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Manifest, ModelEntry};
+
+/// A host-side tensor literal: typed flat data + dims.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+impl Literal {
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Literal::F32 { dims, .. } => dims,
+            Literal::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Placeholder runtime: carries the same API as the PJRT backend but
+/// `load` always errors (there is no executor to run HLO on).
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub executions: u64,
+}
+
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (artifacts in {} cannot be executed; rebuild with \
+             --features pjrt and a vendored `xla` crate, or run with \
+             use_runtime = false)",
+            dir.display()
+        )
+    }
+
+    pub fn entry(&self, config: &str) -> Result<&ModelEntry> {
+        self.manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("no model config {config:?} in manifest"))
+    }
+
+    pub fn prepare(&mut self, _config: &str, _variant: &str) -> Result<()> {
+        bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+    }
+
+    pub fn exec(
+        &mut self,
+        config: &str,
+        variant: &str,
+        _inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        bail!(
+            "cannot execute {config}/{variant}: built without the `pjrt` \
+             feature"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "host-stub".to_string()
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+/// f32 tensor literal with shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::F32 { data: data.to_vec(), dims: dims.to_vec() })
+}
+
+/// i32 tensor literal with shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::I32 { data: data.to_vec(), dims: dims.to_vec() })
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::F32 { data: vec![x], dims: vec![] }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    match lit {
+        Literal::F32 { data, .. } => Ok(data.clone()),
+        Literal::I32 { .. } => bail!("to_vec f32: literal holds i32"),
+    }
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    match lit {
+        Literal::I32 { data, .. } => Ok(data.clone()),
+        Literal::F32 { .. } => bail!("to_vec i32: literal holds f32"),
+    }
+}
+
+/// Extract the single f32 from a scalar literal.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    match lit {
+        Literal::F32 { data, .. } if !data.is_empty() => Ok(data[0]),
+        _ => bail!("scalar: empty or non-f32 literal"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[2, 2]);
+        let i = lit_i32(&[1, -2, 3], &[3]).unwrap();
+        assert_eq!(to_i32(&i).unwrap(), vec![1, -2, 3]);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+        assert!(to_i32(&l).is_err());
+        assert_eq!(to_scalar_f32(&lit_scalar(2.5)).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn load_reports_missing_pjrt() {
+        let err = Runtime::load(Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

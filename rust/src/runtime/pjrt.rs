@@ -1,0 +1,223 @@
+//! PJRT backend: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the training hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Compiled only with `--features pjrt`, which requires a vendored `xla`
+//! binding crate exposing: `HloModuleProto::from_text_file`,
+//! `XlaComputation::from_proto`, `PjRtClient::cpu`/`compile`/
+//! `platform_name`, `PjRtLoadedExecutable::execute`, and `Literal`
+//! (`vec1`, `reshape`, `scalar`, `to_vec`, `get_first_element`,
+//! `to_literal_sync`, `to_tuple`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use xla::Literal;
+
+use super::{Manifest, ModelEntry};
+
+/// The runtime: one PJRT client + a compile-once executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    /// executions since start (diagnostics)
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (usually `artifacts/`) and start a CPU
+    /// PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "loading manifest from {} — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn entry(&self, config: &str) -> Result<&ModelEntry> {
+        self.manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("no model config {config:?} in manifest"))
+    }
+
+    /// Compile (or fetch from cache) an artifact executable.
+    pub fn prepare(&mut self, config: &str, variant: &str) -> Result<()> {
+        let key = format!("{config}/{variant}");
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self.entry(config)?;
+        let fname = entry
+            .artifacts
+            .get(variant)
+            .ok_or_else(|| anyhow!("no variant {variant:?} for {config}"))?
+            .clone();
+        let path = self.dir.join(&fname);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute `config/variant` with the given inputs; returns the output
+    /// tuple elements in manifest order.
+    pub fn exec(
+        &mut self,
+        config: &str,
+        variant: &str,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        self.prepare(config, variant)?;
+        let key = format!("{config}/{variant}");
+        let exe = self.cache.get(&key).unwrap();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {key}: {e:?}"))?;
+        self.executions += 1;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {key} output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        out.to_tuple().map_err(|e| anyhow!("untupling {key}: {e:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+/// f32 tensor literal with shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 tensor literal with shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+}
+
+/// Extract the single f32 from a scalar literal.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = lit_i32(&[1, -2, 3], &[3]).unwrap();
+        assert_eq!(to_i32(&i).unwrap(), vec![1, -2, 3]);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_quantize() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::load(&artifacts_dir()).unwrap();
+        let entry = rt.entry("tiny").unwrap().clone();
+        let (u, d) = (entry.umax, entry.emb_dim);
+        let w = vec![0.05f32; u * d];
+        let delta = vec![0.01f32; u];
+        let noise = vec![0.6f32; u * d];
+        let out = rt
+            .exec(
+                "tiny",
+                "quantize",
+                &[
+                    lit_f32(&w, &[u as i64, d as i64]).unwrap(),
+                    lit_f32(&delta, &[u as i64]).unwrap(),
+                    lit_f32(&noise, &[u as i64, d as i64]).unwrap(),
+                    lit_scalar(-128.0),
+                    lit_scalar(127.0),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let codes = to_i32(&out[0]).unwrap();
+        // 0.05/0.01 = 5 exactly: SR rounds to 5 regardless of noise
+        assert!(codes.iter().all(|&c| c == 5), "codes[0..4]={:?}", &codes[..4]);
+        // second exec hits the executable cache
+        let _ = rt.exec(
+            "tiny",
+            "quantize",
+            &[
+                lit_f32(&w, &[u as i64, d as i64]).unwrap(),
+                lit_f32(&delta, &[u as i64]).unwrap(),
+                lit_f32(&noise, &[u as i64, d as i64]).unwrap(),
+                lit_scalar(-128.0),
+                lit_scalar(127.0),
+            ],
+        );
+        assert_eq!(rt.executions, 2);
+    }
+}

@@ -124,6 +124,12 @@ impl Bencher {
                         ("p95_ns", Json::num(m.p95_ns)),
                         ("iters", Json::num(m.iters as f64)),
                         (
+                            "units_per_iter",
+                            m.units_per_iter
+                                .map(Json::num)
+                                .unwrap_or(Json::Null),
+                        ),
+                        (
                             "throughput",
                             m.throughput().map(Json::num).unwrap_or(Json::Null),
                         ),
@@ -131,6 +137,22 @@ impl Bencher {
                 })
                 .collect(),
         )
+    }
+
+    /// Write a machine-readable report: `{"schema_version": 1, "meta":
+    /// {...}, "benchmarks": [...]}`. This is the cross-PR perf-trajectory
+    /// format (`BENCH_micro.json` at the repo root).
+    pub fn write_report(
+        &self,
+        path: &std::path::Path,
+        meta: Vec<(&str, Json)>,
+    ) -> std::io::Result<()> {
+        let doc = Json::obj(vec![
+            ("schema_version", Json::num(1.0)),
+            ("meta", Json::obj(meta)),
+            ("benchmarks", self.to_json()),
+        ]);
+        std::fs::write(path, doc.to_string())
     }
 }
 

@@ -110,6 +110,42 @@ where
     });
 }
 
+/// Hardware-derived default worker count (≥ 1).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `0..n` into at most `threads` contiguous ranges of at least
+/// `min_per_thread` items and run `f(range)` for each on scoped threads.
+/// Degrades to one inline call when a single range remains, so small
+/// inputs pay no spawn cost. `f` must produce results that do not depend
+/// on which thread (or how many) ran it — the embedding engine guarantees
+/// this via counter-based per-row RNG streams.
+pub fn parallel_ranges<F>(n: usize, threads: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Send + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let max_useful = n.div_ceil(min_per_thread.max(1));
+    let threads = threads.max(1).min(max_useful);
+    if threads <= 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+            lo = hi;
+        }
+    });
+}
+
 /// Run `n` indexed tasks on up to `threads` scoped threads, collecting
 /// results in index order.
 pub fn parallel_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
@@ -181,6 +217,30 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn parallel_ranges_covers_each_index_once() {
+        for (n, threads, min_per) in
+            [(1000, 7, 1), (10, 16, 4), (1, 8, 64), (17, 3, 5), (0, 4, 1)]
+        {
+            let hits: Vec<AtomicU64> =
+                (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_ranges(n, threads, min_per, |range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "n={n} threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
     }
 
     #[test]

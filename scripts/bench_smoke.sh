@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Bench smoke: release build, run the micro bench with a small iteration
+# budget, and assert the machine-readable BENCH_micro.json report was
+# produced and is well-formed. Wired into ROADMAP.md's tier-1 section:
+#
+#   bash scripts/bench_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+ALPT_BENCH_QUICK=1 cargo bench --bench micro
+
+test -s BENCH_micro.json || {
+    echo "FAIL: BENCH_micro.json missing or empty" >&2
+    exit 1
+}
+
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'EOF'
+import json
+
+with open("BENCH_micro.json") as f:
+    doc = json.load(f)
+assert doc["schema_version"] == 1, doc.get("schema_version")
+rows = doc["benchmarks"]
+assert isinstance(rows, list) and rows, "no benchmark rows"
+for row in rows:
+    assert row["name"] and row["median_ns"] > 0, row
+names = {row["name"] for row in rows}
+# the acceptance-critical rows must be present
+for needle in ["LPT-4bit update t1", "LPT-8bit update t1",
+               "fused quantize_row_packed 4-bit SR"]:
+    assert any(needle in n for n in names), f"missing bench row: {needle}"
+print(f"bench smoke OK: {len(rows)} rows")
+EOF
+else
+    # minimal structural check without python
+    grep -q '"schema_version"' BENCH_micro.json
+    grep -q '"benchmarks"' BENCH_micro.json
+    grep -q '"median_ns"' BENCH_micro.json
+    echo "bench smoke OK (grep check)"
+fi
