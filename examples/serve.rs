@@ -1,179 +1,88 @@
-//! Serving demo: train a small FP model, quantize its embedding table
-//! on-device through the `quantize` Pallas-kernel artifact (SR), then
-//! serve batched CTR requests from the int-native `eval_lpt` path and
-//! report latency / throughput / the accuracy cost of post-training
-//! quantization vs trained-quantized (ALPT).
+//! Serving demo: load a *trained, quantized* embedding table + DCN params
+//! from a versioned checkpoint file and serve batched CTR requests from
+//! it — no training step, no retraining, no PJRT requirement. This is the
+//! deploy artifact the paper's training-stage compression pays for: the
+//! packed int table plus per-row step sizes, restored bit-identically
+//! from disk.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve
+//! cargo run --release --example serve -- --ckpt examples/fixtures/tiny_lpt8.ckpt
 //! ```
+//!
+//! The committed fixture is a format/serving smoke checkpoint (see
+//! `scripts/make_fixture.py`), so its AUC is chance-level by design. To
+//! serve a *trained* model, produce a real checkpoint first:
+//!
+//! ```bash
+//! cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \
+//!     --no-runtime --save trained.ckpt
+//! cargo run --release --example serve -- --ckpt trained.ckpt
+//! ```
+//!
+//! The load/validate/inference loop itself lives in
+//! `alpt::coordinator::serve` and is shared with the `alpt serve`
+//! subcommand, so the demo and the CLI cannot drift apart.
 
-use std::time::Instant;
-
-use alpt::config::{Experiment, Method, RoundingMode};
-use alpt::coordinator::Trainer;
-use alpt::data::batcher::Batcher;
-use alpt::data::synthetic::{generate, SyntheticSpec};
-use alpt::metrics::EvalAccumulator;
-use alpt::quant::{init_delta, BitWidth};
-use alpt::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, to_i32, Runtime};
-use alpt::util::rng::Pcg32;
+use alpt::cli::Args;
+use alpt::coordinator::serve_checkpoint;
 use alpt::util::stats::percentile;
 use anyhow::Result;
 
+const DEFAULT_CKPT: &str = "examples/fixtures/tiny_lpt8.ckpt";
+
 fn main() -> Result<()> {
-    println!("=== serve: quantized embedding table behind a batched \
-              request loop ===\n");
-    let spec = SyntheticSpec::tiny(7);
-    let ds = generate(&spec, 20_000);
-    let (train, val, test) = ds.split((0.8, 0.1, 0.1), 3);
-    let n_features = ds.schema.n_features();
-
-    // 1. train an FP model (2 epochs is plenty for the demo)
-    let exp = Experiment {
-        method: Method::Fp,
-        model: "tiny".into(),
-        epochs: 2,
-        lr_emb: 0.5,
-        patience: 0,
-        ..Experiment::default()
-    };
-    let mut fp = Trainer::new(exp.clone(), n_features)?;
-    let _ = fp.train(&train, &val, false)?;
-    let fp_ev = fp.evaluate(&test)?;
-    println!("trained FP model: test auc {:.4}\n", fp_ev.auc);
-
-    // 2. post-training-quantize the trained table with the `quantize`
-    //    artifact (the L1 SR kernel, running on PJRT)
-    let mut rt = Runtime::load(std::path::Path::new(&exp.artifacts_dir))?;
-    let entry = rt.entry("tiny")?.clone();
-    let (umax, d, b, f) = (entry.umax, entry.emb_dim, entry.batch,
-                           entry.fields);
-    let bw = BitWidth::B8;
-
-    // pull the trained table out of the FP store
-    let ids: Vec<u32> = (0..n_features as u32).collect();
-    let mut table = vec![0.0f32; n_features * d];
-    fp.store.gather(&ids, &mut table);
-
-    // per-row LSQ-style deltas, then quantize row blocks on-device
-    let deltas: Vec<f32> = (0..n_features)
-        .map(|r| init_delta(&table[r * d..(r + 1) * d], bw))
-        .collect();
-    let mut rng = Pcg32::seeded(11);
-    let mut codes = vec![0i32; n_features * d];
-    let t0 = Instant::now();
-    for start in (0..n_features).step_by(umax) {
-        let end = (start + umax).min(n_features);
-        let mut w = vec![0.0f32; umax * d];
-        w[..(end - start) * d]
-            .copy_from_slice(&table[start * d..end * d]);
-        let mut dl = vec![1.0f32; umax];
-        dl[..end - start].copy_from_slice(&deltas[start..end]);
-        let mut noise = vec![0.0f32; umax * d];
-        rng.fill_uniform(&mut noise);
-        let out = rt.exec(
-            "tiny",
-            "quantize",
-            &[
-                lit_f32(&w, &[umax as i64, d as i64])?,
-                lit_f32(&dl, &[umax as i64])?,
-                lit_f32(&noise, &[umax as i64, d as i64])?,
-                lit_scalar(bw.qn() as f32),
-                lit_scalar(bw.qp() as f32),
-            ],
-        )?;
-        let chunk = to_i32(&out[0])?;
-        codes[start * d..end * d]
-            .copy_from_slice(&chunk[..(end - start) * d]);
+    let args = Args::from_env(false, &["help"])?;
+    if args.flag("help") {
+        println!(
+            "usage: cargo run --example serve -- [--ckpt FILE.ckpt] \
+             [--batches N]"
+        );
+        return Ok(());
     }
+    let path = args.get_or("ckpt", DEFAULT_CKPT).to_string();
+    let max_batches = args.get_parse("batches", usize::MAX)?;
+    println!("=== serve: checkpointed quantized table behind a batched \
+              request loop ===\n");
+
+    let report =
+        serve_checkpoint(std::path::Path::new(&path), max_batches)?;
+
     println!(
-        "quantized {} rows to {} bits on-device in {:.1} ms \
-         ({} PJRT calls)",
-        n_features,
-        bw.bits(),
-        t0.elapsed().as_secs_f64() * 1e3,
-        rt.executions
+        "loaded {} from {path} in {:.1} ms (+{:.0} ms regenerating the \
+         synthetic request stream)",
+        report.method, report.load_ms, report.data_ms
+    );
+    println!(
+        "  table: {} rows x {} dims = {} KB packed (+deltas) vs {} KB \
+         fp32 ({:.1}x smaller)",
+        report.n_features,
+        report.dim,
+        report.infer_bytes / 1024,
+        report.fp_bytes / 1024,
+        report.fp_bytes as f64 / report.infer_bytes as f64
     );
 
-    // 3. serve batched requests from the int table via eval_lpt
-    let mut acc = EvalAccumulator::new();
-    let mut latencies = Vec::new();
-    let batches: Vec<_> = Batcher::new(&test, b, None, false).collect();
-    // warm up the executable cache so latencies reflect steady state
-    rt.prepare("tiny", "eval_lpt")?;
-    for batch in &batches {
-        let t = Instant::now();
-        let n_u = batch.unique.len();
-        let mut bc = vec![0i32; umax * d];
-        let mut bd = vec![1.0f32; umax];
-        for (i, &id) in batch.unique.iter().enumerate() {
-            let id = id as usize;
-            bc[i * d..(i + 1) * d]
-                .copy_from_slice(&codes[id * d..(id + 1) * d]);
-            bd[i] = deltas[id];
-        }
-        let _ = n_u;
-        let outs = rt.exec(
-            "tiny",
-            "eval_lpt",
-            &[
-                lit_i32(&bc, &[umax as i64, d as i64])?,
-                lit_f32(&bd, &[umax as i64])?,
-                lit_i32(&batch.idx, &[b as i64, f as i64])?,
-                lit_f32(&fp.dense, &[fp.dense.len() as i64])?,
-            ],
-        )?;
-        let logits = to_f32(&outs[0])?;
-        latencies.push(t.elapsed().as_secs_f64() * 1e3);
-        acc.push(&logits, &batch.labels, batch.valid);
-    }
-    let total_ms: f64 = latencies.iter().sum();
     println!(
-        "\nserved {} requests in {} batches:",
-        acc.len(),
-        latencies.len()
+        "\nserved {} requests in {} batches (no training step):",
+        report.requests,
+        report.batches()
     );
     println!(
         "  latency p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms per batch \
-         of {b}",
-        percentile(&latencies, 50.0),
-        percentile(&latencies, 95.0),
-        percentile(&latencies, 99.0)
+         of {}",
+        percentile(&report.latencies_ms, 50.0),
+        percentile(&report.latencies_ms, 95.0),
+        percentile(&report.latencies_ms, 99.0),
+        report.batch_size
+    );
+    println!("  throughput {:.0} req/s", report.requests_per_sec());
+    println!(
+        "  auc {:.4}  logloss {:.5}",
+        report.auc, report.logloss
     );
     println!(
-        "  throughput {:.0} req/s",
-        acc.len() as f64 / (total_ms / 1e3)
-    );
-    println!(
-        "  PTQ-8bit:  auc {:.4} (FP {:.4}, gap {:+.4})",
-        acc.auc(),
-        fp_ev.auc,
-        fp_ev.auc - acc.auc()
-    );
-    println!(
-        "  table: {} KB int8+delta vs {} KB fp32 ({:.1}x smaller)",
-        (n_features * d + n_features * 4) / 1024,
-        n_features * d * 4 / 1024,
-        (n_features * d * 4) as f64
-            / (n_features * d + n_features * 4) as f64
-    );
-
-    // 4. reference: ALPT trains the quantized table directly
-    let mut alpt = Trainer::new(
-        Experiment {
-            method: Method::Alpt(RoundingMode::Sr),
-            lr_delta: 1e-4,
-            ..exp
-        },
-        n_features,
-    )?;
-    let _ = alpt.train(&train, &val, false)?;
-    let alpt_ev = alpt.evaluate(&test)?;
-    println!(
-        "\n  ALPT-8bit (trained quantized): auc {:.4} — no PTQ gap and \
-         the same serving format.",
-        alpt_ev.auc
+        "\n(warm-start training from the same file: \
+         `cargo run --release -- train --resume {path}`)"
     );
     Ok(())
 }

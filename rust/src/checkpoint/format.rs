@@ -1,0 +1,250 @@
+//! On-disk checkpoint format primitives: magic/version constants, the
+//! section table, CRC32, and little-endian scalar codecs.
+//!
+//! Layout of a checkpoint file (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"ALPTCKPT"
+//! 8       4     u32    format version (1)
+//! 12      4     u32    section count
+//! 16      ...   sections, back to back
+//! ```
+//!
+//! Each section:
+//!
+//! ```text
+//! +0      4     u32    kind (SectionKind)
+//! +4      4     u32    index (shard number for Rows, 0 otherwise)
+//! +8      8     u64    payload length in bytes
+//! +16     4     u32    CRC32 (IEEE) of the payload
+//! +20     len   payload
+//! ```
+//!
+//! The CRC is checked on read before any payload byte is interpreted, so
+//! truncated or bit-flipped files fail fast with the offending section
+//! named. The metadata payload (kind `Meta`) is compact JSON produced by
+//! [`crate::util::json::Json`]; every other payload is raw bytes whose
+//! meaning the metadata pins down (packed embedding rows, f32 vectors,
+//! u64 counters).
+
+use anyhow::{bail, ensure, Result};
+
+/// File magic: 8 bytes at offset 0.
+pub const MAGIC: &[u8; 8] = b"ALPTCKPT";
+
+/// Current format version. Readers reject anything else.
+pub const VERSION: u32 = 1;
+
+/// Fixed byte size of the file header (magic + version + section count).
+pub const HEADER_BYTES: usize = 16;
+
+/// Fixed byte size of a section header (kind + index + len + crc).
+pub const SECTION_HEADER_BYTES: usize = 20;
+
+/// What a section's payload holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionKind {
+    /// Compact-JSON metadata: geometry, method, determinism key,
+    /// `Experiment` echo. Exactly one per file.
+    Meta,
+    /// One shard of raw row payloads (packed codes for int stores, f32 LE
+    /// for float-backed stores); `index` is the shard number.
+    Rows,
+    /// Per-row learned scalars (Δ for ALPT/LSQ, α for PACT), f32 LE.
+    Aux,
+    /// Flat dense-parameter vector, f32 LE.
+    Dense,
+    /// Adam state: `t` (u64) then `m` then `v` (each f32 LE × P).
+    Optimizer,
+    /// Trainer generator states: 4 × u64 (rng state/inc, mask state/inc).
+    Rng,
+    /// Training progress: epochs completed (u64), so `--resume`
+    /// continues the LR schedule and per-epoch shuffle seeds instead of
+    /// replaying them from epoch 1.
+    Progress,
+}
+
+impl SectionKind {
+    pub fn as_u32(self) -> u32 {
+        match self {
+            SectionKind::Meta => 1,
+            SectionKind::Rows => 2,
+            SectionKind::Aux => 3,
+            SectionKind::Dense => 4,
+            SectionKind::Optimizer => 5,
+            SectionKind::Rng => 6,
+            SectionKind::Progress => 7,
+        }
+    }
+
+    pub fn from_u32(v: u32) -> Option<Self> {
+        match v {
+            1 => Some(SectionKind::Meta),
+            2 => Some(SectionKind::Rows),
+            3 => Some(SectionKind::Aux),
+            4 => Some(SectionKind::Dense),
+            5 => Some(SectionKind::Optimizer),
+            6 => Some(SectionKind::Rng),
+            7 => Some(SectionKind::Progress),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::Meta => "meta",
+            SectionKind::Rows => "rows",
+            SectionKind::Aux => "aux",
+            SectionKind::Dense => "dense",
+            SectionKind::Optimizer => "optimizer",
+            SectionKind::Rng => "rng",
+            SectionKind::Progress => "progress",
+        }
+    }
+}
+
+// ------------------------------------------------------------------ crc32
+
+/// 256-entry table for reflected CRC-32 (polynomial 0xEDB88320) — the
+/// same parameters as zlib's `crc32`, so fixtures can be produced by any
+/// standard tool.
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 of `bytes` (init 0xFFFFFFFF, reflected, final xor).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        let idx = ((crc ^ b as u32) & 0xFF) as usize;
+        crc = (crc >> 8) ^ CRC_TABLE[idx];
+    }
+    !crc
+}
+
+// --------------------------------------------------------- scalar codecs
+
+/// Append a u32 little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a u64 little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append f32s little-endian.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Read a u32 at `pos`, advancing it.
+pub fn take_u32(src: &[u8], pos: &mut usize) -> Result<u32> {
+    let end = *pos + 4;
+    ensure!(end <= src.len(), "truncated file (u32 at byte {})", *pos);
+    let v = u32::from_le_bytes(src[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+/// Read a u64 at `pos`, advancing it.
+pub fn take_u64(src: &[u8], pos: &mut usize) -> Result<u64> {
+    let end = *pos + 8;
+    ensure!(end <= src.len(), "truncated file (u64 at byte {})", *pos);
+    let v = u64::from_le_bytes(src[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+/// Decode a whole payload as little-endian f32s.
+pub fn parse_f32s(src: &[u8]) -> Result<Vec<f32>> {
+    if src.len() % 4 != 0 {
+        bail!("f32 payload length {} is not a multiple of 4", src.len());
+    }
+    Ok(src
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the standard CRC-32 check value, shared with zlib.crc32
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"ALPTCKPT"), crc32(b"ALPTCKPT"));
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn crc32_sensitive_to_single_bitflip() {
+        let mut data = vec![0u8; 1024];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i * 31) as u8;
+        }
+        let base = crc32(&data);
+        data[517] ^= 0x10;
+        assert_ne!(base, crc32(&data));
+    }
+
+    #[test]
+    fn section_kind_roundtrip() {
+        for kind in [
+            SectionKind::Meta,
+            SectionKind::Rows,
+            SectionKind::Aux,
+            SectionKind::Dense,
+            SectionKind::Optimizer,
+            SectionKind::Rng,
+            SectionKind::Progress,
+        ] {
+            assert_eq!(SectionKind::from_u32(kind.as_u32()), Some(kind));
+        }
+        assert_eq!(SectionKind::from_u32(0), None);
+        assert_eq!(SectionKind::from_u32(8), None);
+    }
+
+    #[test]
+    fn scalar_codecs_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, 0x0123_4567_89AB_CDEF);
+        put_f32s(&mut buf, &[1.5, -0.25, f32::MIN_POSITIVE]);
+        let mut pos = 0;
+        assert_eq!(take_u32(&buf, &mut pos).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(take_u64(&buf, &mut pos).unwrap(), 0x0123_4567_89AB_CDEF);
+        let floats = parse_f32s(&buf[pos..]).unwrap();
+        assert_eq!(floats, vec![1.5, -0.25, f32::MIN_POSITIVE]);
+        // truncation errors
+        assert!(take_u32(&buf[..2], &mut 0).is_err());
+        assert!(take_u64(&buf[..7], &mut 0).is_err());
+        assert!(parse_f32s(&buf[..3]).is_err());
+    }
+}

@@ -1,0 +1,690 @@
+//! Versioned checkpoint & warm-start subsystem for embedding tables.
+//!
+//! The deploy half of the paper: training compresses the table (packed
+//! int codes + per-row step sizes), and this module makes that artifact
+//! *durable* — one binary file holding the store's raw packed rows
+//! (bit-identical, never dequantized), the learned per-row scalars, the
+//! DCN dense parameters, and the optimizer/trainer state needed to resume
+//! training exactly where it stopped.
+//!
+//! Structure:
+//!
+//! * [`format`] — magic/version constants, section kinds, CRC32, codecs;
+//! * [`writer`] — streaming [`CheckpointWriter`] (one section at a time);
+//! * [`reader`] — [`Checkpoint`]: full validation up front (magic,
+//!   version, bounds, per-section CRC) before any payload is used;
+//! * this module — the store-level API: [`save_store`] / [`load_store`]
+//!   plus the `Experiment` echo that lets a checkpoint rebuild its own
+//!   training configuration.
+//!
+//! **Determinism contract.** A checkpoint's bytes are a pure function of
+//! the store contents and the experiment — *never* of the thread count:
+//! rows are sharded into fixed [`SHARD_ROWS`]-row sections, and the
+//! metadata records the store's update-step counter (the `StreamKey`
+//! input), so a resumed trainer draws exactly the SR noise an
+//! uninterrupted run would have drawn. Save → load → save produces
+//! byte-identical files.
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::SectionKind;
+pub use reader::{Checkpoint, Section};
+pub use writer::CheckpointWriter;
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::{Experiment, Method};
+use crate::embedding::{build_store, EmbeddingStore};
+use crate::quant::GradScale;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use format::{parse_f32s, put_f32s, VERSION};
+
+/// Rows per `Rows` section. Fixed (not tied to the thread config) so the
+/// file layout is identical no matter how the writer was parallelized;
+/// also bounds the writer/reader shard buffer (64 Ki rows).
+pub const SHARD_ROWS: usize = 1 << 16;
+
+/// Serialize `store` (rows + aux scalars + metadata echoing `exp`) to
+/// `path`. Fails for stores that cannot be checkpointed (hashing,
+/// pruning).
+pub fn save_store(
+    path: &Path,
+    store: &dyn EmbeddingStore,
+    exp: &Experiment,
+) -> Result<()> {
+    let mut w = CheckpointWriter::create(path)?;
+    write_store_sections(&mut w, store, exp)?;
+    w.finish()
+}
+
+/// Write the store-owned sections (`Meta`, `Rows` shards, `Aux`) into an
+/// open writer. `Trainer::save_checkpoint` appends its own sections
+/// (dense / optimizer / rng) after this.
+pub fn write_store_sections(
+    w: &mut CheckpointWriter,
+    store: &dyn EmbeddingStore,
+    exp: &Experiment,
+) -> Result<()> {
+    let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
+        anyhow!("{} does not support checkpointing", store.method_name())
+    })?;
+    let n = store.n_features();
+    let n_shards = n.div_ceil(SHARD_ROWS);
+    let aux_len = store.aux_params().len();
+
+    let meta = Json::obj(vec![
+        ("aux_len", Json::num(aux_len as f64)),
+        ("d", Json::num(store.dim() as f64)),
+        ("experiment", experiment_to_json(exp)),
+        ("format", Json::str("alpt-checkpoint")),
+        ("method", Json::str(exp.method.key())),
+        ("n", Json::num(n as f64)),
+        ("n_shards", Json::num(n_shards as f64)),
+        ("row_bytes", Json::num(row_bytes as f64)),
+        ("shard_rows", Json::num(SHARD_ROWS as f64)),
+        ("step", Json::num(store.step_counter() as f64)),
+        ("version", Json::num(VERSION as f64)),
+    ]);
+    w.section(SectionKind::Meta, 0, meta.to_string().as_bytes())?;
+
+    // one reusable shard buffer bounds peak memory at SHARD_ROWS rows
+    let mut buf = vec![0u8; SHARD_ROWS.min(n.max(1)) * row_bytes];
+    for shard in 0..n_shards {
+        let lo = shard * SHARD_ROWS;
+        let rows = SHARD_ROWS.min(n - lo);
+        let dst = &mut buf[..rows * row_bytes];
+        store.save_rows(lo, dst)?;
+        w.section(SectionKind::Rows, shard as u32, dst)?;
+    }
+
+    if aux_len > 0 {
+        let mut aux_bytes = Vec::with_capacity(aux_len * 4);
+        put_f32s(&mut aux_bytes, store.aux_params());
+        w.section(SectionKind::Aux, 0, &aux_bytes)?;
+    }
+    Ok(())
+}
+
+/// Rebuild the store a checkpoint describes: construct it from the
+/// echoed `Experiment`, then overwrite every row payload, aux scalar and
+/// the update-step counter with the persisted values. The packed bytes
+/// are restored verbatim — no dequantize/requantize round-trip.
+pub fn load_store(
+    ckpt: &Checkpoint,
+) -> Result<(Box<dyn EmbeddingStore>, Experiment)> {
+    let exp = experiment_from_json(ckpt.meta.get("experiment")?)?;
+    let n = ckpt.meta_usize("n")?;
+    let d = ckpt.meta_usize("d")?;
+    ensure!(
+        ckpt.meta_str("method")? == exp.method.key(),
+        "metadata method disagrees with the experiment echo"
+    );
+
+    // throwaway generator: every value it seeds is overwritten below
+    let mut store =
+        build_store(&exp, n, d, &mut Pcg32::new(exp.seed, 0xC4C7))?;
+    load_store_into(store.as_mut(), ckpt)?;
+    Ok((store, exp))
+}
+
+/// Overwrite an existing store's rows, aux scalars and step counter from
+/// a validated checkpoint. The store's geometry must match the file —
+/// every mismatch (rows, dims, row payload width) errors before any
+/// state is touched. Used by `load_store` and by `Trainer::restore_from`
+/// (which loads straight into the trainer's own store instead of
+/// building a second table).
+pub fn load_store_into(
+    store: &mut dyn EmbeddingStore,
+    ckpt: &Checkpoint,
+) -> Result<()> {
+    let n = ckpt.meta_usize("n")?;
+    let d = ckpt.meta_usize("d")?;
+    ensure!(
+        n == store.n_features() && d == store.dim(),
+        "geometry mismatch: checkpoint is {n} x {d}, the {} store is \
+         {} x {}",
+        store.method_name(),
+        store.n_features(),
+        store.dim()
+    );
+    let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
+        anyhow!("{} does not support checkpointing", store.method_name())
+    })?;
+    ensure!(
+        row_bytes == ckpt.meta_usize("row_bytes")?,
+        "row payload width mismatch: checkpoint has {} bytes/row, the \
+         rebuilt {} store expects {} (bits or dim changed?)",
+        ckpt.meta_usize("row_bytes")?,
+        store.method_name(),
+        row_bytes
+    );
+    let shard_rows = ckpt.meta_usize("shard_rows")?;
+    ensure!(shard_rows > 0, "shard_rows must be positive");
+    let n_shards = ckpt.meta_usize("n_shards")?;
+    ensure!(
+        n_shards == n.div_ceil(shard_rows),
+        "inconsistent shard count: {n_shards} sections for {n} rows at \
+         {shard_rows} rows/shard"
+    );
+
+    for shard in 0..n_shards {
+        let lo = shard * shard_rows;
+        let rows = shard_rows.min(n - lo);
+        let sec = ckpt.section(SectionKind::Rows, shard as u32)?;
+        ensure!(
+            sec.payload.len() == rows * row_bytes,
+            "rows shard {shard}: payload is {} bytes, expected {}",
+            sec.payload.len(),
+            rows * row_bytes
+        );
+        store.load_rows(lo, sec.payload)?;
+    }
+
+    let aux_len = ckpt.meta_usize("aux_len")?;
+    if aux_len > 0 {
+        let sec = ckpt.section(SectionKind::Aux, 0)?;
+        let aux = parse_f32s(sec.payload)?;
+        ensure!(
+            aux.len() == aux_len,
+            "aux section holds {} values, metadata says {aux_len}",
+            aux.len()
+        );
+        store.load_aux_params(&aux)?;
+    } else {
+        ensure!(
+            store.aux_params().is_empty(),
+            "{} expects aux params but the checkpoint has none",
+            store.method_name()
+        );
+    }
+
+    store.set_step_counter(ckpt.meta_usize("step")? as u64);
+    Ok(())
+}
+
+/// The dense-parameter vector persisted by `Trainer::save_checkpoint`
+/// (also present in serving fixtures).
+pub fn dense_params(ckpt: &Checkpoint) -> Result<Vec<f32>> {
+    parse_f32s(ckpt.section(SectionKind::Dense, 0)?.payload)
+}
+
+// ------------------------------------------------------- experiment echo
+
+/// Serialize the full `Experiment` so a checkpoint can rebuild its own
+/// training configuration. f32 fields widen to f64 exactly and the JSON
+/// number round-trips the f64 exactly; u64 seeds are encoded as decimal
+/// strings (a JSON number only carries 53 bits) — so the echo is
+/// lossless for every representable value.
+pub fn experiment_to_json(exp: &Experiment) -> Json {
+    Json::obj(vec![
+        ("artifacts_dir", Json::str(&exp.artifacts_dir)),
+        ("bits", Json::num(exp.bits as f64)),
+        ("clip", Json::num(exp.clip as f64)),
+        ("dataset", Json::str(&exp.dataset)),
+        ("dropout_seed", Json::str(&exp.dropout_seed.to_string())),
+        ("epochs", Json::num(exp.epochs as f64)),
+        ("grad_scale", Json::str(exp.grad_scale.key())),
+        ("lr_delta", Json::num(exp.lr_delta as f64)),
+        ("lr_dense", Json::num(exp.lr_dense as f64)),
+        ("lr_emb", Json::num(exp.lr_emb as f64)),
+        ("lr_gamma", Json::num(exp.lr_gamma as f64)),
+        (
+            "lr_milestones",
+            Json::Array(
+                exp.lr_milestones
+                    .iter()
+                    .map(|&m| Json::num(m as f64))
+                    .collect(),
+            ),
+        ),
+        ("method", Json::str(exp.method.key())),
+        ("model", Json::str(&exp.model)),
+        ("n_samples", Json::num(exp.n_samples as f64)),
+        ("patience", Json::num(exp.patience as f64)),
+        ("seed", Json::str(&exp.seed.to_string())),
+        ("threads", Json::num(exp.threads as f64)),
+        ("use_runtime", Json::Bool(exp.use_runtime)),
+        ("vocab_scale", Json::num(exp.vocab_scale)),
+        ("wd_delta", Json::num(exp.wd_delta as f64)),
+        ("wd_emb", Json::num(exp.wd_emb as f64)),
+    ])
+}
+
+/// Inverse of [`experiment_to_json`].
+pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
+    let f32_of = |key: &str| -> Result<f32> {
+        Ok(v.get(key)?.as_f64()? as f32)
+    };
+    // u64 seeds are strings (full 64-bit range); integral JSON numbers
+    // are accepted too for hand-written files, exact below 2^53
+    let u64_of = |key: &str| -> Result<u64> {
+        match v.get(key)? {
+            Json::Str(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow!("{key}: bad u64 string {s:?}")),
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0
+                && *x <= 9.0e15 => Ok(*x as u64),
+            _ => Err(anyhow!("{key}: expected a u64 string")),
+        }
+    };
+    Ok(Experiment {
+        dataset: v.get("dataset")?.as_str()?.to_string(),
+        vocab_scale: v.get("vocab_scale")?.as_f64()?,
+        n_samples: v.get("n_samples")?.as_usize()?,
+        model: v.get("model")?.as_str()?.to_string(),
+        method: Method::parse(v.get("method")?.as_str()?)?,
+        bits: v.get("bits")?.as_usize()? as u32,
+        epochs: v.get("epochs")?.as_usize()?,
+        seed: u64_of("seed")?,
+        lr_dense: f32_of("lr_dense")?,
+        lr_emb: f32_of("lr_emb")?,
+        lr_delta: f32_of("lr_delta")?,
+        wd_emb: f32_of("wd_emb")?,
+        wd_delta: f32_of("wd_delta")?,
+        grad_scale: match v.get("grad_scale")?.as_str()? {
+            "one" => GradScale::One,
+            "inv_sqrt_dq" => GradScale::InvSqrtDq,
+            "inv_sqrt_bdq" => GradScale::InvSqrtBdq,
+            other => anyhow::bail!("unknown grad_scale {other:?}"),
+        },
+        clip: f32_of("clip")?,
+        lr_milestones: v.get("lr_milestones")?.usize_array()?,
+        lr_gamma: f32_of("lr_gamma")?,
+        dropout_seed: u64_of("dropout_seed")?,
+        patience: v.get("patience")?.as_usize()?,
+        artifacts_dir: v.get("artifacts_dir")?.as_str()?.to_string(),
+        use_runtime: v.get("use_runtime")?.as_bool()?,
+        threads: v.get("threads")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoundingMode;
+    use crate::coordinator::Trainer;
+    use crate::data::batcher::{Batch, Batcher};
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::embedding::testutil::hp;
+    use crate::util::prop::{check, Gen};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alpt_ckpt_mod_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn exp_for(method: Method, bits: u32, threads: usize) -> Experiment {
+        Experiment {
+            method,
+            bits,
+            threads,
+            use_runtime: false,
+            model: "tiny".into(),
+            ..Experiment::default()
+        }
+    }
+
+    /// Save `store`, load it back, save the loaded copy, and require the
+    /// two files to be byte-identical (the acceptance contract). Returns
+    /// the loaded store.
+    fn roundtrip(
+        name: &str,
+        store: &dyn EmbeddingStore,
+        exp: &Experiment,
+    ) -> Box<dyn EmbeddingStore> {
+        let p1 = tmp(&format!("{name}.1.ckpt"));
+        let p2 = tmp(&format!("{name}.2.ckpt"));
+        save_store(&p1, store, exp).unwrap();
+        let ck = Checkpoint::read(&p1).unwrap();
+        let (loaded, exp2) = load_store(&ck).unwrap();
+        save_store(&p2, loaded.as_ref(), &exp2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_eq!(b1, b2, "{name}: save→load→save changed bytes");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        loaded
+    }
+
+    fn gather_all(store: &dyn EmbeddingStore) -> Vec<f32> {
+        let ids: Vec<u32> = (0..store.n_features() as u32).collect();
+        let mut out = vec![0.0f32; ids.len() * store.dim()];
+        store.gather(&ids, &mut out);
+        out
+    }
+
+    #[test]
+    fn experiment_echo_is_lossless() {
+        let exp = Experiment {
+            method: Method::Alpt(RoundingMode::Dr),
+            bits: 4,
+            clip: 0.001,
+            lr_delta: 2e-5,
+            lr_milestones: vec![3, 5, 11],
+            use_runtime: false,
+            threads: 3,
+            // above 2^53: would corrupt through an f64 JSON number
+            seed: u64::MAX - 12,
+            dropout_seed: (1u64 << 53) + 1,
+            ..Experiment::default()
+        };
+        let back =
+            experiment_from_json(&experiment_to_json(&exp)).unwrap();
+        assert_eq!(back.method, exp.method);
+        assert_eq!(back.bits, exp.bits);
+        assert_eq!(back.clip.to_bits(), exp.clip.to_bits());
+        assert_eq!(back.lr_delta.to_bits(), exp.lr_delta.to_bits());
+        assert_eq!(back.lr_dense.to_bits(), exp.lr_dense.to_bits());
+        assert_eq!(back.wd_emb.to_bits(), exp.wd_emb.to_bits());
+        assert_eq!(back.lr_milestones, exp.lr_milestones);
+        assert_eq!(back.dataset, exp.dataset);
+        assert_eq!(back.model, exp.model);
+        assert_eq!(back.seed, exp.seed);
+        assert_eq!(back.dropout_seed, exp.dropout_seed);
+        assert_eq!(back.threads, exp.threads);
+        assert_eq!(back.grad_scale, exp.grad_scale);
+        assert!(!back.use_runtime);
+    }
+
+    #[test]
+    fn roundtrip_every_method_and_bit_width_at_odd_dims() {
+        // property: packed bytes and per-row scalars survive save→load
+        // bit-identically for every BitWidth, including ragged (odd-dim)
+        // rows, for every checkpointable store family.
+        check("checkpoint roundtrip", 16, |g: &mut Gen| {
+            let bits = *g.pick(&[2u32, 4, 8, 16]);
+            let method = *g.pick(&[
+                Method::Fp,
+                Method::Lpt(RoundingMode::Sr),
+                Method::Alpt(RoundingMode::Sr),
+                Method::Lsq,
+                Method::Pact,
+            ]);
+            let n = g.usize_in(40, 200);
+            let d = 2 * g.usize_in(1, 6) + 1; // odd on purpose
+            let exp = exp_for(method, bits, 1);
+            let mut rng = Pcg32::seeded(g.u32_any() as u64);
+            let store = build_store(&exp, n, d, &mut rng).unwrap();
+            let name = format!("prop_{bits}_{n}_{d}");
+            let loaded = roundtrip(&name, store.as_ref(), &exp);
+            let (a, b) = (gather_all(store.as_ref()), gather_all(loaded.as_ref()));
+            if a != b {
+                return Err(format!(
+                    "{method:?} {bits}bit n={n} d={d}: gather diverged"
+                ));
+            }
+            if loaded.train_bytes() != store.train_bytes() {
+                return Err("train_bytes diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loaded_store_continues_updates_bit_identically() {
+        // the step counter must survive: an update after load draws the
+        // same SR noise as an update on the original store.
+        for method in
+            [Method::Lpt(RoundingMode::Sr), Method::Alpt(RoundingMode::Sr)]
+        {
+            let exp = exp_for(method, 8, 1);
+            let (n, d) = (90usize, 5usize);
+            let mut rng = Pcg32::seeded(31);
+            let mut store = build_store(&exp, n, d, &mut rng).unwrap();
+            // advance the step counter past zero before saving
+            let ids: Vec<u32> = (0..n as u32).collect();
+            let mut what = vec![0.0f32; n * d];
+            let grads: Vec<f32> =
+                (0..n * d).map(|i| ((i % 7) as f32 - 3.0) * 0.01).collect();
+            let mut sp = |w: &[f32], dl: &[f32]| -> Result<Vec<f32>> {
+                let d = w.len() / dl.len();
+                Ok(dl
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| {
+                        crate::quant::lsq_delta_grad_row(
+                            &w[i * d..(i + 1) * d],
+                            x,
+                            crate::quant::BitWidth::B8,
+                            &vec![1.0f32; d],
+                        )
+                    })
+                    .collect())
+            };
+            let mut step_rng = Pcg32::seeded(77);
+            for _ in 0..2 {
+                store.gather(&ids, &mut what);
+                store
+                    .update(&ids, &what, &grads, &hp(), &mut step_rng,
+                            &mut sp)
+                    .unwrap();
+            }
+
+            let mut loaded =
+                roundtrip(&format!("step_{:?}", exp.method), store.as_ref(),
+                          &exp);
+            assert_eq!(loaded.step_counter(), store.step_counter());
+
+            // one more update on each side from identical generators
+            let mut rng_a = Pcg32::seeded(99);
+            let mut rng_b = Pcg32::seeded(99);
+            store.gather(&ids, &mut what);
+            let mut what_b = what.clone();
+            loaded.gather(&ids, &mut what_b);
+            assert_eq!(what, what_b);
+            store
+                .update(&ids, &what, &grads, &hp(), &mut rng_a, &mut sp)
+                .unwrap();
+            loaded
+                .update(&ids, &what_b, &grads, &hp(), &mut rng_b, &mut sp)
+                .unwrap();
+            assert_eq!(
+                gather_all(store.as_ref()),
+                gather_all(loaded.as_ref()),
+                "{method:?}: post-load update diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn sharding_spans_multiple_sections() {
+        // n > SHARD_ROWS forces a multi-shard file; d = 1 keeps it small.
+        let exp = exp_for(Method::Lpt(RoundingMode::Sr), 8, 0);
+        let n = SHARD_ROWS + 37;
+        let mut rng = Pcg32::seeded(5);
+        let store = build_store(&exp, n, 1, &mut rng).unwrap();
+        let path = tmp("multishard.ckpt");
+        save_store(&path, store.as_ref(), &exp).unwrap();
+        let ck = Checkpoint::read(&path).unwrap();
+        assert_eq!(ck.sections_of(SectionKind::Rows).len(), 2);
+        assert_eq!(ck.meta_usize("n_shards").unwrap(), 2);
+        let (loaded, _) = load_store(&ck).unwrap();
+        assert_eq!(gather_all(store.as_ref()), gather_all(loaded.as_ref()));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unsupported_stores_refuse_to_save() {
+        for method in [Method::Hashing, Method::Pruning] {
+            let exp = exp_for(method, 8, 1);
+            let mut rng = Pcg32::seeded(9);
+            let store = build_store(&exp, 50, 4, &mut rng).unwrap();
+            let path = tmp("unsupported.ckpt");
+            let err = save_store(&path, store.as_ref(), &exp).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("checkpoint"), "{method:?}: {msg}");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn wrong_geometry_is_rejected() {
+        // save at 8 bits, doctor the echo to 4 bits: row widths disagree
+        let exp = exp_for(Method::Lpt(RoundingMode::Sr), 8, 1);
+        let mut rng = Pcg32::seeded(13);
+        let store = build_store(&exp, 30, 6, &mut rng).unwrap();
+        let path = tmp("geometry.ckpt");
+        save_store(&path, store.as_ref(), &exp).unwrap();
+        // rebuild the file with a doctored (but correctly CRC-signed)
+        // meta section, so only the geometry check can fail
+        let ck = Checkpoint::read(&path).unwrap();
+        let meta_text =
+            ck.meta.to_string().replace("\"bits\":8", "\"bits\":4");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, meta_text.as_bytes()).unwrap();
+        for sec in ck.sections_of(SectionKind::Rows) {
+            w.section(SectionKind::Rows, sec.index, sec.payload).unwrap();
+        }
+        w.finish().unwrap();
+        let ck2 = Checkpoint::read(&path).unwrap();
+        let err = format!("{:#}", load_store(&ck2).unwrap_err());
+        assert!(err.contains("row payload width"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    // ------------------------------------------------- trainer save/resume
+
+    fn step_batches(ds: &crate::data::Dataset, b: usize) -> Vec<Batch> {
+        Batcher::new(ds, b, Some(11), true).collect()
+    }
+
+    #[test]
+    fn trainer_resume_continues_bit_identically() {
+        for method in
+            [Method::Lpt(RoundingMode::Sr), Method::Alpt(RoundingMode::Sr)]
+        {
+            let spec = SyntheticSpec::tiny(3);
+            let ds = generate(&spec, 2000);
+            let exp = Experiment {
+                method,
+                model: "tiny".into(),
+                use_runtime: false,
+                threads: 1,
+                epochs: 1,
+                lr_emb: 0.3,
+                lr_delta: 1e-4,
+                ..Experiment::default()
+            };
+            let n_features = ds.schema.n_features();
+            let batches = step_batches(&ds, 64);
+            assert!(batches.len() >= 8, "need 8 batches for the test");
+
+            let mut reference =
+                Trainer::new(exp.clone(), n_features).unwrap();
+            for b in &batches[..4] {
+                reference.step(b, 1).unwrap();
+            }
+            let path = tmp(&format!("resume_{method:?}.ckpt"));
+            reference.save_checkpoint(&path).unwrap();
+
+            // uninterrupted continuation
+            let mut ref_losses = Vec::new();
+            for b in &batches[4..8] {
+                ref_losses.push(reference.step(b, 1).unwrap().loss);
+            }
+
+            // resumed continuation must match bit for bit
+            let mut resumed = Trainer::resume(&path).unwrap();
+            assert_eq!(resumed.exp.method, exp.method);
+            let mut res_losses = Vec::new();
+            for b in &batches[4..8] {
+                res_losses.push(resumed.step(b, 1).unwrap().loss);
+            }
+            assert_eq!(ref_losses, res_losses, "{method:?}: losses diverged");
+            assert_eq!(
+                reference.dense, resumed.dense,
+                "{method:?}: dense params diverged"
+            );
+            assert_eq!(
+                gather_all(reference.store.as_ref()),
+                gather_all(resumed.store.as_ref()),
+                "{method:?}: embedding tables diverged"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn resume_continues_epoch_numbering() {
+        // the progress section: a resumed run must not replay epoch 1's
+        // LR schedule position or shuffle seeds
+        let spec = SyntheticSpec::tiny(9);
+        let ds = generate(&spec, 1200);
+        let (train, val, _) = ds.split((0.8, 0.1, 0.1), 1);
+        let exp = Experiment {
+            method: Method::Fp,
+            model: "tiny".into(),
+            use_runtime: false,
+            threads: 1,
+            epochs: 2,
+            patience: 0,
+            ..Experiment::default()
+        };
+        let mut tr = Trainer::new(exp, ds.schema.n_features()).unwrap();
+        let res = tr.train(&train, &val, false).unwrap();
+        assert_eq!(res.epochs_run, 2);
+        assert_eq!(tr.epochs_done, 2);
+        let path = tmp("epochs.ckpt");
+        tr.save_checkpoint(&path).unwrap();
+
+        let mut back = Trainer::resume(&path).unwrap();
+        assert_eq!(back.epochs_done, 2);
+        // epoch budget exhausted: nothing is replayed
+        let res2 = back.train(&train, &val, false).unwrap();
+        assert_eq!(res2.epochs_run, 0);
+        // a raised budget continues from epoch 3, not epoch 1
+        back.exp.epochs = 3;
+        let res3 = back.train(&train, &val, false).unwrap();
+        assert_eq!(res3.epochs_run, 1);
+        assert_eq!(res3.history[0].epoch, 3);
+        assert_eq!(back.epochs_done, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trainer_checkpoint_save_load_save_is_byte_identical() {
+        let spec = SyntheticSpec::tiny(5);
+        let ds = generate(&spec, 1500);
+        let exp = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            model: "tiny".into(),
+            use_runtime: false,
+            threads: 1,
+            epochs: 1,
+            ..Experiment::default()
+        };
+        let mut tr = Trainer::new(exp, ds.schema.n_features()).unwrap();
+        for b in &step_batches(&ds, 64)[..3] {
+            tr.step(b, 1).unwrap();
+        }
+        let p1 = tmp("trainer.1.ckpt");
+        let p2 = tmp("trainer.2.ckpt");
+        tr.save_checkpoint(&p1).unwrap();
+        let resumed = Trainer::resume(&p1).unwrap();
+        resumed.save_checkpoint(&p2).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "trainer save→resume→save changed bytes"
+        );
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn fp_store_checkpoint_keeps_serving_outputs() {
+        // float path: gather after load is bit-identical, so serving from
+        // a warm-started FP model is indistinguishable from the original.
+        let exp = exp_for(Method::Fp, 8, 1);
+        let mut rng = Pcg32::seeded(21);
+        let store = build_store(&exp, 120, 8, &mut rng).unwrap();
+        let loaded = roundtrip("fp_serve", store.as_ref(), &exp);
+        assert_eq!(gather_all(store.as_ref()), gather_all(loaded.as_ref()));
+    }
+}

@@ -1,0 +1,312 @@
+//! Checkpoint reader: parses and validates the whole file up front.
+//!
+//! Validation order is chosen so corrupt files fail fast with a precise
+//! message: magic → version → section table bounds → per-section CRC →
+//! metadata JSON. No payload byte is interpreted before its CRC passes.
+//!
+//! Payloads are *not* copied out of the file buffer: sections record
+//! byte ranges into the single owned buffer, and [`Checkpoint::section`]
+//! hands out borrowed slices — peak memory while loading is one file
+//! image, matching the writer's shard-bounded design.
+
+use std::ops::Range;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::format::{
+    crc32, take_u32, take_u64, SectionKind, HEADER_BYTES, MAGIC,
+    SECTION_HEADER_BYTES, VERSION,
+};
+use crate::util::json::Json;
+
+/// One decoded section: a borrowed view into the checkpoint's buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Section<'a> {
+    pub kind: SectionKind,
+    pub index: u32,
+    pub payload: &'a [u8],
+}
+
+/// Section table entry (kind, index, payload range into the buffer).
+#[derive(Clone, Debug)]
+struct SectionEntry {
+    kind: SectionKind,
+    index: u32,
+    payload: Range<usize>,
+}
+
+/// A fully validated checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub version: u32,
+    /// Parsed metadata (the `Meta` section's JSON).
+    pub meta: Json,
+    bytes: Vec<u8>,
+    sections: Vec<SectionEntry>,
+}
+
+impl Checkpoint {
+    /// Read and validate `path`.
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(bytes)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse a checkpoint, taking ownership of its raw bytes (payload
+    /// access borrows from this buffer — no copies).
+    pub fn parse(bytes: Vec<u8>) -> Result<Checkpoint> {
+        ensure!(
+            bytes.len() >= HEADER_BYTES,
+            "not a checkpoint: {} bytes is shorter than the header",
+            bytes.len()
+        );
+        if &bytes[..8] != MAGIC {
+            bail!("bad magic: not an ALPT checkpoint file");
+        }
+        let mut pos = 8;
+        let version = take_u32(&bytes, &mut pos)?;
+        if version != VERSION {
+            bail!(
+                "unsupported checkpoint version {version} (this build \
+                 reads version {VERSION})"
+            );
+        }
+        let n_sections = take_u32(&bytes, &mut pos)? as usize;
+
+        let mut sections = Vec::with_capacity(n_sections.min(1024));
+        for s in 0..n_sections {
+            ensure!(
+                pos + SECTION_HEADER_BYTES <= bytes.len(),
+                "truncated file: section {s} header runs past EOF"
+            );
+            let kind_raw = take_u32(&bytes, &mut pos)?;
+            let kind = SectionKind::from_u32(kind_raw).ok_or_else(|| {
+                anyhow::anyhow!("section {s}: unknown kind {kind_raw}")
+            })?;
+            let index = take_u32(&bytes, &mut pos)?;
+            let len64 = take_u64(&bytes, &mut pos)?;
+            let crc_want = take_u32(&bytes, &mut pos)?;
+            // len is untrusted: guard the cast and the end-offset sum so a
+            // crafted header errors instead of wrapping into a panic
+            let len = usize::try_from(len64).ok().filter(|&l| {
+                pos.checked_add(l).is_some_and(|end| end <= bytes.len())
+            });
+            let Some(len) = len else {
+                bail!(
+                    "truncated file: section {s} ({}/{index}) payload of \
+                     {len64} bytes runs past EOF",
+                    kind.name()
+                );
+            };
+            let payload = pos..pos + len;
+            pos += len;
+            let crc_got = crc32(&bytes[payload.clone()]);
+            ensure!(
+                crc_got == crc_want,
+                "CRC mismatch in section {s} ({}/{index}): file is \
+                 corrupt (stored {crc_want:#010x}, computed {crc_got:#010x})",
+                kind.name()
+            );
+            sections.push(SectionEntry { kind, index, payload });
+        }
+        ensure!(
+            pos == bytes.len(),
+            "trailing garbage: {} bytes past the last section",
+            bytes.len() - pos
+        );
+
+        let metas: Vec<&SectionEntry> = sections
+            .iter()
+            .filter(|s| s.kind == SectionKind::Meta)
+            .collect();
+        ensure!(
+            metas.len() == 1,
+            "expected exactly one meta section, found {}",
+            metas.len()
+        );
+        let meta_text = std::str::from_utf8(&bytes[metas[0].payload.clone()])
+            .context("meta section is not UTF-8")?;
+        let meta = Json::parse(meta_text).context("meta section JSON")?;
+
+        Ok(Checkpoint { version, meta, bytes, sections })
+    }
+
+    fn view(&self, entry: &SectionEntry) -> Section<'_> {
+        Section {
+            kind: entry.kind,
+            index: entry.index,
+            payload: &self.bytes[entry.payload.clone()],
+        }
+    }
+
+    /// The section of `kind` with `index`, or an error naming it.
+    pub fn section(
+        &self,
+        kind: SectionKind,
+        index: u32,
+    ) -> Result<Section<'_>> {
+        self.opt_section(kind, index).ok_or_else(|| {
+            anyhow::anyhow!(
+                "checkpoint has no {}/{index} section",
+                kind.name()
+            )
+        })
+    }
+
+    /// The section of `kind` with `index`, if present.
+    pub fn opt_section(
+        &self,
+        kind: SectionKind,
+        index: u32,
+    ) -> Option<Section<'_>> {
+        self.sections
+            .iter()
+            .find(|s| s.kind == kind && s.index == index)
+            .map(|s| self.view(s))
+    }
+
+    /// All sections of `kind`, in file order.
+    pub fn sections_of(&self, kind: SectionKind) -> Vec<Section<'_>> {
+        self.sections
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| self.view(s))
+            .collect()
+    }
+
+    /// Convenience: a required integer metadata field.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("checkpoint meta key {key:?}"))
+    }
+
+    /// Convenience: a required string metadata field.
+    pub fn meta_str(&self, key: &str) -> Result<&str> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("checkpoint meta key {key:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::writer::CheckpointWriter;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alpt_ckpt_reader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_minimal(path: &std::path::Path) {
+        let mut w = CheckpointWriter::create(path).unwrap();
+        w.section(SectionKind::Meta, 0, br#"{"n":4,"d":2}"#).unwrap();
+        w.section(SectionKind::Rows, 0, &[9, 8, 7, 6, 5]).unwrap();
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn roundtrips_sections_and_meta() {
+        let path = tmp("ok.ckpt");
+        write_minimal(&path);
+        let ck = Checkpoint::read(&path).unwrap();
+        assert_eq!(ck.version, VERSION);
+        assert_eq!(ck.meta_usize("n").unwrap(), 4);
+        assert_eq!(ck.meta_usize("d").unwrap(), 2);
+        assert_eq!(
+            ck.section(SectionKind::Rows, 0).unwrap().payload,
+            &[9, 8, 7, 6, 5]
+        );
+        assert!(ck.opt_section(SectionKind::Dense, 0).is_none());
+        assert!(ck.section(SectionKind::Dense, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("magic.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        let err = format!("{:#}", Checkpoint::read(&path).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let path = tmp("version.ckpt");
+        write_minimal(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 0xFE; // version -> 0x...FE
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::read(&path).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let path = tmp("crc.ckpt");
+        write_minimal(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1; // inside the Rows payload
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::read(&path).unwrap_err());
+        assert!(err.contains("CRC"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let path = tmp("trunc.ckpt");
+        write_minimal(&path);
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 3, 30, HEADER_BYTES + 6, 10, 3] {
+            let err = format!(
+                "{:#}",
+                Checkpoint::parse(bytes[..cut].to_vec()).unwrap_err()
+            );
+            assert!(
+                err.contains("truncated")
+                    || err.contains("shorter")
+                    || err.contains("meta"),
+                "cut={cut}: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_overflowing_section_length() {
+        // a crafted header whose u64 length would wrap `pos + len` must
+        // error cleanly, not panic on a slice index
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&SectionKind::Rows.as_u32().to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let err = format!("{:#}", Checkpoint::parse(bytes).unwrap_err());
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_meta() {
+        let path = tmp("nometa.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Rows, 0, &[1]).unwrap();
+        w.finish().unwrap();
+        let err = format!("{:#}", Checkpoint::read(&path).unwrap_err());
+        assert!(err.contains("meta"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,116 @@
+//! Streaming checkpoint writer.
+//!
+//! Sections are appended one at a time; the section count in the header
+//! is patched in by [`CheckpointWriter::finish`], so the writer never has
+//! to buffer more than one section payload. Callers that serialize big
+//! tables reuse one shard-sized buffer across [`CheckpointWriter::section`]
+//! calls (see `checkpoint::write_store_sections`), keeping peak memory
+//! bounded by the shard size rather than the table size.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::format::{crc32, SectionKind, MAGIC, VERSION};
+
+/// Writes one checkpoint file section by section.
+pub struct CheckpointWriter {
+    out: BufWriter<File>,
+    n_sections: u32,
+}
+
+impl CheckpointWriter {
+    /// Create `path` (truncating any existing file) and write the header
+    /// with a zero section count placeholder.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u32.to_le_bytes())?; // patched by finish()
+        Ok(Self { out, n_sections: 0 })
+    }
+
+    /// Append one section (header + CRC + payload).
+    pub fn section(
+        &mut self,
+        kind: SectionKind,
+        index: u32,
+        payload: &[u8],
+    ) -> Result<()> {
+        self.out.write_all(&kind.as_u32().to_le_bytes())?;
+        self.out.write_all(&index.to_le_bytes())?;
+        self.out.write_all(&(payload.len() as u64).to_le_bytes())?;
+        self.out.write_all(&crc32(payload).to_le_bytes())?;
+        self.out.write_all(payload)?;
+        self.n_sections += 1;
+        Ok(())
+    }
+
+    /// Patch the section count into the header and flush everything.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        let count = self.n_sections;
+        let file = self.out.get_mut();
+        file.seek(SeekFrom::Start(12))?;
+        file.write_all(&count.to_le_bytes())?;
+        file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::HEADER_BYTES;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alpt_ckpt_writer_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn header_and_count_patched() {
+        let path = tmp("basic.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{}").unwrap();
+        w.section(SectionKind::Rows, 3, &[1, 2, 3, 4]).unwrap();
+        w.finish().unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC);
+        assert_eq!(
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+            VERSION
+        );
+        assert_eq!(u32::from_le_bytes(bytes[12..16].try_into().unwrap()), 2);
+        // first section starts right after the header
+        assert_eq!(
+            u32::from_le_bytes(
+                bytes[HEADER_BYTES..HEADER_BYTES + 4].try_into().unwrap()
+            ),
+            SectionKind::Meta.as_u32()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rewrite_truncates_previous_content() {
+        let path = tmp("truncate.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Dense, 0, &[0u8; 256]).unwrap();
+        w.finish().unwrap();
+        let long = std::fs::metadata(&path).unwrap().len();
+
+        let w = CheckpointWriter::create(&path).unwrap();
+        w.finish().unwrap();
+        let short = std::fs::metadata(&path).unwrap().len();
+        assert!(short < long);
+        assert_eq!(short as usize, HEADER_BYTES);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -52,6 +52,22 @@ impl Method {
         })
     }
 
+    /// Stable config/CLI token for this method — the inverse of
+    /// [`Method::parse`], used by the checkpoint metadata echo.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Fp => "fp",
+            Method::Lpt(RoundingMode::Sr) => "lpt-sr",
+            Method::Lpt(RoundingMode::Dr) => "lpt-dr",
+            Method::Alpt(RoundingMode::Sr) => "alpt-sr",
+            Method::Alpt(RoundingMode::Dr) => "alpt-dr",
+            Method::Lsq => "lsq",
+            Method::Pact => "pact",
+            Method::Hashing => "hashing",
+            Method::Pruning => "pruning",
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Method::Fp => "FP",
@@ -258,6 +274,23 @@ mod tests {
             assert_eq!(Method::parse(s).unwrap(), m, "{s}");
         }
         assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn method_key_inverts_parse() {
+        for m in [
+            Method::Fp,
+            Method::Lpt(RoundingMode::Sr),
+            Method::Lpt(RoundingMode::Dr),
+            Method::Alpt(RoundingMode::Sr),
+            Method::Alpt(RoundingMode::Dr),
+            Method::Lsq,
+            Method::Pact,
+            Method::Hashing,
+            Method::Pruning,
+        ] {
+            assert_eq!(Method::parse(m.key()).unwrap(), m);
+        }
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //!                                                  through train_fq)
 //! ```
 
+pub mod serve;
 pub mod sharding;
 pub mod trainer;
 
+pub use serve::{serve_checkpoint, ServeReport};
 pub use sharding::{CommStats, ShardedStore};
-pub use trainer::{EpochReport, EvalReport, TrainResult, Trainer};
+pub use trainer::{
+    builtin_entry, EpochReport, EvalReport, TrainResult, Trainer,
+};

@@ -1,0 +1,217 @@
+//! Checkpoint-backed serving: one shared load → validate → batched
+//! inference loop used by both the `alpt serve` subcommand and
+//! `examples/serve.rs`, so the two entry points cannot drift apart.
+//!
+//! The loop is strictly inference-only: gather de-quantized rows from
+//! the restored store, run the Rust DCN forward, accumulate metrics and
+//! per-batch latencies. No training step, no PJRT requirement.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use super::trainer::builtin_entry;
+use crate::checkpoint::{dense_params, load_store, Checkpoint};
+use crate::config::Experiment;
+use crate::data::batcher::Batcher;
+use crate::data::synthetic::{generate, SyntheticSpec};
+use crate::embedding::fp_bytes;
+use crate::metrics::EvalAccumulator;
+use crate::nn::Dcn;
+
+/// Everything a caller needs to report on a serving run.
+pub struct ServeReport {
+    pub method: &'static str,
+    pub n_features: usize,
+    pub dim: usize,
+    /// Bytes to ship the restored table for inference.
+    pub infer_bytes: usize,
+    /// The fp32 baseline for the same geometry.
+    pub fp_bytes: usize,
+    pub batch_size: usize,
+    pub requests: usize,
+    pub auc: f64,
+    pub logloss: f64,
+    /// Per-batch latencies in milliseconds (never empty).
+    pub latencies_ms: Vec<f64>,
+    /// Checkpoint load + validation time in milliseconds.
+    pub load_ms: f64,
+    /// One-time synthetic request-stream regeneration in milliseconds
+    /// (not part of per-request serving cost).
+    pub data_ms: f64,
+    /// The experiment echo the checkpoint carried.
+    pub exp: Experiment,
+}
+
+impl ServeReport {
+    pub fn batches(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.latencies_ms.iter().sum()
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / (self.total_ms() / 1e3).max(1e-9)
+    }
+}
+
+/// Load `path`, rebuild the request stream its experiment echo
+/// describes, and serve up to `max_batches` test batches through the
+/// Rust nn path. Errors (rather than panicking) on geometry mismatches
+/// and on runs that produce zero batches.
+pub fn serve_checkpoint(
+    path: &Path,
+    max_batches: usize,
+) -> Result<ServeReport> {
+    let t0 = Instant::now();
+    let ckpt = Checkpoint::read(path)?;
+    let (store, exp) = load_store(&ckpt)?;
+    let dense = dense_params(&ckpt)?;
+    let entry = builtin_entry(&exp.model)?;
+    ensure!(
+        dense.len() == entry.n_params,
+        "checkpoint holds {} dense params, model {:?} expects {}",
+        dense.len(),
+        exp.model,
+        entry.n_params
+    );
+    ensure!(
+        store.dim() == entry.emb_dim,
+        "checkpoint embedding dim {} does not match model {:?} (dim {})",
+        store.dim(),
+        exp.model,
+        entry.emb_dim
+    );
+    let dcn = Dcn::new(entry.dcn_config());
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // the same dataset spec, seed, vocab scaling and split the training
+    // run used (synthetic data: the request stream is regenerated, an
+    // O(n_samples) one-time setup reported separately as `data_ms`)
+    let spec =
+        SyntheticSpec::for_dataset(&exp.dataset, exp.seed, exp.vocab_scale)?;
+    let t1 = Instant::now();
+    let ds = generate(&spec, exp.n_samples);
+    ensure!(
+        ds.schema.n_features() == store.n_features(),
+        "dataset {} has {} features, checkpointed table has {}",
+        spec.name,
+        ds.schema.n_features(),
+        store.n_features()
+    );
+    let (_, _, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
+    let data_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    let (umax, d, b) = (entry.umax, entry.emb_dim, entry.batch);
+    let mut emb = vec![0.0f32; umax * d];
+    let mut acc = EvalAccumulator::new();
+    let mut latencies = Vec::new();
+    for batch in Batcher::new(&test, b, None, false).take(max_batches) {
+        let t = Instant::now();
+        let n_u = batch.unique.len();
+        emb[n_u * d..].fill(0.0);
+        store.gather(&batch.unique, &mut emb[..n_u * d]);
+        let logits = dcn.infer(&emb, &batch.idx, &dense);
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        acc.push(&logits, &batch.labels, batch.valid);
+    }
+    if latencies.is_empty() {
+        bail!("no test batches to serve (max_batches or split too small)");
+    }
+
+    Ok(ServeReport {
+        method: store.method_name(),
+        n_features: store.n_features(),
+        dim: store.dim(),
+        infer_bytes: store.infer_bytes(),
+        fp_bytes: fp_bytes(store.n_features(), store.dim()),
+        batch_size: b,
+        requests: acc.len(),
+        auc: acc.auc(),
+        logloss: acc.logloss(),
+        latencies_ms: latencies,
+        load_ms,
+        data_ms,
+        exp,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::save_store;
+    use crate::config::Method;
+    use crate::coordinator::Trainer;
+    use crate::data::Schema;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alpt_serve_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn tiny_trained_ckpt(name: &str) -> std::path::PathBuf {
+        let exp = Experiment {
+            method: Method::Lpt(crate::config::RoundingMode::Sr),
+            model: "tiny".into(),
+            dataset: "tiny".into(),
+            n_samples: 2000,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let spec = SyntheticSpec::tiny(exp.seed);
+        let n = Schema::new(spec.vocabs.clone()).n_features();
+        let tr = Trainer::new(exp, n).unwrap();
+        let path = tmp(name);
+        tr.save_checkpoint(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn serves_from_a_trainer_checkpoint() {
+        let path = tiny_trained_ckpt("serve_ok.ckpt");
+        let report = serve_checkpoint(&path, 4).unwrap();
+        assert_eq!(report.method, "LPT(SR)");
+        assert_eq!(report.batches(), 4);
+        // requests counts un-padded samples only
+        assert!(
+            report.requests > 0
+                && report.requests <= 4 * report.batch_size,
+            "requests={}",
+            report.requests
+        );
+        assert!(report.auc.is_finite() && report.logloss.is_finite());
+        assert!(report.infer_bytes < report.fp_bytes);
+        assert!(report.requests_per_sec() > 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zero_batches_is_an_error_not_a_panic() {
+        let path = tiny_trained_ckpt("serve_zero.ckpt");
+        let err = format!("{:#}", serve_checkpoint(&path, 0).unwrap_err());
+        assert!(err.contains("no test batches"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_only_checkpoint_without_dense_is_rejected() {
+        let exp = Experiment {
+            method: Method::Fp,
+            use_runtime: false,
+            ..Experiment::default()
+        };
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let store =
+            crate::embedding::build_store(&exp, 40, 8, &mut rng).unwrap();
+        let path = tmp("no_dense.ckpt");
+        save_store(&path, store.as_ref(), &exp).unwrap();
+        let err = format!("{:#}", serve_checkpoint(&path, 1).unwrap_err());
+        assert!(err.contains("dense"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -5,6 +5,9 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::checkpoint::{
+    self, Checkpoint, CheckpointWriter, SectionKind,
+};
 use crate::config::Experiment;
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::Dataset;
@@ -81,6 +84,10 @@ pub struct Trainer {
     sp_w_pad: Vec<f32>,
     sp_d_pad: Vec<f32>,
     grad_scale_val: f32,
+    /// Epochs already completed (nonzero after a resume): `train`
+    /// continues at `epochs_done + 1`, so the LR schedule and per-epoch
+    /// shuffle seeds pick up where the saved run stopped.
+    pub epochs_done: usize,
 }
 
 impl Trainer {
@@ -137,6 +144,7 @@ impl Trainer {
             sp_w_pad: vec![0.0; umax * d],
             sp_d_pad: vec![1.0; umax],
             grad_scale_val,
+            epochs_done: 0,
         })
     }
 
@@ -432,7 +440,11 @@ impl Trainer {
             (0.0f64, f64::INFINITY, 0usize);
         let mut bad_epochs = 0usize;
 
-        for epoch in 1..=self.exp.epochs {
+        // a resumed trainer picks up the epoch numbering where it left
+        // off — LR decay and per-epoch shuffle seeds continue, they are
+        // not replayed from epoch 1
+        let start_epoch = self.epochs_done + 1;
+        for epoch in start_epoch..=self.exp.epochs {
             let e0 = Instant::now();
             let seed = self.exp.seed ^ (epoch as u64).wrapping_mul(0x9E37);
             let batches: Vec<Batch> =
@@ -467,6 +479,7 @@ impl Trainer {
                 );
             }
             history.push(report);
+            self.epochs_done = epoch;
             if ev.auc > best_auc {
                 best_auc = ev.auc;
                 best_logloss = ev.logloss;
@@ -503,11 +516,135 @@ impl Trainer {
     pub fn uses_runtime(&self) -> bool {
         self.runtime.is_some()
     }
+
+    // ------------------------------------------------------ checkpointing
+
+    /// Serialize the full training state to one checkpoint file: the
+    /// store's packed rows + per-row scalars (via the `checkpoint`
+    /// subsystem), the dense parameters, the Adam moments, and both
+    /// generator states. A trainer resumed from the file continues
+    /// *bit-identically* to an uninterrupted run — see the `StreamKey`
+    /// determinism contract in `util::rng`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut w = CheckpointWriter::create(path)?;
+        checkpoint::write_store_sections(&mut w, self.store.as_ref(),
+                                         &self.exp)?;
+
+        let mut buf = Vec::with_capacity(self.dense.len() * 4);
+        checkpoint::format::put_f32s(&mut buf, &self.dense);
+        w.section(SectionKind::Dense, 0, &buf)?;
+
+        let (m, v, t) = self.adam.state();
+        buf.clear();
+        checkpoint::format::put_u64(&mut buf, t);
+        checkpoint::format::put_f32s(&mut buf, m);
+        checkpoint::format::put_f32s(&mut buf, v);
+        w.section(SectionKind::Optimizer, 0, &buf)?;
+
+        buf.clear();
+        let (rs, ri) = self.rng.state();
+        let (ms, mi) = self.mask_rng.state();
+        for x in [rs, ri, ms, mi] {
+            checkpoint::format::put_u64(&mut buf, x);
+        }
+        w.section(SectionKind::Rng, 0, &buf)?;
+
+        buf.clear();
+        checkpoint::format::put_u64(&mut buf, self.epochs_done as u64);
+        w.section(SectionKind::Progress, 0, &buf)?;
+        w.finish()
+    }
+
+    /// Rebuild a trainer from a checkpoint written by
+    /// [`Trainer::save_checkpoint`]. The experiment configuration comes
+    /// from the file's metadata echo; every piece of mutable training
+    /// state is then overwritten with the persisted values.
+    pub fn resume(path: &Path) -> Result<Trainer> {
+        let ckpt = Checkpoint::read(path)?;
+        let exp =
+            checkpoint::experiment_from_json(ckpt.meta.get("experiment")?)?;
+        let n_features = ckpt.meta_usize("n")?;
+        let mut trainer = Trainer::new(exp, n_features)?;
+        trainer.restore_from(&ckpt)?;
+        Ok(trainer)
+    }
+
+    /// Overwrite this trainer's mutable state from a validated
+    /// checkpoint (store rows/scalars/step, dense params, Adam moments,
+    /// generator states). The checkpoint must describe this trainer's
+    /// configuration: method, store geometry, and every trainer-state
+    /// section are parsed and validated *before* any trainer state is
+    /// mutated, and the rows then load straight into the existing store —
+    /// no second table is ever built. If an error does escape after that
+    /// point (e.g. a row payload failing the packed-padding invariant
+    /// mid-load), discard the trainer rather than keep using it.
+    pub fn restore_from(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        ensure!(
+            ckpt.meta_str("method")? == self.exp.method.key(),
+            "checkpoint method {:?} does not match this trainer's {:?}",
+            ckpt.meta_str("method")?,
+            self.exp.method.key()
+        );
+
+        // parse + validate every trainer-state section up front
+        let dense = checkpoint::dense_params(ckpt)?;
+        ensure!(
+            dense.len() == self.dense.len(),
+            "checkpoint holds {} dense params, model {} expects {}",
+            dense.len(),
+            self.entry.name,
+            self.dense.len()
+        );
+
+        let opt = ckpt.section(SectionKind::Optimizer, 0)?.payload;
+        ensure!(
+            opt.len() == 8 + dense.len() * 8,
+            "optimizer section is {} bytes, expected {}",
+            opt.len(),
+            8 + dense.len() * 8
+        );
+        let mut pos = 0usize;
+        let t = checkpoint::format::take_u64(opt, &mut pos)?;
+        let moments = checkpoint::format::parse_f32s(&opt[pos..])?;
+
+        let rng_payload = ckpt.section(SectionKind::Rng, 0)?.payload;
+        ensure!(
+            rng_payload.len() == 32,
+            "rng section is {} bytes, expected 32",
+            rng_payload.len()
+        );
+        let mut pos = 0usize;
+        let rs = checkpoint::format::take_u64(rng_payload, &mut pos)?;
+        let ri = checkpoint::format::take_u64(rng_payload, &mut pos)?;
+        let ms = checkpoint::format::take_u64(rng_payload, &mut pos)?;
+        let mi = checkpoint::format::take_u64(rng_payload, &mut pos)?;
+
+        let progress = ckpt.section(SectionKind::Progress, 0)?.payload;
+        ensure!(
+            progress.len() == 8,
+            "progress section is {} bytes, expected 8",
+            progress.len()
+        );
+        let epochs_done =
+            checkpoint::format::take_u64(progress, &mut 0usize)? as usize;
+
+        // all sections validated — now mutate
+        checkpoint::load_store_into(self.store.as_mut(), ckpt)?;
+        let (m, v) = moments.split_at(dense.len());
+        self.adam.load_state(m, v, t)?;
+        self.dense = dense;
+        self.rng = Pcg32::from_state(rs, ri);
+        self.mask_rng = Pcg32::from_state(ms, mi);
+        self.epochs_done = epochs_done;
+        Ok(())
+    }
 }
 
 /// Static geometries for the PJRT-free path (must mirror
-/// `python/compile/configs.py`).
-fn builtin_entry(model: &str) -> Result<ModelEntry> {
+/// `python/compile/configs.py`). Public so runtime-free consumers (the
+/// serve example / `alpt serve`) can rebuild a model's geometry from a
+/// checkpoint's `model` echo alone.
+pub fn builtin_entry(model: &str) -> Result<ModelEntry> {
     use crate::nn::DcnConfig;
     let (cfg, dropout) = match model {
         "tiny" => (DcnConfig::tiny(), 0.0),

@@ -100,6 +100,28 @@ impl SyntheticSpec {
         }
     }
 
+    /// Resolve a dataset name (+ Table-3 vocab scaling) to its spec —
+    /// the single registry shared by the CLI (`alpt train`/`gen`),
+    /// checkpoint serving and warm-start, so the feature space a
+    /// checkpoint echo describes is rebuilt identically everywhere.
+    pub fn for_dataset(
+        dataset: &str,
+        seed: u64,
+        vocab_scale: f64,
+    ) -> anyhow::Result<SyntheticSpec> {
+        let spec = match dataset {
+            "avazu" => SyntheticSpec::avazu(seed),
+            "criteo" => SyntheticSpec::criteo(seed),
+            "tiny" => SyntheticSpec::tiny(seed),
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        };
+        Ok(if (vocab_scale - 1.0).abs() > 1e-9 {
+            spec.scale_vocabs(vocab_scale)
+        } else {
+            spec
+        })
+    }
+
     /// Scale every vocabulary by `factor` (Table 3's "more categorical
     /// features" setting: lower OOV threshold ⇒ larger vocab).
     pub fn scale_vocabs(mut self, factor: f64) -> Self {

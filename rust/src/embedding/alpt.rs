@@ -310,6 +310,41 @@ impl EmbeddingStore for AlptStore {
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.codes.row_bytes())
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        self.codes.save_raw_rows(lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        self.codes.load_raw_rows(lo, src)
+    }
+
+    fn aux_params(&self) -> &[f32] {
+        &self.delta
+    }
+
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            aux.len() == self.n,
+            "ALPT delta count mismatch: {} vs {} rows",
+            aux.len(),
+            self.n
+        );
+        self.delta.copy_from_slice(aux);
+        Ok(())
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.step
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        self.step = step;
+    }
 }
 
 #[cfg(test)]

@@ -88,6 +88,18 @@ impl EmbeddingStore for FpStore {
     fn infer_bytes(&self) -> usize {
         self.table.len() * 4
     }
+
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.d * 4)
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        super::save_f32_rows(&self.table, self.n, self.d, lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        super::load_f32_rows(&mut self.table, self.n, self.d, lo, src)
+    }
 }
 
 #[cfg(test)]

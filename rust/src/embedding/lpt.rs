@@ -204,6 +204,26 @@ impl EmbeddingStore for LptStore {
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.codes.row_bytes())
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        self.codes.save_raw_rows(lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        self.codes.load_raw_rows(lo, src)
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.step
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        self.step = step;
+    }
 }
 
 /// Uniqueness check gating the sharded update path: duplicate rows may

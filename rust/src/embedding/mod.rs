@@ -33,7 +33,7 @@ pub use qat::{LsqStore, PactStore};
 use crate::config::{Experiment, Method, RoundingMode};
 use crate::quant::Rounding;
 use crate::util::rng::Pcg32;
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 /// Per-step hyperparameters handed to `update` (LR schedule applied by the
 /// trainer via `lr_scale`).
@@ -99,6 +99,115 @@ pub trait EmbeddingStore: Send + Sync {
 
     /// Hook for per-step housekeeping (pruning schedules).
     fn end_step(&mut self) {}
+
+    // ------------------------------------------------------ checkpointing
+    //
+    // The `checkpoint` subsystem serializes stores through the five hooks
+    // below. Contract: `save_rows` → `load_rows` is bit-identical on the
+    // raw payload — packed stores hand over their packed bytes verbatim
+    // (never dequantize/requantize), float-backed stores their f32 bits.
+    // Stores that cannot be persisted (hashing, pruning) keep the
+    // defaults and fail with a clear message.
+
+    /// Bytes of one row's raw checkpoint payload, or `None` when this
+    /// store cannot be checkpointed.
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// Serialize rows `[lo, lo + dst.len()/ckpt_row_bytes())` into `dst`.
+    fn save_rows(&self, _lo: usize, _dst: &mut [u8]) -> Result<()> {
+        bail!("{} does not support checkpointing", self.method_name())
+    }
+
+    /// Restore rows from bytes produced by `save_rows` (exact inverse).
+    fn load_rows(&mut self, _lo: usize, _src: &[u8]) -> Result<()> {
+        bail!("{} does not support checkpointing", self.method_name())
+    }
+
+    /// Per-row learned scalars to persist (Δ for ALPT/LSQ, α for PACT);
+    /// empty for stores without any.
+    fn aux_params(&self) -> &[f32] {
+        &[]
+    }
+
+    /// Restore the scalars `aux_params` returned at save time.
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        ensure!(
+            aux.is_empty(),
+            "{} holds no aux params, checkpoint has {}",
+            self.method_name(),
+            aux.len()
+        );
+        Ok(())
+    }
+
+    /// Update-step counter feeding the per-step SR stream key (0 for
+    /// stores that draw no per-step noise). Persisted so a resumed run
+    /// continues the exact noise stream an uninterrupted one would use.
+    fn step_counter(&self) -> u64 {
+        0
+    }
+
+    /// Restore the update-step counter captured by `step_counter`.
+    fn set_step_counter(&mut self, _step: u64) {}
+}
+
+/// Checkpoint row payloads for float-backed tables (`FpStore` / QAT
+/// masters): one implementation shared by every store so the encodings
+/// cannot drift apart.
+pub(crate) fn save_f32_rows(
+    table: &[f32],
+    n: usize,
+    d: usize,
+    lo: usize,
+    dst: &mut [u8],
+) -> Result<()> {
+    ensure!(dst.len() % (d * 4) == 0, "unaligned row payload");
+    let count = dst.len() / (d * 4);
+    ensure!(lo + count <= n, "rows out of range");
+    rows_to_le_bytes(&table[lo * d..(lo + count) * d], dst)
+}
+
+/// Exact inverse of [`save_f32_rows`].
+pub(crate) fn load_f32_rows(
+    table: &mut [f32],
+    n: usize,
+    d: usize,
+    lo: usize,
+    src: &[u8],
+) -> Result<()> {
+    ensure!(src.len() % (d * 4) == 0, "unaligned row payload");
+    let count = src.len() / (d * 4);
+    ensure!(lo + count <= n, "rows out of range");
+    rows_from_le_bytes(src, &mut table[lo * d..(lo + count) * d])
+}
+
+/// Shared f32 ⇄ little-endian helpers for float-backed row payloads.
+pub(crate) fn rows_to_le_bytes(src: &[f32], dst: &mut [u8]) -> Result<()> {
+    ensure!(
+        dst.len() == src.len() * 4,
+        "payload buffer is {} bytes for {} f32s",
+        dst.len(),
+        src.len()
+    );
+    for (b4, &x) in dst.chunks_exact_mut(4).zip(src) {
+        b4.copy_from_slice(&x.to_le_bytes());
+    }
+    Ok(())
+}
+
+pub(crate) fn rows_from_le_bytes(src: &[u8], dst: &mut [f32]) -> Result<()> {
+    ensure!(
+        src.len() == dst.len() * 4,
+        "payload is {} bytes for {} f32s",
+        src.len(),
+        dst.len()
+    );
+    for (o, b4) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *o = f32::from_le_bytes(b4.try_into().unwrap());
+    }
+    Ok(())
 }
 
 /// Full-precision byte count for `n` rows of `d` — the compression-ratio

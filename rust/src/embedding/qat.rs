@@ -111,6 +111,33 @@ impl EmbeddingStore for LsqStore {
         self.master.len() * (self.bw.bits() as usize) / 8
             + self.delta.len() * 4
     }
+
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.d * 4)
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        super::save_f32_rows(&self.master, self.n, self.d, lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        super::load_f32_rows(&mut self.master, self.n, self.d, lo, src)
+    }
+
+    fn aux_params(&self) -> &[f32] {
+        &self.delta
+    }
+
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            aux.len() == self.n,
+            "LSQ delta count mismatch: {} vs {} rows",
+            aux.len(),
+            self.n
+        );
+        self.delta.copy_from_slice(aux);
+        Ok(())
+    }
 }
 
 /// PACT: learned per-feature clipping value α; Δ = α / 2^{m-1}. The α
@@ -237,6 +264,33 @@ impl EmbeddingStore for PactStore {
     fn infer_bytes(&self) -> usize {
         self.master.len() * (self.bw.bits() as usize) / 8
             + self.alpha.len() * 4
+    }
+
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.d * 4)
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        super::save_f32_rows(&self.master, self.n, self.d, lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        super::load_f32_rows(&mut self.master, self.n, self.d, lo, src)
+    }
+
+    fn aux_params(&self) -> &[f32] {
+        &self.alpha
+    }
+
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            aux.len() == self.n,
+            "PACT alpha count mismatch: {} vs {} rows",
+            aux.len(),
+            self.n
+        );
+        self.alpha.copy_from_slice(aux);
+        Ok(())
     }
 }
 

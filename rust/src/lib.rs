@@ -20,6 +20,7 @@
 //! paper's table variants (FP / LPT / ALPT / hashing / pruning / QAT).
 
 pub mod analysis;
+pub mod checkpoint;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

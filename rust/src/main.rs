@@ -22,6 +22,8 @@ USAGE:
               [--method fp|lpt-sr|lpt-dr|alpt-sr|alpt-dr|lsq|pact|hashing|pruning]
               [--bits 2|4|8|16] [--epochs N] [--samples N] [--seed N]
               [--model NAME] [--no-runtime]
+              [--save FILE.ckpt] [--resume FILE.ckpt]
+  alpt serve  --ckpt FILE.ckpt [--batches N]     (no training: load + serve)
   alpt gen    --dataset NAME --samples N --out FILE.ds
   alpt convex                                    (Figure-3 experiment)
   alpt info                                      (manifest + environment)
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
     }
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
+        Some("serve") => serve(&args),
         Some("gen") => gen(&args),
         Some("convex") => {
             convex();
@@ -79,21 +82,39 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
 }
 
 fn make_spec(exp: &Experiment) -> Result<SyntheticSpec> {
-    Ok(match exp.dataset.as_str() {
-        "avazu" => SyntheticSpec::avazu(exp.seed),
-        "criteo" => SyntheticSpec::criteo(exp.seed),
-        "tiny" => SyntheticSpec::tiny(exp.seed),
-        other => bail!("unknown dataset {other:?}"),
-    })
+    SyntheticSpec::for_dataset(&exp.dataset, exp.seed, exp.vocab_scale)
 }
 
 fn train(args: &Args) -> Result<()> {
-    let exp = build_experiment(args)?;
+    // --resume warm-starts every piece of training state from a
+    // checkpoint; the experiment configuration comes from the file's
+    // metadata echo, so other config flags are ignored (a fresh run with
+    // different settings should start from `alpt train` instead).
+    let mut trainer = if let Some(ckpt) = args.get("resume") {
+        let mut trainer = Trainer::resume(std::path::Path::new(ckpt))?;
+        // --epochs may raise the budget of a finished run; everything
+        // else comes from the echo
+        trainer.exp.epochs =
+            args.get_parse("epochs", trainer.exp.epochs)?;
+        println!(
+            "resumed {} from {ckpt} ({} epochs done, budget {})",
+            trainer.store.method_name(),
+            trainer.epochs_done,
+            trainer.exp.epochs
+        );
+        trainer
+    } else {
+        let exp = build_experiment(args)?;
+        let spec = make_spec(&exp)?;
+        let n_features =
+            alpt::data::Schema::new(spec.vocabs.clone()).n_features();
+        Trainer::new(exp, n_features)?
+    };
+    let exp = trainer.exp.clone();
     let spec = make_spec(&exp)?;
     println!("generating {} samples of {}...", exp.n_samples, spec.name);
     let ds = generate(&spec, exp.n_samples);
     let (train, val, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
-    let mut trainer = Trainer::new(exp.clone(), ds.schema.n_features())?;
     println!(
         "training {} ({} bits) on {} [{} runtime]",
         trainer.store.method_name(),
@@ -112,6 +133,43 @@ fn train(args: &Args) -> Result<()> {
         res.train_compression,
         res.infer_compression,
         res.seconds_per_epoch
+    );
+    if let Some(path) = args.get("save") {
+        trainer.save_checkpoint(std::path::Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// Load a checkpoint and serve batched CTR requests from it through the
+/// shared inference loop — no training step anywhere.
+fn serve(args: &Args) -> Result<()> {
+    use alpt::coordinator::serve_checkpoint;
+    use alpt::util::stats::percentile;
+
+    let path = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --ckpt FILE.ckpt"))?;
+    let max_batches = args.get_parse("batches", usize::MAX)?;
+    let report = serve_checkpoint(std::path::Path::new(path), max_batches)?;
+    println!(
+        "loaded {} checkpoint: {} rows x {} dims, {} KB table \
+         ({:.1}x smaller than fp32)",
+        report.method,
+        report.n_features,
+        report.dim,
+        report.infer_bytes / 1024,
+        report.fp_bytes as f64 / report.infer_bytes as f64
+    );
+    println!(
+        "served {} requests in {} batches: auc {:.4}, p50 {:.2} ms, \
+         p99 {:.2} ms, {:.0} req/s",
+        report.requests,
+        report.batches(),
+        report.auc,
+        percentile(&report.latencies_ms, 50.0),
+        percentile(&report.latencies_ms, 99.0),
+        report.requests_per_sec()
     );
     Ok(())
 }

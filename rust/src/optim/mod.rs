@@ -64,6 +64,33 @@ impl Adam {
     pub fn state_bytes(&self) -> usize {
         (self.m.len() + self.v.len()) * std::mem::size_of::<f32>()
     }
+
+    /// Optimizer state `(m, v, t)` for checkpointing.
+    pub fn state(&self) -> (&[f32], &[f32], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore state captured by [`Adam::state`]; a resumed run then
+    /// takes bit-identical steps to an uninterrupted one.
+    pub fn load_state(
+        &mut self,
+        m: &[f32],
+        v: &[f32],
+        t: u64,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "Adam state size mismatch: checkpoint has {}/{} moments, \
+             optimizer expects {}",
+            m.len(),
+            v.len(),
+            self.m.len()
+        );
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
+        Ok(())
+    }
 }
 
 /// The paper's LR schedule: multiply by `gamma` after each epoch in

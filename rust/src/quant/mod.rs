@@ -205,6 +205,16 @@ pub enum GradScale {
 }
 
 impl GradScale {
+    /// Stable config token — the inverse of the `grad_scale` parser in
+    /// `Experiment::apply`, used by the checkpoint metadata echo.
+    pub fn key(self) -> &'static str {
+        match self {
+            GradScale::One => "one",
+            GradScale::InvSqrtDq => "inv_sqrt_dq",
+            GradScale::InvSqrtBdq => "inv_sqrt_bdq",
+        }
+    }
+
     pub fn value(self, batch: usize, dim: usize, bw: BitWidth) -> f32 {
         match self {
             GradScale::One => 1.0,

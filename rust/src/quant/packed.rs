@@ -18,6 +18,7 @@
 
 use super::{quantize_dr, quantize_sr, BitWidth, Rounding};
 use crate::util::rng::Pcg32;
+use anyhow::{ensure, Result};
 
 /// Packed `[rows × dim]` table of m-bit signed integer codes.
 #[derive(Clone, Debug)]
@@ -229,6 +230,71 @@ impl PackedTable {
         let bw = self.bit_width();
         quantize_into(self.row_slice_mut(row), dim, bits, bw, w, delta,
                       rounding, rng);
+    }
+
+    /// Raw packed bytes of rows `[lo, lo + count)` — the checkpoint
+    /// serialization path. Verbatim storage bytes: round-tripping them
+    /// through [`PackedTable::load_raw_rows`] is bit-identical by
+    /// construction (no dequantize/requantize).
+    pub fn raw_rows(&self, lo: usize, count: usize) -> &[u8] {
+        debug_assert!(lo + count <= self.rows);
+        &self.data[lo * self.row_bytes..(lo + count) * self.row_bytes]
+    }
+
+    /// Copy the raw packed bytes of rows `[lo, lo + dst.len()/row_bytes)`
+    /// into `dst` — the bounds-checked counterpart of
+    /// [`PackedTable::raw_rows`] used by the store checkpoint hooks.
+    pub fn save_raw_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        ensure!(
+            dst.len() % self.row_bytes == 0,
+            "row payload of {} bytes is not a multiple of {} bytes/row",
+            dst.len(),
+            self.row_bytes
+        );
+        let count = dst.len() / self.row_bytes;
+        ensure!(
+            lo + count <= self.rows,
+            "rows [{lo}, {}) exceed the {}-row table",
+            lo + count,
+            self.rows
+        );
+        dst.copy_from_slice(self.raw_rows(lo, count));
+        Ok(())
+    }
+
+    /// Restore rows `[lo, lo + src.len()/row_bytes)` from bytes produced
+    /// by [`PackedTable::raw_rows`]. Validates that the padding bits of
+    /// every ragged row are zero — the invariant all write paths
+    /// maintain — so a doctored file cannot smuggle in out-of-contract
+    /// storage.
+    pub fn load_raw_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        ensure!(
+            src.len() % self.row_bytes == 0,
+            "row payload of {} bytes is not a multiple of {} bytes/row",
+            src.len(),
+            self.row_bytes
+        );
+        let count = src.len() / self.row_bytes;
+        ensure!(
+            lo + count <= self.rows,
+            "rows [{lo}, {}) exceed the {}-row table",
+            lo + count,
+            self.rows
+        );
+        let pad_bits = self.row_bytes * 8 - self.dim * self.bits as usize;
+        if pad_bits > 0 {
+            for (r, row) in src.chunks_exact(self.row_bytes).enumerate() {
+                let last = row[self.row_bytes - 1];
+                ensure!(
+                    last >> (8 - pad_bits) == 0,
+                    "row {}: padding bits set ({last:#010b})",
+                    lo + r
+                );
+            }
+        }
+        self.data[lo * self.row_bytes..lo * self.row_bytes + src.len()]
+            .copy_from_slice(src);
+        Ok(())
     }
 
     /// Shared handle for writing *disjoint* rows from multiple threads —
@@ -785,6 +851,53 @@ mod tests {
         let mut out = vec![0.0f32; 7];
         t.read_row_dequant(0, 0.5, &mut out);
         assert_eq!(out, vec![-64.0, -0.5, 0.0, 0.5, 1.0, 32.0, 63.5]);
+    }
+
+    #[test]
+    fn raw_rows_roundtrip_and_padding_guard() {
+        check("raw_rows roundtrip", 80, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let rows = g.usize_in(2, 20);
+            let dim = g.usize_in(1, 19);
+            let mut src = PackedTable::new(rows, dim, bw);
+            for r in 0..rows {
+                let codes: Vec<i32> =
+                    (0..dim).map(|_| g.i32_in(bw.qn(), bw.qp())).collect();
+                src.write_row(r, codes.as_slice());
+            }
+            let lo = g.usize_in(0, rows - 1);
+            let count = g.usize_in(1, rows - lo);
+            let bytes = src.raw_rows(lo, count).to_vec();
+            let mut dst = PackedTable::new(rows, dim, bw);
+            dst.load_raw_rows(lo, &bytes)
+                .map_err(|e| format!("load failed: {e:#}"))?;
+            if dst.raw_rows(lo, count) != src.raw_rows(lo, count) {
+                return Err("restored bytes differ".into());
+            }
+            // rows outside [lo, lo+count) stay zeroed
+            let mut codes = vec![0i32; dim];
+            for r in 0..rows {
+                if r < lo || r >= lo + count {
+                    dst.read_row(r, &mut codes);
+                    if codes.iter().any(|&c| c != 0) {
+                        return Err(format!("row {r} disturbed"));
+                    }
+                }
+            }
+            Ok(())
+        });
+
+        // misaligned payloads and out-of-range targets are rejected on
+        // both directions
+        let mut t = PackedTable::new(4, 3, BitWidth::B4);
+        assert!(t.load_raw_rows(0, &[0u8; 3]).is_err()); // 2 bytes/row
+        assert!(t.load_raw_rows(3, &[0u8; 4]).is_err()); // past the end
+        assert!(t.save_raw_rows(0, &mut [0u8; 3]).is_err());
+        assert!(t.save_raw_rows(3, &mut [0u8; 4]).is_err());
+        assert!(t.save_raw_rows(1, &mut [0u8; 4]).is_ok());
+        // padding bits set -> rejected (3 nibbles used, 1 pad nibble)
+        assert!(t.load_raw_rows(0, &[0x11, 0xF1]).is_err());
+        assert!(t.load_raw_rows(0, &[0x11, 0x01]).is_ok());
     }
 
     #[test]

@@ -142,6 +142,17 @@ impl Pcg32 {
         }
     }
 
+    /// Raw generator state `(state, inc)` for checkpointing.
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::state`] output — the restored
+    /// generator continues the exact sequence of the saved one.
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     /// Counter-based splittable stream: an independent generator that is a
     /// *pure function* of `(seed, step, row)`. Unlike threading one
     /// mutable generator through a row loop, streams built this way can be

@@ -1,0 +1,102 @@
+//! Validates the committed serving fixture against the real checkpoint
+//! reader: geometry, CRC-checked sections, grid-aligned gather values,
+//! a full inference pass, and the save→load→save byte-identity contract.
+//!
+//! Skips (with a note) only when the fixture file is absent; a present
+//! but malformed fixture is a hard failure.
+
+use std::path::PathBuf;
+
+use alpt::checkpoint::{
+    dense_params, load_store, save_store, Checkpoint,
+};
+use alpt::config::{Method, RoundingMode};
+use alpt::coordinator::builtin_entry;
+use alpt::data::batcher::Batcher;
+use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::data::Schema;
+use alpt::nn::Dcn;
+use alpt::quant::delta_from_clip;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/fixtures/tiny_lpt8.ckpt")
+}
+
+#[test]
+fn fixture_serves_without_training() {
+    let path = fixture_path();
+    if !path.exists() {
+        eprintln!(
+            "skipping: no committed fixture (run \
+             `python3 scripts/make_fixture.py`)"
+        );
+        return;
+    }
+
+    let ckpt = Checkpoint::read(&path).expect("fixture must parse");
+    let (store, exp) = load_store(&ckpt).expect("fixture store must load");
+
+    // geometry pins: the tiny synthetic schema and the tiny model config
+    assert_eq!(exp.method, Method::Lpt(RoundingMode::Sr));
+    assert_eq!(exp.bits, 8);
+    assert_eq!(exp.model, "tiny");
+    assert!(!exp.use_runtime, "fixture must be runtime-free");
+    let spec = SyntheticSpec::tiny(exp.seed);
+    let n_features = Schema::new(spec.vocabs.clone()).n_features();
+    assert_eq!(store.n_features(), n_features);
+    let entry = builtin_entry(&exp.model).unwrap();
+    assert_eq!(store.dim(), entry.emb_dim);
+    let dense = dense_params(&ckpt).expect("fixture must hold dense params");
+    assert_eq!(dense.len(), entry.n_params);
+
+    // every gathered value sits on the fixed-Δ LPT grid
+    let bw = exp.bit_width().unwrap();
+    let delta = delta_from_clip(exp.clip, bw);
+    let ids: Vec<u32> = (0..64).collect();
+    let mut out = vec![0.0f32; ids.len() * store.dim()];
+    store.gather(&ids, &mut out);
+    for &v in &out {
+        let x = v / delta;
+        assert!(
+            (x - x.round()).abs() < 1e-4,
+            "gathered value {v} off the Δ={delta} grid"
+        );
+        assert!(x.abs() <= 128.0, "code magnitude out of 8-bit range");
+    }
+
+    // one full inference batch through the Rust nn path — no training
+    let ds = generate(&spec, 2000);
+    let dcn = Dcn::new(entry.dcn_config());
+    let batch = Batcher::new(&ds, entry.batch, None, false)
+        .next()
+        .expect("at least one batch");
+    let (umax, d) = (entry.umax, entry.emb_dim);
+    let mut emb = vec![0.0f32; umax * d];
+    let n_u = batch.unique.len();
+    store.gather(&batch.unique, &mut emb[..n_u * d]);
+    let logits = dcn.infer(&emb, &batch.idx, &dense);
+    assert_eq!(logits.len(), entry.batch);
+    assert!(logits.iter().all(|x| x.is_finite()), "non-finite logits");
+
+    // save→load→save through the Rust writer is byte-identical
+    let dir = std::env::temp_dir().join("alpt_fixture_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("fixture.1.ckpt");
+    let p2 = dir.join("fixture.2.ckpt");
+    save_store(&p1, store.as_ref(), &exp).unwrap();
+    let ck1 = Checkpoint::read(&p1).unwrap();
+    let (store2, exp2) = load_store(&ck1).unwrap();
+    save_store(&p2, store2.as_ref(), &exp2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "save→load→save changed bytes"
+    );
+    // and the re-saved store still gathers identically to the fixture's
+    let mut out2 = vec![0.0f32; ids.len() * store.dim()];
+    store2.gather(&ids, &mut out2);
+    assert_eq!(out, out2);
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}

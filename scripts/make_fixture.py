@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Generate the committed serving fixture `examples/fixtures/tiny_lpt8.ckpt`.
+
+Writes a valid version-1 ALPT checkpoint (see README.md "Checkpoint binary
+layout" / rust/src/checkpoint/format.rs) holding an 8-bit LPT table for
+the `tiny` synthetic dataset plus a deterministic dense-parameter vector.
+
+The fixture is a *format/serving smoke artifact*: its codes and dense
+params follow fixed deterministic patterns, not a trained model, so the
+served AUC is chance-level. Regenerate a trained fixture with:
+
+    cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \
+        --no-runtime --save examples/fixtures/tiny_lpt8.ckpt
+
+This script exists so the repo can carry a checkpoint fixture even when
+authored in a container without a Rust toolchain; the Rust test
+`fixture_serves_without_training` (rust/tests/ckpt_fixture.rs) validates
+every byte of it against the real reader.
+"""
+
+import json
+import os
+import struct
+import zlib
+
+MAGIC = b"ALPTCKPT"
+VERSION = 1
+KIND_META, KIND_ROWS, KIND_DENSE = 1, 2, 4
+
+# tiny model geometry (rust/src/nn/dcn.rs DcnConfig::tiny / builtin_entry)
+FIELDS, EMB_DIM, BATCH, CROSS_DEPTH, MLP = 8, 8, 64, 2, [32, 16]
+# tiny synthetic vocabularies (rust/src/data/synthetic.rs SyntheticSpec::tiny)
+VOCABS = [2000, 1000, 500, 200, 100, 50, 20, 8]
+
+N = sum(VOCABS)          # 3878 feature rows
+D = EMB_DIM              # 8 dims -> 8 bytes/row at 8 bits
+ROW_BYTES = D            # 8-bit codes, byte-aligned
+SHARD_ROWS = 1 << 16
+
+
+def f32(x):
+    """Round-trip a float through f32 so the JSON echo is f32-exact."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def n_params():
+    k = FIELDS * EMB_DIM
+    total = CROSS_DEPTH * 2 * k          # cross w+b pairs
+    prev = k
+    for width in MLP:
+        total += prev * width + width    # mlp w+b
+        prev = width
+    total += (k + prev) + 1              # final_w, final_b
+    return total
+
+
+def experiment_echo():
+    # every key experiment_from_json (rust/src/checkpoint/mod.rs) requires
+    return {
+        "artifacts_dir": "artifacts",
+        "bits": 8,
+        "clip": f32(0.1),
+        "dataset": "tiny",
+        # u64 seeds are JSON strings (full 64-bit range; numbers only
+        # carry 53 bits) — mirrors checkpoint::experiment_to_json
+        "dropout_seed": "1234",
+        "epochs": 2,
+        "grad_scale": "inv_sqrt_bdq",
+        "lr_delta": f32(2e-5),
+        "lr_dense": f32(1e-3),
+        "lr_emb": f32(1e-2),
+        "lr_gamma": f32(0.1),
+        "lr_milestones": [6, 9],
+        "method": "lpt-sr",
+        "model": "tiny",
+        "n_samples": 20000,
+        "patience": 0,
+        "seed": "7",
+        "threads": 0,
+        "use_runtime": False,
+        "vocab_scale": 1.0,
+        "wd_delta": f32(5e-8),
+        "wd_emb": f32(5e-8),
+    }
+
+
+def meta_json():
+    meta = {
+        "aux_len": 0,
+        "d": D,
+        "experiment": experiment_echo(),
+        "format": "alpt-checkpoint",
+        "method": "lpt-sr",
+        "n": N,
+        "n_shards": (N + SHARD_ROWS - 1) // SHARD_ROWS,
+        "row_bytes": ROW_BYTES,
+        "shard_rows": SHARD_ROWS,
+        "step": 0,
+        "version": VERSION,
+    }
+    return json.dumps(meta, sort_keys=True, separators=(",", ":"))
+
+
+def rows_payload():
+    """Deterministic 8-bit two's-complement codes, one byte per element."""
+    out = bytearray(N * ROW_BYTES)
+    for r in range(N):
+        for j in range(D):
+            code = ((r * 7 + j * 13 + 5) % 255) - 127  # in [-127, 127]
+            out[r * ROW_BYTES + j] = code & 0xFF
+    return bytes(out)
+
+
+def dense_payload():
+    """Deterministic small dense params in (-0.1, 0.1), f32 LE."""
+    vals = []
+    for i in range(n_params()):
+        u = ((i + 1) * 2654435761) % (1 << 32) / float(1 << 32)
+        vals.append((u - 0.5) * 0.2)
+    return struct.pack(f"<{len(vals)}f", *vals)
+
+
+def section(kind, index, payload):
+    return (
+        struct.pack("<IIQI", kind, index, len(payload),
+                    zlib.crc32(payload) & 0xFFFFFFFF)
+        + payload
+    )
+
+
+def verify(path):
+    """Independent structural re-read of the written file."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "magic"
+    version, n_sections = struct.unpack("<II", data[8:16])
+    assert version == VERSION, version
+    pos, seen = 16, []
+    for _ in range(n_sections):
+        kind, index, length, crc = struct.unpack("<IIQI", data[pos:pos + 20])
+        pos += 20
+        payload = data[pos:pos + length]
+        pos += length
+        assert zlib.crc32(payload) & 0xFFFFFFFF == crc, f"crc kind={kind}"
+        seen.append((kind, index, length))
+    assert pos == len(data), "trailing bytes"
+    assert (KIND_META, 0, len(meta_json().encode())) in seen
+    meta = json.loads(meta_json())
+    assert meta["n"] * meta["row_bytes"] == [
+        s for s in seen if s[0] == KIND_ROWS
+    ][0][2]
+    return seen
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_dir = os.path.join(root, "examples", "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "tiny_lpt8.ckpt")
+
+    sections = [
+        section(KIND_META, 0, meta_json().encode("utf-8")),
+        section(KIND_ROWS, 0, rows_payload()),
+        section(KIND_DENSE, 0, dense_payload()),
+    ]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(sections)))
+        for s in sections:
+            f.write(s)
+
+    seen = verify(path)
+    size = os.path.getsize(path)
+    print(f"wrote {path}: {size} bytes, sections {seen}")
+    print(f"  n={N} d={D} row_bytes={ROW_BYTES} dense={n_params()} params")
+
+
+if __name__ == "__main__":
+    main()
