@@ -59,9 +59,14 @@ pub enum SectionKind {
     Optimizer,
     /// Trainer generator states: 4 × u64 (rng state/inc, mask state/inc).
     Rng,
-    /// Training progress: epochs completed (u64), so `--resume`
-    /// continues the LR schedule and per-epoch shuffle seeds instead of
-    /// replaying them from epoch 1.
+    /// Training progress, all u64 LE: epochs completed; records consumed
+    /// from the current epoch's train stream (streaming runs, 0 at epoch
+    /// boundaries); then the early-stop bookkeeping — best epoch,
+    /// consecutive non-improving epochs, best val AUC (f64 bits), best
+    /// val logloss (f64 bits). `--resume` continues the LR schedule,
+    /// shuffle seeds, mid-stream position and patience instead of
+    /// replaying from epoch 1. Older files carry 8- or 16-byte prefixes
+    /// of this layout; readers accept all three widths.
     Progress,
 }
 

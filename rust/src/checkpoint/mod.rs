@@ -229,6 +229,7 @@ pub fn experiment_to_json(exp: &Experiment) -> Json {
         ("dropout_seed", Json::str(&exp.dropout_seed.to_string())),
         ("epochs", Json::num(exp.epochs as f64)),
         ("grad_scale", Json::str(exp.grad_scale.key())),
+        ("hash_bits", Json::num(exp.hash_bits as f64)),
         ("lr_delta", Json::num(exp.lr_delta as f64)),
         ("lr_dense", Json::num(exp.lr_dense as f64)),
         ("lr_emb", Json::num(exp.lr_emb as f64)),
@@ -245,8 +246,12 @@ pub fn experiment_to_json(exp: &Experiment) -> Json {
         ("method", Json::str(exp.method.key())),
         ("model", Json::str(&exp.model)),
         ("n_samples", Json::num(exp.n_samples as f64)),
+        ("numeric_buckets", Json::num(exp.numeric_buckets as f64)),
         ("patience", Json::num(exp.patience as f64)),
+        ("prefetch_batches", Json::num(exp.prefetch_batches as f64)),
+        ("save_every", Json::num(exp.save_every as f64)),
         ("seed", Json::str(&exp.seed.to_string())),
+        ("shuffle_window", Json::num(exp.shuffle_window as f64)),
         ("threads", Json::num(exp.threads as f64)),
         ("use_runtime", Json::Bool(exp.use_runtime)),
         ("vocab_scale", Json::num(exp.vocab_scale)),
@@ -272,6 +277,15 @@ pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
             _ => Err(anyhow!("{key}: expected a u64 string")),
         }
     };
+    // streaming-pipeline keys arrived after format v1 shipped; absent in
+    // older echoes, they fall back to the defaults those runs used
+    let opt_usize = |key: &str, default: usize| -> Result<usize> {
+        match v.opt(key) {
+            Some(x) => x.as_usize(),
+            None => Ok(default),
+        }
+    };
+    let defaults = Experiment::default();
     Ok(Experiment {
         dataset: v.get("dataset")?.as_str()?.to_string(),
         vocab_scale: v.get("vocab_scale")?.as_f64()?,
@@ -300,6 +314,21 @@ pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
         artifacts_dir: v.get("artifacts_dir")?.as_str()?.to_string(),
         use_runtime: v.get("use_runtime")?.as_bool()?,
         threads: v.get("threads")?.as_usize()?,
+        hash_bits: opt_usize("hash_bits", defaults.hash_bits as usize)?
+            as u32,
+        numeric_buckets: opt_usize(
+            "numeric_buckets",
+            defaults.numeric_buckets as usize,
+        )? as u32,
+        shuffle_window: opt_usize(
+            "shuffle_window",
+            defaults.shuffle_window,
+        )?,
+        prefetch_batches: opt_usize(
+            "prefetch_batches",
+            defaults.prefetch_batches,
+        )?,
+        save_every: opt_usize("save_every", defaults.save_every)?,
     })
 }
 
@@ -372,6 +401,11 @@ mod tests {
             // above 2^53: would corrupt through an f64 JSON number
             seed: u64::MAX - 12,
             dropout_seed: (1u64 << 53) + 1,
+            hash_bits: 10,
+            numeric_buckets: 33,
+            shuffle_window: 777,
+            prefetch_batches: 5,
+            save_every: 123,
             ..Experiment::default()
         };
         let back =
@@ -390,6 +424,40 @@ mod tests {
         assert_eq!(back.threads, exp.threads);
         assert_eq!(back.grad_scale, exp.grad_scale);
         assert!(!back.use_runtime);
+        assert_eq!(back.hash_bits, 10);
+        assert_eq!(back.numeric_buckets, 33);
+        assert_eq!(back.shuffle_window, 777);
+        assert_eq!(back.prefetch_batches, 5);
+        assert_eq!(back.save_every, 123);
+    }
+
+    #[test]
+    fn pre_streaming_echo_still_parses() {
+        // checkpoints written before the streaming pipeline lack its
+        // keys; they must load with the defaults those runs used
+        let json = experiment_to_json(&Experiment::default());
+        let mut map = match json {
+            crate::util::json::Json::Object(m) => m,
+            _ => unreachable!(),
+        };
+        for key in [
+            "hash_bits",
+            "numeric_buckets",
+            "shuffle_window",
+            "prefetch_batches",
+            "save_every",
+        ] {
+            assert!(map.remove(key).is_some(), "echo is missing {key}");
+        }
+        let back =
+            experiment_from_json(&crate::util::json::Json::Object(map))
+                .unwrap();
+        let d = Experiment::default();
+        assert_eq!(back.hash_bits, d.hash_bits);
+        assert_eq!(back.numeric_buckets, d.numeric_buckets);
+        assert_eq!(back.shuffle_window, d.shuffle_window);
+        assert_eq!(back.prefetch_batches, d.prefetch_batches);
+        assert_eq!(back.save_every, d.save_every);
     }
 
     #[test]

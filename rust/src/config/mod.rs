@@ -127,6 +127,22 @@ pub struct Experiment {
     /// hardware thread). Results are bit-identical at any value — the
     /// stores draw SR noise from counter-based per-row streams.
     pub threads: usize,
+
+    // streaming data pipeline (`--dataset criteo:<path>` / `synthetic:*`)
+    /// Per-categorical-field hash vocabulary is `2^hash_bits` ids
+    /// (file datasets; id 0 = missing).
+    pub hash_bits: u32,
+    /// Buckets per numeric field after the log transform (file datasets;
+    /// includes the missing and negative buckets).
+    pub numeric_buckets: u32,
+    /// Records buffered by the seeded reservoir shuffle (1 = no shuffle).
+    pub shuffle_window: usize,
+    /// Batches assembled ahead on the prefetch thread (0 = assemble
+    /// serially on the training thread; results are bit-identical).
+    pub prefetch_batches: usize,
+    /// Streaming runs: checkpoint to the `--save` path every N steps
+    /// (0 = only at the end), so `--resume` can continue mid-stream.
+    pub save_every: usize,
 }
 
 impl Default for Experiment {
@@ -154,6 +170,11 @@ impl Default for Experiment {
             artifacts_dir: "artifacts".into(),
             use_runtime: true,
             threads: 0,
+            hash_bits: 16,
+            numeric_buckets: 40,
+            shuffle_window: 4096,
+            prefetch_batches: 2,
+            save_every: 0,
         }
     }
 }
@@ -165,11 +186,27 @@ impl Experiment {
                                            self.bits))
     }
 
-    /// Load from a TOML document, starting from defaults.
+    /// Load from a TOML document, starting from defaults. A `dataset`
+    /// key applies its per-dataset defaults (model, weight decay,
+    /// streaming `use_runtime = false`) exactly like `--dataset`, in a
+    /// first pass — so every explicit key in the file overrides them no
+    /// matter where it appears relative to `dataset`.
     pub fn from_toml(doc: &TomlDoc) -> Result<Experiment> {
         let mut e = Experiment::default();
         for (key, value) in doc.flat_items() {
-            e.apply(&key, &value)?;
+            if key == "dataset" {
+                match &value {
+                    toml::TomlValue::Str(s) => {
+                        e = e.with_dataset_defaults(s);
+                    }
+                    _ => bail!("dataset: expected string"),
+                }
+            }
+        }
+        for (key, value) in doc.flat_items() {
+            if key != "dataset" {
+                e.apply(&key, &value)?;
+            }
         }
         Ok(e)
     }
@@ -208,6 +245,17 @@ impl Experiment {
             "lr_gamma" => self.lr_gamma = as_f(value)? as f32,
             "patience" => self.patience = as_f(value)? as usize,
             "threads" => self.threads = as_f(value)? as usize,
+            "hash_bits" => self.hash_bits = as_f(value)? as u32,
+            "numeric_buckets" => {
+                self.numeric_buckets = as_f(value)? as u32
+            }
+            "shuffle_window" => {
+                self.shuffle_window = as_f(value)? as usize
+            }
+            "prefetch_batches" => {
+                self.prefetch_batches = as_f(value)? as usize
+            }
+            "save_every" => self.save_every = as_f(value)? as usize,
             "dropout_seed" => self.dropout_seed = as_f(value)? as u64,
             "artifacts_dir" => self.artifacts_dir = as_s(value)?,
             "use_runtime" => {
@@ -237,10 +285,24 @@ impl Experiment {
     }
 
     /// Paper defaults per dataset (§4.1): weight decay and dropout differ
-    /// between Avazu and Criteo.
+    /// between Avazu and Criteo. Streaming specs (`criteo:<path>`,
+    /// `synthetic[:name]`) get the defaults of the generator/format they
+    /// wrap, and run host-path-first: no AOT artifacts exist for them,
+    /// so the runtime defaults off (a config file can opt back in).
     pub fn with_dataset_defaults(mut self, dataset: &str) -> Self {
         self.dataset = dataset.to_string();
-        match dataset {
+        if dataset.starts_with("criteo:")
+            || dataset == "synthetic"
+            || dataset.starts_with("synthetic:")
+        {
+            self.use_runtime = false;
+        }
+        // `synthetic:NAME` and `criteo:<path>` key the recipe of the
+        // generator/format they wrap
+        let name = dataset.strip_prefix("synthetic:").unwrap_or(dataset);
+        let name =
+            if name.starts_with("criteo:") { "criteo" } else { name };
+        match name {
             "avazu" => {
                 self.wd_emb = 5e-8;
                 self.model = "avazu".into();
@@ -328,6 +390,62 @@ mod tests {
         let e = Experiment::default().with_dataset_defaults("criteo");
         assert!((e.wd_emb - 1e-5).abs() < 1e-12);
         assert_eq!(e.model, "criteo");
+        assert!(e.use_runtime, "synthetic criteo keeps the runtime default");
+        let f = Experiment::default()
+            .with_dataset_defaults("criteo:/data/train.tsv");
+        assert!((f.wd_emb - 1e-5).abs() < 1e-12);
+        assert_eq!(f.model, "criteo");
+        assert!(!f.use_runtime, "file pipeline is host-path-first");
+        // streaming-synthetic specs key the wrapped generator's recipe
+        let s = Experiment::default()
+            .with_dataset_defaults("synthetic:criteo");
+        assert_eq!(s.model, "criteo");
+        assert!((s.wd_emb - 1e-5).abs() < 1e-12);
+        assert!(!s.use_runtime);
+        let t = Experiment::default().with_dataset_defaults("synthetic");
+        assert_eq!(t.model, "tiny");
+        assert!(!t.use_runtime);
+    }
+
+    #[test]
+    fn streaming_keys_from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+            dataset = "criteo:/data/train.tsv"
+            hash_bits = 12
+            numeric_buckets = 32
+            shuffle_window = 1024
+            prefetch_batches = 4
+            save_every = 500
+            "#,
+        )
+        .unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.hash_bits, 12);
+        assert_eq!(e.numeric_buckets, 32);
+        assert_eq!(e.shuffle_window, 1024);
+        assert_eq!(e.prefetch_batches, 4);
+        assert_eq!(e.save_every, 500);
+        // the dataset key applied its defaults, same as --dataset would
+        assert_eq!(e.model, "criteo");
+        assert!(!e.use_runtime);
+    }
+
+    #[test]
+    fn toml_dataset_defaults_never_clobber_explicit_keys() {
+        // `model` appears *before* `dataset` in the file; the dataset
+        // defaults must still lose to it
+        let doc = TomlDoc::parse(
+            r#"
+            model = "criteo_d32"
+            use_runtime = true
+            dataset = "criteo:/data/train.tsv"
+            "#,
+        )
+        .unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.model, "criteo_d32");
+        assert!(e.use_runtime, "explicit opt-in must survive");
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod trainer;
 pub use serve::{serve_checkpoint, ServeReport};
 pub use sharding::{CommStats, ShardedStore};
 pub use trainer::{
-    builtin_entry, EpochReport, EvalReport, TrainResult, Trainer,
+    builtin_entry, EarlyStop, EpochReport, EvalReport, TrainResult, Trainer,
 };

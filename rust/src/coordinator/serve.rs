@@ -14,10 +14,11 @@ use anyhow::{bail, ensure, Result};
 use super::trainer::builtin_entry;
 use crate::checkpoint::{dense_params, load_store, Checkpoint};
 use crate::config::Experiment;
-use crate::data::batcher::Batcher;
+use crate::data::batcher::{Batch, Batcher, StreamBatcher, Tail};
+use crate::data::registry::{self, DataSource, DatasetSpec};
 use crate::data::synthetic::{generate, SyntheticSpec};
 use crate::embedding::fp_bytes;
-use crate::metrics::EvalAccumulator;
+use crate::metrics::{EvalAccumulator, StreamingEval};
 use crate::nn::Dcn;
 
 /// Everything a caller needs to report on a serving run.
@@ -40,6 +41,11 @@ pub struct ServeReport {
     /// One-time synthetic request-stream regeneration in milliseconds
     /// (not part of per-request serving cost).
     pub data_ms: f64,
+    /// Data-quality warnings from the request source (e.g. malformed
+    /// lines skipped in a streamed file); empty when clean. Callers
+    /// should surface these — metrics over silently-dropped records are
+    /// misleading.
+    pub warnings: Vec<String>,
     /// The experiment echo the checkpoint carried.
     pub exp: Experiment,
 }
@@ -88,36 +94,85 @@ pub fn serve_checkpoint(
     let dcn = Dcn::new(entry.dcn_config());
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-    // the same dataset spec, seed, vocab scaling and split the training
-    // run used (synthetic data: the request stream is regenerated, an
-    // O(n_samples) one-time setup reported separately as `data_ms`)
-    let spec =
-        SyntheticSpec::for_dataset(&exp.dataset, exp.seed, exp.vocab_scale)?;
-    let t1 = Instant::now();
-    let ds = generate(&spec, exp.n_samples);
-    ensure!(
-        ds.schema.n_features() == store.n_features(),
-        "dataset {} has {} features, checkpointed table has {}",
-        spec.name,
-        ds.schema.n_features(),
-        store.n_features()
-    );
-    let (_, _, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
-    let data_ms = t1.elapsed().as_secs_f64() * 1e3;
-
+    // rebuild the request stream the training run's experiment echo
+    // describes: synthetic specs regenerate in memory and serve the test
+    // split (exact AUC over the full score set); streaming specs
+    // (criteo:<path> / synthetic:*) serve the held-out split straight
+    // off the source with the fixed-memory accumulator, so serving a
+    // full Criteo dump never holds the split in memory. The one-time
+    // setup is reported separately as `data_ms`.
     let (umax, d, b) = (entry.umax, entry.emb_dim, entry.batch);
     let mut emb = vec![0.0f32; umax * d];
-    let mut acc = EvalAccumulator::new();
     let mut latencies = Vec::new();
-    for batch in Batcher::new(&test, b, None, false).take(max_batches) {
+    // one shared inference body, so the two dataset families cannot
+    // drift apart (same pattern as Trainer::batch_logits)
+    let mut serve_batch = |batch: &Batch| -> Vec<f32> {
         let t = Instant::now();
         let n_u = batch.unique.len();
         emb[n_u * d..].fill(0.0);
         store.gather(&batch.unique, &mut emb[..n_u * d]);
         let logits = dcn.infer(&emb, &batch.idx, &dense);
         latencies.push(t.elapsed().as_secs_f64() * 1e3);
-        acc.push(&logits, &batch.labels, batch.valid);
-    }
+        logits
+    };
+    let t1 = Instant::now();
+    let (auc, logloss, requests, data_ms, warnings) =
+        match DatasetSpec::parse(&exp.dataset) {
+            DatasetSpec::Synthetic(name) => {
+                let spec = SyntheticSpec::for_dataset(
+                    &name,
+                    exp.seed,
+                    exp.vocab_scale,
+                )?;
+                let ds = generate(&spec, exp.n_samples);
+                // same rule as registry::ensure_compat: the table may be
+                // larger than the schema (warm-start), never smaller
+                ensure!(
+                    ds.schema.n_features() <= store.n_features(),
+                    "dataset {} needs {} feature rows, the checkpointed \
+                     table holds {}",
+                    spec.name,
+                    ds.schema.n_features(),
+                    store.n_features()
+                );
+                let (_, _, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
+                let data_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let mut acc = EvalAccumulator::new();
+                for batch in
+                    Batcher::new(&test, b, None, false).take(max_batches)
+                {
+                    let logits = serve_batch(&batch);
+                    acc.push(&logits, &batch.labels, batch.valid);
+                }
+                (acc.auc(), acc.logloss(), acc.len(), data_ms, Vec::new())
+            }
+            DatasetSpec::SyntheticStream(_) | DatasetSpec::CriteoFile(_) => {
+                let source = registry::open_source(&exp)?;
+                registry::ensure_compat(
+                    source.as_ref(),
+                    &exp.model,
+                    entry.fields,
+                    store.n_features(),
+                )?;
+                let stream = registry::val_stream(source.as_ref(), &exp)?;
+                let data_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let mut acc = StreamingEval::new();
+                let batches =
+                    StreamBatcher::new(stream, entry.fields, b, Tail::Pad);
+                for item in batches.take(max_batches) {
+                    let batch = item?;
+                    let logits = serve_batch(&batch);
+                    acc.push(&logits, &batch.labels, batch.valid);
+                }
+                (
+                    acc.auc(),
+                    acc.logloss(),
+                    acc.len(),
+                    data_ms,
+                    source.warnings(),
+                )
+            }
+        };
     if latencies.is_empty() {
         bail!("no test batches to serve (max_batches or split too small)");
     }
@@ -129,12 +184,13 @@ pub fn serve_checkpoint(
         infer_bytes: store.infer_bytes(),
         fp_bytes: fp_bytes(store.n_features(), store.dim()),
         batch_size: b,
-        requests: acc.len(),
-        auc: acc.auc(),
-        logloss: acc.logloss(),
+        requests,
+        auc,
+        logloss,
         latencies_ms: latencies,
         load_ms,
         data_ms,
+        warnings,
         exp,
     })
 }

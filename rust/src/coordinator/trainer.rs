@@ -9,10 +9,13 @@ use crate::checkpoint::{
     self, Checkpoint, CheckpointWriter, SectionKind,
 };
 use crate::config::Experiment;
-use crate::data::batcher::{Batch, Batcher};
+use crate::data::batcher::{
+    with_prefetch, Batch, Batcher, StreamBatcher, Tail,
+};
+use crate::data::registry::{self, DataSource};
 use crate::data::Dataset;
 use crate::embedding::{build_store, EmbeddingStore, UpdateHp};
-use crate::metrics::EvalAccumulator;
+use crate::metrics::{EvalAccumulator, StreamingEval};
 use crate::nn::Dcn;
 use crate::optim::{Adam, LrSchedule};
 use crate::quant::{lsq_delta_grad_row, BitWidth};
@@ -61,6 +64,46 @@ pub struct StepOutput {
     pub n_unique: usize,
 }
 
+/// Early-stop / best-epoch bookkeeping, carried across save/resume so a
+/// resumed run stops — and reports its best epoch — exactly like an
+/// uninterrupted one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EarlyStop {
+    pub best_auc: f64,
+    pub best_logloss: f64,
+    pub best_epoch: usize,
+    /// Consecutive epochs without a val-AUC improvement.
+    pub bad_epochs: usize,
+}
+
+impl Default for EarlyStop {
+    fn default() -> Self {
+        Self {
+            best_auc: 0.0,
+            best_logloss: f64::INFINITY,
+            best_epoch: 0,
+            bad_epochs: 0,
+        }
+    }
+}
+
+impl EarlyStop {
+    /// Record an epoch's validation result; returns true when `patience`
+    /// consecutive non-improving epochs call for stopping.
+    fn observe(&mut self, epoch: usize, ev: &EvalReport, patience: usize) -> bool {
+        if ev.auc > self.best_auc {
+            self.best_auc = ev.auc;
+            self.best_logloss = ev.logloss;
+            self.best_epoch = epoch;
+            self.bad_epochs = 0;
+            false
+        } else {
+            self.bad_epochs += 1;
+            patience > 0 && self.bad_epochs >= patience
+        }
+    }
+}
+
 /// The coordinator. See module docs for the per-batch protocol.
 pub struct Trainer {
     pub exp: Experiment,
@@ -88,6 +131,16 @@ pub struct Trainer {
     /// continues at `epochs_done + 1`, so the LR schedule and per-epoch
     /// shuffle seeds pick up where the saved run stopped.
     pub epochs_done: usize,
+    /// Streaming runs: records consumed from the current (unfinished)
+    /// epoch's train stream — always `steps × batch_size` under
+    /// [`Tail::Drop`]. Persisted in the checkpoint's progress section so
+    /// `--resume` fast-forwards the deterministic stream and continues
+    /// mid-epoch bit-identically. 0 at epoch boundaries.
+    pub stream_records_done: u64,
+    /// Best-epoch / patience bookkeeping, persisted in the checkpoint's
+    /// progress section so a resumed run's early stopping continues
+    /// where the saved one left off.
+    pub early_stop: EarlyStop,
 }
 
 impl Trainer {
@@ -145,6 +198,8 @@ impl Trainer {
             sp_d_pad: vec![1.0; umax],
             grad_scale_val,
             epochs_done: 0,
+            stream_records_done: 0,
+            early_stop: EarlyStop::default(),
         })
     }
 
@@ -359,64 +414,103 @@ impl Trainer {
         Ok(StepOutput { loss, n_unique })
     }
 
-    /// Evaluate on a dataset (deterministic order, padded final batch).
-    pub fn evaluate(&mut self, ds: &Dataset) -> Result<EvalReport> {
+    /// Inference logits for one batch (runtime artifact or the Rust nn
+    /// path). Callers must have set the eval mask; shared by the
+    /// in-memory and streaming evaluation loops.
+    fn batch_logits(&mut self, batch: &Batch) -> Result<Vec<f32>> {
         let (umax, d, b, fields) = (
             self.entry.umax,
             self.entry.emb_dim,
             self.entry.batch,
             self.entry.fields,
         );
-        self.eval_mask_ones();
-        let mut acc = EvalAccumulator::new();
-        let batches: Vec<Batch> =
-            Batcher::new(ds, b, None, false).collect();
-        for batch in &batches {
-            let n_unique = batch.unique.len();
-            self.emb_buf[n_unique * d..umax * d].fill(0.0);
-            self.store
-                .gather(&batch.unique, &mut self.emb_buf[..n_unique * d]);
-            let quantized = self.store.quantized_view(
-                &batch.unique,
-                &mut self.codes_buf[..n_unique * d],
-                &mut self.delta_buf[..n_unique],
-            );
-            if quantized {
-                self.codes_buf[n_unique * d..umax * d].fill(0);
-                self.delta_buf[n_unique..umax].fill(1.0);
-            }
-            let logits = if let Some(rt) = self.runtime.as_mut() {
-                let idx_lit =
-                    lit_i32(&batch.idx, &[b as i64, fields as i64])?;
-                let params_lit =
-                    lit_f32(&self.dense, &[self.dense.len() as i64])?;
-                let outs = if quantized {
-                    rt.exec(
-                        &self.exp.model,
-                        "eval_lpt",
-                        &[
-                            lit_i32(&self.codes_buf,
-                                    &[umax as i64, d as i64])?,
-                            lit_f32(&self.delta_buf, &[umax as i64])?,
-                            idx_lit,
-                            params_lit,
-                        ],
-                    )?
-                } else {
-                    rt.exec(
-                        &self.exp.model,
-                        "eval_fp",
-                        &[
-                            lit_f32(&self.emb_buf, &[umax as i64, d as i64])?,
-                            idx_lit,
-                            params_lit,
-                        ],
-                    )?
-                };
-                to_f32(&outs[0])?
+        let n_unique = batch.unique.len();
+        ensure!(n_unique <= umax, "batch uniques exceed umax");
+        self.emb_buf[n_unique * d..umax * d].fill(0.0);
+        self.store
+            .gather(&batch.unique, &mut self.emb_buf[..n_unique * d]);
+        let quantized = self.store.quantized_view(
+            &batch.unique,
+            &mut self.codes_buf[..n_unique * d],
+            &mut self.delta_buf[..n_unique],
+        );
+        if quantized {
+            self.codes_buf[n_unique * d..umax * d].fill(0);
+            self.delta_buf[n_unique..umax].fill(1.0);
+        }
+        if let Some(rt) = self.runtime.as_mut() {
+            let idx_lit = lit_i32(&batch.idx, &[b as i64, fields as i64])?;
+            let params_lit =
+                lit_f32(&self.dense, &[self.dense.len() as i64])?;
+            let outs = if quantized {
+                rt.exec(
+                    &self.exp.model,
+                    "eval_lpt",
+                    &[
+                        lit_i32(&self.codes_buf, &[umax as i64, d as i64])?,
+                        lit_f32(&self.delta_buf, &[umax as i64])?,
+                        idx_lit,
+                        params_lit,
+                    ],
+                )?
             } else {
-                self.dcn.infer(&self.emb_buf, &batch.idx, &self.dense)
+                rt.exec(
+                    &self.exp.model,
+                    "eval_fp",
+                    &[
+                        lit_f32(&self.emb_buf, &[umax as i64, d as i64])?,
+                        idx_lit,
+                        params_lit,
+                    ],
+                )?
             };
+            to_f32(&outs[0])
+        } else {
+            Ok(self.dcn.infer(&self.emb_buf, &batch.idx, &self.dense))
+        }
+    }
+
+    /// Evaluate on a dataset (deterministic order, padded final batch).
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<EvalReport> {
+        self.eval_mask_ones();
+        let b = self.entry.batch;
+        let mut acc = EvalAccumulator::new();
+        for batch in Batcher::new(ds, b, None, false) {
+            let logits = self.batch_logits(&batch)?;
+            acc.push(&logits, &batch.labels, batch.valid);
+        }
+        Ok(EvalReport {
+            auc: acc.auc(),
+            logloss: acc.logloss(),
+            samples: acc.len(),
+        })
+    }
+
+    /// Can this trainer consume records from `source`? Delegates to the
+    /// one shared rule in [`registry::ensure_compat`].
+    fn ensure_source_compat(&self, source: &dyn DataSource) -> Result<()> {
+        registry::ensure_compat(
+            source,
+            &self.entry.name,
+            self.entry.fields,
+            self.store.n_features(),
+        )
+    }
+
+    /// Evaluate on a source's held-out split (streaming: fixed-memory
+    /// accumulator, deterministic order, padded final batch).
+    pub fn evaluate_source(
+        &mut self,
+        source: &dyn DataSource,
+    ) -> Result<EvalReport> {
+        self.ensure_source_compat(source)?;
+        self.eval_mask_ones();
+        let (b, f) = (self.entry.batch, self.entry.fields);
+        let stream = registry::val_stream(source, &self.exp)?;
+        let mut acc = StreamingEval::new();
+        for item in StreamBatcher::new(stream, f, b, Tail::Pad) {
+            let batch = item?;
+            let logits = self.batch_logits(&batch)?;
             acc.push(&logits, &batch.labels, batch.valid);
         }
         Ok(EvalReport {
@@ -436,13 +530,10 @@ impl Trainer {
     ) -> Result<TrainResult> {
         let t0 = Instant::now();
         let mut history = Vec::new();
-        let (mut best_auc, mut best_logloss, mut best_epoch) =
-            (0.0f64, f64::INFINITY, 0usize);
-        let mut bad_epochs = 0usize;
 
         // a resumed trainer picks up the epoch numbering where it left
-        // off — LR decay and per-epoch shuffle seeds continue, they are
-        // not replayed from epoch 1
+        // off — LR decay, per-epoch shuffle seeds and the early-stop
+        // bookkeeping continue, they are not replayed from epoch 1
         let start_epoch = self.epochs_done + 1;
         for epoch in start_epoch..=self.exp.epochs {
             let e0 = Instant::now();
@@ -480,36 +571,144 @@ impl Trainer {
             }
             history.push(report);
             self.epochs_done = epoch;
-            if ev.auc > best_auc {
-                best_auc = ev.auc;
-                best_logloss = ev.logloss;
-                best_epoch = epoch;
-                bad_epochs = 0;
-            } else {
-                bad_epochs += 1;
-                if self.exp.patience > 0 && bad_epochs >= self.exp.patience {
-                    break;
-                }
+            if self.early_stop.observe(epoch, &ev, self.exp.patience) {
+                break;
             }
         }
 
+        Ok(self.train_result(t0, history))
+    }
+
+    /// Assemble the [`TrainResult`] both training loops return.
+    fn train_result(
+        &self,
+        t0: Instant,
+        history: Vec<EpochReport>,
+    ) -> TrainResult {
         let total = t0.elapsed().as_secs_f64();
         let fp =
             crate::embedding::fp_bytes(self.store.n_features(),
                                        self.entry.emb_dim) as f64;
         let epochs_run = history.len();
-        Ok(TrainResult {
+        TrainResult {
             method: self.store.method_name(),
-            best_auc,
-            best_logloss,
-            best_epoch,
+            best_auc: self.early_stop.best_auc,
+            best_logloss: self.early_stop.best_logloss,
+            best_epoch: self.early_stop.best_epoch,
             epochs_run,
             total_seconds: total,
             seconds_per_epoch: total / epochs_run.max(1) as f64,
             train_compression: fp / self.store.train_bytes() as f64,
             infer_compression: fp / self.store.infer_bytes() as f64,
             history,
-        })
+        }
+    }
+
+    /// Full training run over a streaming [`DataSource`] — the streaming
+    /// counterpart of [`Trainer::train`]: per epoch, holdout split →
+    /// seeded window shuffle → fixed-size batches (assembled on a
+    /// background thread when `exp.prefetch_batches > 0`, bit-identically
+    /// to the serial path), then held-out evaluation and early stop on
+    /// val AUC.
+    ///
+    /// With `save_to` set and `exp.save_every > 0`, a checkpoint is
+    /// written every `save_every` steps; a trainer resumed from it
+    /// continues bit-identically, *including mid-epoch* — the persisted
+    /// stream position fast-forwards the deterministic record stream.
+    pub fn train_stream(
+        &mut self,
+        source: &dyn DataSource,
+        verbose: bool,
+        save_to: Option<&Path>,
+    ) -> Result<TrainResult> {
+        self.ensure_source_compat(source)?;
+        let t0 = Instant::now();
+        let (b, f) = (self.entry.batch, self.entry.fields);
+        let mut history = Vec::new();
+
+        let start_epoch = self.epochs_done + 1;
+        // a mid-epoch resume fast-forwards the first epoch's stream past
+        // the records the saved run already consumed
+        let mut skip = self.stream_records_done;
+        for epoch in start_epoch..=self.exp.epochs {
+            let e0 = Instant::now();
+            let mut stream =
+                registry::train_epoch_stream(source, &self.exp, epoch)?;
+            if skip > 0 {
+                registry::skip_records(stream.as_mut(), f, skip)?;
+            }
+            self.stream_records_done = skip;
+            skip = 0;
+            let mut loss_sum = 0.0f64;
+            let mut steps = 0usize;
+            let save_every = self.exp.save_every;
+            let depth = self.exp.prefetch_batches;
+            let mut on_batch = |trainer: &mut Trainer,
+                                batch: Batch|
+             -> Result<bool> {
+                let out = trainer.step(&batch, epoch)?;
+                loss_sum += out.loss as f64;
+                steps += 1;
+                trainer.stream_records_done += b as u64;
+                if save_every > 0 && steps % save_every == 0 {
+                    if let Some(path) = save_to {
+                        trainer.save_checkpoint(path)?;
+                    }
+                }
+                Ok(true)
+            };
+            if depth > 0 {
+                with_prefetch(stream, f, b, Tail::Drop, depth, |batch| {
+                    on_batch(self, batch)
+                })?;
+            } else {
+                for item in StreamBatcher::new(stream, f, b, Tail::Drop) {
+                    on_batch(self, item?)?;
+                }
+            }
+            // a fresh epoch that yields not even one full batch means the
+            // source is effectively empty for training (file too small —
+            // or every line malformed); completing "successfully" with
+            // zero steps would just report a chance-level AUC. A resumed
+            // tail (skip consumed the epoch) is the one legitimate case.
+            ensure!(
+                steps > 0 || self.stream_records_done > 0,
+                "epoch {epoch}: the training split of {} produced no \
+                 full batch of {b} records — is the file empty, too \
+                 small, or entirely malformed?",
+                source.name()
+            );
+            self.stream_records_done = 0;
+            self.epochs_done = epoch;
+
+            let ev = self.evaluate_source(source)?;
+            let report = EpochReport {
+                epoch,
+                mean_loss: loss_sum / steps.max(1) as f64,
+                steps,
+                seconds: e0.elapsed().as_secs_f64(),
+                val_auc: ev.auc,
+                val_logloss: ev.logloss,
+            };
+            if verbose {
+                println!(
+                    "  [{}] epoch {epoch:>2}: loss {:.5}  val auc {:.4}  \
+                     val logloss {:.5}  ({:.1}s, {} steps)",
+                    self.store.method_name(),
+                    report.mean_loss,
+                    report.val_auc,
+                    report.val_logloss,
+                    report.seconds,
+                    report.steps
+                );
+            }
+            history.push(report);
+            if self.early_stop.observe(epoch, &ev, self.exp.patience) {
+                break;
+            }
+        }
+
+        Ok(self.train_result(t0, history))
     }
 
     /// Is this trainer using the PJRT runtime (vs the Rust nn fallback)?
@@ -551,6 +750,12 @@ impl Trainer {
 
         buf.clear();
         checkpoint::format::put_u64(&mut buf, self.epochs_done as u64);
+        checkpoint::format::put_u64(&mut buf, self.stream_records_done);
+        checkpoint::format::put_u64(&mut buf, self.early_stop.best_epoch as u64);
+        checkpoint::format::put_u64(&mut buf, self.early_stop.bad_epochs as u64);
+        checkpoint::format::put_u64(&mut buf, self.early_stop.best_auc.to_bits());
+        checkpoint::format::put_u64(&mut buf,
+                                    self.early_stop.best_logloss.to_bits());
         w.section(SectionKind::Progress, 0, &buf)?;
         w.finish()
     }
@@ -621,12 +826,35 @@ impl Trainer {
 
         let progress = ckpt.section(SectionKind::Progress, 0)?.payload;
         ensure!(
-            progress.len() == 8,
-            "progress section is {} bytes, expected 8",
+            matches!(progress.len(), 8 | 16 | 48),
+            "progress section is {} bytes, expected 8, 16 or 48",
             progress.len()
         );
+        let mut pos = 0usize;
         let epochs_done =
-            checkpoint::format::take_u64(progress, &mut 0usize)? as usize;
+            checkpoint::format::take_u64(progress, &mut pos)? as usize;
+        // pre-streaming checkpoints carry no stream position, and
+        // pre-early-stop ones no best-epoch bookkeeping
+        let stream_records_done = if progress.len() >= 16 {
+            checkpoint::format::take_u64(progress, &mut pos)?
+        } else {
+            0
+        };
+        let early_stop = if progress.len() >= 48 {
+            let best_epoch =
+                checkpoint::format::take_u64(progress, &mut pos)? as usize;
+            let bad_epochs =
+                checkpoint::format::take_u64(progress, &mut pos)? as usize;
+            let best_auc = f64::from_bits(
+                checkpoint::format::take_u64(progress, &mut pos)?,
+            );
+            let best_logloss = f64::from_bits(
+                checkpoint::format::take_u64(progress, &mut pos)?,
+            );
+            EarlyStop { best_auc, best_logloss, best_epoch, bad_epochs }
+        } else {
+            EarlyStop::default()
+        };
 
         // all sections validated — now mutate
         checkpoint::load_store_into(self.store.as_mut(), ckpt)?;
@@ -636,6 +864,8 @@ impl Trainer {
         self.rng = Pcg32::from_state(rs, ri);
         self.mask_rng = Pcg32::from_state(ms, mi);
         self.epochs_done = epochs_done;
+        self.stream_records_done = stream_records_done;
+        self.early_stop = early_stop;
         Ok(())
     }
 }

@@ -1,8 +1,10 @@
-//! Batching and per-batch feature deduplication.
+//! Batching and per-batch feature deduplication — for in-memory datasets
+//! *and* record streams.
 //!
 //! The paper's memory story (§2.3) hinges on the observation that a batch
-//! touches very few *unique* features relative to the table. The batcher
-//! produces, per batch, exactly what the AOT artifacts consume:
+//! touches very few *unique* features relative to the table. Every
+//! batcher here produces, per batch, exactly what the AOT artifacts
+//! consume:
 //!
 //! * `unique`    — the batch's unique global feature ids (the only rows
 //!                 that get dequantized / updated this step);
@@ -11,11 +13,23 @@
 //!                 scatter-add on the backward pass);
 //! * `labels`    — `[B]`;
 //! * `valid`     — number of real (un-padded) samples; the final batch of
-//!                 an epoch is padded by repeating sample 0 so the
+//!                 an epoch is padded by repeating the last record so the
 //!                 shape-static HLO always sees a full batch.
+//!
+//! Two families share one assembly kernel ([`build_batch`]):
+//!
+//! * [`Batcher`] — the in-memory epoch iterator (full Fisher–Yates
+//!   shuffle over sample indices);
+//! * [`StreamBatcher`] over a [`RecordStream`] — the streaming pipeline:
+//!   [`SplitStream`] (deterministic holdout) → [`ShuffleStream`] (seeded
+//!   reservoir window) → batches, optionally assembled on a background
+//!   thread by [`with_prefetch`]. Batch contents are a pure function of
+//!   stream order, so the prefetched and serial paths are bit-identical.
 
+use super::registry::RecordStream;
 use super::Dataset;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{mix64, Pcg32};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -47,13 +61,13 @@ impl Hasher for IdHasher {
 type IdMap = HashMap<u32, i32, BuildHasherDefault<IdHasher>>;
 
 /// One training/eval batch in artifact-ready form.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Batch {
     /// Unique global feature ids, in first-appearance order.
     pub unique: Vec<u32>,
     /// `[B, F]` row-major indices into `unique`.
     pub idx: Vec<i32>,
-    /// `[B]` labels (padded tail repeats sample 0's label).
+    /// `[B]` labels (padded tail repeats the last real record's label).
     pub labels: Vec<u8>,
     /// Real sample count (≤ B); the rest is padding.
     pub valid: usize,
@@ -69,20 +83,28 @@ impl Batch {
     }
 }
 
-/// Assemble a batch from dataset rows `rows` (padding to `batch_size`).
-pub fn make_batch(ds: &Dataset, rows: &[usize], batch_size: usize) -> Batch {
-    assert!(!rows.is_empty() && rows.len() <= batch_size);
-    let f = ds.n_fields();
-    let mut unique = Vec::with_capacity(rows.len() * f / 4);
+/// The shared assembly kernel behind both batcher families: dedup the
+/// `n` real records reachable through the accessors into a `batch_size`
+/// batch, padding by repeating the last record. Accessor-based so the
+/// in-memory path reads `Dataset` rows in place (no per-step copies on
+/// the training hot path) while the stream path reads its fill buffers.
+fn dedup_batch<'a>(
+    n: usize,
+    batch_size: usize,
+    n_fields: usize,
+    row: impl Fn(usize) -> &'a [u32],
+    label: impl Fn(usize) -> u8,
+) -> Batch {
+    assert!(n > 0 && n <= batch_size);
+    let mut unique = Vec::with_capacity(n * n_fields / 4);
     let mut map: IdMap =
-        IdMap::with_capacity_and_hasher(rows.len() * f, Default::default());
-    let mut idx = Vec::with_capacity(batch_size * f);
+        IdMap::with_capacity_and_hasher(n * n_fields, Default::default());
+    let mut idx = Vec::with_capacity(batch_size * n_fields);
     let mut labels = Vec::with_capacity(batch_size);
 
     for bi in 0..batch_size {
-        let r = rows[bi.min(rows.len() - 1)]; // pad by repeating the last row
-        let sample = ds.sample(r);
-        for &g in sample {
+        let r = bi.min(n - 1); // pad by repeating the last record
+        for &g in row(r) {
             let next_id = unique.len() as i32;
             let slot = *map.entry(g).or_insert_with(|| {
                 unique.push(g);
@@ -90,9 +112,40 @@ pub fn make_batch(ds: &Dataset, rows: &[usize], batch_size: usize) -> Batch {
             });
             idx.push(slot);
         }
-        labels.push(ds.labels[r]);
+        labels.push(label(r));
     }
-    Batch { unique, idx, labels, valid: rows.len() }
+    Batch { unique, idx, labels, valid: n }
+}
+
+/// Assemble a batch from `labels.len()` records laid out row-major in
+/// `features` (`[n, n_fields]` global ids), padding to `batch_size` by
+/// repeating the last record (the stream batcher's entry point).
+pub fn build_batch(
+    features: &[u32],
+    labels: &[u8],
+    n_fields: usize,
+    batch_size: usize,
+) -> Batch {
+    assert_eq!(features.len(), labels.len() * n_fields);
+    dedup_batch(
+        labels.len(),
+        batch_size,
+        n_fields,
+        |r| &features[r * n_fields..(r + 1) * n_fields],
+        |r| labels[r],
+    )
+}
+
+/// Assemble a batch from dataset rows `rows` (padding to `batch_size`).
+pub fn make_batch(ds: &Dataset, rows: &[usize], batch_size: usize) -> Batch {
+    assert!(!rows.is_empty() && rows.len() <= batch_size);
+    dedup_batch(
+        rows.len(),
+        batch_size,
+        ds.n_fields(),
+        |r| ds.sample(rows[r]),
+        |r| ds.labels[rows[r]],
+    )
 }
 
 /// Epoch iterator: shuffles sample order per epoch (seeded), yields
@@ -150,9 +203,251 @@ impl<'a> Iterator for Batcher<'a> {
     }
 }
 
+// --------------------------------------------------------------- streams
+
+/// Deterministic holdout split over any record stream: record `i` (in
+/// stream order) is held out iff `mix64(seed ^ i) % HOLDOUT_EVERY == 0`
+/// (~10%). Membership depends only on `(seed, position)`, so it is
+/// stable across epochs and identical between the train and val views —
+/// no record ever changes sides.
+pub const HOLDOUT_EVERY: u64 = 10;
+
+/// Filters a stream down to its training or held-out records.
+pub struct SplitStream<S> {
+    inner: S,
+    seed: u64,
+    next_index: u64,
+    take_val: bool,
+}
+
+impl<S: RecordStream> SplitStream<S> {
+    /// The ~9/10 training side.
+    pub fn train(inner: S, seed: u64) -> Self {
+        Self { inner, seed, next_index: 0, take_val: false }
+    }
+
+    /// The ~1/10 held-out side.
+    pub fn val(inner: S, seed: u64) -> Self {
+        Self { inner, seed, next_index: 0, take_val: true }
+    }
+}
+
+impl<S: RecordStream> RecordStream for SplitStream<S> {
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>> {
+        loop {
+            match self.inner.next_record(out)? {
+                None => return Ok(None),
+                Some(label) => {
+                    let i = self.next_index;
+                    self.next_index += 1;
+                    let held_out =
+                        mix64(self.seed ^ i) % HOLDOUT_EVERY == 0;
+                    if held_out == self.take_val {
+                        return Ok(Some(label));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Seeded reservoir-window shuffle over a stream: a `window`-record
+/// buffer is kept full; each emission picks a uniform buffered record and
+/// replaces it with the next incoming one (draining the buffer at end of
+/// stream). A window ≥ the stream length is a full uniform shuffle;
+/// smaller windows trade memory for shuffle radius. The output order is
+/// a pure function of `(inner order, window, seed)` — reproducible at
+/// any thread count and resumable by skipping emitted records.
+pub struct ShuffleStream<S> {
+    inner: S,
+    rng: Pcg32,
+    window: Vec<(Vec<u32>, u8)>,
+    scratch: Vec<u32>,
+    cap: usize,
+    primed: bool,
+    inner_done: bool,
+}
+
+impl<S: RecordStream> ShuffleStream<S> {
+    pub fn new(inner: S, window: usize, seed: u64) -> Self {
+        Self {
+            inner,
+            rng: Pcg32::new(seed, 0x5EED),
+            window: Vec::new(),
+            scratch: Vec::new(),
+            cap: window.max(1),
+            primed: false,
+            inner_done: false,
+        }
+    }
+}
+
+impl<S: RecordStream> RecordStream for ShuffleStream<S> {
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>> {
+        if !self.primed {
+            self.primed = true;
+            self.scratch = vec![0u32; out.len()];
+            while self.window.len() < self.cap {
+                match self.inner.next_record(&mut self.scratch)? {
+                    Some(label) => {
+                        self.window.push((self.scratch.clone(), label));
+                    }
+                    None => {
+                        self.inner_done = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if self.window.is_empty() {
+            return Ok(None);
+        }
+        let j = self.rng.below_usize(self.window.len());
+        out.copy_from_slice(&self.window[j].0);
+        let label = self.window[j].1;
+        if self.inner_done {
+            self.window.swap_remove(j);
+        } else {
+            match self.inner.next_record(&mut self.scratch)? {
+                Some(next_label) => {
+                    self.window[j].0.copy_from_slice(&self.scratch);
+                    self.window[j].1 = next_label;
+                }
+                None => {
+                    self.inner_done = true;
+                    self.window.swap_remove(j);
+                }
+            }
+        }
+        Ok(Some(label))
+    }
+}
+
+/// Tail policy for the final (partial) batch of a stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tail {
+    /// Drop a partial final batch (training: every batch is full, and a
+    /// resumed run's record accounting stays `steps × batch_size`).
+    Drop,
+    /// Pad it by repeating the last record (eval: `valid` marks the real
+    /// prefix).
+    Pad,
+}
+
+/// Assembles fixed-size [`Batch`]es straight from a [`RecordStream`].
+pub struct StreamBatcher<S> {
+    stream: S,
+    n_fields: usize,
+    batch_size: usize,
+    tail: Tail,
+    feat_buf: Vec<u32>,
+    label_buf: Vec<u8>,
+    row_buf: Vec<u32>,
+    done: bool,
+}
+
+impl<S: RecordStream> StreamBatcher<S> {
+    pub fn new(
+        stream: S,
+        n_fields: usize,
+        batch_size: usize,
+        tail: Tail,
+    ) -> Self {
+        assert!(batch_size > 0 && n_fields > 0);
+        Self {
+            stream,
+            n_fields,
+            batch_size,
+            tail,
+            feat_buf: Vec::with_capacity(batch_size * n_fields),
+            label_buf: Vec::with_capacity(batch_size),
+            row_buf: vec![0u32; n_fields],
+            done: false,
+        }
+    }
+}
+
+impl<S: RecordStream> Iterator for StreamBatcher<S> {
+    type Item = Result<Batch>;
+
+    fn next(&mut self) -> Option<Result<Batch>> {
+        if self.done {
+            return None;
+        }
+        self.feat_buf.clear();
+        self.label_buf.clear();
+        while self.label_buf.len() < self.batch_size {
+            match self.stream.next_record(&mut self.row_buf) {
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+                Ok(None) => {
+                    self.done = true;
+                    break;
+                }
+                Ok(Some(label)) => {
+                    self.feat_buf.extend_from_slice(&self.row_buf);
+                    self.label_buf.push(label);
+                }
+            }
+        }
+        let n = self.label_buf.len();
+        if n == 0 || (n < self.batch_size && self.tail == Tail::Drop) {
+            return None;
+        }
+        Some(Ok(build_batch(
+            &self.feat_buf,
+            &self.label_buf,
+            self.n_fields,
+            self.batch_size,
+        )))
+    }
+}
+
+/// Run `consume` over the stream's batches while a background thread
+/// assembles the next ones (double-buffered through a bounded channel of
+/// `depth` batches). Batch contents are a pure function of stream order,
+/// so this is bit-identical to iterating [`StreamBatcher`] on one
+/// thread. `consume` returns `Ok(true)` to continue, `Ok(false)` to stop
+/// early; dropping the receiver unblocks and retires the producer.
+pub fn with_prefetch<S, F>(
+    stream: S,
+    n_fields: usize,
+    batch_size: usize,
+    tail: Tail,
+    depth: usize,
+    mut consume: F,
+) -> Result<()>
+where
+    S: RecordStream,
+    F: FnMut(Batch) -> Result<bool>,
+{
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::sync_channel(depth.max(1));
+        scope.spawn(move || {
+            let batcher =
+                StreamBatcher::new(stream, n_fields, batch_size, tail);
+            for item in batcher {
+                let is_err = item.is_err();
+                if tx.send(item).is_err() || is_err {
+                    break;
+                }
+            }
+        });
+        for item in rx {
+            if !consume(item?)? {
+                break;
+            }
+        }
+        Ok(())
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::registry::{DataSource, SyntheticSource};
     use crate::data::Schema;
     use crate::util::prop::check;
 
@@ -166,6 +461,10 @@ mod tests {
             labels.push((i % 2) as u8);
         }
         Dataset { schema, features, labels }
+    }
+
+    fn toy_source(n: usize) -> SyntheticSource {
+        SyntheticSource::from_dataset("toy", toy(n))
     }
 
     #[test]
@@ -210,7 +509,6 @@ mod tests {
     #[test]
     fn batcher_covers_epoch_once() {
         let ds = toy(103);
-        let mut seen = vec![0u32; 103];
         let b = Batcher::new(&ds, 10, Some(1), false);
         assert_eq!(b.n_batches(), 11);
         let mut batches = 0;
@@ -224,7 +522,6 @@ mod tests {
         let b = Batcher::new(&ds, 10, Some(1), true);
         assert_eq!(b.n_batches(), 10);
         assert_eq!(b.count(), 10);
-        let _ = &mut seen;
     }
 
     #[test]
@@ -266,5 +563,129 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ------------------------------------------------------ stream tests
+
+    fn drain(stream: &mut dyn RecordStream) -> Vec<(Vec<u32>, u8)> {
+        let mut out = vec![0u32; 2];
+        let mut acc = Vec::new();
+        while let Some(l) = stream.next_record(&mut out).unwrap() {
+            acc.push((out.clone(), l));
+        }
+        acc
+    }
+
+    #[test]
+    fn split_partitions_without_overlap() {
+        let src = toy_source(300);
+        let train =
+            drain(&mut SplitStream::train(src.stream().unwrap(), 9));
+        let val = drain(&mut SplitStream::val(src.stream().unwrap(), 9));
+        assert_eq!(train.len() + val.len(), 300);
+        // ~10% of 300, wide bounds (hash split, not a quota)
+        assert!(val.len() > 8 && val.len() < 65, "val={}", val.len());
+        // split is deterministic
+        let val2 = drain(&mut SplitStream::val(src.stream().unwrap(), 9));
+        assert_eq!(val, val2);
+        // and seed-dependent
+        let val3 = drain(&mut SplitStream::val(src.stream().unwrap(), 10));
+        assert_ne!(val, val3);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let src = toy_source(97);
+        let base = drain(src.stream().unwrap().as_mut());
+        for window in [1usize, 7, 97, 500] {
+            let mut shuffled = drain(&mut ShuffleStream::new(
+                src.stream().unwrap(),
+                window,
+                42,
+            ));
+            assert_eq!(shuffled.len(), base.len(), "window={window}");
+            let mut b = base.clone();
+            b.sort();
+            shuffled.sort();
+            assert_eq!(shuffled, b, "window={window}: not a permutation");
+        }
+    }
+
+    #[test]
+    fn shuffle_deterministic_by_seed_and_actually_shuffles() {
+        let src = toy_source(120);
+        let a = drain(&mut ShuffleStream::new(src.stream().unwrap(), 64, 7));
+        let b = drain(&mut ShuffleStream::new(src.stream().unwrap(), 64, 7));
+        assert_eq!(a, b);
+        let c = drain(&mut ShuffleStream::new(src.stream().unwrap(), 64, 8));
+        assert_ne!(a, c);
+        // window 1 is the identity; window > 1 must move something
+        let id = drain(&mut ShuffleStream::new(src.stream().unwrap(), 1, 7));
+        assert_eq!(id, drain(src.stream().unwrap().as_mut()));
+        assert_ne!(a, id);
+    }
+
+    #[test]
+    fn stream_batcher_matches_in_memory_batcher() {
+        // unshuffled stream batches == unshuffled in-memory batches
+        let ds = toy(53);
+        let src = SyntheticSource::from_dataset("toy", ds.clone());
+        let from_stream: Vec<Batch> =
+            StreamBatcher::new(src.stream().unwrap(), 2, 8, Tail::Pad)
+                .map(|r| r.unwrap())
+                .collect();
+        let in_memory: Vec<Batch> =
+            Batcher::new(&ds, 8, None, false).collect();
+        assert_eq!(from_stream, in_memory);
+        // Tail::Drop loses the final partial batch
+        let dropped: Vec<Batch> =
+            StreamBatcher::new(src.stream().unwrap(), 2, 8, Tail::Drop)
+                .map(|r| r.unwrap())
+                .collect();
+        assert_eq!(dropped.len(), 53 / 8);
+        assert_eq!(dropped[..], from_stream[..53 / 8]);
+    }
+
+    #[test]
+    fn prefetch_is_bit_identical_to_serial() {
+        let src = toy_source(211);
+        for (tail, depth) in
+            [(Tail::Pad, 1), (Tail::Pad, 4), (Tail::Drop, 2)]
+        {
+            let serial: Vec<Batch> = StreamBatcher::new(
+                ShuffleStream::new(src.stream().unwrap(), 32, 3),
+                2,
+                16,
+                tail,
+            )
+            .map(|r| r.unwrap())
+            .collect();
+            let mut prefetched = Vec::new();
+            with_prefetch(
+                ShuffleStream::new(src.stream().unwrap(), 32, 3),
+                2,
+                16,
+                tail,
+                depth,
+                |b| {
+                    prefetched.push(b);
+                    Ok(true)
+                },
+            )
+            .unwrap();
+            assert_eq!(serial, prefetched, "{tail:?} depth={depth}");
+        }
+    }
+
+    #[test]
+    fn prefetch_consumer_can_stop_early() {
+        let src = toy_source(500);
+        let mut seen = 0usize;
+        with_prefetch(src.stream().unwrap(), 2, 10, Tail::Pad, 2, |_| {
+            seen += 1;
+            Ok(seen < 3)
+        })
+        .unwrap();
+        assert_eq!(seen, 3);
     }
 }

@@ -1,0 +1,556 @@
+//! Streaming reader for Criteo-format TSV logs — the format the paper's
+//! real datasets ship in: one record per line,
+//! `label \t I1..I13 \t C1..C26` (13 integer "numeric" columns, 26
+//! hex-token categorical columns), any field possibly empty.
+//!
+//! Records stream straight off a `BufReader`; the file is never loaded
+//! into memory, so a 40M-row Kaggle download and the committed ~1k-row
+//! fixture go through the identical code path. Features map onto the
+//! global embedding-id space on the fly:
+//!
+//! * **Categorical** fields hash their token into a per-field vocabulary
+//!   of `2^hash_bits` slots (id 0 reserved for missing) with a stateless
+//!   FNV-1a → mix64 hash salted by the field index. The hash depends only
+//!   on `(field, token bytes)` — deterministic across runs, platforms and
+//!   thread counts, which the sharded-update determinism contract
+//!   (`util::rng`) inherits for free.
+//! * **Numeric** fields are log-transformed and bucketized:
+//!   `bucket = 1 + floor(log2(1 + v))` for `v ≥ 0`, the last bucket for
+//!   negatives, bucket 0 for missing. Log bucketization is the standard
+//!   normalization for Criteo's heavy-tailed counts and — unlike
+//!   mean/variance scaling — needs no dataset statistics, so streaming
+//!   stays single-pass.
+//!
+//! Malformed lines (wrong column count, unparsable label or integer) are
+//! counted and skipped rather than aborting a multi-hour streaming run;
+//! empty fields are data, not errors.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::registry::{DataSource, RecordStream};
+use super::Schema;
+use crate::util::rng::mix64;
+
+/// Criteo column layout: 13 numeric fields then 26 categorical ones.
+pub const N_NUMERIC: usize = 13;
+pub const N_CATEGORICAL: usize = 26;
+pub const N_FIELDS: usize = N_NUMERIC + N_CATEGORICAL;
+
+/// Feature-space configuration for Criteo-format files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CriteoCfg {
+    /// Per-categorical-field vocabulary is `2^hash_bits` ids (id 0 =
+    /// missing). Caps the embedding-table rows a full download needs.
+    pub hash_bits: u32,
+    /// Buckets per numeric field, including the missing (0) and
+    /// negative (last) buckets.
+    pub numeric_buckets: u32,
+}
+
+impl Default for CriteoCfg {
+    fn default() -> Self {
+        Self { hash_bits: 16, numeric_buckets: 40 }
+    }
+}
+
+impl CriteoCfg {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (2..=24).contains(&self.hash_bits),
+            "hash_bits {} out of range (2..=24)",
+            self.hash_bits
+        );
+        ensure!(
+            self.numeric_buckets >= 3,
+            "numeric_buckets {} too small (need missing + data + negative)",
+            self.numeric_buckets
+        );
+        Ok(())
+    }
+
+    /// The 39-field schema this configuration induces.
+    pub fn schema(&self) -> Schema {
+        let mut vocabs = vec![self.numeric_buckets; N_NUMERIC];
+        vocabs.extend(
+            std::iter::repeat(1u32 << self.hash_bits).take(N_CATEGORICAL),
+        );
+        Schema::new(vocabs)
+    }
+}
+
+/// Stateless categorical token hash: FNV-1a over the token bytes, salted
+/// by the field index, finished with `mix64`, mapped to `[1, vocab)`
+/// (id 0 is reserved for missing).
+pub fn hash_token(field: usize, token: &[u8], vocab: u32) -> u32 {
+    debug_assert!(vocab >= 2);
+    let mut h = 0xCBF2_9CE4_8422_2325u64; // FNV-1a offset basis
+    for &b in token {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01B3); // FNV-1a prime
+    }
+    let mixed =
+        mix64(h ^ (field as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    1 + (mixed % (vocab as u64 - 1)) as u32
+}
+
+/// Log2 bucket of a numeric value (see module docs): 0 is reserved for
+/// missing, the last bucket holds negatives, everything else lands at
+/// `1 + floor(log2(1 + v))` capped to `buckets - 2`.
+pub fn numeric_bucket(v: i64, buckets: u32) -> u32 {
+    debug_assert!(buckets >= 3);
+    if v < 0 {
+        buckets - 1
+    } else {
+        let lg = 63 - (v as u64 + 1).leading_zeros(); // floor(log2(v + 1))
+        (1 + lg).min(buckets - 2)
+    }
+}
+
+/// Parse one TSV line into per-field *global* feature ids; `None` when
+/// the line is malformed (wrong column count, bad label, bad integer).
+fn parse_line(
+    line: &str,
+    cfg: &CriteoCfg,
+    schema: &Schema,
+    out: &mut [u32],
+) -> Option<u8> {
+    debug_assert_eq!(out.len(), N_FIELDS);
+    let mut cols = line.split('\t');
+    let label = match cols.next() {
+        Some("0") => 0u8,
+        Some("1") => 1u8,
+        _ => return None,
+    };
+    let mut field = 0usize;
+    for col in cols {
+        if field >= N_FIELDS {
+            return None; // too many columns
+        }
+        let local = if col.is_empty() {
+            0 // missing: both numeric and categorical reserve id 0
+        } else if field < N_NUMERIC {
+            match col.parse::<i64>() {
+                Ok(v) => numeric_bucket(v, cfg.numeric_buckets),
+                Err(_) => return None,
+            }
+        } else {
+            hash_token(field, col.as_bytes(), 1u32 << cfg.hash_bits)
+        };
+        out[field] = schema.global_id(field, local);
+        field += 1;
+    }
+    if field != N_FIELDS {
+        return None; // too few columns
+    }
+    Some(label)
+}
+
+/// A Criteo-format TSV on disk, streamed record by record. Opening is
+/// cheap (a stat); each [`CriteoFile::stream`] call opens a fresh reader,
+/// so epochs and eval passes never share file offsets.
+pub struct CriteoFile {
+    path: PathBuf,
+    cfg: CriteoCfg,
+    schema: Schema,
+    name: String,
+    /// Malformed lines in the file, as observed by the most complete
+    /// pass so far (streams `fetch_max` their own running count into
+    /// this, so repeated epochs do not inflate it). Shared with the
+    /// streams so callers can surface data-quality problems through
+    /// [`DataSource::warnings`].
+    malformed: Arc<AtomicU64>,
+}
+
+impl CriteoFile {
+    pub fn open(path: &Path, cfg: CriteoCfg) -> Result<Self> {
+        cfg.validate()?;
+        ensure!(
+            path.is_file(),
+            "{} does not exist or is not a file",
+            path.display()
+        );
+        Ok(Self {
+            path: path.to_path_buf(),
+            cfg,
+            schema: cfg.schema(),
+            name: format!("criteo:{}", path.display()),
+            malformed: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn cfg(&self) -> CriteoCfg {
+        self.cfg
+    }
+
+    /// Malformed lines in the file, per the most complete pass so far.
+    pub fn malformed_lines(&self) -> u64 {
+        self.malformed.load(Ordering::Relaxed)
+    }
+}
+
+impl DataSource for CriteoFile {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn stream(&self) -> Result<Box<dyn RecordStream>> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        Ok(Box::new(CriteoStream {
+            reader: BufReader::with_capacity(1 << 16, file),
+            cfg: self.cfg,
+            schema: self.schema.clone(),
+            line: Vec::new(),
+            line_no: 0,
+            malformed: 0,
+            source_malformed: Arc::clone(&self.malformed),
+        }))
+    }
+
+    fn warnings(&self) -> Vec<String> {
+        let n = self.malformed_lines();
+        if n > 0 {
+            vec![format!(
+                "{n} malformed line(s) skipped in {}",
+                self.path.display()
+            )]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// One in-order pass over a Criteo TSV. Malformed lines are skipped and
+/// counted; blank lines are ignored.
+pub struct CriteoStream {
+    reader: BufReader<File>,
+    cfg: CriteoCfg,
+    schema: Schema,
+    /// Raw line buffer — bytes, not `String`, so a stray non-UTF-8 byte
+    /// is one more malformed line instead of a run-aborting I/O error.
+    line: Vec<u8>,
+    line_no: u64,
+    malformed: u64,
+    /// The owning [`CriteoFile`]'s cross-stream counter.
+    source_malformed: Arc<AtomicU64>,
+}
+
+impl CriteoStream {
+    /// Lines skipped as malformed by *this* stream so far.
+    pub fn malformed_lines(&self) -> u64 {
+        self.malformed
+    }
+
+    fn count_malformed(&mut self) {
+        self.malformed += 1;
+        // max, not sum: every full pass re-sees the same bad lines, and
+        // the source-level number should mean "lines in the file"
+        self.source_malformed.fetch_max(self.malformed, Ordering::Relaxed);
+    }
+}
+
+impl RecordStream for CriteoStream {
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>> {
+        loop {
+            self.line.clear();
+            let n = self
+                .reader
+                .read_until(b'\n', &mut self.line)
+                .with_context(|| format!("reading line {}", self.line_no + 1))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let ok = match std::str::from_utf8(&self.line) {
+                Ok(t) => {
+                    let text = t.trim_end_matches(&['\n', '\r'][..]);
+                    if text.is_empty() {
+                        continue;
+                    }
+                    parse_line(text, &self.cfg, &self.schema, out)
+                }
+                Err(_) => None,
+            };
+            match ok {
+                Some(label) => return Ok(Some(label)),
+                None => self.count_malformed(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn cfg8() -> CriteoCfg {
+        CriteoCfg { hash_bits: 8, numeric_buckets: 40 }
+    }
+
+    /// A well-formed line: label, 13 numerics, 26 categoricals.
+    fn good_line(label: u8) -> String {
+        let nums: Vec<String> = (0..N_NUMERIC as i64).map(|i| i.to_string()).collect();
+        let cats: Vec<String> =
+            (0..N_CATEGORICAL).map(|i| format!("{i:08x}")).collect();
+        format!("{label}\t{}\t{}", nums.join("\t"), cats.join("\t"))
+    }
+
+    fn tmp_file(name: &str, contents: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("alpt_criteo_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn schema_geometry() {
+        let cfg = cfg8();
+        let schema = cfg.schema();
+        assert_eq!(schema.n_fields(), N_FIELDS);
+        assert_eq!(
+            schema.n_features(),
+            N_NUMERIC * 40 + N_CATEGORICAL * 256
+        );
+        // numeric fields first, then the hashed categorical ones
+        assert_eq!(schema.vocabs[0], 40);
+        assert_eq!(schema.vocabs[N_NUMERIC], 256);
+    }
+
+    #[test]
+    fn cfg_validation() {
+        assert!(cfg8().validate().is_ok());
+        assert!(CriteoCfg { hash_bits: 1, numeric_buckets: 40 }
+            .validate()
+            .is_err());
+        assert!(CriteoCfg { hash_bits: 30, numeric_buckets: 40 }
+            .validate()
+            .is_err());
+        assert!(CriteoCfg { hash_bits: 8, numeric_buckets: 2 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn numeric_buckets_monotone_and_special() {
+        let b = 40;
+        assert_eq!(numeric_bucket(0, b), 1);
+        assert_eq!(numeric_bucket(1, b), 2);
+        assert_eq!(numeric_bucket(2, b), 2); // log2(3) floors to 1
+        assert_eq!(numeric_bucket(3, b), 3);
+        assert_eq!(numeric_bucket(-1, b), b - 1);
+        assert_eq!(numeric_bucket(i64::MAX, b), b - 2); // capped
+        let mut prev = 0;
+        for v in 0..10_000i64 {
+            let cur = numeric_bucket(v, b);
+            assert!(cur >= prev, "bucket not monotone at v={v}");
+            assert!(cur >= 1 && cur <= b - 2);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn hash_token_deterministic_salted_in_range() {
+        let vocab = 256;
+        let a = hash_token(13, b"deadbeef", vocab);
+        assert_eq!(a, hash_token(13, b"deadbeef", vocab));
+        // same token in a different field lands elsewhere (salt)
+        assert_ne!(a, hash_token(14, b"deadbeef", vocab));
+        for t in 0..2000u32 {
+            let id = hash_token(20, format!("{t:08x}").as_bytes(), vocab);
+            assert!(id >= 1 && id < vocab, "id {id} out of [1, {vocab})");
+        }
+    }
+
+    #[test]
+    fn hash_token_identical_across_threads() {
+        // the hash is a pure function, so any thread computes the same id
+        let tokens: Vec<String> = (0..64u64)
+            .map(|t| format!("{:08x}", t.wrapping_mul(2654435761)))
+            .collect();
+        let serial: Vec<u32> = tokens
+            .iter()
+            .map(|t| hash_token(17, t.as_bytes(), 1 << 12))
+            .collect();
+        let mut threaded = vec![0u32; tokens.len()];
+        std::thread::scope(|s| {
+            for (chunk_toks, chunk_out) in
+                tokens.chunks(8).zip(threaded.chunks_mut(8))
+            {
+                s.spawn(move || {
+                    for (t, o) in chunk_toks.iter().zip(chunk_out.iter_mut())
+                    {
+                        *o = hash_token(17, t.as_bytes(), 1 << 12);
+                    }
+                });
+            }
+        });
+        assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn parse_good_line() {
+        let cfg = cfg8();
+        let schema = cfg.schema();
+        let mut out = vec![0u32; N_FIELDS];
+        let label =
+            parse_line(&good_line(1), &cfg, &schema, &mut out).unwrap();
+        assert_eq!(label, 1);
+        for (f, &g) in out.iter().enumerate() {
+            assert_eq!(schema.field_of(g), f, "field {f} id out of range");
+        }
+        // numeric 0 -> bucket 1, i.e. global id offset + 1
+        assert_eq!(out[0], schema.global_id(0, 1));
+    }
+
+    #[test]
+    fn parse_empty_fields_map_to_missing() {
+        let cfg = cfg8();
+        let schema = cfg.schema();
+        // every field empty: 13 + 26 empty columns after the label
+        let line = format!("0\t{}", vec![""; N_FIELDS].join("\t"));
+        let mut out = vec![0u32; N_FIELDS];
+        let label = parse_line(&line, &cfg, &schema, &mut out).unwrap();
+        assert_eq!(label, 0);
+        for (f, &g) in out.iter().enumerate() {
+            assert_eq!(g, schema.global_id(f, 0), "field {f} not missing-id");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let cfg = cfg8();
+        let schema = cfg.schema();
+        let mut out = vec![0u32; N_FIELDS];
+        // bad label
+        let bad_label = good_line(1).replacen('1', "7", 1);
+        assert!(parse_line(&bad_label, &cfg, &schema, &mut out).is_none());
+        // too few columns
+        let short = "1\t3\t4";
+        assert!(parse_line(short, &cfg, &schema, &mut out).is_none());
+        // too many columns
+        let long = format!("{}\textra", good_line(0));
+        assert!(parse_line(&long, &cfg, &schema, &mut out).is_none());
+        // non-integer numeric
+        let mut cols: Vec<String> =
+            good_line(0).split('\t').map(|s| s.to_string()).collect();
+        cols[3] = "not-a-number".into();
+        assert!(parse_line(&cols.join("\t"), &cfg, &schema, &mut out)
+            .is_none());
+    }
+
+    #[test]
+    fn stream_skips_malformed_and_counts() {
+        let contents = format!(
+            "{}\ngarbage line\n{}\n\n2\tbadlabel\n{}\n",
+            good_line(1),
+            good_line(0),
+            good_line(1)
+        );
+        let path = tmp_file("mixed.tsv", &contents);
+        let src = CriteoFile::open(&path, cfg8()).unwrap();
+        let mut stream = src.stream().unwrap();
+        let mut out = vec![0u32; N_FIELDS];
+        let mut labels = Vec::new();
+        while let Some(l) = stream.next_record(&mut out).unwrap() {
+            labels.push(l);
+        }
+        assert_eq!(labels, vec![1, 0, 1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_counter_is_observable_on_the_source() {
+        let contents =
+            format!("nonsense\n{}\nalso bad\t\t\n", good_line(1));
+        let path = tmp_file("counted.tsv", &contents);
+        let src = CriteoFile::open(&path, cfg8()).unwrap();
+        assert!(src.warnings().is_empty(), "clean before any stream");
+        let mut stream = src.stream().unwrap();
+        let mut out = vec![0u32; N_FIELDS];
+        let mut n = 0;
+        while stream.next_record(&mut out).unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 1);
+        assert_eq!(src.malformed_lines(), 2);
+        let warnings = src.warnings();
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("2 malformed"), "{warnings:?}");
+        // a second pass re-sees the same lines: max, not sum — the count
+        // stays "lines in the file", however many epochs stream it
+        let mut again = src.stream().unwrap();
+        while again.next_record(&mut out).unwrap().is_some() {}
+        assert_eq!(src.malformed_lines(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_utf8_bytes_are_malformed_lines_not_errors() {
+        let dir = std::env::temp_dir().join("alpt_criteo_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("binary.tsv");
+        let mut contents = good_line(1).into_bytes();
+        contents.push(b'\n');
+        contents.extend_from_slice(b"1\t\xFF\xFE broken bytes\n");
+        contents.extend_from_slice(good_line(0).as_bytes());
+        contents.push(b'\n');
+        std::fs::write(&path, &contents).unwrap();
+        let src = CriteoFile::open(&path, cfg8()).unwrap();
+        let mut stream = src.stream().unwrap();
+        let mut out = vec![0u32; N_FIELDS];
+        let mut labels = Vec::new();
+        while let Some(l) = stream.next_record(&mut out).unwrap() {
+            labels.push(l);
+        }
+        // the corrupt line is skipped, not fatal, and both sides survive
+        assert_eq!(labels, vec![1, 0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn two_streams_are_identical() {
+        // re-opening the source must reproduce the exact record sequence
+        let mut contents = String::new();
+        for i in 0..50 {
+            contents.push_str(&good_line((i % 2) as u8));
+            contents.push('\n');
+        }
+        let path = tmp_file("repeat.tsv", &contents);
+        let src = CriteoFile::open(&path, cfg8()).unwrap();
+        let read_all = |s: &mut dyn RecordStream| {
+            let mut out = vec![0u32; N_FIELDS];
+            let mut acc = Vec::new();
+            while let Some(l) = s.next_record(&mut out).unwrap() {
+                acc.push((out.clone(), l));
+            }
+            acc
+        };
+        let a = read_all(src.stream().unwrap().as_mut());
+        let b = read_all(src.stream().unwrap().as_mut());
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_missing_file() {
+        let err = CriteoFile::open(
+            Path::new("/nonexistent/criteo.tsv"),
+            cfg8(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("does not exist"));
+    }
+}

@@ -1,18 +1,29 @@
 //! CTR data pipeline: schema, in-memory dataset, on-disk binary format,
-//! train/val/test splits.
+//! train/val/test splits, and the streaming dataset subsystem.
 //!
-//! The paper trains on Kaggle Criteo/Avazu, which are download-gated; the
-//! [`synthetic`] module generates datasets with the properties the paper's
-//! experiments exercise (long-tailed Zipf features, learnable interaction
-//! structure — DESIGN.md §5.1). Everything downstream is agnostic to where
-//! the samples came from.
+//! Two ways to feed the trainer:
+//!
+//! * the [`synthetic`] module generates in-memory datasets with the
+//!   properties the paper's experiments exercise (long-tailed Zipf
+//!   features, learnable interaction structure — DESIGN.md §5.1);
+//! * the [`criteo`] module streams Criteo-format TSV files (the paper's
+//!   real workload shape) record by record, hashing categorical tokens
+//!   and bucketizing numeric columns on the fly.
+//!
+//! Both sit behind the [`registry::DataSource`] trait; [`batcher`] turns
+//! either into deduplicated fixed-size batches (with an optional
+//! background prefetch thread for the streaming path).
 //!
 //! Feature ids are *global*: field `f`'s local id `j` maps to
 //! `field_offset[f] + j`, so one embedding table serves all fields — the
 //! same layout CTR systems and the paper use (one row per feature).
 
 pub mod batcher;
+pub mod criteo;
+pub mod registry;
 pub mod synthetic;
+
+pub use registry::{DataSource, DatasetSpec, RecordStream};
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;

@@ -1,0 +1,396 @@
+//! Dataset registry: one trait over every sample source — the in-memory
+//! synthetic generators and streaming Criteo-format files — plus the
+//! `--dataset` spec grammar and the epoch-stream assembly (holdout split
+//! → seeded window shuffle) shared by the trainer and the serving path.
+//!
+//! Spec grammar (the `dataset` config key / `--dataset` flag):
+//!
+//! * `tiny` / `avazu` / `criteo` — in-memory synthetic specs (the
+//!   pre-existing path: full shuffle, 8:1:1 split);
+//! * `synthetic` / `synthetic:NAME` — the same generators consumed
+//!   through the streaming interface (identical code path to files);
+//! * `criteo:PATH` — Criteo-format TSV streamed from disk
+//!   (see [`super::criteo`]).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::batcher::{ShuffleStream, SplitStream};
+use super::criteo::{CriteoCfg, CriteoFile};
+use super::synthetic::{generate, SyntheticSpec};
+use super::{Dataset, Schema};
+use crate::config::Experiment;
+
+/// One in-order pass over a dataset's records. `Send` so the prefetching
+/// batcher can pull records from a background thread.
+pub trait RecordStream: Send {
+    /// Write the next record's global feature ids into `out`
+    /// (`schema.n_fields()` slots) and return its label, or `None` at the
+    /// end of the stream.
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>>;
+}
+
+impl<T: RecordStream + ?Sized> RecordStream for Box<T> {
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>> {
+        (**self).next_record(out)
+    }
+}
+
+/// A source of CTR records: a schema plus the ability to open fresh
+/// streams (one per epoch or eval pass). Sources are cheap handles; the
+/// heavy state (open files, buffers) lives in the streams they mint.
+pub trait DataSource: Send + Sync {
+    fn name(&self) -> &str;
+    fn schema(&self) -> &Schema;
+    /// Record count when known without scanning (in-memory sources).
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+    /// Open a fresh stream over all records in file/generation order.
+    fn stream(&self) -> Result<Box<dyn RecordStream>>;
+    /// Data-quality warnings accumulated by this source's streams so far
+    /// (e.g. malformed lines skipped); empty when clean. Callers should
+    /// surface these after a pass — a file whose every line is skipped
+    /// would otherwise "train" silently on nothing.
+    fn warnings(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+/// Parsed `--dataset` value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DatasetSpec {
+    /// Synthetic generator consumed in memory (the pre-existing path).
+    Synthetic(String),
+    /// Synthetic generator consumed through the streaming interface.
+    SyntheticStream(String),
+    /// Criteo-format TSV streamed from disk.
+    CriteoFile(std::path::PathBuf),
+}
+
+impl DatasetSpec {
+    pub fn parse(s: &str) -> DatasetSpec {
+        if let Some(path) = s.strip_prefix("criteo:") {
+            DatasetSpec::CriteoFile(path.into())
+        } else if let Some(name) = s.strip_prefix("synthetic:") {
+            DatasetSpec::SyntheticStream(name.to_string())
+        } else if s == "synthetic" {
+            DatasetSpec::SyntheticStream("tiny".to_string())
+        } else {
+            DatasetSpec::Synthetic(s.to_string())
+        }
+    }
+
+    /// Does this spec train through the streaming pipeline (vs the
+    /// in-memory split/shuffle path)?
+    pub fn is_streaming(&self) -> bool {
+        !matches!(self, DatasetSpec::Synthetic(_))
+    }
+}
+
+/// Build the [`DataSource`] an experiment's `dataset` key names.
+pub fn open_source(exp: &Experiment) -> Result<Box<dyn DataSource>> {
+    match DatasetSpec::parse(&exp.dataset) {
+        DatasetSpec::Synthetic(name)
+        | DatasetSpec::SyntheticStream(name) => {
+            let spec =
+                SyntheticSpec::for_dataset(&name, exp.seed, exp.vocab_scale)?;
+            let name = spec.name.clone();
+            let ds = generate(&spec, exp.n_samples);
+            Ok(Box::new(SyntheticSource::from_dataset(&name, ds)))
+        }
+        DatasetSpec::CriteoFile(path) => {
+            let cfg = CriteoCfg {
+                hash_bits: exp.hash_bits,
+                numeric_buckets: exp.numeric_buckets,
+            };
+            Ok(Box::new(CriteoFile::open(&path, cfg).with_context(
+                || format!("opening dataset {}", path.display()),
+            )?))
+        }
+    }
+}
+
+/// The schema (and so the embedding-table row count) a dataset spec
+/// induces, without generating or scanning any data.
+pub fn schema_for(exp: &Experiment) -> Result<Schema> {
+    match DatasetSpec::parse(&exp.dataset) {
+        DatasetSpec::Synthetic(name)
+        | DatasetSpec::SyntheticStream(name) => {
+            let spec =
+                SyntheticSpec::for_dataset(&name, exp.seed, exp.vocab_scale)?;
+            Ok(Schema::new(spec.vocabs))
+        }
+        DatasetSpec::CriteoFile(_) => {
+            let cfg = CriteoCfg {
+                hash_bits: exp.hash_bits,
+                numeric_buckets: exp.numeric_buckets,
+            };
+            cfg.validate()?;
+            Ok(cfg.schema())
+        }
+    }
+}
+
+/// Streaming view over an in-memory dataset (synthetic generators, test
+/// fixtures). The data is shared, not copied, across streams.
+pub struct SyntheticSource {
+    name: String,
+    ds: Arc<Dataset>,
+}
+
+impl SyntheticSource {
+    pub fn from_dataset(name: &str, ds: Dataset) -> Self {
+        Self { name: name.to_string(), ds: Arc::new(ds) }
+    }
+}
+
+impl DataSource for SyntheticSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.ds.schema
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.ds.n_samples())
+    }
+
+    fn stream(&self) -> Result<Box<dyn RecordStream>> {
+        Ok(Box::new(SyntheticStream { ds: Arc::clone(&self.ds), next: 0 }))
+    }
+}
+
+struct SyntheticStream {
+    ds: Arc<Dataset>,
+    next: usize,
+}
+
+impl RecordStream for SyntheticStream {
+    fn next_record(&mut self, out: &mut [u32]) -> Result<Option<u8>> {
+        if self.next >= self.ds.n_samples() {
+            return Ok(None);
+        }
+        out.copy_from_slice(self.ds.sample(self.next));
+        let label = self.ds.labels[self.next];
+        self.next += 1;
+        Ok(Some(label))
+    }
+}
+
+/// Training-split stream for `epoch` (1-based): held-out records removed,
+/// remainder shuffled through a seeded reservoir window. The per-epoch
+/// seed uses the same mixing as the in-memory `Trainer::train` loop, so
+/// every epoch sees a fresh deterministic order.
+pub fn train_epoch_stream(
+    source: &dyn DataSource,
+    exp: &Experiment,
+    epoch: usize,
+) -> Result<Box<dyn RecordStream>> {
+    let split = SplitStream::train(source.stream()?, exp.seed);
+    let epoch_seed = exp.seed ^ (epoch as u64).wrapping_mul(0x9E37);
+    Ok(Box::new(ShuffleStream::new(
+        split,
+        exp.shuffle_window,
+        epoch_seed,
+    )))
+}
+
+/// Held-out split stream (deterministic order, no shuffle) — the eval
+/// counterpart of [`train_epoch_stream`].
+pub fn val_stream(
+    source: &dyn DataSource,
+    exp: &Experiment,
+) -> Result<Box<dyn RecordStream>> {
+    Ok(Box::new(SplitStream::val(source.stream()?, exp.seed)))
+}
+
+/// The single dataset ↔ model/table compatibility rule shared by the
+/// training and serving paths (one definition, so it cannot drift):
+/// field counts must match the model exactly; the embedding table may be
+/// *larger* than the schema needs (e.g. warm-started from a bigger run),
+/// never smaller.
+pub fn ensure_compat(
+    source: &dyn DataSource,
+    model: &str,
+    fields: usize,
+    table_rows: usize,
+) -> Result<()> {
+    ensure!(
+        source.schema().n_fields() == fields,
+        "dataset {} has {} fields, model {model:?} expects {fields}",
+        source.name(),
+        source.schema().n_fields(),
+    );
+    ensure!(
+        source.schema().n_features() <= table_rows,
+        "dataset {} needs {} feature rows, the table holds {table_rows}",
+        source.name(),
+        source.schema().n_features(),
+    );
+    Ok(())
+}
+
+/// Discard `n` already-consumed records — the resume-from-checkpoint
+/// fast-forward. The stream is a deterministic function of
+/// (source, seed, epoch), so skipping reproduces the remainder exactly.
+/// Errors when the stream runs out early: that means the data changed
+/// under the checkpoint (truncated or different file), and continuing
+/// would silently break the bit-identical-resume contract.
+pub fn skip_records(
+    stream: &mut dyn RecordStream,
+    n_fields: usize,
+    n: u64,
+) -> Result<()> {
+    let mut buf = vec![0u32; n_fields];
+    for i in 0..n {
+        ensure!(
+            stream.next_record(&mut buf)?.is_some(),
+            "stream ended after {i} of {n} skipped records — has the \
+             dataset changed since the checkpoint was written?"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_source(n: usize) -> SyntheticSource {
+        let schema = Schema::new(vec![4, 3]);
+        let mut features = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            features.push((i % 4) as u32);
+            features.push(4 + (i % 3) as u32);
+            labels.push((i % 2) as u8);
+        }
+        SyntheticSource::from_dataset(
+            "toy",
+            Dataset { schema, features, labels },
+        )
+    }
+
+    #[test]
+    fn spec_grammar() {
+        assert_eq!(
+            DatasetSpec::parse("tiny"),
+            DatasetSpec::Synthetic("tiny".into())
+        );
+        assert_eq!(
+            DatasetSpec::parse("synthetic"),
+            DatasetSpec::SyntheticStream("tiny".into())
+        );
+        assert_eq!(
+            DatasetSpec::parse("synthetic:avazu"),
+            DatasetSpec::SyntheticStream("avazu".into())
+        );
+        assert_eq!(
+            DatasetSpec::parse("criteo:/data/day_0.tsv"),
+            DatasetSpec::CriteoFile("/data/day_0.tsv".into())
+        );
+        // plain "criteo" stays the synthetic spec (back-compat)
+        assert!(!DatasetSpec::parse("criteo").is_streaming());
+        assert!(DatasetSpec::parse("criteo:x").is_streaming());
+        assert!(DatasetSpec::parse("synthetic").is_streaming());
+    }
+
+    #[test]
+    fn synthetic_source_streams_every_record_in_order() {
+        let src = toy_source(23);
+        assert_eq!(src.len_hint(), Some(23));
+        let mut stream = src.stream().unwrap();
+        let mut out = vec![0u32; 2];
+        let mut n = 0usize;
+        while let Some(label) = stream.next_record(&mut out).unwrap() {
+            assert_eq!(out[0], (n % 4) as u32);
+            assert_eq!(label, (n % 2) as u8);
+            n += 1;
+        }
+        assert_eq!(n, 23);
+        // a second stream starts over
+        let mut again = src.stream().unwrap();
+        assert!(again.next_record(&mut out).unwrap().is_some());
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn schema_for_matches_sources() {
+        let exp = Experiment {
+            dataset: "synthetic:tiny".into(),
+            ..Experiment::default()
+        };
+        let schema = schema_for(&exp).unwrap();
+        let src = open_source(&exp).unwrap();
+        assert_eq!(&schema, src.schema());
+
+        let exp = Experiment {
+            dataset: "criteo:/no/such/file".into(),
+            hash_bits: 8,
+            ..Experiment::default()
+        };
+        // schema needs no file ...
+        let schema = schema_for(&exp).unwrap();
+        assert_eq!(schema.n_fields(), 39);
+        // ... but opening the source does
+        assert!(open_source(&exp).is_err());
+    }
+
+    #[test]
+    fn train_and_val_streams_partition_the_source() {
+        let src = toy_source(200);
+        let exp = Experiment {
+            shuffle_window: 1, // identity shuffle: order preserved
+            ..Experiment::default()
+        };
+        let count = |s: &mut dyn RecordStream| {
+            let mut out = vec![0u32; 2];
+            let mut n = 0usize;
+            while s.next_record(&mut out).unwrap().is_some() {
+                n += 1;
+            }
+            n
+        };
+        let n_train =
+            count(train_epoch_stream(&src, &exp, 1).unwrap().as_mut());
+        let n_val = count(val_stream(&src, &exp).unwrap().as_mut());
+        assert_eq!(n_train + n_val, 200);
+        // ~10% holdout (wide bounds: the split is a hash, not a quota)
+        assert!((5..=45).contains(&n_val), "n_val={n_val}");
+    }
+
+    #[test]
+    fn skip_records_fast_forwards_exactly() {
+        let src = toy_source(60);
+        let exp = Experiment::default();
+        let mut full = train_epoch_stream(&src, &exp, 2).unwrap();
+        let mut out = vec![0u32; 2];
+        let mut tail_expected = Vec::new();
+        let mut i = 0u64;
+        while let Some(l) = full.next_record(&mut out).unwrap() {
+            if i >= 17 {
+                tail_expected.push((out.clone(), l));
+            }
+            i += 1;
+        }
+        let mut skipped = train_epoch_stream(&src, &exp, 2).unwrap();
+        skip_records(skipped.as_mut(), 2, 17).unwrap();
+        let mut tail = Vec::new();
+        while let Some(l) = skipped.next_record(&mut out).unwrap() {
+            tail.push((out.clone(), l));
+        }
+        assert_eq!(tail, tail_expected);
+
+        // skipping past the end is a dataset-changed error, not a no-op
+        let mut short = train_epoch_stream(&src, &exp, 2).unwrap();
+        let err = skip_records(short.as_mut(), 2, 10_000).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("dataset changed"),
+            "{err:#}"
+        );
+    }
+}

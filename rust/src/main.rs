@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! alpt train   --dataset avazu --method alpt-sr --bits 8 [--config f.toml]
+//! alpt train   --dataset criteo:path/to/train.tsv --method alpt --bits 8
 //! alpt gen     --dataset criteo --samples 100000 --out data.ds
 //! alpt convex                      # the Figure-3 synthetic experiment
 //! alpt info                        # artifact manifest + environment
@@ -10,6 +11,7 @@
 use alpt::cli::Args;
 use alpt::config::{Experiment, Method};
 use alpt::coordinator::Trainer;
+use alpt::data::registry::{self, DataSource, DatasetSpec};
 use alpt::data::synthetic::{generate, SyntheticSpec};
 use alpt::data::Dataset;
 use anyhow::{bail, Context, Result};
@@ -18,15 +20,22 @@ const USAGE: &str = "\
 alpt — Adaptive Low-Precision Training for CTR embeddings (AAAI 2023)
 
 USAGE:
-  alpt train  [--config FILE] [--dataset avazu|criteo|tiny]
+  alpt train  [--config FILE]
+              [--dataset avazu|criteo|tiny|synthetic[:NAME]|criteo:FILE.tsv]
               [--method fp|lpt-sr|lpt-dr|alpt-sr|alpt-dr|lsq|pact|hashing|pruning]
               [--bits 2|4|8|16] [--epochs N] [--samples N] [--seed N]
               [--model NAME] [--no-runtime]
+              [--hash-bits N] [--numeric-buckets N] [--shuffle-window N]
+              [--prefetch-batches N] [--save-every STEPS]
               [--save FILE.ckpt] [--resume FILE.ckpt]
   alpt serve  --ckpt FILE.ckpt [--batches N]     (no training: load + serve)
   alpt gen    --dataset NAME --samples N --out FILE.ds
   alpt convex                                    (Figure-3 experiment)
   alpt info                                      (manifest + environment)
+
+Datasets: plain names are in-memory synthetic specs; `criteo:FILE.tsv`
+streams a Criteo-format TSV (label + 13 numeric + 26 categorical columns)
+from disk with on-the-fly feature hashing — see README.md \"Datasets\".
 ";
 
 fn main() -> Result<()> {
@@ -75,6 +84,14 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
     exp.epochs = args.get_parse("epochs", exp.epochs)?;
     exp.seed = args.get_parse("seed", exp.seed)?;
     exp.n_samples = args.get_parse("samples", exp.n_samples)?;
+    exp.hash_bits = args.get_parse("hash-bits", exp.hash_bits)?;
+    exp.numeric_buckets =
+        args.get_parse("numeric-buckets", exp.numeric_buckets)?;
+    exp.shuffle_window =
+        args.get_parse("shuffle-window", exp.shuffle_window)?;
+    exp.prefetch_batches =
+        args.get_parse("prefetch-batches", exp.prefetch_batches)?;
+    exp.save_every = args.get_parse("save-every", exp.save_every)?;
     if args.flag("no-runtime") {
         exp.use_runtime = false;
     }
@@ -82,7 +99,15 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
 }
 
 fn make_spec(exp: &Experiment) -> Result<SyntheticSpec> {
-    SyntheticSpec::for_dataset(&exp.dataset, exp.seed, exp.vocab_scale)
+    match DatasetSpec::parse(&exp.dataset) {
+        DatasetSpec::Synthetic(name)
+        | DatasetSpec::SyntheticStream(name) => {
+            SyntheticSpec::for_dataset(&name, exp.seed, exp.vocab_scale)
+        }
+        DatasetSpec::CriteoFile(path) => {
+            bail!("{} streams from disk (no synthetic spec)", path.display())
+        }
+    }
 }
 
 fn train(args: &Args) -> Result<()> {
@@ -105,12 +130,13 @@ fn train(args: &Args) -> Result<()> {
         trainer
     } else {
         let exp = build_experiment(args)?;
-        let spec = make_spec(&exp)?;
-        let n_features =
-            alpt::data::Schema::new(spec.vocabs.clone()).n_features();
+        let n_features = registry::schema_for(&exp)?.n_features();
         Trainer::new(exp, n_features)?
     };
     let exp = trainer.exp.clone();
+    if DatasetSpec::parse(&exp.dataset).is_streaming() {
+        return train_streaming(&mut trainer, args);
+    }
     let spec = make_spec(&exp)?;
     println!("generating {} samples of {}...", exp.n_samples, spec.name);
     let ds = generate(&spec, exp.n_samples);
@@ -137,6 +163,77 @@ fn train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save") {
         trainer.save_checkpoint(std::path::Path::new(path))?;
         println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// The streaming training path (`criteo:<path>` / `synthetic[:name]`):
+/// epochs stream from the source with a deterministic holdout split;
+/// reported metrics come from the held-out split rather than a third
+/// test partition.
+fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
+    let exp = trainer.exp.clone();
+    let source = registry::open_source(&exp)?;
+    println!(
+        "streaming {}: {} fields, {} feature rows (hash_bits {}, \
+         window {}, prefetch {})",
+        source.name(),
+        source.schema().n_fields(),
+        source.schema().n_features(),
+        exp.hash_bits,
+        exp.shuffle_window,
+        exp.prefetch_batches
+    );
+    println!(
+        "training {} ({} bits) [{} runtime]",
+        trainer.store.method_name(),
+        exp.bits,
+        if trainer.uses_runtime() { "PJRT" } else { "rust-nn" }
+    );
+    let save_path = args.get("save").map(std::path::Path::new);
+    if save_path.is_none() && exp.save_every > 0 {
+        if args.get("save-every").is_some() {
+            // explicitly requested this invocation: refusing beats
+            // silently writing no checkpoints for hours
+            bail!(
+                "--save-every {} needs --save FILE.ckpt to write the \
+                 mid-stream checkpoints to",
+                exp.save_every
+            );
+        }
+        // inherited from a config file / resume echo: warn and run
+        eprintln!(
+            "warning: save_every {} is set but no --save path was \
+             given; mid-stream checkpoints are disabled",
+            exp.save_every
+        );
+    }
+    let res =
+        trainer.train_stream(source.as_ref(), !args.flag("quiet"), save_path)?;
+    // train_stream already evaluated the held-out split after the final
+    // epoch and the model has not changed since; re-evaluate only when
+    // no epoch ran (e.g. resuming an already-finished run)
+    let (auc, logloss) = match res.history.last() {
+        Some(r) => (r.val_auc, r.val_logloss),
+        None => {
+            let ev = trainer.evaluate_source(source.as_ref())?;
+            (ev.auc, ev.logloss)
+        }
+    };
+    for w in source.warnings() {
+        eprintln!("warning: {w}");
+    }
+    println!(
+        "\n{}: held-out auc {auc:.4}  logloss {logloss:.5}  compress \
+         {:.1}x train / {:.1}x infer  ({:.1}s/epoch)",
+        res.method,
+        res.train_compression,
+        res.infer_compression,
+        res.seconds_per_epoch
+    );
+    if let Some(path) = save_path {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint saved to {}", path.display());
     }
     Ok(())
 }
@@ -171,6 +268,9 @@ fn serve(args: &Args) -> Result<()> {
         percentile(&report.latencies_ms, 99.0),
         report.requests_per_sec()
     );
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
     Ok(())
 }
 

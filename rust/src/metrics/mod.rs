@@ -118,6 +118,110 @@ impl EvalAccumulator {
     }
 }
 
+/// Fixed-memory streaming AUC: scores are bucketed through the sigmoid
+/// into [`StreamingAuc::BUCKETS`] per-class histogram bins, and AUC is
+/// the rank-sum over the histogram with the standard half-credit
+/// treatment of within-bin ties. The approximation error is bounded by
+/// the bin width (1/BUCKETS in probability space) — with 4096 bins it
+/// sits far below the 0.001-AUC significance level the paper uses —
+/// while state stays at 64 KiB no matter how long the eval stream is.
+pub struct StreamingAuc {
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl StreamingAuc {
+    pub const BUCKETS: usize = 4096;
+
+    pub fn new() -> Self {
+        Self {
+            pos: vec![0; Self::BUCKETS],
+            neg: vec![0; Self::BUCKETS],
+        }
+    }
+
+    pub fn push(&mut self, logit: f32, label: u8) {
+        let p = sigmoid(logit) as f64;
+        let b = ((p * Self::BUCKETS as f64) as usize)
+            .min(Self::BUCKETS - 1);
+        if label != 0 {
+            self.pos[b] += 1;
+        } else {
+            self.neg[b] += 1;
+        }
+    }
+
+    /// Returns 0.5 for degenerate inputs, like [`auc`].
+    pub fn auc(&self) -> f64 {
+        let n_pos: u64 = self.pos.iter().sum();
+        let n_neg: u64 = self.neg.iter().sum();
+        if n_pos == 0 || n_neg == 0 {
+            return 0.5;
+        }
+        let mut wins = 0.0f64;
+        let mut neg_below = 0.0f64;
+        for (p, n) in self.pos.iter().zip(&self.neg) {
+            let (p, n) = (*p as f64, *n as f64);
+            wins += p * (neg_below + 0.5 * n);
+            neg_below += n;
+        }
+        wins / (n_pos as f64 * n_neg as f64)
+    }
+}
+
+impl Default for StreamingAuc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bounded-memory eval accumulator for streaming datasets: histogram AUC
+/// plus exact running logloss. The streaming counterpart of
+/// [`EvalAccumulator`].
+#[derive(Default)]
+pub struct StreamingEval {
+    auc: StreamingAuc,
+    loss_sum: f64,
+    n: usize,
+}
+
+impl StreamingEval {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `valid` limits to the un-padded prefix of the final batch.
+    pub fn push(&mut self, logits: &[f32], labels: &[u8], valid: usize) {
+        for (&z, &y) in logits[..valid].iter().zip(&labels[..valid]) {
+            self.auc.push(z, y);
+            let z = z as f64;
+            self.loss_sum +=
+                z.max(0.0) - z * y as f64 + (-z.abs()).exp().ln_1p();
+        }
+        self.n += valid;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn auc(&self) -> f64 {
+        self.auc.auc()
+    }
+
+    pub fn logloss(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.n as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +324,66 @@ mod tests {
         acc.push(&[0.5], &[0], 1);
         assert_eq!(acc.len(), 3);
         assert!(acc.auc() > 0.0);
+    }
+
+    #[test]
+    fn streaming_auc_tracks_exact_auc() {
+        let mut rng = Pcg32::seeded(11);
+        let n = 30_000;
+        let logits: Vec<f32> =
+            (0..n).map(|_| rng.normal_scaled(0.0, 1.5)).collect();
+        let labels: Vec<u8> = logits
+            .iter()
+            .map(|&z| rng.bernoulli(sigmoid(0.8 * z)) as u8)
+            .collect();
+        let exact = auc(&logits, &labels);
+        let mut streaming = StreamingAuc::new();
+        for (&z, &y) in logits.iter().zip(&labels) {
+            streaming.push(z, y);
+        }
+        let approx = streaming.auc();
+        assert!(
+            (approx - exact).abs() < 5e-4,
+            "streaming {approx} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn streaming_auc_degenerate_is_half() {
+        let mut s = StreamingAuc::new();
+        assert_eq!(s.auc(), 0.5);
+        s.push(0.3, 1);
+        s.push(2.0, 1);
+        assert_eq!(s.auc(), 0.5);
+    }
+
+    #[test]
+    fn streaming_auc_perfect_separation() {
+        let mut s = StreamingAuc::new();
+        for i in 0..50 {
+            s.push(-4.0 - (i as f32) * 0.1, 0);
+            s.push(4.0 + (i as f32) * 0.1, 1);
+        }
+        assert!(s.auc() > 0.999, "auc={}", s.auc());
+    }
+
+    #[test]
+    fn streaming_eval_matches_batch_metrics() {
+        let logits = [0.4f32, -1.2, 2.0, 0.0, -0.3, 1.1];
+        let labels = [1u8, 0, 1, 0, 1, 0];
+        let mut acc = StreamingEval::new();
+        // push in two chunks, the second with a padded tail
+        acc.push(&logits[..3], &labels[..3], 3);
+        acc.push(&logits[3..], &labels[3..], 3);
+        assert_eq!(acc.len(), 6);
+        let exact_ll = logloss_from_logits(&logits, &labels);
+        assert!((acc.logloss() - exact_ll).abs() < 1e-12);
+        let exact_auc = auc(&logits, &labels);
+        assert!((acc.auc() - exact_auc).abs() < 2e-3);
+        // `valid` masks padding
+        let mut masked = StreamingEval::new();
+        masked.push(&logits, &labels, 4);
+        assert_eq!(masked.len(), 4);
     }
 
     #[test]

@@ -66,6 +66,7 @@ def experiment_echo():
         "dropout_seed": "1234",
         "epochs": 2,
         "grad_scale": "inv_sqrt_bdq",
+        "hash_bits": 16,
         "lr_delta": f32(2e-5),
         "lr_dense": f32(1e-3),
         "lr_emb": f32(1e-2),
@@ -74,8 +75,12 @@ def experiment_echo():
         "method": "lpt-sr",
         "model": "tiny",
         "n_samples": 20000,
+        "numeric_buckets": 40,
         "patience": 0,
+        "prefetch_batches": 2,
+        "save_every": 0,
         "seed": "7",
+        "shuffle_window": 4096,
         "threads": 0,
         "use_runtime": False,
         "vocab_scale": 1.0,
