@@ -8,7 +8,7 @@
 //! ```
 
 use alpt::cli::Args;
-use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
 use alpt::coordinator::sharding::{step_comm, ShardedStore};
 use alpt::data::batcher::Batcher;
 use alpt::data::synthetic::{generate, SyntheticSpec};
@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     // parallel sharded gather throughput
     let exp = Experiment {
         method: Method::Alpt(RoundingMode::Sr),
-        bits: 8,
+        bits: PrecisionPlan::uniform(8),
         use_runtime: false,
         ..Experiment::default()
     };

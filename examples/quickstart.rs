@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     };
     let mut trainer = Trainer::new(exp.clone(), ds.schema.n_features())?;
     println!(
-        "\nmethod: {} ({} runtime), {} bits, train compression {:.1}x",
+        "\nmethod: {} ({} runtime), bits {}, train compression {:.1}x",
         trainer.store.method_name(),
         if trainer.uses_runtime() { "PJRT" } else { "rust-nn" },
         exp.bits,

@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     if let Some(m) = args.get("method") {
         exp.method = Method::parse(m)?;
     }
-    exp.bits = args.get_parse("bits", exp.bits)?;
+    exp.bits = args.get_parse("bits", exp.bits.clone())?;
     exp.epochs = args.get_parse("epochs", exp.epochs)?;
     exp.seed = args.get_parse("seed", exp.seed)?;
     exp.n_samples = args.get_parse("samples", exp.n_samples)?;
@@ -79,7 +79,7 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(exp.clone(), ds.schema.n_features())?;
     if verbose {
         println!(
-            "training {} on {} ({} bits, model {}, {} epochs, runtime={})",
+            "training {} on {} (bits {}, model {}, {} epochs, runtime={})",
             trainer.store.method_name(),
             spec.name,
             exp.bits,
@@ -122,7 +122,7 @@ fn main() -> Result<()> {
         let doc = Json::obj(vec![
             ("method", Json::str(res.method)),
             ("dataset", Json::str(&spec.name)),
-            ("bits", Json::num(exp.bits as f64)),
+            ("bits", exp.bits.echo_json()),
             ("test_auc", Json::num(test_ev.auc)),
             ("test_logloss", Json::num(test_ev.logloss)),
             ("best_epoch", Json::num(res.best_epoch as f64)),

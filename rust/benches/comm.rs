@@ -2,7 +2,7 @@
 //! leader↔worker traffic of a sharded embedding table, by method and bit
 //! width, plus parallel sharded-gather scaling.
 
-use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
 use alpt::coordinator::sharding::{step_comm, ShardedStore};
 use alpt::coordinator::CommStats;
 use alpt::data::batcher::Batcher;
@@ -63,7 +63,7 @@ fn main() {
     println!("\nsharded parallel gather throughput (ALPT-8bit shards):");
     let exp = Experiment {
         method: Method::Alpt(RoundingMode::Sr),
-        bits: 8,
+        bits: PrecisionPlan::uniform(8),
         use_runtime: false,
         ..Experiment::default()
     };

@@ -7,12 +7,15 @@
 //! `BENCH_micro.json` at the repo root (cross-PR perf trajectory) plus
 //! the legacy `results/micro.json`. Quick mode: `ALPT_BENCH_QUICK=1`.
 
-use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::config::{
+    Experiment, FieldKind, Method, PrecisionPlan, RoundingMode,
+};
 use alpt::coordinator::Trainer;
 use alpt::data::batcher::{make_batch, Batcher};
 use alpt::data::synthetic::{generate, SyntheticSpec};
+use alpt::data::Schema;
 use alpt::embedding::{
-    AlptStore, EmbeddingStore, FpStore, LptStore, UpdateHp,
+    AlptStore, EmbeddingStore, FpStore, GroupedStore, LptStore, UpdateHp,
 };
 use alpt::nn::{Dcn, DcnConfig};
 use alpt::quant::{quantize_row, BitWidth, PackedTable, Rounding};
@@ -196,8 +199,10 @@ fn main() {
         .map(|i| ((i % 13) as f32 - 6.0) * 0.01)
         .collect();
     let hp = bench_hp();
-    let mut nop_sp =
-        |_: &[f32], _: &[f32]| -> Result<Vec<f32>> { unreachable!() };
+    let mut nop_sp = |_: &[f32],
+                      _: &[f32],
+                      _: &[BitWidth]|
+     -> Result<Vec<f32>> { unreachable!() };
     for bits in [4u32, 8] {
         let bw = BitWidth::from_bits(bits).unwrap();
         let mut lpt = LptStore::init(n, d, bw, 0.1, Rounding::Stochastic,
@@ -217,9 +222,10 @@ fn main() {
                 .unwrap();
         });
     }
-    let mut zero_sp = |_w: &[f32], dl: &[f32]| -> Result<Vec<f32>> {
-        Ok(vec![0.0f32; dl.len()])
-    };
+    let mut zero_sp = |_w: &[f32],
+                       dl: &[f32],
+                       _: &[BitWidth]|
+     -> Result<Vec<f32>> { Ok(vec![0.0f32; dl.len()]) };
     for bits in [4u32, 8] {
         let bw = BitWidth::from_bits(bits).unwrap();
         let mut alpt_store =
@@ -239,6 +245,93 @@ fn main() {
             Some(gids.len() as f64),
             || {
                 alpt_store
+                    .update(&gids, &what, &grads, &hp, &mut rng2,
+                            &mut zero_sp)
+                    .unwrap();
+            },
+        );
+    }
+
+    // ------------------- mixed-precision grouped store (precision plan)
+    section(&format!(
+        "grouped mixed-precision store (num:4,cat:8 plan): 4096 rows x \
+         d=16, t1 vs t{n_threads} (rows/s)"
+    ));
+    {
+        // two equal halves: a 4-bit "numeric" group and an 8-bit
+        // "categorical" one, same row ids as the LPT rows above
+        let mixed_exp = Experiment {
+            method: Method::Lpt(RoundingMode::Sr),
+            bits: PrecisionPlan::parse("num:4,cat:8").unwrap(),
+            threads: 1,
+            use_runtime: false,
+            ..Experiment::default()
+        };
+        let schema =
+            Schema::new(vec![(n / 2) as u32, (n - n / 2) as u32]);
+        let kinds = [FieldKind::Numeric, FieldKind::Categorical];
+        let mut grouped = GroupedStore::from_plan(
+            &mixed_exp, &schema, &kinds, n, d, &mut rng2,
+        )
+        .expect("grouped store");
+        grouped.set_threads(1);
+        let mut serial_out = vec![0.0f32; gids.len() * d];
+        grouped.gather(&gids, &mut serial_out);
+        b.bench_units("mixed-{4,8}bit gather t1",
+                      Some(gids.len() as f64), || {
+            grouped.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+        grouped.set_threads(0);
+        b.bench_units(&format!("mixed-{{4,8}}bit gather t{n_threads}"),
+                      Some(gids.len() as f64), || {
+            grouped.gather(&gids, &mut gout);
+            std::hint::black_box(&gout);
+        });
+        assert_eq!(serial_out, gout,
+                   "grouped sharded gather must be bit-identical to serial");
+        let mut what = vec![0.0f32; gids.len() * d];
+        grouped.gather(&gids, &mut what);
+        grouped.set_threads(1);
+        b.bench_units("mixed-{4,8}bit update t1",
+                      Some(gids.len() as f64), || {
+            grouped
+                .update(&gids, &what, &grads, &hp, &mut rng2, &mut nop_sp)
+                .unwrap();
+        });
+        grouped.set_threads(0);
+        b.bench_units(&format!("mixed-{{4,8}}bit update t{n_threads}"),
+                      Some(gids.len() as f64), || {
+            grouped
+                .update(&gids, &what, &grads, &hp, &mut rng2, &mut nop_sp)
+                .unwrap();
+        });
+        // ALPT flavour: learned per-row deltas in both groups
+        let alpt_exp = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            ..mixed_exp.clone()
+        };
+        let mut alpt_grouped = GroupedStore::from_plan(
+            &alpt_exp, &schema, &kinds, n, d, &mut rng2,
+        )
+        .expect("grouped alpt store");
+        alpt_grouped.gather(&gids, &mut what);
+        alpt_grouped.set_threads(1);
+        b.bench_units("mixed-{4,8}bit ALPT update t1 (zero-cost sp)",
+                      Some(gids.len() as f64), || {
+            alpt_grouped
+                .update(&gids, &what, &grads, &hp, &mut rng2,
+                        &mut zero_sp)
+                .unwrap();
+        });
+        alpt_grouped.set_threads(0);
+        b.bench_units(
+            &format!(
+                "mixed-{{4,8}}bit ALPT update t{n_threads} (zero-cost sp)"
+            ),
+            Some(gids.len() as f64),
+            || {
+                alpt_grouped
                     .update(&gids, &what, &grads, &hp, &mut rng2,
                             &mut zero_sp)
                     .unwrap();

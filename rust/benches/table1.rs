@@ -34,10 +34,10 @@ fn main() {
         for (method, bits) in table1_methods() {
             let mut exp = base.clone();
             exp.method = method;
-            exp.bits = if bits == 32 { 8 } else { bits }; // storage fmt knob
-            if bits == 32 {
-                exp.bits = 8; // unused by fp/hash/prune stores
-            }
+            // storage fmt knob; 32 means fp/hash/prune, which ignore it
+            exp.bits = alpt::config::PrecisionPlan::uniform(
+                if bits == 32 { 8 } else { bits },
+            );
             let cell = match run_cell(&exp, &ds, false) {
                 Ok(c) => c,
                 Err(e) => {

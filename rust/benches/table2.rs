@@ -29,7 +29,7 @@ fn main() {
             for (method, _) in methods {
                 let mut exp = base.clone();
                 exp.method = method;
-                exp.bits = bits;
+                exp.bits = alpt::config::PrecisionPlan::uniform(bits);
                 // paper: clip 0.1 at 2/4-bit for LPT; smaller step-size
                 // weight decay for ALPT
                 exp.clip = 0.1;

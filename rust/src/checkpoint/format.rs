@@ -33,8 +33,18 @@ use anyhow::{bail, ensure, Result};
 /// File magic: 8 bytes at offset 0.
 pub const MAGIC: &[u8; 8] = b"ALPTCKPT";
 
-/// Current format version. Readers reject anything else.
+/// Single-group format version — everything a uniform precision plan
+/// writes. Kept at 1 so uniform-plan checkpoints stay byte-identical
+/// across the mixed-precision refactor.
 pub const VERSION: u32 = 1;
+
+/// Grouped format version: the meta section carries a `groups` array
+/// (one `{bits, rows, row_bytes, aux_len}` header per precision group),
+/// `Rows` sections run group by group with a global shard index, and
+/// each group's per-row scalars live in an `Aux` section whose index is
+/// the group number. Readers accept both versions; version-1 files load
+/// as a single-group plan.
+pub const VERSION_GROUPED: u32 = 2;
 
 /// Fixed byte size of the file header (magic + version + section count).
 pub const HEADER_BYTES: usize = 16;

@@ -37,17 +37,32 @@ use std::path::Path;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::config::{Experiment, Method};
-use crate::embedding::{build_store, EmbeddingStore};
+use crate::config::{Experiment, Method, PrecisionPlan};
+use crate::embedding::{build_store, EmbeddingStore, GroupedStore};
 use crate::quant::GradScale;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
-use format::{parse_f32s, put_f32s, VERSION};
+use format::{parse_f32s, put_f32s, VERSION, VERSION_GROUPED};
 
 /// Rows per `Rows` section. Fixed (not tied to the thread config) so the
 /// file layout is identical no matter how the writer was parallelized;
 /// also bounds the writer/reader shard buffer (64 Ki rows).
 pub const SHARD_ROWS: usize = 1 << 16;
+
+/// Open a writer whose header version matches `store`'s checkpoint
+/// format: single-group stores write version 1 (byte-identical to the
+/// pre-grouping layout), grouped mixed-precision stores version 2.
+pub fn writer_for_store(
+    path: &Path,
+    store: &dyn EmbeddingStore,
+) -> Result<CheckpointWriter> {
+    let version = if store.as_grouped().is_some() {
+        VERSION_GROUPED
+    } else {
+        VERSION
+    };
+    CheckpointWriter::create_with_version(path, version)
+}
 
 /// Serialize `store` (rows + aux scalars + metadata echoing `exp`) to
 /// `path`. Fails for stores that cannot be checkpointed (hashing,
@@ -57,19 +72,24 @@ pub fn save_store(
     store: &dyn EmbeddingStore,
     exp: &Experiment,
 ) -> Result<()> {
-    let mut w = CheckpointWriter::create(path)?;
+    let mut w = writer_for_store(path, store)?;
     write_store_sections(&mut w, store, exp)?;
     w.finish()
 }
 
 /// Write the store-owned sections (`Meta`, `Rows` shards, `Aux`) into an
 /// open writer. `Trainer::save_checkpoint` appends its own sections
-/// (dense / optimizer / rng) after this.
+/// (dense / optimizer / rng) after this. Grouped mixed-precision stores
+/// take the format-v2 layout (one section run per precision group);
+/// everything else writes the version-1 layout unchanged.
 pub fn write_store_sections(
     w: &mut CheckpointWriter,
     store: &dyn EmbeddingStore,
     exp: &Experiment,
 ) -> Result<()> {
+    if let Some(gs) = store.as_grouped() {
+        return write_grouped_sections(w, gs, exp);
+    }
     let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
         anyhow!("{} does not support checkpointing", store.method_name())
     })?;
@@ -106,6 +126,73 @@ pub fn write_store_sections(
         let mut aux_bytes = Vec::with_capacity(aux_len * 4);
         put_f32s(&mut aux_bytes, store.aux_params());
         w.section(SectionKind::Aux, 0, &aux_bytes)?;
+    }
+    Ok(())
+}
+
+/// Format-v2 store sections: the meta carries one `{aux_len, bits,
+/// row_bytes, rows}` header per precision group; `Rows` sections run
+/// group by group with one global shard counter; each group's per-row
+/// scalars live in an `Aux` section indexed by the group number. Every
+/// group's payload goes through the same [`EmbeddingStore`] hooks the
+/// single-group path uses, so the raw packed bytes stay verbatim.
+fn write_grouped_sections(
+    w: &mut CheckpointWriter,
+    gs: &GroupedStore,
+    exp: &Experiment,
+) -> Result<()> {
+    let n = gs.n_features();
+    let groups_json = Json::Array(
+        (0..gs.n_groups())
+            .map(|g| {
+                let sub = gs.group_store(g);
+                let row_bytes = sub.ckpt_row_bytes().expect(
+                    "grouped sub-stores are always checkpointable",
+                );
+                Json::obj(vec![
+                    ("aux_len", Json::num(sub.aux_params().len() as f64)),
+                    ("bits", Json::num(gs.group_bits(g) as f64)),
+                    ("row_bytes", Json::num(row_bytes as f64)),
+                    ("rows", Json::num(gs.group_rows(g) as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let meta = Json::obj(vec![
+        ("d", Json::num(gs.dim() as f64)),
+        ("experiment", experiment_to_json(exp)),
+        ("format", Json::str("alpt-checkpoint")),
+        ("groups", groups_json),
+        ("method", Json::str(exp.method.key())),
+        ("n", Json::num(n as f64)),
+        ("shard_rows", Json::num(SHARD_ROWS as f64)),
+        ("step", Json::num(gs.step_counter() as f64)),
+        ("version", Json::num(VERSION_GROUPED as f64)),
+    ]);
+    w.section(SectionKind::Meta, 0, meta.to_string().as_bytes())?;
+
+    let mut buf = Vec::new();
+    let mut shard_idx = 0u32;
+    for g in 0..gs.n_groups() {
+        let sub = gs.group_store(g);
+        let row_bytes = sub.ckpt_row_bytes().unwrap();
+        let rows_total = gs.group_rows(g);
+        for shard in 0..rows_total.div_ceil(SHARD_ROWS) {
+            let lo = shard * SHARD_ROWS;
+            let rows = SHARD_ROWS.min(rows_total - lo);
+            buf.resize(rows * row_bytes, 0);
+            sub.save_rows(lo, &mut buf)?;
+            w.section(SectionKind::Rows, shard_idx, &buf)?;
+            shard_idx += 1;
+        }
+    }
+    for g in 0..gs.n_groups() {
+        let aux = gs.group_store(g).aux_params();
+        if !aux.is_empty() {
+            let mut aux_bytes = Vec::with_capacity(aux.len() * 4);
+            put_f32s(&mut aux_bytes, aux);
+            w.section(SectionKind::Aux, g as u32, &aux_bytes)?;
+        }
     }
     Ok(())
 }
@@ -151,6 +238,15 @@ pub fn load_store_into(
         store.method_name(),
         store.n_features(),
         store.dim()
+    );
+    if ckpt.meta.opt("groups").is_some() {
+        return load_grouped_into(store, ckpt);
+    }
+    ensure!(
+        store.as_grouped().is_none(),
+        "single-group checkpoint cannot restore the grouped {} store \
+         (precision plan mismatch?)",
+        store.method_name()
     );
     let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
         anyhow!("{} does not support checkpointing", store.method_name())
@@ -207,6 +303,85 @@ pub fn load_store_into(
     Ok(())
 }
 
+/// Restore a grouped store from a format-v2 checkpoint: every group
+/// header (bits / rows / row payload width / aux count) is validated
+/// against the rebuilt store before its sections load, so a plan or
+/// layout mismatch errors with the offending group named.
+fn load_grouped_into(
+    store: &mut dyn EmbeddingStore,
+    ckpt: &Checkpoint,
+) -> Result<()> {
+    let gs = store.as_grouped_mut().ok_or_else(|| {
+        anyhow!(
+            "checkpoint has precision groups but the rebuilt store is \
+             single-group (precision plan mismatch?)"
+        )
+    })?;
+    let shard_rows = ckpt.meta_usize("shard_rows")?;
+    ensure!(shard_rows > 0, "shard_rows must be positive");
+    let groups_meta = ckpt.meta.get("groups")?.as_array()?;
+    ensure!(
+        groups_meta.len() == gs.n_groups(),
+        "checkpoint has {} precision groups, the rebuilt store {}",
+        groups_meta.len(),
+        gs.n_groups()
+    );
+
+    let mut shard_idx = 0u32;
+    for (g, gm) in groups_meta.iter().enumerate() {
+        let bits = gm.get("bits")?.as_usize()? as u32;
+        let rows = gm.get("rows")?.as_usize()?;
+        let row_bytes = gm.get("row_bytes")?.as_usize()?;
+        let aux_len = gm.get("aux_len")?.as_usize()?;
+        ensure!(
+            bits == gs.group_bits(g) && rows == gs.group_rows(g),
+            "group {g}: checkpoint holds {rows} rows at {bits} bits, the \
+             rebuilt store expects {} rows at {} bits",
+            gs.group_rows(g),
+            gs.group_bits(g)
+        );
+        let sub_row_bytes =
+            gs.group_store(g).ckpt_row_bytes().unwrap();
+        ensure!(
+            row_bytes == sub_row_bytes,
+            "group {g}: row payload width mismatch ({row_bytes} vs \
+             {sub_row_bytes} bytes/row)"
+        );
+        for shard in 0..rows.div_ceil(shard_rows) {
+            let lo = shard * shard_rows;
+            let count = shard_rows.min(rows - lo);
+            let sec = ckpt.section(SectionKind::Rows, shard_idx)?;
+            ensure!(
+                sec.payload.len() == count * row_bytes,
+                "group {g} rows shard {shard}: payload is {} bytes, \
+                 expected {}",
+                sec.payload.len(),
+                count * row_bytes
+            );
+            gs.group_store_mut(g).load_rows(lo, sec.payload)?;
+            shard_idx += 1;
+        }
+        if aux_len > 0 {
+            let sec = ckpt.section(SectionKind::Aux, g as u32)?;
+            let aux = parse_f32s(sec.payload)?;
+            ensure!(
+                aux.len() == aux_len,
+                "group {g}: aux section holds {} values, metadata says \
+                 {aux_len}",
+                aux.len()
+            );
+            gs.group_store_mut(g).load_aux_params(&aux)?;
+        } else {
+            ensure!(
+                gs.group_store(g).aux_params().is_empty(),
+                "group {g} expects aux params but the checkpoint has none"
+            );
+        }
+    }
+    gs.set_step_counter(ckpt.meta_usize("step")? as u64);
+    Ok(())
+}
+
 /// The dense-parameter vector persisted by `Trainer::save_checkpoint`
 /// (also present in serving fixtures).
 pub fn dense_params(ckpt: &Checkpoint) -> Result<Vec<f32>> {
@@ -223,7 +398,9 @@ pub fn dense_params(ckpt: &Checkpoint) -> Result<Vec<f32>> {
 pub fn experiment_to_json(exp: &Experiment) -> Json {
     Json::obj(vec![
         ("artifacts_dir", Json::str(&exp.artifacts_dir)),
-        ("bits", Json::num(exp.bits as f64)),
+        // uniform plans echo as a plain number (byte-identical to the
+        // pre-plan format); mixed plans as the plan string
+        ("bits", exp.bits.echo_json()),
         ("clip", Json::num(exp.clip as f64)),
         ("dataset", Json::str(&exp.dataset)),
         ("dropout_seed", Json::str(&exp.dropout_seed.to_string())),
@@ -292,7 +469,7 @@ pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
         n_samples: v.get("n_samples")?.as_usize()?,
         model: v.get("model")?.as_str()?.to_string(),
         method: Method::parse(v.get("method")?.as_str()?)?,
-        bits: v.get("bits")?.as_usize()? as u32,
+        bits: PrecisionPlan::from_json(v.get("bits")?)?,
         epochs: v.get("epochs")?.as_usize()?,
         seed: u64_of("seed")?,
         lr_dense: f32_of("lr_dense")?,
@@ -351,7 +528,7 @@ mod tests {
     fn exp_for(method: Method, bits: u32, threads: usize) -> Experiment {
         Experiment {
             method,
-            bits,
+            bits: PrecisionPlan::uniform(bits),
             threads,
             use_runtime: false,
             model: "tiny".into(),
@@ -392,7 +569,7 @@ mod tests {
     fn experiment_echo_is_lossless() {
         let exp = Experiment {
             method: Method::Alpt(RoundingMode::Dr),
-            bits: 4,
+            bits: PrecisionPlan::uniform(4),
             clip: 0.001,
             lr_delta: 2e-5,
             lr_milestones: vec![3, 5, 11],
@@ -510,21 +687,7 @@ mod tests {
             let mut what = vec![0.0f32; n * d];
             let grads: Vec<f32> =
                 (0..n * d).map(|i| ((i % 7) as f32 - 3.0) * 0.01).collect();
-            let mut sp = |w: &[f32], dl: &[f32]| -> Result<Vec<f32>> {
-                let d = w.len() / dl.len();
-                Ok(dl
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &x)| {
-                        crate::quant::lsq_delta_grad_row(
-                            &w[i * d..(i + 1) * d],
-                            x,
-                            crate::quant::BitWidth::B8,
-                            &vec![1.0f32; d],
-                        )
-                    })
-                    .collect())
-            };
+            let mut sp = crate::embedding::testutil::eq7_second_pass();
             let mut step_rng = Pcg32::seeded(77);
             for _ in 0..2 {
                 store.gather(&ids, &mut what);
@@ -575,6 +738,66 @@ mod tests {
         let (loaded, _) = load_store(&ck).unwrap();
         assert_eq!(gather_all(store.as_ref()), gather_all(loaded.as_ref()));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn grouped_checkpoint_roundtrip_and_versions() {
+        // mixed plan → version-2 file with per-group headers; its
+        // save→load→save is byte-identical, and uniform plans keep
+        // writing version-1 files with no groups array
+        let exp = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            bits: PrecisionPlan::parse("f0:4,f1:8,default:2").unwrap(),
+            dataset: "tiny".into(),
+            model: "tiny".into(),
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = crate::data::registry::schema_for(&exp)
+            .unwrap()
+            .n_features();
+        let mut rng = Pcg32::seeded(17);
+        let store = build_store(&exp, n, 5, &mut rng).unwrap();
+        assert!(store.as_grouped().is_some());
+        let loaded = roundtrip("grouped_mixed", store.as_ref(), &exp);
+        assert_eq!(gather_all(store.as_ref()), gather_all(loaded.as_ref()));
+        assert_eq!(loaded.step_counter(), store.step_counter());
+
+        let p = tmp("grouped_v2.ckpt");
+        save_store(&p, store.as_ref(), &exp).unwrap();
+        let ck = Checkpoint::read(&p).unwrap();
+        assert_eq!(ck.version, VERSION_GROUPED);
+        let groups = ck.meta.get("groups").unwrap().as_array().unwrap();
+        assert_eq!(groups.len(), 3, "2-, 4- and 8-bit groups");
+        // ascending-width group headers
+        let bits: Vec<usize> = groups
+            .iter()
+            .map(|g| g.get("bits").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(bits, vec![2, 4, 8]);
+        std::fs::remove_file(&p).ok();
+
+        let u_exp = exp_for(Method::Lpt(RoundingMode::Sr), 8, 1);
+        let mut rng = Pcg32::seeded(18);
+        let u_store = build_store(&u_exp, 50, 4, &mut rng).unwrap();
+        let p = tmp("uniform_v1.ckpt");
+        save_store(&p, u_store.as_ref(), &u_exp).unwrap();
+        let ck = Checkpoint::read(&p).unwrap();
+        assert_eq!(ck.version, VERSION, "uniform plans stay version 1");
+        assert!(ck.meta.opt("groups").is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mixed_echo_roundtrips_the_plan() {
+        let exp = Experiment {
+            bits: PrecisionPlan::parse("cat:4,num:8").unwrap(),
+            ..Experiment::default()
+        };
+        let back =
+            experiment_from_json(&experiment_to_json(&exp)).unwrap();
+        assert_eq!(back.bits, exp.bits);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::format::{
     crc32, take_u32, take_u64, SectionKind, HEADER_BYTES, MAGIC,
-    SECTION_HEADER_BYTES, VERSION,
+    SECTION_HEADER_BYTES, VERSION, VERSION_GROUPED,
 };
 use crate::util::json::Json;
 
@@ -68,10 +68,10 @@ impl Checkpoint {
         }
         let mut pos = 8;
         let version = take_u32(&bytes, &mut pos)?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_GROUPED {
             bail!(
                 "unsupported checkpoint version {version} (this build \
-                 reads version {VERSION})"
+                 reads versions {VERSION} and {VERSION_GROUPED})"
             );
         }
         let n_sections = take_u32(&bytes, &mut pos)? as usize;

@@ -23,13 +23,21 @@ pub struct CheckpointWriter {
 
 impl CheckpointWriter {
     /// Create `path` (truncating any existing file) and write the header
-    /// with a zero section count placeholder.
+    /// with a zero section count placeholder. The default (version-1)
+    /// single-group format; grouped mixed-precision stores use
+    /// [`CheckpointWriter::create_with_version`].
     pub fn create(path: &Path) -> Result<Self> {
+        Self::create_with_version(path, VERSION)
+    }
+
+    /// Like [`CheckpointWriter::create`] with an explicit header format
+    /// version (`format::VERSION` or `format::VERSION_GROUPED`).
+    pub fn create_with_version(path: &Path, version: u32) -> Result<Self> {
         let file = File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         let mut out = BufWriter::new(file);
         out.write_all(MAGIC)?;
-        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&version.to_le_bytes())?;
         out.write_all(&0u32.to_le_bytes())?; // patched by finish()
         Ok(Self { out, n_sections: 0 })
     }

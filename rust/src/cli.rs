@@ -128,6 +128,23 @@ mod tests {
     }
 
     #[test]
+    fn get_parse_handles_precision_plans() {
+        // `--bits` values flow through FromStr, so plan strings work
+        // anywhere a width did
+        use crate::config::PrecisionPlan;
+        let a = Args::parse_tokens(&toks("--bits cat:4,num:8"), false, &[])
+            .unwrap();
+        let plan: PrecisionPlan =
+            a.get_parse("bits", PrecisionPlan::uniform(8)).unwrap();
+        assert_eq!(plan, PrecisionPlan::parse("cat:4,num:8").unwrap());
+        let b = Args::parse_tokens(&toks("--bits cat:banana"), false, &[])
+            .unwrap();
+        assert!(b
+            .get_parse::<PrecisionPlan>("bits", PrecisionPlan::uniform(8))
+            .is_err());
+    }
+
+    #[test]
     fn no_subcommand_when_dashes_first() {
         let a = Args::parse_tokens(&toks("--x 1 pos"), true, &[]).unwrap();
         assert_eq!(a.subcommand, None);

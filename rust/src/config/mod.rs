@@ -5,9 +5,13 @@
 
 pub mod toml;
 
-use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Result};
 
 use crate::quant::{BitWidth, GradScale};
+use crate::util::json::Json;
 use toml::TomlDoc;
 
 /// Which embedding-compression method to train with (Table 1's rows).
@@ -89,6 +93,245 @@ impl Method {
     }
 }
 
+/// What a field holds, for precision-plan resolution: Criteo-format
+/// files have 13 numeric (bucketized-count) fields followed by 26
+/// categorical ones; the synthetic generators are all-categorical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FieldKind {
+    Numeric,
+    Categorical,
+}
+
+/// One rule's field selector inside a [`PrecisionPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FieldSel {
+    /// Every categorical field (`cat:4`).
+    Cat,
+    /// Every numeric field (`num:8`).
+    Num,
+    /// One field by index (`f3:2`).
+    Field(usize),
+}
+
+impl FieldSel {
+    fn key(&self) -> String {
+        match self {
+            FieldSel::Cat => "cat".into(),
+            FieldSel::Num => "num".into(),
+            FieldSel::Field(i) => format!("f{i}"),
+        }
+    }
+}
+
+/// Per-field embedding precision plan — the `bits` config key / `--bits`
+/// flag. Fields differ wildly in cardinality and gradient traffic, so
+/// they do not all deserve the same precision; a plan assigns each field
+/// a bit width and the embedding layer groups fields of equal width into
+/// one packed sub-table each.
+///
+/// Grammar (comma-separated `selector:bits` rules, widths in 2|4|8|16):
+///
+/// * `4` — uniform 4-bit (exactly the pre-plan behaviour);
+/// * `cat:4,num:8` — by field kind;
+/// * `f3:2,f7:16,default:8` — per-field overrides with a default.
+///
+/// Precedence when several rules cover a field: `fN` beats `cat`/`num`
+/// beats `default`. Fields no rule names use `default:N` (8 when no
+/// default is given).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PrecisionPlan {
+    /// Width for fields no rule selects; the whole plan when `rules` is
+    /// empty.
+    default_bits: u32,
+    /// `(selector, bits)` in parse order.
+    rules: Vec<(FieldSel, u32)>,
+}
+
+impl PrecisionPlan {
+    /// A uniform plan. Like the pre-plan `bits` field, the width is not
+    /// validated here — [`Experiment::bit_width`] / [`PrecisionPlan::parse`]
+    /// report unsupported widths.
+    pub fn uniform(bits: u32) -> Self {
+        Self { default_bits: bits, rules: Vec::new() }
+    }
+
+    /// Parse the plan grammar (see the type docs). Every named width is
+    /// validated against the supported [`BitWidth`]s.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty precision plan");
+        let valid = |bits: u32| -> Result<u32> {
+            ensure!(
+                BitWidth::from_bits(bits).is_some(),
+                "unsupported bit width {bits} (expected 2, 4, 8 or 16)"
+            );
+            Ok(bits)
+        };
+        if !s.contains(':') {
+            let bits = s
+                .parse::<u32>()
+                .map_err(|_| anyhow::anyhow!("bad bit width {s:?}"))?;
+            return Ok(Self::uniform(valid(bits)?));
+        }
+        let mut default_bits: Option<u32> = None;
+        let mut rules = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let Some((sel, bits)) = part.split_once(':') else {
+                bail!(
+                    "bad plan rule {part:?} (expected selector:bits, e.g. \
+                     cat:4)"
+                );
+            };
+            let bits = valid(bits.trim().parse::<u32>().map_err(|_| {
+                anyhow::anyhow!("bad bit width in rule {part:?}")
+            })?)?;
+            let sel = match sel.trim().to_ascii_lowercase().as_str() {
+                "default" => {
+                    ensure!(
+                        default_bits.is_none(),
+                        "duplicate default: rule in plan {s:?}"
+                    );
+                    default_bits = Some(bits);
+                    continue;
+                }
+                "cat" => FieldSel::Cat,
+                "num" => FieldSel::Num,
+                f if f.starts_with('f') => {
+                    let idx = f[1..].parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("bad field selector {sel:?}")
+                    })?;
+                    FieldSel::Field(idx)
+                }
+                other => bail!(
+                    "unknown plan selector {other:?} (expected cat, num, \
+                     fN or default)"
+                ),
+            };
+            ensure!(
+                !rules.iter().any(|(r, _)| *r == sel),
+                "duplicate selector {:?} in plan {s:?}",
+                sel.key()
+            );
+            rules.push((sel, bits));
+        }
+        Ok(Self { default_bits: default_bits.unwrap_or(8), rules })
+    }
+
+    /// Stable config/CLI token — the inverse of [`PrecisionPlan::parse`],
+    /// used by the checkpoint metadata echo.
+    pub fn key(&self) -> String {
+        if self.rules.is_empty() {
+            return self.default_bits.to_string();
+        }
+        let mut parts: Vec<String> = self
+            .rules
+            .iter()
+            .map(|(sel, bits)| format!("{}:{bits}", sel.key()))
+            .collect();
+        parts.push(format!("default:{}", self.default_bits));
+        parts.join(",")
+    }
+
+    /// `Some(bits)` when this plan assigns one width to every field.
+    pub fn as_uniform(&self) -> Option<u32> {
+        self.rules.is_empty().then_some(self.default_bits)
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The fallback width for fields no rule selects (also the width
+    /// warm-start surplus rows and the Δ-gradient scale use).
+    pub fn default_bits(&self) -> u32 {
+        self.default_bits
+    }
+
+    /// The width used for batch-level scale factors (the paper's §3.2
+    /// gradient scale): the uniform width when the plan is uniform, the
+    /// default width otherwise, 8-bit when that width is unsupported.
+    pub fn scale_width(&self) -> BitWidth {
+        BitWidth::from_bits(self.default_bits).unwrap_or(BitWidth::B8)
+    }
+
+    /// The width this plan assigns to `field` of `kind` (precedence:
+    /// `fN` > `cat`/`num` > default).
+    pub fn bits_for_field(&self, field: usize, kind: FieldKind) -> u32 {
+        for (sel, bits) in &self.rules {
+            if *sel == FieldSel::Field(field) {
+                return *bits;
+            }
+        }
+        for (sel, bits) in &self.rules {
+            match (sel, kind) {
+                (FieldSel::Cat, FieldKind::Categorical)
+                | (FieldSel::Num, FieldKind::Numeric) => return *bits,
+                _ => {}
+            }
+        }
+        self.default_bits
+    }
+
+    /// Resolve the plan against a concrete field layout: one validated
+    /// [`BitWidth`] per field. Errors on `fN` rules past the layout and
+    /// on unsupported widths (a hand-built uniform plan can hold one).
+    pub fn resolve(&self, kinds: &[FieldKind]) -> Result<Vec<BitWidth>> {
+        for (sel, _) in &self.rules {
+            if let FieldSel::Field(i) = sel {
+                ensure!(
+                    *i < kinds.len(),
+                    "plan rule f{i} is out of range for {} fields",
+                    kinds.len()
+                );
+            }
+        }
+        kinds
+            .iter()
+            .enumerate()
+            .map(|(f, &kind)| {
+                let bits = self.bits_for_field(f, kind);
+                BitWidth::from_bits(bits).ok_or_else(|| {
+                    anyhow::anyhow!("unsupported bit width {bits}")
+                })
+            })
+            .collect()
+    }
+
+    /// The checkpoint-echo encoding: a JSON number for uniform plans
+    /// (byte-identical to the pre-plan `bits` echo) and the plan string
+    /// otherwise.
+    pub fn echo_json(&self) -> Json {
+        match self.as_uniform() {
+            Some(bits) => Json::num(bits as f64),
+            None => Json::str(&self.key()),
+        }
+    }
+
+    /// Inverse of [`PrecisionPlan::echo_json`].
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v {
+            Json::Num(x) => Ok(Self::uniform(*x as u32)),
+            Json::Str(s) => Self::parse(s),
+            _ => bail!("bits: expected a number or a plan string"),
+        }
+    }
+}
+
+impl fmt::Display for PrecisionPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+impl FromStr for PrecisionPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
 /// A full training experiment (one Table-1 cell).
 #[derive(Clone, Debug)]
 pub struct Experiment {
@@ -100,7 +343,10 @@ pub struct Experiment {
     /// Manifest model-config name ("avazu", "criteo", "tiny", "*_d32").
     pub model: String,
     pub method: Method,
-    pub bits: u32,
+    /// Embedding precision: a uniform width (`--bits 4`) or a per-field
+    /// plan (`--bits cat:4,num:8` / `--bits f3:2,default:8`). Non-uniform
+    /// plans build a grouped store with one packed sub-table per width.
+    pub bits: PrecisionPlan,
     pub epochs: usize,
     pub seed: u64,
 
@@ -153,7 +399,7 @@ impl Default for Experiment {
             n_samples: 50_000,
             model: "tiny".into(),
             method: Method::Alpt(RoundingMode::Sr),
-            bits: 8,
+            bits: PrecisionPlan::uniform(8),
             epochs: 3,
             seed: 42,
             lr_dense: 1e-3,
@@ -180,10 +426,19 @@ impl Default for Experiment {
 }
 
 impl Experiment {
+    /// The single bit width of a uniform plan. Errors for mixed plans —
+    /// those resolve per field through [`PrecisionPlan::resolve`].
     pub fn bit_width(&self) -> Result<BitWidth> {
-        BitWidth::from_bits(self.bits)
-            .ok_or_else(|| anyhow::anyhow!("unsupported bit width {}",
-                                           self.bits))
+        let bits = self.bits.as_uniform().ok_or_else(|| {
+            anyhow::anyhow!(
+                "precision plan {:?} is not uniform; per-field widths \
+                 come from PrecisionPlan::resolve",
+                self.bits.key()
+            )
+        })?;
+        BitWidth::from_bits(bits).ok_or_else(|| {
+            anyhow::anyhow!("unsupported bit width {bits}")
+        })
     }
 
     /// Load from a TOML document, starting from defaults. A `dataset`
@@ -233,7 +488,13 @@ impl Experiment {
             "n_samples" => self.n_samples = as_f(value)? as usize,
             "model" => self.model = as_s(value)?,
             "method" => self.method = Method::parse(&as_s(value)?)?,
-            "bits" => self.bits = as_f(value)? as u32,
+            "bits" => {
+                self.bits = match value {
+                    V::Num(x) => PrecisionPlan::uniform(*x as u32),
+                    V::Str(s) => PrecisionPlan::parse(s)?,
+                    _ => bail!("bits: expected a number or a plan string"),
+                }
+            }
             "epochs" => self.epochs = as_f(value)? as usize,
             "seed" => self.seed = as_f(value)? as u64,
             "lr_dense" => self.lr_dense = as_f(value)? as f32,
@@ -373,7 +634,7 @@ mod tests {
         let e = Experiment::from_toml(&doc).unwrap();
         assert_eq!(e.dataset, "avazu");
         assert_eq!(e.method, Method::Alpt(RoundingMode::Sr));
-        assert_eq!(e.bits, 4);
+        assert_eq!(e.bits, PrecisionPlan::uniform(4));
         assert_eq!(e.epochs, 15);
         assert_eq!(e.lr_milestones, vec![6, 9]);
         assert!((e.lr_delta - 2e-5).abs() < 1e-12);
@@ -451,9 +712,109 @@ mod tests {
     #[test]
     fn bit_width_validation() {
         let mut e = Experiment::default();
-        e.bits = 8;
+        e.bits = PrecisionPlan::uniform(8);
         assert!(e.bit_width().is_ok());
-        e.bits = 7;
+        e.bits = PrecisionPlan::uniform(7);
         assert!(e.bit_width().is_err());
+        e.bits = PrecisionPlan::parse("cat:4,num:8").unwrap();
+        assert!(e.bit_width().is_err(), "mixed plans have no single width");
+    }
+
+    #[test]
+    fn precision_plan_grammar() {
+        // uniform
+        let p = PrecisionPlan::parse("4").unwrap();
+        assert_eq!(p, PrecisionPlan::uniform(4));
+        assert_eq!(p.as_uniform(), Some(4));
+        assert_eq!(p.key(), "4");
+        // by kind
+        let p = PrecisionPlan::parse("cat:4,num:8").unwrap();
+        assert!(p.as_uniform().is_none());
+        assert_eq!(p.bits_for_field(0, FieldKind::Categorical), 4);
+        assert_eq!(p.bits_for_field(0, FieldKind::Numeric), 8);
+        assert_eq!(p.key(), "cat:4,num:8,default:8");
+        // per-field with default; fN beats kind beats default
+        let p = PrecisionPlan::parse("f3:2,cat:16,default:8").unwrap();
+        assert_eq!(p.bits_for_field(3, FieldKind::Categorical), 2);
+        assert_eq!(p.bits_for_field(1, FieldKind::Categorical), 16);
+        assert_eq!(p.bits_for_field(1, FieldKind::Numeric), 8);
+        assert_eq!(p.default_bits(), 8);
+        // a default-only plan is uniform
+        assert_eq!(
+            PrecisionPlan::parse("default:2").unwrap(),
+            PrecisionPlan::uniform(2)
+        );
+        // errors: bad widths, bad selectors, duplicates
+        assert!(PrecisionPlan::parse("7").is_err());
+        assert!(PrecisionPlan::parse("cat:3").is_err());
+        assert!(PrecisionPlan::parse("dog:4").is_err());
+        assert!(PrecisionPlan::parse("cat:4,cat:8").is_err());
+        assert!(PrecisionPlan::parse("default:4,default:8").is_err());
+        assert!(PrecisionPlan::parse("fx:4").is_err());
+        assert!(PrecisionPlan::parse("").is_err());
+    }
+
+    #[test]
+    fn precision_plan_key_roundtrips() {
+        for s in ["8", "2", "cat:4,num:8", "f0:2,f7:16,default:4",
+                  "num:16,default:2"] {
+            let p = PrecisionPlan::parse(s).unwrap();
+            assert_eq!(PrecisionPlan::parse(&p.key()).unwrap(), p, "{s}");
+            // FromStr/Display agree with parse/key
+            assert_eq!(s.parse::<PrecisionPlan>().unwrap(), p);
+            assert_eq!(p.to_string(), p.key());
+        }
+    }
+
+    #[test]
+    fn precision_plan_resolve() {
+        let kinds = [
+            FieldKind::Numeric,
+            FieldKind::Numeric,
+            FieldKind::Categorical,
+        ];
+        let p = PrecisionPlan::parse("num:4,f2:16").unwrap();
+        let widths = p.resolve(&kinds).unwrap();
+        assert_eq!(
+            widths,
+            vec![BitWidth::B4, BitWidth::B4, BitWidth::B16]
+        );
+        // out-of-range field rule is an error, not a silent no-op
+        let p = PrecisionPlan::parse("f9:4").unwrap();
+        assert!(p.resolve(&kinds).is_err());
+        // an unsupported uniform width surfaces at resolution too
+        assert!(PrecisionPlan::uniform(7).resolve(&kinds).is_err());
+    }
+
+    #[test]
+    fn precision_plan_echo_json() {
+        // uniform plans echo as a JSON number — byte-identical to the
+        // pre-plan `bits` echo — and mixed plans as the plan string
+        let u = PrecisionPlan::uniform(8);
+        assert_eq!(u.echo_json().to_string(), "8");
+        assert_eq!(PrecisionPlan::from_json(&u.echo_json()).unwrap(), u);
+        let m = PrecisionPlan::parse("cat:4,num:8").unwrap();
+        assert_eq!(
+            m.echo_json().to_string(),
+            "\"cat:4,num:8,default:8\""
+        );
+        assert_eq!(PrecisionPlan::from_json(&m.echo_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn bits_plan_from_toml() {
+        let doc = TomlDoc::parse(
+            r#"
+            method = "alpt-sr"
+            bits = "cat:4,num:8"
+            "#,
+        )
+        .unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.bits, PrecisionPlan::parse("cat:4,num:8").unwrap());
+        // and a plain number still works
+        let doc = TomlDoc::parse("bits = 2").unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.bits, PrecisionPlan::uniform(2));
     }
 }

@@ -255,6 +255,42 @@ mod tests {
     }
 
     #[test]
+    fn serves_a_mixed_precision_checkpoint() {
+        // a per-field plan builds a grouped store whose v2 checkpoint
+        // must load and serve through the identical path
+        let exp = Experiment {
+            method: Method::Alpt(crate::config::RoundingMode::Sr),
+            bits: crate::config::PrecisionPlan::parse(
+                "f0:4,f1:8,default:2",
+            )
+            .unwrap(),
+            model: "tiny".into(),
+            dataset: "synthetic:tiny".into(),
+            n_samples: 2000,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = crate::data::registry::schema_for(&exp)
+            .unwrap()
+            .n_features();
+        let tr = Trainer::new(exp, n).unwrap();
+        let path = tmp("serve_mixed.ckpt");
+        tr.save_checkpoint(&path).unwrap();
+        let report = serve_checkpoint(&path, 4).unwrap();
+        assert_eq!(report.method, "ALPT(SR)[mixed]");
+        assert_eq!(report.n_features, n);
+        assert!(report.auc.is_finite() && report.logloss.is_finite());
+        assert!(
+            report.infer_bytes < report.fp_bytes,
+            "mixed table must still compress: {} vs {}",
+            report.infer_bytes,
+            report.fp_bytes
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn store_only_checkpoint_without_dense_is_rejected() {
         let exp = Experiment {
             method: Method::Fp,

@@ -117,7 +117,9 @@ impl ShardedStore {
         Ok(Self {
             shards,
             method: exp.method,
-            bits: exp.bits,
+            // wire-cost accounting is a uniform-width simulation; mixed
+            // plans fall back to their default width here
+            bits: exp.bits.default_bits(),
             dim,
             n_workers,
             stats: CommStats::default(),

@@ -5,9 +5,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::checkpoint::{
-    self, Checkpoint, CheckpointWriter, SectionKind,
-};
+use crate::checkpoint::{self, Checkpoint, SectionKind};
 use crate::config::Experiment;
 use crate::data::batcher::{
     with_prefetch, Batch, Batcher, StreamBatcher, Tail,
@@ -168,7 +166,10 @@ impl Trainer {
         let dense = entry.init_params(&mut rng);
         let adam = Adam::new(dense.len(), exp.lr_dense);
         let store = build_store(&exp, n_features, entry.emb_dim, &mut rng)?;
-        let bw = exp.bit_width().unwrap_or(BitWidth::B8);
+        // §3.2 gradient scale: uniform plans use their width; mixed plans
+        // use the plan's default width (g is a batch-level normalizer —
+        // per-group exactness is not load-bearing)
+        let bw = exp.bits.scale_width();
         let grad_scale_val =
             exp.grad_scale.value(entry.batch, entry.emb_dim, bw);
         let schedule = LrSchedule {
@@ -271,7 +272,6 @@ impl Trainer {
             grad_scale: self.grad_scale_val,
             lr_scale,
         };
-        let bw = self.exp.bit_width()?;
 
         let (loss, d_emb, d_params) = if let Some(rt) = self.runtime.as_mut()
         {
@@ -343,11 +343,21 @@ impl Trainer {
         let sp_w_pad = &mut self.sp_w_pad;
         let sp_d_pad = &mut self.sp_d_pad;
         let mut second_pass = |w_new: &[f32],
-                               delta: &[f32]|
+                               delta: &[f32],
+                               bws: &[BitWidth]|
          -> Result<Vec<f32>> {
             debug_assert_eq!(w_new.len(), delta.len() * d);
+            debug_assert_eq!(bws.len(), delta.len());
             let n_u = delta.len();
-            if let Some(rt) = runtime.as_mut() {
+            // the delta_grad artifact takes one scalar (qn, qp) pair, so
+            // it can only serve batches whose rows share one width;
+            // mixed-precision groups fall through to the Rust path below
+            // (identical math, per-row bounds)
+            let uniform_bw = bws
+                .first()
+                .copied()
+                .filter(|&b| bws.iter().all(|&x| x == b));
+            if let (Some(rt), Some(bw)) = (runtime.as_mut(), uniform_bw) {
                 sp_w_pad[..n_u * d].copy_from_slice(w_new);
                 sp_w_pad[n_u * d..].fill(0.0);
                 sp_d_pad[..n_u].copy_from_slice(delta);
@@ -376,12 +386,15 @@ impl Trainer {
                 Ok(d_delta)
             } else {
                 // Rust fallback: fake-quant forward + Eq. 7 reduction —
-                // the same math the train_fq artifact performs.
+                // the same math the train_fq artifact performs, with each
+                // row clamped to its own group's (qn, qp).
                 for i in 0..n_u {
                     let dl = delta[i];
+                    let (qn, qp) =
+                        (bws[i].qn() as f32, bws[i].qp() as f32);
                     for j in 0..d {
-                        let x = (w_new[i * d + j] / dl)
-                            .clamp(bw.qn() as f32, bw.qp() as f32);
+                        let x =
+                            (w_new[i * d + j] / dl).clamp(qn, qp);
                         sp_w_pad[i * d + j] = (x + 0.5).floor() * dl;
                     }
                 }
@@ -393,7 +406,7 @@ impl Trainer {
                         lsq_delta_grad_row(
                             &w_new[i * d..(i + 1) * d],
                             delta[i],
-                            bw,
+                            bws[i],
                             &out.d_emb[i * d..(i + 1) * d],
                         )
                     })
@@ -725,7 +738,8 @@ impl Trainer {
     /// *bit-identically* to an uninterrupted run — see the `StreamKey`
     /// determinism contract in `util::rng`.
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
-        let mut w = CheckpointWriter::create(path)?;
+        let mut w =
+            checkpoint::writer_for_store(path, self.store.as_ref())?;
         checkpoint::write_store_sections(&mut w, self.store.as_ref(),
                                          &self.exp)?;
 

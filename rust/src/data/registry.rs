@@ -20,7 +20,7 @@ use super::batcher::{ShuffleStream, SplitStream};
 use super::criteo::{CriteoCfg, CriteoFile};
 use super::synthetic::{generate, SyntheticSpec};
 use super::{Dataset, Schema};
-use crate::config::Experiment;
+use crate::config::{Experiment, FieldKind};
 
 /// One in-order pass over a dataset's records. `Send` so the prefetching
 /// batcher can pull records from a background thread.
@@ -129,6 +129,31 @@ pub fn schema_for(exp: &Experiment) -> Result<Schema> {
             };
             cfg.validate()?;
             Ok(cfg.schema())
+        }
+    }
+}
+
+/// The per-field kinds a dataset spec induces — the layout precision
+/// plans (`--bits cat:4,num:8`) resolve against. Criteo-format files
+/// carry 13 numeric fields then 26 categorical ones; the synthetic
+/// generators are all-categorical. Like [`schema_for`], this needs no
+/// data generation or file access.
+pub fn field_kinds(exp: &Experiment) -> Result<Vec<FieldKind>> {
+    match DatasetSpec::parse(&exp.dataset) {
+        DatasetSpec::Synthetic(name)
+        | DatasetSpec::SyntheticStream(name) => {
+            let spec =
+                SyntheticSpec::for_dataset(&name, exp.seed, exp.vocab_scale)?;
+            Ok(vec![FieldKind::Categorical; spec.vocabs.len()])
+        }
+        DatasetSpec::CriteoFile(_) => {
+            let mut kinds =
+                vec![FieldKind::Numeric; super::criteo::N_NUMERIC];
+            kinds.extend(vec![
+                FieldKind::Categorical;
+                super::criteo::N_CATEGORICAL
+            ]);
+            Ok(kinds)
         }
     }
 }
@@ -316,6 +341,25 @@ mod tests {
         let mut again = src.stream().unwrap();
         assert!(again.next_record(&mut out).unwrap().is_some());
         assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn field_kinds_match_the_layouts() {
+        let exp = Experiment {
+            dataset: "criteo:/data/train.tsv".into(),
+            ..Experiment::default()
+        };
+        let kinds = field_kinds(&exp).unwrap();
+        assert_eq!(kinds.len(), 39);
+        assert!(kinds[..13].iter().all(|&k| k == FieldKind::Numeric));
+        assert!(kinds[13..].iter().all(|&k| k == FieldKind::Categorical));
+        let exp = Experiment {
+            dataset: "synthetic:tiny".into(),
+            ..Experiment::default()
+        };
+        let kinds = field_kinds(&exp).unwrap();
+        assert_eq!(kinds.len(), schema_for(&exp).unwrap().n_fields());
+        assert!(kinds.iter().all(|&k| k == FieldKind::Categorical));
     }
 
     #[test]

@@ -43,6 +43,8 @@ pub struct AlptStore {
     w_new: Vec<f32>,
     /// reusable gathered-Δ buffer (`U`, grown on demand)
     delta_t: Vec<f32>,
+    /// reusable per-row bit-width buffer handed to the second pass
+    bw_t: Vec<BitWidth>,
 }
 
 impl AlptStore {
@@ -150,6 +152,7 @@ impl AlptStore {
             step: 0,
             w_new: Vec::new(),
             delta_t: Vec::new(),
+            bw_t: Vec::new(),
         }
     }
 
@@ -171,6 +174,18 @@ impl AlptStore {
     /// Purely a performance knob: results are bit-identical at any value.
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = resolve_threads(threads);
+    }
+
+    /// Dequantize one row into `out` — the grouped-store gather kernel
+    /// (same word-at-a-time path as [`AlptStore::gather`], addressed by
+    /// this sub-table's local row id).
+    pub(crate) fn read_row_dequant_into(&self, row: usize, out: &mut [f32]) {
+        self.codes.read_row_dequant(row, self.delta[row], out);
+    }
+
+    /// Integer codes of one row (the grouped `quantized_view` kernel).
+    pub(crate) fn read_codes_into(&self, row: usize, out: &mut [i32]) {
+        self.codes.read_row(row, out);
     }
 }
 
@@ -246,12 +261,24 @@ impl EmbeddingStore for AlptStore {
 
         // Step 2: d f / d Delta at (w^{t+1}, Delta^t) via the fake-quant
         // pass, then the Delta update (scaled gradient + weight decay).
+        // An empty batch skips the model pass entirely — a grouped store
+        // updates every precision group each step (keeping the SR step
+        // counters in lockstep), including groups the batch missed.
         self.delta_t.resize(n_u, 0.0);
         for (i, &id) in ids.iter().enumerate() {
             self.delta_t[i] = self.delta[id as usize];
         }
-        let d_delta =
-            second_pass(&self.w_new[..n_u * d], &self.delta_t[..n_u])?;
+        let d_delta = if n_u == 0 {
+            Vec::new()
+        } else {
+            self.bw_t.clear();
+            self.bw_t.resize(n_u, self.bw);
+            second_pass(
+                &self.w_new[..n_u * d],
+                &self.delta_t[..n_u],
+                &self.bw_t[..n_u],
+            )?
+        };
         debug_assert_eq!(d_delta.len(), n_u);
         let lr_d = hp.lr_delta * hp.lr_scale;
         for (i, &id) in ids.iter().enumerate() {
@@ -349,29 +376,10 @@ impl EmbeddingStore for AlptStore {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::hp;
+    use super::super::testutil::{eq7_second_pass, hp};
     use super::*;
     use crate::embedding::fp_bytes;
     use crate::quant::lsq_delta_grad_row;
-
-    /// Rust-side second pass: Eq. 7 applied to a synthetic upstream
-    /// gradient of all-ones (what the artifact does with real grads).
-    fn eq7_second_pass(
-        bw: BitWidth,
-    ) -> impl FnMut(&[f32], &[f32]) -> Result<Vec<f32>> {
-        move |w_new: &[f32], delta: &[f32]| {
-            let d = w_new.len() / delta.len();
-            let ups = vec![1.0f32; d];
-            Ok(delta
-                .iter()
-                .enumerate()
-                .map(|(i, &dl)| {
-                    lsq_delta_grad_row(&w_new[i * d..(i + 1) * d], dl, bw,
-                                       &ups)
-                })
-                .collect())
-        }
-    }
 
     #[test]
     fn ratio_3_2x_at_8bit_d16() {
@@ -406,7 +414,7 @@ mod tests {
         let grads = vec![0.01f32; 8];
         let mut h = hp();
         h.lr_delta = 1e-3;
-        let mut sp = eq7_second_pass(BitWidth::B8);
+        let mut sp = eq7_second_pass();
         store.update(&ids, &what, &grads, &h, &mut rng, &mut sp).unwrap();
         let after = [store.delta_of(2), store.delta_of(7)];
         assert!(before[0] != after[0] || before[1] != after[1],
@@ -428,7 +436,7 @@ mod tests {
         let ids = [0u32];
         let mut h = hp();
         h.lr_delta = 10.0; // absurdly large on purpose
-        let mut sp = eq7_second_pass(BitWidth::B8);
+        let mut sp = eq7_second_pass();
         for _ in 0..20 {
             let mut what = vec![0.0f32; 4];
             store.gather(&ids, &mut what);
@@ -450,7 +458,9 @@ mod tests {
         let mut h = hp();
         h.lr_emb = 1.0;
         h.lr_delta = 1e-3;
-        let mut sp = move |w_new: &[f32], delta: &[f32]| {
+        let mut sp = move |w_new: &[f32],
+                           delta: &[f32],
+                           bws: &[BitWidth]| {
             // upstream grads negative (loss decreases as Q grows): with
             // clipped-high weights Eq.7 gives qp, so d_delta < 0 -> Delta
             // grows.
@@ -461,7 +471,7 @@ mod tests {
                 .enumerate()
                 .map(|(i, &dl)| {
                     lsq_delta_grad_row(&w_new[i * d..(i + 1) * d], dl,
-                                       BitWidth::B2, &ups)
+                                       bws[i], &ups)
                 })
                 .collect::<Vec<f32>>())
         };
@@ -503,8 +513,8 @@ mod tests {
             (0..n * d).map(|i| ((i % 11) as f32 - 5.0) * 0.02).collect();
         let mut rng_s = Pcg32::seeded(33);
         let mut rng_p = Pcg32::seeded(33);
-        let mut sp_s = eq7_second_pass(bw);
-        let mut sp_p = eq7_second_pass(bw);
+        let mut sp_s = eq7_second_pass();
+        let mut sp_p = eq7_second_pass();
         for _ in 0..3 {
             serial.gather(&ids, &mut what_s);
             par.gather(&ids, &mut what_p);

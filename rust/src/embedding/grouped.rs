@@ -1,0 +1,797 @@
+//! Mixed-precision grouped embedding store: one packed sub-table per
+//! precision group.
+//!
+//! A [`crate::config::PrecisionPlan`] assigns every field a bit width;
+//! fields of equal width form a *group* backed by one ordinary
+//! [`LptStore`]/[`AlptStore`] sub-table, so each group reuses the
+//! existing sharded gather/update kernels, the fused quantize→pack row
+//! writers and the per-row learned Δ unchanged. The grouped store
+//! presents the same [`EmbeddingStore`] trait to the trainer, routing
+//! global row ids to `(group, local row)` through a precomputed
+//! field-offset table (one binary search per row, no allocation on the
+//! gather/update hot path).
+//!
+//! **Determinism.** The `StreamKey` contract extends to groups: gather is
+//! a pure per-row function sharded with [`par_gather`], and update runs
+//! the groups in a fixed (ascending-width) order, each sub-store drawing
+//! its own step key and per-row counter streams — so grouped sharded
+//! gather/update are bit-identical to the serial path at any thread
+//! count, property-tested below.
+//!
+//! **ALPT across groups.** Algorithm 1's Δ-gradient pass runs the model
+//! over the *whole batch*, so a group's sub-store cannot call the
+//! trainer's `second_pass` with only its own rows (batch positions would
+//! no longer line up with the model's index tensor). The grouped store
+//! therefore keeps a full-batch second-pass context — every row starts
+//! at its gathered value ŵ (exactly representable under its own Δ, so
+//! fake-quantization passes it through unchanged) — and scatters each
+//! group's `w^{t+1}`/Δ/width into it before forwarding the call. Groups
+//! run sequentially; earlier groups' updated rows stay in the context
+//! for later groups, a sequential-coordinate flavour of Algorithm 1.
+
+use super::{
+    par_gather, resolve_threads, rounding_of, AlptStore, EmbeddingStore,
+    LptStore, SecondPass, UpdateHp,
+};
+use crate::config::{Experiment, FieldKind, Method};
+use crate::data::Schema;
+use crate::quant::BitWidth;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, ensure, Result};
+
+/// One precision group: a packed sub-table holding every row whose field
+/// the plan assigned `bits`.
+struct Group {
+    bits: BitWidth,
+    rows: usize,
+    store: SubStore,
+}
+
+/// The concrete sub-table families a plan can build. Only quantized
+/// stores group — per-field precision is meaningless for float masters.
+enum SubStore {
+    Lpt(LptStore),
+    Alpt(AlptStore),
+}
+
+impl SubStore {
+    fn as_store(&self) -> &dyn EmbeddingStore {
+        match self {
+            SubStore::Lpt(s) => s,
+            SubStore::Alpt(s) => s,
+        }
+    }
+
+    fn as_store_mut(&mut self) -> &mut dyn EmbeddingStore {
+        match self {
+            SubStore::Lpt(s) => s,
+            SubStore::Alpt(s) => s,
+        }
+    }
+
+    fn read_row_dequant_into(&self, local: usize, out: &mut [f32]) {
+        match self {
+            SubStore::Lpt(s) => s.read_row_dequant_into(local, out),
+            SubStore::Alpt(s) => s.read_row_dequant_into(local, out),
+        }
+    }
+
+    fn read_codes_into(&self, local: usize, out: &mut [i32]) {
+        match self {
+            SubStore::Lpt(s) => s.read_codes_into(local, out),
+            SubStore::Alpt(s) => s.read_codes_into(local, out),
+        }
+    }
+
+    fn row_delta(&self, local: usize) -> f32 {
+        match self {
+            SubStore::Lpt(s) => s.delta(),
+            SubStore::Alpt(s) => s.delta_of(local as u32),
+        }
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        match self {
+            SubStore::Lpt(s) => s.set_threads(threads),
+            SubStore::Alpt(s) => s.set_threads(threads),
+        }
+    }
+}
+
+/// One contiguous run of global row ids living in one group (a field, or
+/// the warm-start surplus tail). Sorted by `start` for binary search.
+#[derive(Clone, Copy, Debug)]
+struct RowRange {
+    start: u32,
+    group: u32,
+    local_base: u32,
+}
+
+/// Mixed-precision embedding store (see module docs).
+pub struct GroupedStore {
+    n: usize,
+    d: usize,
+    name: &'static str,
+    is_alpt: bool,
+    groups: Vec<Group>,
+    ranges: Vec<RowRange>,
+    /// sharding width for gather (resolved; >= 1)
+    threads: usize,
+    // ---- update scratch, reused across steps (grown on demand)
+    ids_g: Vec<Vec<u32>>,
+    pos_g: Vec<Vec<u32>>,
+    emb_g: Vec<f32>,
+    grad_g: Vec<f32>,
+    // full-batch second-pass context (ALPT only)
+    sp_w: Vec<f32>,
+    sp_delta: Vec<f32>,
+    sp_bw: Vec<BitWidth>,
+}
+
+impl GroupedStore {
+    /// Build the grouped store an experiment's (non-uniform) precision
+    /// plan describes over a concrete field layout. Rows beyond the
+    /// schema (`n_features > schema.n_features()`, warm-start headroom)
+    /// join the last field's group. Sub-stores are constructed in
+    /// ascending-width order, each consuming `rng` in turn, so the
+    /// result is a pure function of `(plan, layout, seed)`.
+    pub fn from_plan(
+        exp: &Experiment,
+        schema: &Schema,
+        kinds: &[FieldKind],
+        n_features: usize,
+        dim: usize,
+        rng: &mut Pcg32,
+    ) -> Result<GroupedStore> {
+        ensure!(
+            kinds.len() == schema.n_fields(),
+            "field-kind layout has {} entries for {} fields",
+            kinds.len(),
+            schema.n_fields()
+        );
+        ensure!(
+            n_features >= schema.n_features(),
+            "table of {n_features} rows is smaller than the schema's {}",
+            schema.n_features()
+        );
+        let per_field = exp.bits.resolve(kinds)?;
+        let (mode, name, is_alpt) = match exp.method {
+            Method::Lpt(m) => (
+                m,
+                match m {
+                    crate::config::RoundingMode::Sr => "LPT(SR)[mixed]",
+                    crate::config::RoundingMode::Dr => "LPT(DR)[mixed]",
+                },
+                false,
+            ),
+            Method::Alpt(m) => (
+                m,
+                match m {
+                    crate::config::RoundingMode::Sr => "ALPT(SR)[mixed]",
+                    crate::config::RoundingMode::Dr => "ALPT(DR)[mixed]",
+                },
+                true,
+            ),
+            other => bail!(
+                "per-field precision plans need a quantized-training \
+                 method (lpt/alpt), not {}",
+                other.key()
+            ),
+        };
+
+        // distinct widths, ascending — the fixed group order every run
+        // (and every checkpoint) uses
+        let mut widths: Vec<BitWidth> = per_field.clone();
+        widths.sort_by_key(|bw| bw.bits());
+        widths.dedup();
+        let gidx = |bw: BitWidth| -> u32 {
+            widths.iter().position(|&w| w == bw).unwrap() as u32
+        };
+
+        let mut rows_per = vec![0usize; widths.len()];
+        let mut ranges = Vec::with_capacity(schema.n_fields() + 1);
+        for (f, &bw) in per_field.iter().enumerate() {
+            let g = gidx(bw);
+            ranges.push(RowRange {
+                start: schema.offsets[f],
+                group: g,
+                local_base: rows_per[g as usize] as u32,
+            });
+            rows_per[g as usize] += schema.vocabs[f] as usize;
+        }
+        let surplus = n_features - schema.n_features();
+        if surplus > 0 {
+            let g = ranges.last().unwrap().group;
+            ranges.push(RowRange {
+                start: schema.n_features() as u32,
+                group: g,
+                local_base: rows_per[g as usize] as u32,
+            });
+            rows_per[g as usize] += surplus;
+        }
+
+        let groups = widths
+            .iter()
+            .zip(&rows_per)
+            .map(|(&bw, &rows)| {
+                let store = if is_alpt {
+                    SubStore::Alpt(AlptStore::init_with_clip_threads(
+                        rows,
+                        dim,
+                        bw,
+                        rounding_of(mode),
+                        exp.clip,
+                        exp.threads,
+                        rng,
+                    ))
+                } else {
+                    SubStore::Lpt(LptStore::init_with_threads(
+                        rows,
+                        dim,
+                        bw,
+                        exp.clip,
+                        rounding_of(mode),
+                        exp.threads,
+                        rng,
+                    ))
+                };
+                Group { bits: bw, rows, store }
+            })
+            .collect::<Vec<_>>();
+
+        let n_groups = groups.len();
+        Ok(GroupedStore {
+            n: n_features,
+            d: dim,
+            name,
+            is_alpt,
+            groups,
+            ranges,
+            threads: resolve_threads(exp.threads),
+            ids_g: vec![Vec::new(); n_groups],
+            pos_g: vec![Vec::new(); n_groups],
+            emb_g: Vec::new(),
+            grad_g: Vec::new(),
+            sp_w: Vec::new(),
+            sp_delta: Vec::new(),
+            sp_bw: Vec::new(),
+        })
+    }
+
+    /// Map a global row id to its `(group, local row)`.
+    #[inline]
+    fn locate(&self, id: u32) -> (usize, usize) {
+        debug_assert!((id as usize) < self.n);
+        let i = self.ranges.partition_point(|r| r.start <= id) - 1;
+        let r = self.ranges[i];
+        (r.group as usize, (r.local_base + (id - r.start)) as usize)
+    }
+
+    /// Number of precision groups (ascending bit width).
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Bit width of group `g`.
+    pub fn group_bits(&self, g: usize) -> u32 {
+        self.groups[g].bits.bits()
+    }
+
+    /// Row count of group `g`'s sub-table.
+    pub fn group_rows(&self, g: usize) -> usize {
+        self.groups[g].rows
+    }
+
+    /// Group `g`'s sub-store — the checkpoint subsystem serializes each
+    /// group through the ordinary [`EmbeddingStore`] row/aux hooks.
+    pub fn group_store(&self, g: usize) -> &dyn EmbeddingStore {
+        self.groups[g].store.as_store()
+    }
+
+    /// Mutable counterpart of [`GroupedStore::group_store`].
+    pub fn group_store_mut(&mut self, g: usize) -> &mut dyn EmbeddingStore {
+        self.groups[g].store.as_store_mut()
+    }
+
+    /// The bit width of the group holding global row `id`.
+    pub fn bits_of_row(&self, id: u32) -> u32 {
+        let (g, _) = self.locate(id);
+        self.groups[g].bits.bits()
+    }
+
+    /// Configure the sharding width (0 = one worker per hardware thread).
+    /// Purely a performance knob: results are bit-identical at any value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = resolve_threads(threads);
+        for group in &mut self.groups {
+            group.store.set_threads(threads);
+        }
+    }
+}
+
+impl EmbeddingStore for GroupedStore {
+    fn method_name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.d);
+        par_gather(ids, self.d, out, self.threads, |_, id, row| {
+            let (g, local) = self.locate(id);
+            self.groups[g].store.read_row_dequant_into(local, row);
+        });
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        rng: &mut Pcg32,
+        second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let n_u = ids.len();
+        debug_assert_eq!(emb_hat.len(), n_u * d);
+        debug_assert_eq!(grads.len(), n_u * d);
+
+        // route each batch row to its group (reused scratch); duplicate
+        // ids land in the same group, whose sub-store then takes its
+        // serial last-write-wins fallback — nothing here needs uniqueness
+        for v in &mut self.ids_g {
+            v.clear();
+        }
+        for v in &mut self.pos_g {
+            v.clear();
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            let (g, local) = self.locate(id);
+            self.ids_g[g].push(local as u32);
+            self.pos_g[g].push(i as u32);
+        }
+
+        // full-batch second-pass context: every row starts at its
+        // gathered value ŵ (on its own Δ-grid, so fake-quantization is
+        // the identity for rows outside the group under update) with its
+        // group's Δ and width
+        if self.is_alpt {
+            self.sp_w.clear();
+            self.sp_w.extend_from_slice(emb_hat);
+            self.sp_delta.clear();
+            self.sp_delta.resize(n_u, 0.0);
+            self.sp_bw.clear();
+            self.sp_bw.resize(n_u, BitWidth::B8);
+            for (i, &id) in ids.iter().enumerate() {
+                let (g, local) = self.locate(id);
+                self.sp_delta[i] = self.groups[g].store.row_delta(local);
+                self.sp_bw[i] = self.groups[g].bits;
+            }
+        }
+
+        // fixed ascending-width group order; every group updates every
+        // step (empty batches included) so the per-group SR step counters
+        // stay in lockstep — one shared `step` survives checkpointing
+        let Self {
+            groups,
+            ids_g,
+            pos_g,
+            emb_g,
+            grad_g,
+            sp_w,
+            sp_delta,
+            sp_bw,
+            ..
+        } = self;
+        for (g, group) in groups.iter_mut().enumerate() {
+            let ids_local = &ids_g[g];
+            let pos = &pos_g[g];
+            let k = pos.len();
+            if emb_g.len() < k * d {
+                emb_g.resize(k * d, 0.0);
+                grad_g.resize(k * d, 0.0);
+            }
+            for (j, &i) in pos.iter().enumerate() {
+                let i = i as usize;
+                emb_g[j * d..(j + 1) * d]
+                    .copy_from_slice(&emb_hat[i * d..(i + 1) * d]);
+                grad_g[j * d..(j + 1) * d]
+                    .copy_from_slice(&grads[i * d..(i + 1) * d]);
+            }
+            // forward the group's Δ-gradient pass with full-batch
+            // positions restored (see module docs); only ALPT sub-stores
+            // ever invoke this
+            let mut sp = |w_new: &[f32],
+                          delta: &[f32],
+                          bws: &[BitWidth]|
+             -> Result<Vec<f32>> {
+                debug_assert_eq!(delta.len(), k);
+                for (j, &i) in pos.iter().enumerate() {
+                    let i = i as usize;
+                    sp_w[i * d..(i + 1) * d]
+                        .copy_from_slice(&w_new[j * d..(j + 1) * d]);
+                    sp_delta[i] = delta[j];
+                    sp_bw[i] = bws[j];
+                }
+                let full = second_pass(
+                    &sp_w[..n_u * d],
+                    &sp_delta[..n_u],
+                    &sp_bw[..n_u],
+                )?;
+                ensure!(
+                    full.len() == n_u,
+                    "second pass returned {} gradients for {n_u} rows",
+                    full.len()
+                );
+                Ok(pos.iter().map(|&i| full[i as usize]).collect())
+            };
+            group.store.as_store_mut().update(
+                ids_local,
+                &emb_g[..k * d],
+                &grad_g[..k * d],
+                hp,
+                rng,
+                &mut sp,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn quantized_view(
+        &self,
+        ids: &[u32],
+        codes: &mut [i32],
+        delta: &mut [f32],
+    ) -> bool {
+        debug_assert_eq!(codes.len(), ids.len() * self.d);
+        debug_assert_eq!(delta.len(), ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            let (g, local) = self.locate(id);
+            self.groups[g]
+                .store
+                .read_codes_into(local, &mut codes[i * self.d..(i + 1) * self.d]);
+            delta[i] = self.groups[g].store.row_delta(local);
+        }
+        true
+    }
+
+    fn train_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.store.as_store().train_bytes()).sum()
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.store.as_store().infer_bytes()).sum()
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.groups[0].store.as_store().step_counter()
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        for group in &mut self.groups {
+            group.store.as_store_mut().set_step_counter(step);
+        }
+    }
+
+    fn as_grouped(&self) -> Option<&GroupedStore> {
+        Some(self)
+    }
+
+    fn as_grouped_mut(&mut self) -> Option<&mut GroupedStore> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{eq7_second_pass, hp};
+    use super::*;
+    use crate::config::{PrecisionPlan, RoundingMode};
+    use crate::util::prop::{check, Gen};
+
+    fn mixed_exp(method: Method, plan: &str) -> Experiment {
+        Experiment {
+            method,
+            bits: PrecisionPlan::parse(plan).unwrap(),
+            threads: 1,
+            use_runtime: false,
+            ..Experiment::default()
+        }
+    }
+
+    /// Two 3-field layouts used across the tests: a numeric field, then
+    /// two categorical ones.
+    fn toy_layout() -> (Schema, Vec<FieldKind>) {
+        (
+            Schema::new(vec![40, 100, 60]),
+            vec![
+                FieldKind::Numeric,
+                FieldKind::Categorical,
+                FieldKind::Categorical,
+            ],
+        )
+    }
+
+    fn gather_all(store: &dyn EmbeddingStore) -> Vec<f32> {
+        let ids: Vec<u32> = (0..store.n_features() as u32).collect();
+        let mut out = vec![0.0f32; ids.len() * store.dim()];
+        store.gather(&ids, &mut out);
+        out
+    }
+
+    #[test]
+    fn routing_respects_the_plan() {
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(Method::Lpt(RoundingMode::Sr), "num:4,cat:8");
+        let mut rng = Pcg32::seeded(1);
+        let store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 6, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(store.n_groups(), 2, "4-bit and 8-bit groups");
+        assert_eq!(store.group_bits(0), 4);
+        assert_eq!(store.group_bits(1), 8);
+        assert_eq!(store.group_rows(0), 40, "numeric field rows");
+        assert_eq!(store.group_rows(1), 160, "categorical rows");
+        // every row reports its field's width
+        for id in 0..40 {
+            assert_eq!(store.bits_of_row(id), 4);
+        }
+        for id in 40..200 {
+            assert_eq!(store.bits_of_row(id), 8);
+        }
+        assert_eq!(store.n_features(), 200);
+        // mixed memory: smaller than uniform-8, larger than uniform-4
+        let bytes8 = 200 * 6; // packed bytes at 8 bits
+        let bytes4 = 200 * 3;
+        assert!(store.train_bytes() > bytes4 + 4);
+        assert!(store.train_bytes() < bytes8 + 4 + 200 * 4);
+    }
+
+    #[test]
+    fn warm_start_surplus_rows_join_the_last_group() {
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(Method::Lpt(RoundingMode::Sr), "num:4,cat:8");
+        let mut rng = Pcg32::seeded(2);
+        let store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features() + 25, 4, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(store.n_features(), 225);
+        assert_eq!(store.group_rows(1), 160 + 25);
+        assert_eq!(store.bits_of_row(224), 8);
+        // gather over the surplus rows works
+        let mut out = vec![0.0f32; 4];
+        store.gather(&[224], &mut out);
+    }
+
+    #[test]
+    fn single_group_plan_matches_the_plain_store() {
+        // "cat:4" on an all-categorical layout collapses to one group
+        // whose construction consumes the generator exactly like the
+        // plain store — gathers must be bit-identical.
+        let schema = Schema::new(vec![70, 30]);
+        let kinds = vec![FieldKind::Categorical; 2];
+        let exp = mixed_exp(Method::Alpt(RoundingMode::Sr), "cat:4");
+        let mut rng_a = Pcg32::seeded(7);
+        let grouped = GroupedStore::from_plan(
+            &exp, &schema, &kinds, 100, 5, &mut rng_a,
+        )
+        .unwrap();
+        assert_eq!(grouped.n_groups(), 1);
+        let mut rng_b = Pcg32::seeded(7);
+        let plain = AlptStore::init_with_clip_threads(
+            100,
+            5,
+            BitWidth::B4,
+            crate::quant::Rounding::Stochastic,
+            exp.clip,
+            exp.threads,
+            &mut rng_b,
+        );
+        assert_eq!(gather_all(&grouped), gather_all(&plain));
+    }
+
+    #[test]
+    fn non_quantized_methods_are_rejected() {
+        let (schema, kinds) = toy_layout();
+        for method in [Method::Fp, Method::Lsq, Method::Pact] {
+            let exp = mixed_exp(method, "num:4,cat:8");
+            let mut rng = Pcg32::seeded(3);
+            let err = GroupedStore::from_plan(
+                &exp, &schema, &kinds, schema.n_features(), 4, &mut rng,
+            )
+            .map(|_| ())
+            .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("lpt/alpt"),
+                "{method:?}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_view_reports_per_row_deltas_and_codes() {
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(Method::Alpt(RoundingMode::Sr), "num:2,cat:8");
+        let mut rng = Pcg32::seeded(4);
+        let store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 6, &mut rng,
+        )
+        .unwrap();
+        let ids = [0u32, 39, 40, 199];
+        let mut codes = vec![0i32; ids.len() * 6];
+        let mut delta = vec![0.0f32; ids.len()];
+        assert!(store.quantized_view(&ids, &mut codes, &mut delta));
+        // codes * delta reproduces the gathered values exactly
+        let mut gathered = vec![0.0f32; ids.len() * 6];
+        store.gather(&ids, &mut gathered);
+        for i in 0..ids.len() {
+            for j in 0..6 {
+                assert_eq!(
+                    codes[i * 6 + j] as f32 * delta[i],
+                    gathered[i * 6 + j],
+                    "row {i} col {j}"
+                );
+            }
+        }
+        // 2-bit rows carry 2-bit codes
+        for (j, &c) in codes.iter().take(12).enumerate() {
+            assert!((-2..=1).contains(&c), "2-bit code {c} at {j}");
+        }
+    }
+
+    #[test]
+    fn grouped_update_learns_and_preserves_untouched_groups() {
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(Method::Alpt(RoundingMode::Sr), "num:4,cat:8");
+        let mut rng = Pcg32::seeded(5);
+        let mut store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        let before_numeric = {
+            let mut out = vec![0.0f32; 4];
+            store.gather(&[3], &mut out);
+            out
+        };
+        // touch only categorical rows with a strong gradient
+        let ids = [50u32, 120];
+        let mut what = vec![0.0f32; 2 * 4];
+        store.gather(&ids, &mut what);
+        let grads = vec![1.0f32; 2 * 4];
+        let mut h = hp();
+        h.lr_emb = 0.5;
+        let mut sp = eq7_second_pass();
+        let mut step_rng = Pcg32::seeded(6);
+        for _ in 0..30 {
+            store.gather(&ids, &mut what);
+            store
+                .update(&ids, &what, &grads, &h, &mut step_rng, &mut sp)
+                .unwrap();
+        }
+        let mut now = vec![0.0f32; 2 * 4];
+        store.gather(&ids, &mut now);
+        assert!(
+            now.iter().sum::<f32>() < -0.5,
+            "rows did not move down: {now:?}"
+        );
+        // the numeric group, never referenced, is untouched
+        let mut after_numeric = vec![0.0f32; 4];
+        store.gather(&[3], &mut after_numeric);
+        assert_eq!(before_numeric, after_numeric);
+    }
+
+    #[test]
+    fn grouped_sharded_bit_identical_to_serial() {
+        // the extended StreamKey contract: grouped gather/update must be
+        // bit-identical to the serial path at any thread count, for both
+        // store families and mixed widths.
+        for method in
+            [Method::Lpt(RoundingMode::Sr), Method::Alpt(RoundingMode::Sr)]
+        {
+            check(
+                &format!("grouped serial == sharded ({method:?})"),
+                6,
+                move |g: &mut Gen| {
+                    let v0 = g.usize_in(40, 120) as u32;
+                    let v1 = g.usize_in(80, 200) as u32;
+                    let v2 = g.usize_in(30, 90) as u32;
+                    let schema = Schema::new(vec![v0, v1, v2]);
+                    let kinds = vec![
+                        FieldKind::Numeric,
+                        FieldKind::Categorical,
+                        FieldKind::Categorical,
+                    ];
+                    let d = g.usize_in(3, 9);
+                    let n = schema.n_features();
+                    let seed = g.u32_any() as u64;
+                    let mk = |threads: usize| {
+                        let mut exp = mixed_exp(method, "num:4,f2:2,cat:8");
+                        exp.threads = threads;
+                        let mut rng = Pcg32::seeded(seed);
+                        let mut s = GroupedStore::from_plan(
+                            &exp, &schema, &kinds, n, d, &mut rng,
+                        )
+                        .unwrap();
+                        s.set_threads(threads);
+                        s
+                    };
+                    let mut serial = mk(1);
+                    let mut par = mk(4);
+                    if gather_all(&serial) != gather_all(&par) {
+                        return Err("init diverged".into());
+                    }
+                    let ids: Vec<u32> = (0..n as u32).collect();
+                    let grads: Vec<f32> = (0..n * d)
+                        .map(|i| ((i % 13) as f32 - 6.0) * 0.01)
+                        .collect();
+                    let mut what_s = vec![0.0f32; n * d];
+                    let mut what_p = vec![0.0f32; n * d];
+                    let mut rng_s = Pcg32::seeded(seed ^ 0xABCD);
+                    let mut rng_p = Pcg32::seeded(seed ^ 0xABCD);
+                    let mut sp_s = eq7_second_pass();
+                    let mut sp_p = eq7_second_pass();
+                    for _ in 0..2 {
+                        serial.gather(&ids, &mut what_s);
+                        par.gather(&ids, &mut what_p);
+                        if what_s != what_p {
+                            return Err("gather diverged".into());
+                        }
+                        serial
+                            .update(&ids, &what_s, &grads, &hp(),
+                                    &mut rng_s, &mut sp_s)
+                            .map_err(|e| format!("{e:#}"))?;
+                        par.update(&ids, &what_p, &grads, &hp(),
+                                   &mut rng_p, &mut sp_p)
+                            .map_err(|e| format!("{e:#}"))?;
+                        if gather_all(&serial) != gather_all(&par) {
+                            return Err("update diverged".into());
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn step_counters_stay_in_lockstep_across_groups() {
+        // batches that miss a group entirely must still advance its SR
+        // step counter, so one persisted `step` restores every group
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(Method::Lpt(RoundingMode::Sr), "num:4,cat:8");
+        let mut rng = Pcg32::seeded(9);
+        let mut store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        let ids = [50u32]; // categorical only — numeric group sees no rows
+        let mut what = vec![0.0f32; 4];
+        store.gather(&ids, &mut what);
+        let grads = vec![0.1f32; 4];
+        let mut sp = eq7_second_pass();
+        let mut step_rng = Pcg32::seeded(10);
+        for _ in 0..3 {
+            store
+                .update(&ids, &what, &grads, &hp(), &mut step_rng, &mut sp)
+                .unwrap();
+        }
+        assert_eq!(store.step_counter(), 3);
+        for g in 0..store.n_groups() {
+            assert_eq!(store.group_store(g).step_counter(), 3, "group {g}");
+        }
+        store.set_step_counter(7);
+        for g in 0..store.n_groups() {
+            assert_eq!(store.group_store(g).step_counter(), 7);
+        }
+    }
+}

@@ -99,6 +99,18 @@ impl LptStore {
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = resolve_threads(threads);
     }
+
+    /// Dequantize one row into `out` — the grouped-store gather kernel
+    /// (same word-at-a-time path as [`LptStore::gather`], addressed by
+    /// this sub-table's local row id).
+    pub(crate) fn read_row_dequant_into(&self, row: usize, out: &mut [f32]) {
+        self.codes.read_row_dequant(row, self.delta, out);
+    }
+
+    /// Integer codes of one row (the grouped `quantized_view` kernel).
+    pub(crate) fn read_codes_into(&self, row: usize, out: &mut [i32]) {
+        self.codes.read_row(row, out);
+    }
 }
 
 impl EmbeddingStore for LptStore {

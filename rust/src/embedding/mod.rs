@@ -18,6 +18,7 @@
 
 pub mod alpt;
 pub mod fp;
+pub mod grouped;
 pub mod hashing;
 pub mod lpt;
 pub mod pruning;
@@ -25,13 +26,14 @@ pub mod qat;
 
 pub use alpt::AlptStore;
 pub use fp::FpStore;
+pub use grouped::GroupedStore;
 pub use hashing::HashingStore;
 pub use lpt::LptStore;
 pub use pruning::PruningStore;
 pub use qat::{LsqStore, PactStore};
 
 use crate::config::{Experiment, Method, RoundingMode};
-use crate::quant::Rounding;
+use crate::quant::{BitWidth, Rounding};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, ensure, Result};
 
@@ -49,10 +51,14 @@ pub struct UpdateHp {
     pub lr_scale: f32,
 }
 
-/// Second-pass callback: `(w_new [U*d], delta [U]) -> d_delta [U]`.
+/// Second-pass callback:
+/// `(w_new [U*d], delta [U], bit widths [U]) -> d_delta [U]`.
 /// Implemented by the trainer as one execution of the `train_fq` artifact
-/// (or the Rust fallback); only ALPT invokes it.
-pub type SecondPass<'a> = dyn FnMut(&[f32], &[f32]) -> Result<Vec<f32>> + 'a;
+/// (or the Rust fallback); only ALPT invokes it. The per-row bit widths
+/// carry each row's quantization bounds — uniform stores pass one width
+/// repeated, grouped mixed-precision stores each row's group width.
+pub type SecondPass<'a> =
+    dyn FnMut(&[f32], &[f32], &[BitWidth]) -> Result<Vec<f32>> + 'a;
 
 /// Common interface over all embedding-table variants. `Send + Sync` so
 /// sharded workers can gather from their partitions in parallel.
@@ -151,6 +157,18 @@ pub trait EmbeddingStore: Send + Sync {
 
     /// Restore the update-step counter captured by `step_counter`.
     fn set_step_counter(&mut self, _step: u64) {}
+
+    /// Downcast to the mixed-precision [`GroupedStore`], whose checkpoint
+    /// layout (format v2) carries one section run per precision group.
+    /// `None` for every single-table store.
+    fn as_grouped(&self) -> Option<&GroupedStore> {
+        None
+    }
+
+    /// Mutable counterpart of [`EmbeddingStore::as_grouped`].
+    fn as_grouped_mut(&mut self) -> Option<&mut GroupedStore> {
+        None
+    }
 }
 
 /// Checkpoint row payloads for float-backed tables (`FpStore` / QAT
@@ -285,12 +303,26 @@ pub(crate) fn rounding_of(mode: RoundingMode) -> Rounding {
 }
 
 /// Build the store an [`Experiment`] asks for.
+///
+/// Uniform precision plans take exactly the pre-plan construction path
+/// (same calls, same generator consumption — byte-identical stores);
+/// mixed plans resolve the per-field widths against the experiment's
+/// dataset layout and build a [`GroupedStore`] with one packed sub-table
+/// per width.
 pub fn build_store(
     exp: &Experiment,
     n_features: usize,
     dim: usize,
     rng: &mut Pcg32,
 ) -> Result<Box<dyn EmbeddingStore>> {
+    if !exp.bits.is_uniform() {
+        let schema = crate::data::registry::schema_for(exp)?;
+        let kinds = crate::data::registry::field_kinds(exp)?;
+        // from_plan validates the layout (incl. table size >= schema)
+        return Ok(Box::new(GroupedStore::from_plan(
+            exp, &schema, &kinds, n_features, dim, rng,
+        )?));
+    }
     let bw = exp.bit_width()?;
     Ok(match exp.method {
         Method::Fp => {
@@ -345,10 +377,33 @@ pub(crate) mod testutil {
     use super::*;
 
     /// No-op second pass for stores that never call it.
-    pub fn no_second_pass() -> impl FnMut(&[f32], &[f32]) -> Result<Vec<f32>>
-    {
-        |_: &[f32], _: &[f32]| -> Result<Vec<f32>> {
+    pub fn no_second_pass(
+    ) -> impl FnMut(&[f32], &[f32], &[BitWidth]) -> Result<Vec<f32>> {
+        |_: &[f32], _: &[f32], _: &[BitWidth]| -> Result<Vec<f32>> {
             panic!("second_pass unexpectedly invoked")
+        }
+    }
+
+    /// Eq. 7 second pass with an all-ones upstream gradient, honouring
+    /// each row's own width — the shared test stand-in for the
+    /// `train_fq` artifact (uniform and grouped stores alike).
+    pub fn eq7_second_pass(
+    ) -> impl FnMut(&[f32], &[f32], &[BitWidth]) -> Result<Vec<f32>> {
+        move |w_new: &[f32], delta: &[f32], bws: &[BitWidth]| {
+            let d = w_new.len() / delta.len();
+            let ups = vec![1.0f32; d];
+            Ok(delta
+                .iter()
+                .enumerate()
+                .map(|(i, &dl)| {
+                    crate::quant::lsq_delta_grad_row(
+                        &w_new[i * d..(i + 1) * d],
+                        dl,
+                        bws[i],
+                        &ups,
+                    )
+                })
+                .collect())
         }
     }
 
@@ -399,7 +454,7 @@ mod tests {
         let fp = fp_bytes(n, d);
         let exp8 = Experiment {
             method: Method::Alpt(RoundingMode::Sr),
-            bits: 8,
+            bits: crate::config::PrecisionPlan::uniform(8),
             ..Experiment::default()
         };
         let store = build_store(&exp8, n, d, &mut rng).unwrap();
@@ -409,7 +464,10 @@ mod tests {
             (ratio - 3.2).abs() < 0.05,
             "8-bit ALPT train ratio = {ratio}"
         );
-        let exp2 = Experiment { bits: 2, ..exp8.clone() };
+        let exp2 = Experiment {
+            bits: crate::config::PrecisionPlan::uniform(2),
+            ..exp8.clone()
+        };
         let store2 = build_store(&exp2, n, d, &mut rng).unwrap();
         assert!(store2.train_bytes() < store.train_bytes());
     }

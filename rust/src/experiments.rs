@@ -86,7 +86,9 @@ pub fn run_cell(exp: &Experiment, ds: &Dataset, verbose: bool)
     Ok(Cell {
         dataset: exp.dataset.clone(),
         method: res.method.to_string(),
-        bits: exp.bits,
+        // the grid sweeps uniform widths; a mixed plan reports its
+        // default width in the table
+        bits: exp.bits.default_bits(),
         auc: ev.auc,
         logloss: ev.logloss,
         epochs: res.epochs_run,

@@ -23,7 +23,8 @@ USAGE:
   alpt train  [--config FILE]
               [--dataset avazu|criteo|tiny|synthetic[:NAME]|criteo:FILE.tsv]
               [--method fp|lpt-sr|lpt-dr|alpt-sr|alpt-dr|lsq|pact|hashing|pruning]
-              [--bits 2|4|8|16] [--epochs N] [--samples N] [--seed N]
+              [--bits 2|4|8|16 | --bits cat:4,num:8 | --bits f3:2,default:8]
+              [--epochs N] [--samples N] [--seed N]
               [--model NAME] [--no-runtime]
               [--hash-bits N] [--numeric-buckets N] [--shuffle-window N]
               [--prefetch-batches N] [--save-every STEPS]
@@ -36,6 +37,11 @@ USAGE:
 Datasets: plain names are in-memory synthetic specs; `criteo:FILE.tsv`
 streams a Criteo-format TSV (label + 13 numeric + 26 categorical columns)
 from disk with on-the-fly feature hashing — see README.md \"Datasets\".
+
+Precision plans: `--bits` takes one width for every field, or a
+per-field plan (`cat:4,num:8`, `f3:2,f7:16,default:8`) that packs each
+group of equal-width fields into its own sub-table — see README.md
+\"Precision plans\".
 ";
 
 fn main() -> Result<()> {
@@ -80,7 +86,7 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
     if let Some(m) = args.get("model") {
         exp.model = m.to_string();
     }
-    exp.bits = args.get_parse("bits", exp.bits)?;
+    exp.bits = args.get_parse("bits", exp.bits.clone())?;
     exp.epochs = args.get_parse("epochs", exp.epochs)?;
     exp.seed = args.get_parse("seed", exp.seed)?;
     exp.n_samples = args.get_parse("samples", exp.n_samples)?;
@@ -142,7 +148,7 @@ fn train(args: &Args) -> Result<()> {
     let ds = generate(&spec, exp.n_samples);
     let (train, val, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
     println!(
-        "training {} ({} bits) on {} [{} runtime]",
+        "training {} (bits {}) on {} [{} runtime]",
         trainer.store.method_name(),
         exp.bits,
         spec.name,
@@ -185,7 +191,7 @@ fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
         exp.prefetch_batches
     );
     println!(
-        "training {} ({} bits) [{} runtime]",
+        "training {} (bits {}) [{} runtime]",
         trainer.store.method_name(),
         exp.bits,
         if trainer.uses_runtime() { "PJRT" } else { "rust-nn" }

@@ -15,6 +15,11 @@
 //! into packed bytes, skipping the i32 scratch round-trip entirely.
 //! [`RowWriter`] extends the same write paths to concurrent per-row use
 //! from the sharded update engine.
+//!
+//! A table's bit width is per *table*, not per process: the
+//! mixed-precision grouped store packs each precision group into its own
+//! `PackedTable`, so one model can mix 2/4/8/16-bit sub-tables while
+//! every kernel here stays width-specialized.
 
 use super::{quantize_dr, quantize_sr, BitWidth, Rounding};
 use crate::util::rng::Pcg32;
@@ -47,6 +52,12 @@ impl PackedTable {
 
     pub fn bit_width(&self) -> BitWidth {
         BitWidth::from_bits(self.bits).unwrap()
+    }
+
+    /// Raw bit count per code (`bit_width().bits()` without the enum
+    /// round-trip).
+    pub fn bits(&self) -> u32 {
+        self.bits
     }
 
     /// Bytes per (byte-padded) row.

@@ -8,13 +8,14 @@
 use std::path::PathBuf;
 
 use alpt::checkpoint::{
-    dense_params, load_store, save_store, Checkpoint,
+    dense_params, load_store, save_store, Checkpoint, SectionKind,
 };
 use alpt::config::{Method, RoundingMode};
 use alpt::coordinator::builtin_entry;
 use alpt::data::batcher::Batcher;
 use alpt::data::synthetic::{generate, SyntheticSpec};
 use alpt::data::Schema;
+use alpt::embedding::EmbeddingStore;
 use alpt::nn::Dcn;
 use alpt::quant::delta_from_clip;
 
@@ -37,9 +38,14 @@ fn fixture_serves_without_training() {
     let ckpt = Checkpoint::read(&path).expect("fixture must parse");
     let (store, exp) = load_store(&ckpt).expect("fixture store must load");
 
+    // the committed fixture predates precision plans: version-1 files
+    // load as a single-group (uniform) plan
+    assert_eq!(ckpt.version, 1);
+    assert!(store.as_grouped().is_none(), "v1 loads as a single group");
+
     // geometry pins: the tiny synthetic schema and the tiny model config
     assert_eq!(exp.method, Method::Lpt(RoundingMode::Sr));
-    assert_eq!(exp.bits, 8);
+    assert_eq!(exp.bits, alpt::config::PrecisionPlan::uniform(8));
     assert_eq!(exp.model, "tiny");
     assert!(!exp.use_runtime, "fixture must be runtime-free");
     let spec = SyntheticSpec::tiny(exp.seed);
@@ -85,6 +91,23 @@ fn fixture_serves_without_training() {
     let p1 = dir.join("fixture.1.ckpt");
     let p2 = dir.join("fixture.2.ckpt");
     save_store(&p1, store.as_ref(), &exp).unwrap();
+
+    // uniform-plan equivalence anchor: the fixture was written *before*
+    // the precision-plan refactor, so the re-saved file's header version
+    // and raw row payloads must match the committed bytes exactly —
+    // uniform checkpoints did not change shape
+    let resaved = Checkpoint::read(&p1).unwrap();
+    assert_eq!(resaved.version, ckpt.version, "uniform files stay v1");
+    let old_rows = ckpt.sections_of(SectionKind::Rows);
+    let new_rows = resaved.sections_of(SectionKind::Rows);
+    assert_eq!(old_rows.len(), new_rows.len());
+    for (a, b) in old_rows.iter().zip(&new_rows) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(
+            a.payload, b.payload,
+            "row payloads diverged from the pre-refactor fixture"
+        );
+    }
     let ck1 = Checkpoint::read(&p1).unwrap();
     let (store2, exp2) = load_store(&ck1).unwrap();
     save_store(&p2, store2.as_ref(), &exp2).unwrap();

@@ -8,7 +8,7 @@
 
 use std::path::PathBuf;
 
-use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
 use alpt::coordinator::{serve_checkpoint, Trainer};
 use alpt::data::registry::{self, DataSource, RecordStream};
 use alpt::embedding::EmbeddingStore;
@@ -29,7 +29,7 @@ fn criteo_exp() -> Experiment {
         dataset: format!("criteo:{}", fixture_path().display()),
         model: "criteo".into(),
         method: Method::Alpt(RoundingMode::Sr),
-        bits: 8,
+        bits: PrecisionPlan::uniform(8),
         epochs: 1,
         patience: 0,
         use_runtime: false,
@@ -126,7 +126,7 @@ fn prefetch_and_serial_training_are_bit_identical() {
         dataset: "synthetic:tiny".into(),
         model: "tiny".into(),
         method: Method::Lpt(RoundingMode::Sr),
-        bits: 8,
+        bits: PrecisionPlan::uniform(8),
         epochs: 1,
         n_samples: 1200,
         patience: 0,
@@ -162,7 +162,7 @@ fn mid_epoch_resume_continues_bit_identically() {
         dataset: "synthetic:tiny".into(),
         model: "tiny".into(),
         method: Method::Alpt(RoundingMode::Sr),
-        bits: 8,
+        bits: PrecisionPlan::uniform(8),
         epochs: 1,
         n_samples: 700,
         patience: 0,

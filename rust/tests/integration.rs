@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use alpt::config::{Experiment, Method, RoundingMode};
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
 use alpt::coordinator::Trainer;
 use alpt::data::synthetic::{generate, SyntheticSpec};
 use alpt::nn::Dcn;
@@ -299,7 +299,7 @@ fn runtime_fp_beats_2bit_lpt_dr() {
     let mut lpt = Trainer::new(
         Experiment {
             method: Method::Lpt(RoundingMode::Dr),
-            bits: 2,
+            bits: PrecisionPlan::uniform(2),
             clip: 0.1,
             ..base
         },

@@ -1,0 +1,178 @@
+//! End-to-end tests for per-field mixed-precision plans: a grouped store
+//! trains through the streaming trainer, checkpoints in the format-v2
+//! grouped layout, resumes bit-identically (including mid-epoch), and
+//! serves — plus the Criteo-fixture leg mirroring the CI
+//! `--bits cat:4,num:8` job.
+
+use std::path::PathBuf;
+
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
+use alpt::coordinator::{serve_checkpoint, Trainer};
+use alpt::data::registry;
+use alpt::embedding::EmbeddingStore;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("alpt_mixed_precision_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn criteo_fixture() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/fixtures/tiny_criteo.tsv")
+}
+
+fn gather_all(store: &dyn EmbeddingStore) -> Vec<f32> {
+    let ids: Vec<u32> = (0..store.n_features() as u32).collect();
+    let mut out = vec![0.0f32; ids.len() * store.dim()];
+    store.gather(&ids, &mut out);
+    out
+}
+
+fn mixed_tiny_exp() -> Experiment {
+    Experiment {
+        dataset: "synthetic:tiny".into(),
+        model: "tiny".into(),
+        method: Method::Alpt(RoundingMode::Sr),
+        bits: PrecisionPlan::parse("f0:4,f1:8,default:2").unwrap(),
+        epochs: 1,
+        n_samples: 700,
+        patience: 0,
+        use_runtime: false,
+        threads: 1,
+        shuffle_window: 64,
+        prefetch_batches: 2,
+        lr_emb: 0.3,
+        ..Experiment::default()
+    }
+}
+
+#[test]
+fn mixed_plan_mid_epoch_resume_is_bit_identical() {
+    // the grouped-store counterpart of the uniform mid-epoch-resume
+    // contract: a v2 checkpoint restores every group's packed rows,
+    // learned deltas and the shared SR step counter exactly
+    let exp = Experiment { save_every: 5, ..mixed_tiny_exp() };
+    let source = registry::open_source(&exp).unwrap();
+    let n = source.schema().n_features();
+
+    let ckpt = tmp("mixed_mid_epoch.ckpt");
+    let mut full = Trainer::new(exp.clone(), n).unwrap();
+    assert!(
+        full.store.as_grouped().is_some(),
+        "mixed plan must build a grouped store"
+    );
+    let res = full
+        .train_stream(source.as_ref(), false, Some(ckpt.as_path()))
+        .unwrap();
+    let steps_full = res.history[0].steps;
+    let last_save = (steps_full / 5) * 5;
+    assert!(last_save >= 5, "too few steps ({steps_full}) to save");
+
+    let mut resumed = Trainer::resume(&ckpt).unwrap();
+    assert_eq!(resumed.exp.bits, exp.bits, "plan survives the echo");
+    assert_eq!(resumed.epochs_done, 0);
+    let source_b = registry::open_source(&resumed.exp).unwrap();
+    let res_b =
+        resumed.train_stream(source_b.as_ref(), false, None).unwrap();
+    assert_eq!(res_b.history[0].steps, steps_full - last_save);
+    assert_eq!(
+        gather_all(full.store.as_ref()),
+        gather_all(resumed.store.as_ref()),
+        "grouped tables diverged after mid-epoch resume"
+    );
+    assert_eq!(full.dense, resumed.dense, "dense params diverged");
+    assert_eq!(
+        res_b.history[0].val_auc.to_bits(),
+        res.history[0].val_auc.to_bits(),
+        "val AUC diverged"
+    );
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn mixed_checkpoint_save_resume_save_is_byte_identical() {
+    let exp = mixed_tiny_exp();
+    let source = registry::open_source(&exp).unwrap();
+    let n = source.schema().n_features();
+    let mut tr = Trainer::new(exp, n).unwrap();
+    // a few real steps so packed rows, deltas and counters are non-trivial
+    tr.train_stream(source.as_ref(), false, None).unwrap();
+    let p1 = tmp("mixed_roundtrip.1.ckpt");
+    let p2 = tmp("mixed_roundtrip.2.ckpt");
+    tr.save_checkpoint(&p1).unwrap();
+    let resumed = Trainer::resume(&p1).unwrap();
+    resumed.save_checkpoint(&p2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "mixed save→resume→save changed bytes"
+    );
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+#[test]
+fn mixed_criteo_plan_trains_and_serves_above_chance() {
+    // the CI `--bits cat:4,num:8` leg in test form: 4-bit categorical
+    // tables + 8-bit numeric tables over the committed fixture
+    let path = criteo_fixture();
+    if !path.exists() {
+        eprintln!("skipping: no committed Criteo fixture");
+        return;
+    }
+    let exp = Experiment {
+        dataset: format!("criteo:{}", path.display()),
+        model: "criteo".into(),
+        method: Method::Alpt(RoundingMode::Sr),
+        bits: PrecisionPlan::parse("cat:4,num:8").unwrap(),
+        epochs: 2,
+        patience: 0,
+        use_runtime: false,
+        threads: 1,
+        hash_bits: 8,
+        shuffle_window: 256,
+        prefetch_batches: 2,
+        wd_emb: 1e-5,
+        ..Experiment::default()
+    };
+    let source = registry::open_source(&exp).unwrap();
+    let n = source.schema().n_features();
+    let mut trainer = Trainer::new(exp, n).unwrap();
+    {
+        let gs = trainer.store.as_grouped().unwrap();
+        assert_eq!(gs.n_groups(), 2);
+        assert_eq!(gs.group_bits(0), 4);
+        assert_eq!(gs.group_bits(1), 8);
+        // 26 categorical fields of 2^8 rows; 13 numeric of 40 buckets
+        assert_eq!(gs.group_rows(0), 26 * 256);
+        assert_eq!(gs.group_rows(1), 13 * 40);
+    }
+    let res = trainer.train_stream(source.as_ref(), false, None).unwrap();
+    assert_eq!(res.epochs_run, 2);
+    assert!(
+        res.best_auc > 0.5,
+        "mixed-plan held-out AUC at chance: {}",
+        res.best_auc
+    );
+
+    let ckpt = tmp("mixed_criteo.ckpt");
+    trainer.save_checkpoint(&ckpt).unwrap();
+    let mut resumed = Trainer::resume(&ckpt).unwrap();
+    let ev_a = trainer.evaluate_source(source.as_ref()).unwrap();
+    let ev_b = resumed.evaluate_source(source.as_ref()).unwrap();
+    assert_eq!(ev_a.auc.to_bits(), ev_b.auc.to_bits());
+
+    let report = serve_checkpoint(&ckpt, 8).unwrap();
+    assert_eq!(report.method, "ALPT(SR)[mixed]");
+    assert_eq!(report.n_features, n);
+    assert!(report.auc.is_finite());
+    // the mixed table ships smaller than the uniform-8 one would
+    let uniform8_bytes = n * 16 + n * 4; // 8-bit codes + f32 Δ per row
+    assert!(
+        report.infer_bytes < uniform8_bytes,
+        "mixed table not smaller: {} vs {uniform8_bytes}",
+        report.infer_bytes
+    );
+    std::fs::remove_file(&ckpt).ok();
+}

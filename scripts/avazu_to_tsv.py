@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Column-mapping shim: stream a raw Avazu CSV download into the
+39-column Criteo-format TSV the `criteo:` reader consumes.
+
+Avazu (Kaggle CTR) ships as CSV with its own layout:
+
+    id,click,hour,C1,banner_pos,site_id,site_domain,site_category,
+    app_id,app_domain,app_category,device_id,device_ip,device_model,
+    device_type,device_conn_type,C14,...,C21        (24 columns)
+
+The repo's streaming reader (rust/src/data/criteo.rs) expects the Kaggle
+Criteo layout instead: `label \\t I1..I13 \\t C1..C26` — 13 numeric then
+26 categorical columns, any field possibly empty. This script maps one
+to the other, row by row, so a full Avazu download trains with:
+
+    python3 scripts/avazu_to_tsv.py train.csv --out avazu.tsv
+    cargo run --release -- train --dataset criteo:avazu.tsv \\
+        --method alpt --bits 8 ...
+
+(The output must be a materialized file: the Rust reader re-opens the
+path once per epoch plus once for the held-out split, so a one-shot
+pipe like `criteo:/dev/stdin` cannot feed it.)
+
+Mapping (documented so the feature space is reproducible):
+
+* label   <- `click` (``--label-default`` fills it for test files that
+  lack the column);
+* I1      <- hour-of-day parsed from `hour` (YYMMDDHH);
+* I2      <- day-of-week (0 = Monday) from the same timestamp;
+* I3..I13 <- empty (missing values are data, not errors);
+* C1..C21 <- every remaining Avazu column in file order (`C1`,
+  `banner_pos`, site/app/device columns, `C14`..`C21`) — they are all
+  categorical in Avazu, including the integer-looking ones;
+* C22..C26 <- empty.
+
+Only the Python standard library is used; `.gz` inputs stream through
+`gzip`. Malformed rows (wrong column count, unparsable hour) are counted
+and skipped, mirroring the Rust reader's policy.
+"""
+
+import argparse
+import csv
+import datetime
+import gzip
+import sys
+
+N_NUMERIC = 13
+N_CATEGORICAL = 26
+# Avazu columns, in file order, that become categorical features
+AVAZU_CATEGORICAL = [
+    "C1", "banner_pos", "site_id", "site_domain", "site_category",
+    "app_id", "app_domain", "app_category", "device_id", "device_ip",
+    "device_model", "device_type", "device_conn_type",
+    "C14", "C15", "C16", "C17", "C18", "C19", "C20", "C21",
+]
+AVAZU_HEADER_TRAIN = ["id", "click", "hour"] + AVAZU_CATEGORICAL
+AVAZU_HEADER_TEST = ["id", "hour"] + AVAZU_CATEGORICAL
+
+
+def open_input(path):
+    if path == "-":
+        return sys.stdin
+    if path.endswith(".gz"):
+        return gzip.open(path, "rt", newline="")
+    return open(path, newline="")
+
+
+def convert_row(row, cols, label_default):
+    """One Avazu CSV row -> one Criteo-format TSV line, or None."""
+    if len(row) != len(cols):
+        return None
+    rec = dict(zip(cols, row))
+    label = rec.get("click", label_default)
+    if label not in ("0", "1"):
+        return None
+    try:
+        ts = datetime.datetime.strptime(rec["hour"], "%y%m%d%H")
+    except ValueError:
+        return None
+    numeric = [str(ts.hour), str(ts.weekday())] + [""] * (N_NUMERIC - 2)
+    categorical = [rec[c] for c in AVAZU_CATEGORICAL]
+    categorical += [""] * (N_CATEGORICAL - len(categorical))
+    return "\t".join([label] + numeric + categorical)
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Stream an Avazu CSV into Criteo-format TSV "
+                    "(39 feature columns)."
+    )
+    ap.add_argument("input", help="Avazu CSV path, .gz ok, '-' for stdin")
+    ap.add_argument("--out", default="-",
+                    help="output TSV path (default: stdout)")
+    ap.add_argument("--label-default", default="0",
+                    help="label for files without a click column "
+                         "(e.g. the Kaggle test split); default 0")
+    args = ap.parse_args()
+
+    src = open_input(args.input)
+    dst = sys.stdout if args.out == "-" else open(args.out, "w")
+    reader = csv.reader(src)
+    cols = None
+    n_ok = n_bad = 0
+    for row in reader:
+        if cols is None:
+            # header row names the layout; headerless files must match
+            # the standard train layout
+            if row and row[0] == "id":
+                lowered = [c.strip() for c in row]
+                if lowered != AVAZU_HEADER_TRAIN \
+                        and lowered != AVAZU_HEADER_TEST:
+                    sys.exit(
+                        f"error: unrecognized Avazu header "
+                        f"({len(lowered)} columns): {lowered[:6]}..."
+                    )
+                cols = lowered
+                continue
+            cols = AVAZU_HEADER_TRAIN
+        line = convert_row(row, cols, args.label_default)
+        if line is None:
+            n_bad += 1
+            continue
+        print(line, file=dst)
+        n_ok += 1
+    if dst is not sys.stdout:
+        dst.close()
+    print(f"converted {n_ok} rows ({n_bad} malformed skipped)",
+          file=sys.stderr)
+    if n_ok == 0:
+        sys.exit("error: no convertible rows found")
+
+
+if __name__ == "__main__":
+    main()
