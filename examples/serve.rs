@@ -1,9 +1,11 @@
-//! Serving demo: load a *trained, quantized* embedding table + DCN params
-//! from a versioned checkpoint file and serve batched CTR requests from
-//! it — no training step, no retraining, no PJRT requirement. This is the
-//! deploy artifact the paper's training-stage compression pays for: the
-//! packed int table plus per-row step sizes, restored bit-identically
-//! from disk.
+//! Serving demo: restore a *trained, quantized* embedding table + DCN
+//! params from a versioned checkpoint into the shared
+//! [`alpt::serve::InferenceEngine`] and score CTR requests from it — no
+//! training step, no retraining, no PJRT requirement. This is the deploy
+//! artifact the paper's training-stage compression pays for: the packed
+//! int table plus per-row step sizes, restored bit-identically from
+//! disk and scored concurrently by many threads against one immutable
+//! engine.
 //!
 //! ```bash
 //! cargo run --release --example serve -- --ckpt examples/fixtures/tiny_lpt8.ckpt
@@ -19,13 +21,16 @@
 //! cargo run --release --example serve -- --ckpt trained.ckpt
 //! ```
 //!
-//! The load/validate/inference loop itself lives in
-//! `alpt::coordinator::serve` and is shared with the `alpt serve`
-//! subcommand, so the demo and the CLI cannot drift apart.
+//! The engine behind this demo is the same one `alpt serve` uses — both
+//! the offline report below and the online HTTP server
+//! (`alpt serve --listen 127.0.0.1:8080 --ckpt trained.ckpt`), so the
+//! entry points cannot drift apart.
+
+use std::sync::Arc;
 
 use alpt::cli::Args;
-use alpt::coordinator::serve_checkpoint;
-use alpt::util::stats::percentile;
+use alpt::coordinator::serve_with_engine;
+use alpt::serve::InferenceEngine;
 use anyhow::Result;
 
 const DEFAULT_CKPT: &str = "examples/fixtures/tiny_lpt8.ckpt";
@@ -35,53 +40,109 @@ fn main() -> Result<()> {
     if args.flag("help") {
         println!(
             "usage: cargo run --example serve -- [--ckpt FILE.ckpt] \
-             [--batches N]"
+             [--batches N] [--threads N]"
         );
         return Ok(());
     }
     let path = args.get_or("ckpt", DEFAULT_CKPT).to_string();
     let max_batches = args.get_parse("batches", usize::MAX)?;
-    println!("=== serve: checkpointed quantized table behind a batched \
-              request loop ===\n");
-
-    let report =
-        serve_checkpoint(std::path::Path::new(&path), max_batches)?;
-
+    let n_threads = args.get_parse("threads", 4usize)?.max(1);
     println!(
-        "loaded {} from {path} in {:.1} ms (+{:.0} ms regenerating the \
-         synthetic request stream)",
-        report.method, report.load_ms, report.data_ms
+        "=== serve: one shared InferenceEngine behind every scoring \
+         entry point ===\n"
+    );
+
+    let engine =
+        Arc::new(InferenceEngine::from_checkpoint(std::path::Path::new(
+            &path,
+        ))?);
+    println!(
+        "loaded {} from {path} in {:.1} ms",
+        engine.method_name(),
+        engine.load_ms()
     );
     println!(
         "  table: {} rows x {} dims = {} KB packed (+deltas) vs {} KB \
          fp32 ({:.1}x smaller)",
-        report.n_features,
-        report.dim,
-        report.infer_bytes / 1024,
-        report.fp_bytes / 1024,
-        report.fp_bytes as f64 / report.infer_bytes as f64
+        engine.n_features(),
+        engine.dim(),
+        engine.infer_bytes() / 1024,
+        engine.fp_bytes() / 1024,
+        engine.fp_bytes() as f64 / engine.infer_bytes() as f64
     );
 
+    // ---- the offline batch-eval report (shared with `alpt serve`) ----
+    let report = serve_with_engine(&engine, max_batches)?;
     println!(
-        "\nserved {} requests in {} batches (no training step):",
-        report.requests,
-        report.batches()
+        "\nserved {} requests in {} batches (no training step, \
+         +{:.0} ms regenerating the request stream):",
+        report.requests, report.batches(), report.data_ms
     );
     println!(
         "  latency p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms per batch \
          of {}",
-        percentile(&report.latencies_ms, 50.0),
-        percentile(&report.latencies_ms, 95.0),
-        percentile(&report.latencies_ms, 99.0),
+        report.p50_ms(),
+        report.p95_ms(),
+        report.p99_ms(),
         report.batch_size
     );
     println!("  throughput {:.0} req/s", report.requests_per_sec());
+    println!("  auc {:.4}  logloss {:.5}", report.auc, report.logloss);
+    for w in &report.warnings {
+        eprintln!("  warning: {w}");
+    }
+
+    // ---- concurrent clients: N threads, one immutable engine ----
+    // every thread scores the same record set through its own scratch;
+    // the engine takes &self, so no lock anywhere — and the logits are
+    // bit-identical to the serial pass
+    let fields = engine.fields();
+    let records: Vec<Vec<u32>> = (0..64u32)
+        .map(|r| (0..fields as u32).map(|f| (r + f) % 8).collect())
+        .collect();
+    let serial: Vec<f32> = records
+        .iter()
+        .map(|rec| engine.score_records(rec).map(|l| l[0]))
+        .collect::<Result<_>>()?;
+    let t = std::time::Instant::now();
+    let identical = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                let records = &records;
+                let serial = &serial;
+                s.spawn(move || {
+                    // per-thread scratch lives behind score_records'
+                    // thread-local buffer — no shared mutable state
+                    records.iter().zip(serial).all(|(rec, &want)| {
+                        engine
+                            .score_records(rec)
+                            .map(|l| l[0].to_bits() == want.to_bits())
+                            .unwrap_or(false)
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().all(|h| h.join().unwrap())
+    });
+    let dt = t.elapsed().as_secs_f64();
     println!(
-        "  auc {:.4}  logloss {:.5}",
-        report.auc, report.logloss
+        "\nconcurrent clients: {n_threads} threads x {} records through \
+         one shared engine in {:.1} ms ({:.0} req/s aggregate)",
+        records.len(),
+        dt * 1e3,
+        (n_threads * records.len()) as f64 / dt
     );
     println!(
-        "\n(warm-start training from the same file: \
+        "  bit-identical to the serial pass: {}",
+        if identical { "yes" } else { "NO (bug!)" }
+    );
+    assert!(identical, "threaded scoring diverged from serial");
+
+    println!(
+        "\n(online scoring server over the same engine: \
+         `cargo run --release -- serve --ckpt {path} --listen \
+         127.0.0.1:8080`,\n warm-start training: \
          `cargo run --release -- train --resume {path}`)"
     );
     Ok(())

@@ -339,6 +339,79 @@ fn main() {
         );
     }
 
+    // ------------------------------- shared inference engine throughput
+    section(&format!(
+        "InferenceEngine::score (tiny LPT-8 ckpt, B=64): t1 vs \
+         t{n_threads} concurrent clients (req/s)"
+    ));
+    {
+        use alpt::serve::InferenceEngine;
+        use std::sync::Arc;
+
+        let exp = Experiment {
+            method: Method::Lpt(RoundingMode::Sr),
+            model: "tiny".into(),
+            dataset: "tiny".into(),
+            n_samples: 4_000,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let spec = SyntheticSpec::tiny(exp.seed);
+        let ds = generate(&spec, exp.n_samples);
+        let tr = Trainer::new(exp, ds.schema.n_features())
+            .expect("bench trainer");
+        let ckpt = std::env::temp_dir().join("alpt_bench_engine.ckpt");
+        tr.save_checkpoint(&ckpt).expect("bench checkpoint");
+        let engine = Arc::new(
+            InferenceEngine::from_checkpoint(&ckpt).expect("bench engine"),
+        );
+        std::fs::remove_file(&ckpt).ok();
+        let batches: Vec<_> =
+            Batcher::new(&ds, engine.batch_size(), Some(1), true)
+                .take(8)
+                .collect();
+        let bsz = engine.batch_size() as f64;
+        let serial: Vec<Vec<f32>> =
+            batches.iter().map(|b| engine.score(b)).collect();
+        let mut i = 0usize;
+        b.bench_units("engine score t1", Some(bsz), || {
+            let batch = &batches[i % batches.len()];
+            i += 1;
+            std::hint::black_box(engine.score(batch));
+        });
+        // one iteration = n_threads concurrent clients, one batch each,
+        // all through the one shared engine (&self — no locks)
+        b.bench_units(
+            &format!("engine score t{n_threads}"),
+            Some(bsz * n_threads as f64),
+            || {
+                std::thread::scope(|s| {
+                    for t in 0..n_threads {
+                        let engine = Arc::clone(&engine);
+                        let batch = &batches[t % batches.len()];
+                        s.spawn(move || {
+                            std::hint::black_box(engine.score(batch));
+                        });
+                    }
+                });
+            },
+        );
+        // concurrent scoring must stay bit-identical to the serial pass
+        let threaded: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = batches
+                .iter()
+                .map(|batch| {
+                    let engine = Arc::clone(&engine);
+                    s.spawn(move || engine.score(batch))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(serial, threaded,
+                   "threaded engine scoring must be bit-identical");
+    }
+
     // ------------------------------------------------------------- dedup
     section("batch dedup (samples/s), avazu-syn B=256");
     let spec = SyntheticSpec::avazu(3);

@@ -16,7 +16,10 @@ pub mod serve;
 pub mod sharding;
 pub mod trainer;
 
-pub use serve::{serve_checkpoint, ServeReport};
+pub use serve::{
+    sample_requests, serve_checkpoint, serve_with_engine, SampleRequest,
+    ServeReport,
+};
 pub use sharding::{CommStats, ShardedStore};
 pub use trainer::{
     builtin_entry, EarlyStop, EpochReport, EvalReport, TrainResult, Trainer,

@@ -1,25 +1,25 @@
-//! Checkpoint-backed serving: one shared load → validate → batched
-//! inference loop used by both the `alpt serve` subcommand and
-//! `examples/serve.rs`, so the two entry points cannot drift apart.
+//! Checkpoint-backed offline serving: load → validate → batched
+//! inference over the request stream a checkpoint's experiment echo
+//! describes. Used by the `alpt serve` subcommand (without `--listen`)
+//! and `examples/serve.rs`.
 //!
-//! The loop is strictly inference-only: gather de-quantized rows from
-//! the restored store, run the Rust DCN forward, accumulate metrics and
-//! per-batch latencies. No training step, no PJRT requirement.
+//! The inference body itself lives in the shared
+//! [`crate::serve::InferenceEngine`] — the same `score` every online
+//! entry point uses (HTTP server, trainer eval) — so the offline loop
+//! here is only stream assembly plus metric accounting. No training
+//! step, no PJRT requirement.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use super::trainer::builtin_entry;
-use crate::checkpoint::{dense_params, load_store, Checkpoint};
 use crate::config::Experiment;
 use crate::data::batcher::{Batch, Batcher, StreamBatcher, Tail};
-use crate::data::registry::{self, DataSource, DatasetSpec};
+use crate::data::registry::{self, DataSource, DatasetSpec, RecordStream};
 use crate::data::synthetic::{generate, SyntheticSpec};
-use crate::embedding::fp_bytes;
-use crate::metrics::{EvalAccumulator, StreamingEval};
-use crate::nn::Dcn;
+use crate::metrics::{EvalAccumulator, LatencyHistogram, StreamingEval};
+use crate::serve::InferenceEngine;
 
 /// Everything a caller needs to report on a serving run.
 pub struct ServeReport {
@@ -34,12 +34,14 @@ pub struct ServeReport {
     pub requests: usize,
     pub auc: f64,
     pub logloss: f64,
-    /// Per-batch latencies in milliseconds (never empty).
-    pub latencies_ms: Vec<f64>,
+    /// Per-batch serving latencies (p50/p95/p99 via
+    /// [`LatencyHistogram::percentile_ms`]; never empty).
+    pub latency: LatencyHistogram,
     /// Checkpoint load + validation time in milliseconds.
     pub load_ms: f64,
-    /// One-time synthetic request-stream regeneration in milliseconds
-    /// (not part of per-request serving cost).
+    /// One-time request-stream setup time in milliseconds (dataset
+    /// regeneration or source open + split), measured identically for
+    /// both dataset families and excluded from per-request serving cost.
     pub data_ms: f64,
     /// Data-quality warnings from the request source (e.g. malformed
     /// lines skipped in a streamed file); empty when clean. Callers
@@ -52,70 +54,69 @@ pub struct ServeReport {
 
 impl ServeReport {
     pub fn batches(&self) -> usize {
-        self.latencies_ms.len()
+        self.latency.count() as usize
     }
 
     pub fn total_ms(&self) -> f64 {
-        self.latencies_ms.iter().sum()
+        self.latency.total_ms()
     }
 
     pub fn requests_per_sec(&self) -> f64 {
         self.requests as f64 / (self.total_ms() / 1e3).max(1e-9)
     }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.percentile_ms(50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latency.percentile_ms(95.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.percentile_ms(99.0)
+    }
+}
+
+/// One held-out record with the logit the offline path scored it to —
+/// the ground truth the CI online-serve leg replays over HTTP.
+pub struct SampleRequest {
+    pub features: Vec<u32>,
+    pub logit: f32,
 }
 
 /// Load `path`, rebuild the request stream its experiment echo
 /// describes, and serve up to `max_batches` test batches through the
-/// Rust nn path. Errors (rather than panicking) on geometry mismatches
-/// and on runs that produce zero batches.
+/// shared [`InferenceEngine`]. Errors (rather than panicking) on
+/// geometry mismatches and on runs that produce zero batches.
 pub fn serve_checkpoint(
     path: &Path,
     max_batches: usize,
 ) -> Result<ServeReport> {
-    let t0 = Instant::now();
-    let ckpt = Checkpoint::read(path)?;
-    let (store, exp) = load_store(&ckpt)?;
-    let dense = dense_params(&ckpt)?;
-    let entry = builtin_entry(&exp.model)?;
-    ensure!(
-        dense.len() == entry.n_params,
-        "checkpoint holds {} dense params, model {:?} expects {}",
-        dense.len(),
-        exp.model,
-        entry.n_params
-    );
-    ensure!(
-        store.dim() == entry.emb_dim,
-        "checkpoint embedding dim {} does not match model {:?} (dim {})",
-        store.dim(),
-        exp.model,
-        entry.emb_dim
-    );
-    let dcn = Dcn::new(entry.dcn_config());
-    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let engine = InferenceEngine::from_checkpoint(path)?;
+    serve_with_engine(&engine, max_batches)
+}
 
-    // rebuild the request stream the training run's experiment echo
-    // describes: synthetic specs regenerate in memory and serve the test
-    // split (exact AUC over the full score set); streaming specs
-    // (criteo:<path> / synthetic:*) serve the held-out split straight
-    // off the source with the fixed-memory accumulator, so serving a
-    // full Criteo dump never holds the split in memory. The one-time
-    // setup is reported separately as `data_ms`.
-    let (umax, d, b) = (entry.umax, entry.emb_dim, entry.batch);
-    let mut emb = vec![0.0f32; umax * d];
-    let mut latencies = Vec::new();
-    // one shared inference body, so the two dataset families cannot
-    // drift apart (same pattern as Trainer::batch_logits)
-    let mut serve_batch = |batch: &Batch| -> Vec<f32> {
+/// The offline serving loop over an already-restored engine.
+pub fn serve_with_engine(
+    engine: &InferenceEngine,
+    max_batches: usize,
+) -> Result<ServeReport> {
+    let exp = engine.exp().clone();
+    let b = engine.batch_size();
+    let latency = LatencyHistogram::new();
+    // the one shared inference body: every batch of either dataset
+    // family goes through InferenceEngine::score
+    let serve_batch = |batch: &Batch| -> Vec<f32> {
         let t = Instant::now();
-        let n_u = batch.unique.len();
-        emb[n_u * d..].fill(0.0);
-        store.gather(&batch.unique, &mut emb[..n_u * d]);
-        let logits = dcn.infer(&emb, &batch.idx, &dense);
-        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        let logits = engine.score(batch);
+        latency.record_ms(t.elapsed().as_secs_f64() * 1e3);
         logits
     };
+    // request-stream setup is timed from here to just before the first
+    // batch is assembled — the same boundary for both families
     let t1 = Instant::now();
+    let data_ms_of = |t: Instant| t.elapsed().as_secs_f64() * 1e3;
     let (auc, logloss, requests, data_ms, warnings) =
         match DatasetSpec::parse(&exp.dataset) {
             DatasetSpec::Synthetic(name) => {
@@ -128,15 +129,15 @@ pub fn serve_checkpoint(
                 // same rule as registry::ensure_compat: the table may be
                 // larger than the schema (warm-start), never smaller
                 ensure!(
-                    ds.schema.n_features() <= store.n_features(),
+                    ds.schema.n_features() <= engine.n_features(),
                     "dataset {} needs {} feature rows, the checkpointed \
                      table holds {}",
                     spec.name,
                     ds.schema.n_features(),
-                    store.n_features()
+                    engine.n_features()
                 );
                 let (_, _, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
-                let data_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let data_ms = data_ms_of(t1);
                 let mut acc = EvalAccumulator::new();
                 for batch in
                     Batcher::new(&test, b, None, false).take(max_batches)
@@ -151,14 +152,18 @@ pub fn serve_checkpoint(
                 registry::ensure_compat(
                     source.as_ref(),
                     &exp.model,
-                    entry.fields,
-                    store.n_features(),
+                    engine.fields(),
+                    engine.n_features(),
                 )?;
                 let stream = registry::val_stream(source.as_ref(), &exp)?;
-                let data_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let data_ms = data_ms_of(t1);
                 let mut acc = StreamingEval::new();
-                let batches =
-                    StreamBatcher::new(stream, entry.fields, b, Tail::Pad);
+                let batches = StreamBatcher::new(
+                    stream,
+                    engine.fields(),
+                    b,
+                    Tail::Pad,
+                );
                 for item in batches.take(max_batches) {
                     let batch = item?;
                     let logits = serve_batch(&batch);
@@ -173,26 +178,86 @@ pub fn serve_checkpoint(
                 )
             }
         };
-    if latencies.is_empty() {
+    if latency.count() == 0 {
         bail!("no test batches to serve (max_batches or split too small)");
     }
 
     Ok(ServeReport {
-        method: store.method_name(),
-        n_features: store.n_features(),
-        dim: store.dim(),
-        infer_bytes: store.infer_bytes(),
-        fp_bytes: fp_bytes(store.n_features(), store.dim()),
+        method: engine.method_name(),
+        n_features: engine.n_features(),
+        dim: engine.dim(),
+        infer_bytes: engine.infer_bytes(),
+        fp_bytes: engine.fp_bytes(),
         batch_size: b,
         requests,
         auc,
         logloss,
-        latencies_ms: latencies,
-        load_ms,
+        latency,
+        load_ms: engine.load_ms(),
         data_ms,
         warnings,
         exp,
     })
+}
+
+/// Score the first `n` held-out records of `path`'s request stream
+/// individually — features plus the offline logit. `alpt serve
+/// --dump-requests N` prints these as JSON lines; the CI online-serve
+/// leg replays them over HTTP and asserts the scores match (per-record
+/// logits are independent of batch composition, so the offline and
+/// micro-batched paths agree bit for bit).
+pub fn sample_requests(
+    path: &Path,
+    n: usize,
+) -> Result<Vec<SampleRequest>> {
+    ensure!(n > 0, "need at least one request to sample");
+    let engine = InferenceEngine::from_checkpoint(path)?;
+    let exp = engine.exp().clone();
+    let mut out = Vec::new();
+    let mut push = |features: &[u32]| -> Result<()> {
+        let logit = engine.score_records(features)?[0];
+        out.push(SampleRequest { features: features.to_vec(), logit });
+        Ok(())
+    };
+    match DatasetSpec::parse(&exp.dataset) {
+        DatasetSpec::Synthetic(name) => {
+            let spec = SyntheticSpec::for_dataset(
+                &name,
+                exp.seed,
+                exp.vocab_scale,
+            )?;
+            let ds = generate(&spec, exp.n_samples);
+            let (_, _, test) = ds.split((0.8, 0.1, 0.1), exp.seed);
+            for i in 0..n.min(test.n_samples()) {
+                push(test.sample(i))?;
+            }
+        }
+        DatasetSpec::SyntheticStream(_) | DatasetSpec::CriteoFile(_) => {
+            let source = registry::open_source(&exp)?;
+            registry::ensure_compat(
+                source.as_ref(),
+                &exp.model,
+                engine.fields(),
+                engine.n_features(),
+            )?;
+            let mut stream = registry::val_stream(source.as_ref(), &exp)?;
+            let mut buf = vec![0u32; engine.fields()];
+            // count separately: `push` holds the mutable borrow of `out`,
+            // so the loop condition must not read out.len()
+            let mut taken = 0usize;
+            while taken < n {
+                match stream.next_record(&mut buf)? {
+                    Some(_) => {
+                        push(&buf)?;
+                        taken += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+    ensure!(!out.is_empty(), "request stream held no records to sample");
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -227,6 +292,23 @@ mod tests {
         path
     }
 
+    fn streaming_trained_ckpt(name: &str) -> std::path::PathBuf {
+        let exp = Experiment {
+            method: Method::Lpt(crate::config::RoundingMode::Sr),
+            model: "tiny".into(),
+            dataset: "synthetic:tiny".into(),
+            n_samples: 2000,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = registry::schema_for(&exp).unwrap().n_features();
+        let tr = Trainer::new(exp, n).unwrap();
+        let path = tmp(name);
+        tr.save_checkpoint(&path).unwrap();
+        path
+    }
+
     #[test]
     fn serves_from_a_trainer_checkpoint() {
         let path = tiny_trained_ckpt("serve_ok.ckpt");
@@ -243,6 +325,11 @@ mod tests {
         assert!(report.auc.is_finite() && report.logloss.is_finite());
         assert!(report.infer_bytes < report.fp_bytes);
         assert!(report.requests_per_sec() > 0.0);
+        // percentile reporting comes straight from the histogram
+        assert!(report.p50_ms() > 0.0);
+        assert!(report.p50_ms() <= report.p95_ms() * 1.0001);
+        assert!(report.p95_ms() <= report.p99_ms() * 1.0001);
+        assert!(report.total_ms() > 0.0);
         std::fs::remove_file(&path).ok();
     }
 
@@ -252,6 +339,59 @@ mod tests {
         let err = format!("{:#}", serve_checkpoint(&path, 0).unwrap_err());
         assert!(err.contains("no test batches"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn data_ms_accounting_is_symmetric_across_families() {
+        // both dataset families time request-stream setup with the same
+        // boundary (engine load excluded, first batch assembly excluded)
+        // and report it once, not per batch
+        let syn = tiny_trained_ckpt("serve_data_syn.ckpt");
+        let stream = streaming_trained_ckpt("serve_data_stream.ckpt");
+        for path in [&syn, &stream] {
+            let one = serve_checkpoint(path, 1).unwrap();
+            let four = serve_checkpoint(path, 4).unwrap();
+            for r in [&one, &four] {
+                assert!(
+                    r.data_ms.is_finite() && r.data_ms >= 0.0,
+                    "data_ms={}",
+                    r.data_ms
+                );
+                assert!(r.load_ms > 0.0, "load_ms={}", r.load_ms);
+            }
+            // serving more batches grows served latency samples, not the
+            // one-time data setup bucket
+            assert_eq!(one.batches(), 1);
+            assert_eq!(four.batches(), 4);
+            // deterministic request stream: same batches → same metrics
+            let again = serve_checkpoint(path, 4).unwrap();
+            assert_eq!(four.auc.to_bits(), again.auc.to_bits());
+            assert_eq!(four.requests, again.requests);
+        }
+        std::fs::remove_file(&syn).ok();
+        std::fs::remove_file(&stream).ok();
+    }
+
+    #[test]
+    fn sample_requests_match_serving_path() {
+        for (name, streaming) in
+            [("dump_syn.ckpt", false), ("dump_stream.ckpt", true)]
+        {
+            let path = if streaming {
+                streaming_trained_ckpt(name)
+            } else {
+                tiny_trained_ckpt(name)
+            };
+            let reqs = sample_requests(&path, 5).unwrap();
+            assert_eq!(reqs.len(), 5);
+            let engine = InferenceEngine::from_checkpoint(&path).unwrap();
+            for r in &reqs {
+                assert_eq!(r.features.len(), engine.fields());
+                let z = engine.score_records(&r.features).unwrap()[0];
+                assert_eq!(z.to_bits(), r.logit.to_bits());
+            }
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

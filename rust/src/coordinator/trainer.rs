@@ -427,8 +427,9 @@ impl Trainer {
         Ok(StepOutput { loss, n_unique })
     }
 
-    /// Inference logits for one batch (runtime artifact or the Rust nn
-    /// path). Callers must have set the eval mask; shared by the
+    /// Inference logits for one batch (runtime artifact or the shared
+    /// [`crate::serve::score_batch`] body the online inference subsystem
+    /// uses). Callers must have set the eval mask; shared by the
     /// in-memory and streaming evaluation loops.
     fn batch_logits(&mut self, batch: &Batch) -> Result<Vec<f32>> {
         let (umax, d, b, fields) = (
@@ -439,6 +440,19 @@ impl Trainer {
         );
         let n_unique = batch.unique.len();
         ensure!(n_unique <= umax, "batch uniques exceed umax");
+        if self.runtime.is_none() {
+            // the PJRT-free path is exactly the serving path: the one
+            // shared gather → DCN-forward body, evaluated over the
+            // trainer's scratch buffer
+            return Ok(crate::serve::score_batch(
+                self.store.as_ref(),
+                &self.dcn,
+                &self.dense,
+                umax,
+                batch,
+                &mut self.emb_buf,
+            ));
+        }
         self.emb_buf[n_unique * d..umax * d].fill(0.0);
         self.store
             .gather(&batch.unique, &mut self.emb_buf[..n_unique * d]);
@@ -451,36 +465,32 @@ impl Trainer {
             self.codes_buf[n_unique * d..umax * d].fill(0);
             self.delta_buf[n_unique..umax].fill(1.0);
         }
-        if let Some(rt) = self.runtime.as_mut() {
-            let idx_lit = lit_i32(&batch.idx, &[b as i64, fields as i64])?;
-            let params_lit =
-                lit_f32(&self.dense, &[self.dense.len() as i64])?;
-            let outs = if quantized {
-                rt.exec(
-                    &self.exp.model,
-                    "eval_lpt",
-                    &[
-                        lit_i32(&self.codes_buf, &[umax as i64, d as i64])?,
-                        lit_f32(&self.delta_buf, &[umax as i64])?,
-                        idx_lit,
-                        params_lit,
-                    ],
-                )?
-            } else {
-                rt.exec(
-                    &self.exp.model,
-                    "eval_fp",
-                    &[
-                        lit_f32(&self.emb_buf, &[umax as i64, d as i64])?,
-                        idx_lit,
-                        params_lit,
-                    ],
-                )?
-            };
-            to_f32(&outs[0])
+        let rt = self.runtime.as_mut().expect("checked above");
+        let idx_lit = lit_i32(&batch.idx, &[b as i64, fields as i64])?;
+        let params_lit = lit_f32(&self.dense, &[self.dense.len() as i64])?;
+        let outs = if quantized {
+            rt.exec(
+                &self.exp.model,
+                "eval_lpt",
+                &[
+                    lit_i32(&self.codes_buf, &[umax as i64, d as i64])?,
+                    lit_f32(&self.delta_buf, &[umax as i64])?,
+                    idx_lit,
+                    params_lit,
+                ],
+            )?
         } else {
-            Ok(self.dcn.infer(&self.emb_buf, &batch.idx, &self.dense))
-        }
+            rt.exec(
+                &self.exp.model,
+                "eval_fp",
+                &[
+                    lit_f32(&self.emb_buf, &[umax as i64, d as i64])?,
+                    idx_lit,
+                    params_lit,
+                ],
+            )?
+        };
+        to_f32(&outs[0])
     }
 
     /// Evaluate on a dataset (deterministic order, padded final batch).

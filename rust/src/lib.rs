@@ -16,6 +16,8 @@
 //!   fake-quant / DCN cross layer (`python/compile/kernels/`).
 //!
 //! Entry points: [`coordinator::Trainer`] for training,
+//! [`serve::InferenceEngine`] for online scoring (and [`serve::http`]
+//! for the HTTP server behind `alpt serve --listen`),
 //! [`runtime::Runtime`] for artifact execution, [`embedding`] for the
 //! paper's table variants (FP / LPT / ALPT / hashing / pruning / QAT).
 
@@ -32,6 +34,7 @@ pub mod nn;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate version (mirrors Cargo.toml).

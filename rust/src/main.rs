@@ -30,6 +30,13 @@ USAGE:
               [--prefetch-batches N] [--save-every STEPS]
               [--save FILE.ckpt] [--resume FILE.ckpt]
   alpt serve  --ckpt FILE.ckpt [--batches N]     (no training: load + serve)
+              [--listen HOST:PORT]  (online HTTP scoring server: POST /score,
+               GET /healthz, GET /stats, POST /reload, POST /shutdown)
+              [--workers N] [--wait-ms MS] [--queue-cap N]
+              [--watch] [--watch-ms MS]  (poll the ckpt file and hot-swap
+               on change; --watch-ms sets the poll/debounce period, 1000)
+              [--dump-requests N]   (print held-out records + offline logits
+               as JSON lines — the HTTP protocol's ground truth)
   alpt gen    --dataset NAME --samples N --out FILE.ds
   alpt convex                                    (Figure-3 experiment)
   alpt info                                      (manifest + environment)
@@ -45,7 +52,8 @@ group of equal-width fields into its own sub-table — see README.md
 ";
 
 fn main() -> Result<()> {
-    let args = Args::from_env(true, &["no-runtime", "quiet", "help"])?;
+    let args =
+        Args::from_env(true, &["no-runtime", "quiet", "help", "watch"])?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -244,17 +252,46 @@ fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Load a checkpoint and serve batched CTR requests from it through the
-/// shared inference loop — no training step anywhere.
+/// Load a checkpoint and serve CTR requests from it through the shared
+/// `InferenceEngine` — no training step anywhere. Three modes: the
+/// offline batch-eval report (default), `--dump-requests N` (JSON lines
+/// of held-out records + their offline logits), and `--listen HOST:PORT`
+/// (the online HTTP scoring server with micro-batching and `/reload`
+/// hot-swap).
 fn serve(args: &Args) -> Result<()> {
-    use alpt::coordinator::serve_checkpoint;
-    use alpt::util::stats::percentile;
+    use alpt::coordinator::{sample_requests, serve_checkpoint};
 
     let path = args
         .get("ckpt")
         .ok_or_else(|| anyhow::anyhow!("serve requires --ckpt FILE.ckpt"))?;
+    let ckpt = std::path::Path::new(path);
+
+    if let Some(n) = args.get("dump-requests") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --dump-requests {n:?}"))?;
+        for r in sample_requests(ckpt, n)? {
+            let features = alpt::util::json::Json::Array(
+                r.features
+                    .iter()
+                    .map(|&id| alpt::util::json::Json::num(id as f64))
+                    .collect(),
+            );
+            let line = alpt::util::json::Json::obj(vec![
+                ("features", features),
+                ("logit", alpt::util::json::Json::num(r.logit as f64)),
+            ]);
+            println!("{}", line.to_string());
+        }
+        return Ok(());
+    }
+
+    if let Some(listen) = args.get("listen") {
+        return serve_http(args, listen, ckpt);
+    }
+
     let max_batches = args.get_parse("batches", usize::MAX)?;
-    let report = serve_checkpoint(std::path::Path::new(path), max_batches)?;
+    let report = serve_checkpoint(ckpt, max_batches)?;
     println!(
         "loaded {} checkpoint: {} rows x {} dims, {} KB table \
          ({:.1}x smaller than fp32)",
@@ -266,18 +303,56 @@ fn serve(args: &Args) -> Result<()> {
     );
     println!(
         "served {} requests in {} batches: auc {:.4}, p50 {:.2} ms, \
-         p99 {:.2} ms, {:.0} req/s",
+         p95 {:.2} ms, p99 {:.2} ms, {:.0} req/s",
         report.requests,
         report.batches(),
         report.auc,
-        percentile(&report.latencies_ms, 50.0),
-        percentile(&report.latencies_ms, 99.0),
+        report.p50_ms(),
+        report.p95_ms(),
+        report.p99_ms(),
         report.requests_per_sec()
     );
     for w in &report.warnings {
         eprintln!("warning: {w}");
     }
     Ok(())
+}
+
+/// `alpt serve --listen HOST:PORT`: block on the online scoring server
+/// until `POST /shutdown`.
+fn serve_http(
+    args: &Args,
+    listen: &str,
+    ckpt: &std::path::Path,
+) -> Result<()> {
+    use alpt::serve::{Server, ServerConfig};
+
+    let mut cfg = ServerConfig::new(listen, ckpt);
+    cfg.workers = args.get_parse("workers", cfg.workers)?;
+    cfg.max_wait = std::time::Duration::from_millis(
+        args.get_parse("wait-ms", cfg.max_wait.as_millis() as u64)?,
+    );
+    cfg.queue_cap = args.get_parse("queue-cap", cfg.queue_cap)?;
+    if args.flag("watch") {
+        cfg.watch = Some(std::time::Duration::from_millis(
+            args.get_parse("watch-ms", 1000u64)?,
+        ));
+    }
+    let server = Server::bind(cfg)?;
+    let engine = server.engine_handle().current();
+    println!(
+        "serving {} ({} rows x {} dims, batch {}) on http://{}",
+        engine.method_name(),
+        engine.n_features(),
+        engine.dim(),
+        engine.batch_size(),
+        server.local_addr()?
+    );
+    println!(
+        "endpoints: POST /score  GET /healthz  GET /stats  POST /reload  \
+         POST /shutdown"
+    );
+    server.run()
 }
 
 fn gen(args: &Args) -> Result<()> {

@@ -222,6 +222,114 @@ impl StreamingEval {
     }
 }
 
+/// Fixed-memory, thread-safe latency histogram: geometric buckets from
+/// 1 µs up (ratio [`LatencyHistogram::GROWTH`]), `AtomicU64` counters so
+/// many server workers can [`LatencyHistogram::record_ms`] concurrently
+/// with no lock on the request path. Percentiles interpolate inside the
+/// matched bucket, so the relative error is bounded by the bucket ratio
+/// (~10%) — plenty for p50/p95/p99 reporting, while state stays at a few
+/// KiB no matter how many requests are recorded.
+pub struct LatencyHistogram {
+    buckets: Vec<std::sync::atomic::AtomicU64>,
+    count: std::sync::atomic::AtomicU64,
+    sum_us: std::sync::atomic::AtomicU64,
+    max_us: std::sync::atomic::AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Geometric bucket growth factor.
+    pub const GROWTH: f64 = 1.1;
+    /// 1.1^360 µs ≈ 8e8 s — covers any latency this crate can observe.
+    pub const BUCKETS: usize = 360;
+
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(Self::BUCKETS);
+        buckets
+            .resize_with(Self::BUCKETS, || std::sync::atomic::AtomicU64::new(0));
+        Self {
+            buckets,
+            count: std::sync::atomic::AtomicU64::new(0),
+            sum_us: std::sync::atomic::AtomicU64::new(0),
+            max_us: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // bucket i covers [GROWTH^i, GROWTH^{i+1}) µs; everything below
+        // 1 µs lands in bucket 0
+        if us <= 1 {
+            return 0;
+        }
+        (((us as f64).ln() / Self::GROWTH.ln()) as usize)
+            .min(Self::BUCKETS - 1)
+    }
+
+    /// Record one observation, in milliseconds (sub-µs clamps to 1 µs).
+    pub fn record_ms(&self, ms: f64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let us = (ms * 1e3).max(1.0).round() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+        self.max_us.fetch_max(us, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded latencies in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.sum_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_ms() / n as f64
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Approximate percentile in milliseconds, `q` in [0, 100]
+    /// (0.0 when nothing was recorded). Linear interpolation inside the
+    /// matched geometric bucket.
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 100.0) / 100.0 * n as f64).max(1.0);
+        let mut seen = 0.0f64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Relaxed) as f64;
+            if c == 0.0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let lo = Self::GROWTH.powi(i as i32);
+                let hi = lo * Self::GROWTH;
+                let frac = ((rank - seen) / c).clamp(0.0, 1.0);
+                return (lo + (hi - lo) * frac) / 1e3;
+            }
+            seen += c;
+        }
+        self.max_ms()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,6 +492,57 @@ mod tests {
         let mut masked = StreamingEval::new();
         masked.push(&logits, &labels, 4);
         assert_eq!(masked.len(), 4);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_track_exact() {
+        let h = LatencyHistogram::new();
+        // 1..=1000 ms uniformly: p50 ≈ 500, p95 ≈ 950, p99 ≈ 990
+        for i in 1..=1000 {
+            h.record_ms(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.total_ms() - 500_500.0).abs() < 1.0);
+        assert!((h.mean_ms() - 500.5).abs() < 0.1);
+        for (q, want) in [(50.0, 500.0), (95.0, 950.0), (99.0, 990.0)] {
+            let got = h.percentile_ms(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.12, "p{q}: got {got}, want ~{want}");
+        }
+        assert_eq!(h.max_ms(), 1000.0);
+        assert!(h.percentile_ms(100.0) <= h.max_ms() * 1.11);
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_tiny_values() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ms(50.0), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        // sub-µs values clamp to the 1 µs floor instead of panicking
+        h.record_ms(0.0);
+        h.record_ms(1e-9);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_ms(50.0) > 0.0);
+        assert!(h.percentile_ms(50.0) < 0.01);
+    }
+
+    #[test]
+    fn latency_histogram_concurrent_records() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..500 {
+                        h.record_ms((t * 500 + i) as f64 * 0.01 + 0.001);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 2000);
+        assert!(h.percentile_ms(50.0) > 0.0);
+        assert!(h.total_ms() > 0.0);
     }
 
     #[test]

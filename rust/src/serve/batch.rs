@@ -1,0 +1,520 @@
+//! Bounded micro-batching queue for the online scoring path.
+//!
+//! Many concurrent connections each carry one (or a few) records; the
+//! engine's forward pass is shape-static at `batch_size` records — so
+//! scoring each request alone wastes almost the whole batch. The
+//! [`MicroBatcher`] coalesces: requests enqueue their records and block
+//! on a per-request reply channel; a scorer thread drains up to
+//! `max_batch` records per engine call, waiting at most `max_wait` after
+//! the first record arrives so a lone request still sees bounded
+//! latency. The queue is bounded (`queue_cap` records): a full queue
+//! rejects at submit time (the HTTP layer maps that to 503) instead of
+//! buffering unboundedly.
+//!
+//! Per-record logits are independent of batch composition (the DCN
+//! forward is row-wise), so micro-batched scores are bit-identical to
+//! scoring each record alone — tested below and in
+//! `rust/tests/serve_online.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::data::batcher::build_batch;
+use crate::serve::engine::{InferenceEngine, ScoreScratch};
+
+/// Why a submit was rejected — typed so the HTTP layer can map
+/// overload/shutdown to 503 without string-matching error text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at capacity (holds the queued-record count).
+    Full(usize),
+    /// The batcher is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(n) => {
+                write!(f, "scoring queue full ({n} records queued)")
+            }
+            SubmitError::Closed => write!(f, "scoring queue is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One queued record: its feature ids, where to send the logit, and the
+/// engine that accepted it. Snapshotting the engine at submit time is
+/// what makes the hot-swap contract real: a record validated against
+/// model A is scored by model A even if `/reload` publishes model B
+/// while it sits in the queue.
+struct Pending {
+    features: Vec<u32>,
+    reply: mpsc::Sender<Result<f32, String>>,
+    engine: Arc<InferenceEngine>,
+}
+
+struct Queue {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Shared state between submitters and scorer threads.
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signalled on submit and on close.
+    arrived: Condvar,
+    cap: usize,
+    /// Batches scored / records scored (for `/stats`).
+    batches: AtomicU64,
+    records: AtomicU64,
+}
+
+/// Handle for submitting records; clone freely across worker threads.
+#[derive(Clone)]
+pub struct MicroBatcher {
+    shared: Arc<Shared>,
+    max_wait: Duration,
+}
+
+/// A scorer-side handle: drains the queue and runs the engine. One per
+/// scorer thread (usually one total — the engine call itself can shard
+/// across cores).
+pub struct Scorer {
+    shared: Arc<Shared>,
+    max_wait: Duration,
+}
+
+impl MicroBatcher {
+    /// Build the submit/score pair. `queue_cap` bounds queued records;
+    /// `max_wait` is the coalescing budget after the first record of a
+    /// batch arrives.
+    pub fn new(
+        queue_cap: usize,
+        max_wait: Duration,
+    ) -> (MicroBatcher, Scorer) {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+            cap: queue_cap.max(1),
+            batches: AtomicU64::new(0),
+            records: AtomicU64::new(0),
+        });
+        (
+            MicroBatcher { shared: Arc::clone(&shared), max_wait },
+            Scorer { shared, max_wait },
+        )
+    }
+
+    /// Enqueue one record against `engine`; returns the channel its
+    /// logit (or a scoring error) will arrive on. Errors immediately
+    /// when the queue is full (backpressure) or the batcher is shutting
+    /// down.
+    pub fn submit(
+        &self,
+        engine: Arc<InferenceEngine>,
+        features: Vec<u32>,
+    ) -> Result<mpsc::Receiver<Result<f32, String>>, SubmitError> {
+        Ok(self
+            .submit_many(engine, vec![features])?
+            .pop()
+            .expect("one receiver per record"))
+    }
+
+    /// Enqueue a whole request's records **atomically**: either every
+    /// record fits under the queue cap and all are queued, or none are —
+    /// a rejected request must not leave orphaned records behind to be
+    /// scored with nobody listening. Every record carries the `engine`
+    /// it was validated against, so a hot swap mid-queue cannot change
+    /// (or invalidate) its score.
+    pub fn submit_many(
+        &self,
+        engine: Arc<InferenceEngine>,
+        records: Vec<Vec<u32>>,
+    ) -> Result<Vec<mpsc::Receiver<Result<f32, String>>>, SubmitError> {
+        let mut receivers = Vec::with_capacity(records.len());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.closed {
+                return Err(SubmitError::Closed);
+            }
+            if q.items.len() + records.len() > self.shared.cap {
+                return Err(SubmitError::Full(q.items.len()));
+            }
+            for features in records {
+                let (tx, rx) = mpsc::channel();
+                q.items.push_back(Pending {
+                    features,
+                    reply: tx,
+                    engine: Arc::clone(&engine),
+                });
+                receivers.push(rx);
+            }
+        }
+        self.shared.arrived.notify_all();
+        Ok(receivers)
+    }
+
+    /// Score `features` (one record) end to end: submit, wait for the
+    /// scorer, unwrap the reply. `timeout` bounds the wait.
+    pub fn score_one(
+        &self,
+        engine: Arc<InferenceEngine>,
+        features: Vec<u32>,
+        timeout: Duration,
+    ) -> Result<f32> {
+        let rx = self.submit(engine, features)?;
+        match rx.recv_timeout(timeout + self.max_wait) {
+            Ok(Ok(logit)) => Ok(logit),
+            Ok(Err(msg)) => bail!("{msg}"),
+            Err(_) => bail!("scoring timed out"),
+        }
+    }
+
+    /// Stop accepting new records and wake the scorer so it drains and
+    /// exits. Already-queued records still get scored.
+    pub fn close(&self) {
+        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.arrived.notify_all();
+    }
+
+    /// The queue's record capacity — requests larger than this can
+    /// never be accepted (the HTTP layer rejects them as client errors
+    /// rather than retryable overload).
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+
+    pub fn batches_scored(&self) -> u64 {
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn records_scored(&self) -> u64 {
+        self.shared.records.load(Ordering::Relaxed)
+    }
+}
+
+impl Scorer {
+    /// Scorer loop: runs until [`MicroBatcher::close`] is called and the
+    /// queue drains. Each record is scored by the engine it was
+    /// submitted against (snapshotted in [`Pending`]), so a hot swap
+    /// takes effect for *new* submissions while everything already
+    /// queued finishes on the model that accepted it. `engine_of` only
+    /// supplies the live batch-size hint for the coalescing wait.
+    pub fn run<F>(&self, engine_of: F)
+    where
+        F: Fn() -> Arc<InferenceEngine>,
+    {
+        let mut scratch: Option<ScoreScratch> = None;
+        loop {
+            let cap = engine_of().batch_size();
+            let taken = match self.take_batch(cap) {
+                Some(t) => t,
+                None => return,
+            };
+            if taken.is_empty() {
+                continue;
+            }
+            let scratch = scratch.get_or_insert_with(|| {
+                ScoreScratch::for_engine(&taken[0].engine)
+            });
+            // group consecutive records that share an engine (pointer
+            // identity): across a swap the queue holds a run of old-
+            // engine records followed by new-engine ones
+            let mut it = taken.into_iter().peekable();
+            while let Some(first) = it.next() {
+                let engine = Arc::clone(&first.engine);
+                let mut group = vec![first];
+                while it
+                    .peek()
+                    .is_some_and(|p| Arc::ptr_eq(&p.engine, &engine))
+                {
+                    group.push(it.next().expect("peeked"));
+                }
+                self.score_into(&engine, group, scratch);
+            }
+        }
+    }
+
+    /// Block for the next micro-batch: wait for a first record, then
+    /// keep coalescing until `max_batch` records or the wait budget runs
+    /// out. `None` once closed and drained.
+    fn take_batch(&self, max_batch: usize) -> Option<Vec<Pending>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.items.is_empty() {
+            if q.closed {
+                return None;
+            }
+            let (guard, _) = self
+                .shared
+                .arrived
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+        // a record is in: coalesce within the wait budget (skipped when
+        // the queue already holds a full batch or we're closing)
+        let deadline = Instant::now() + self.max_wait;
+        loop {
+            if q.items.is_empty() || q.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            if q.items.len() >= max_batch {
+                break;
+            }
+            let (guard, timeout) = self
+                .shared
+                .arrived
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        if q.items.is_empty() {
+            return if q.closed { None } else { Some(Vec::new()) };
+        }
+        Some(q.items.drain(..).collect())
+    }
+
+    /// Score `taken` through `engine` in engine-batch slices, replying
+    /// per record. Records whose shape doesn't match the engine get an
+    /// error reply; the scorer never dies on bad input.
+    fn score_into(
+        &self,
+        engine: &InferenceEngine,
+        taken: Vec<Pending>,
+        scratch: &mut ScoreScratch,
+    ) {
+        if taken.is_empty() {
+            return;
+        }
+        let fields = engine.fields();
+        let cap = engine.batch_size();
+        let limit = engine.n_features() as u32;
+        let mut slice: Vec<Pending> = Vec::with_capacity(cap);
+        let mut features: Vec<u32> = Vec::with_capacity(cap * fields);
+        let mut flush =
+            |slice: &mut Vec<Pending>, features: &mut Vec<u32>| {
+                if slice.is_empty() {
+                    return;
+                }
+                let labels = vec![0u8; slice.len()];
+                let batch = build_batch(features, &labels, fields, cap);
+                let logits = engine.score_with(&batch, scratch);
+                self.shared.batches.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .records
+                    .fetch_add(slice.len() as u64, Ordering::Relaxed);
+                for (p, &z) in slice.drain(..).zip(&logits) {
+                    // a dropped receiver (client gone) is fine
+                    let _ = p.reply.send(Ok(z));
+                }
+                features.clear();
+            };
+        for p in taken {
+            // distinct messages per defect so clients can tell a schema
+            // mistake (arity) from a hashing mistake (id range); the
+            // HTTP layer pre-validates against the same engine, so these
+            // only fire for direct MicroBatcher users
+            if p.features.len() != fields {
+                let _ = p.reply.send(Err(format!(
+                    "record holds {} ids, model expects {fields}",
+                    p.features.len()
+                )));
+                continue;
+            }
+            if let Some(&id) =
+                p.features.iter().find(|&&id| id >= limit)
+            {
+                let _ = p.reply.send(Err(format!(
+                    "feature id {id} out of range (table holds {limit} \
+                     rows)"
+                )));
+                continue;
+            }
+            features.extend_from_slice(&p.features);
+            slice.push(p);
+            if slice.len() == cap {
+                flush(&mut slice, &mut features);
+            }
+        }
+        flush(&mut slice, &mut features);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Experiment, Method, RoundingMode};
+    use crate::coordinator::Trainer;
+    use crate::data::registry;
+
+    fn tiny_engine() -> Arc<InferenceEngine> {
+        let exp = Experiment {
+            method: Method::Lpt(RoundingMode::Sr),
+            model: "tiny".into(),
+            dataset: "synthetic:tiny".into(),
+            n_samples: 1200,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = registry::schema_for(&exp).unwrap().n_features();
+        let tr = Trainer::new(exp, n).unwrap();
+        let dir = std::env::temp_dir().join("alpt_microbatch_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("micro.ckpt");
+        tr.save_checkpoint(&path).unwrap();
+        let engine =
+            Arc::new(InferenceEngine::from_checkpoint(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+        engine
+    }
+
+    fn record(engine: &InferenceEngine, r: u32) -> Vec<u32> {
+        let schema = registry::schema_for(engine.exp()).unwrap();
+        (0..engine.fields())
+            .map(|f| schema.global_id(f, (r + f as u32) % 5))
+            .collect()
+    }
+
+    #[test]
+    fn coalesced_scores_match_direct_engine_calls() {
+        let engine = tiny_engine();
+        let (mb, scorer) = MicroBatcher::new(1024, Duration::from_millis(5));
+        let eng = Arc::clone(&engine);
+        let scorer_thread =
+            std::thread::spawn(move || scorer.run(|| Arc::clone(&eng)));
+
+        let n_clients = 8;
+        let per_client = 10;
+        let results: Vec<Vec<(u32, f32)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    let mb = mb.clone();
+                    let engine = Arc::clone(&engine);
+                    s.spawn(move || {
+                        (0..per_client)
+                            .map(|i| {
+                                let r = (c * per_client + i) as u32;
+                                let z = mb
+                                    .score_one(
+                                        Arc::clone(&engine),
+                                        record(&engine, r),
+                                        Duration::from_secs(10),
+                                    )
+                                    .unwrap();
+                                (r, z)
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        mb.close();
+        scorer_thread.join().unwrap();
+
+        assert_eq!(
+            mb.records_scored(),
+            (n_clients * per_client) as u64
+        );
+        // micro-batching must coalesce at least some requests
+        assert!(
+            mb.batches_scored() < mb.records_scored(),
+            "batches {} vs records {}",
+            mb.batches_scored(),
+            mb.records_scored()
+        );
+        for row in results {
+            for (r, z) in row {
+                let direct =
+                    engine.score_records(&record(&engine, r)).unwrap();
+                assert_eq!(
+                    z.to_bits(),
+                    direct[0].to_bits(),
+                    "record {r}: micro-batched logit diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_records_error_without_killing_scorer() {
+        let engine = tiny_engine();
+        let (mb, scorer) = MicroBatcher::new(64, Duration::from_millis(1));
+        let eng = Arc::clone(&engine);
+        let t = std::thread::spawn(move || scorer.run(|| Arc::clone(&eng)));
+        // wrong arity
+        let err = mb
+            .score_one(
+                Arc::clone(&engine),
+                vec![1, 2, 3],
+                Duration::from_secs(5),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("ids"), "{err:#}");
+        // id out of range gets its own message
+        let mut bad = record(&engine, 1);
+        bad[0] = engine.n_features() as u32;
+        let err = mb
+            .score_one(Arc::clone(&engine), bad, Duration::from_secs(5))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // a valid record still scores afterwards
+        let z = mb
+            .score_one(
+                Arc::clone(&engine),
+                record(&engine, 1),
+                Duration::from_secs(5),
+            )
+            .unwrap();
+        assert!(z.is_finite());
+        mb.close();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn full_queue_rejects_at_submit() {
+        let engine = tiny_engine();
+        let (mb, _scorer) = MicroBatcher::new(2, Duration::from_millis(1));
+        // no scorer running: the queue fills and the third submit errors
+        mb.submit(Arc::clone(&engine), vec![0; 8]).unwrap();
+        mb.submit(Arc::clone(&engine), vec![0; 8]).unwrap();
+        let err =
+            mb.submit(Arc::clone(&engine), vec![0; 8]).unwrap_err();
+        assert!(format!("{err:#}").contains("full"));
+        mb.close();
+    }
+
+    #[test]
+    fn close_drains_queued_records() {
+        let engine = tiny_engine();
+        let (mb, scorer) = MicroBatcher::new(64, Duration::from_millis(1));
+        let rx =
+            mb.submit(Arc::clone(&engine), record(&engine, 3)).unwrap();
+        mb.close();
+        // scorer started after close: must still drain the queued record
+        let eng = Arc::clone(&engine);
+        let t = std::thread::spawn(move || scorer.run(|| Arc::clone(&eng)));
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(got.unwrap().is_finite());
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,348 @@
+//! The shared online-inference engine.
+//!
+//! [`InferenceEngine`] is an **immutable**, `Send + Sync` bundle of
+//! everything one model needs to score requests: the restored
+//! [`EmbeddingStore`] (fp / lpt / alpt / grouped mixed-precision), the
+//! DCN dense parameters, and the model geometry. Scoring takes `&self`
+//! and per-thread scratch, so any number of threads can score against
+//! one shared engine concurrently — and, because gather and the Rust
+//! DCN forward are pure functions of the batch, every thread's logits
+//! are bit-identical to the serial path (property-tested in
+//! `rust/tests/serve_online.rs`).
+//!
+//! The single inference body lives in [`score_batch`]; the offline
+//! batch-eval loop (`coordinator::serve_checkpoint`), the trainer's
+//! non-runtime eval path (`Trainer::batch_logits`), the HTTP scoring
+//! server (`serve::http`) and `examples/serve.rs` all route through it,
+//! so the entry points cannot drift apart.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::{dense_params, load_store, Checkpoint};
+use crate::config::Experiment;
+use crate::coordinator::builtin_entry;
+use crate::data::batcher::{build_batch, Batch};
+use crate::embedding::{fp_bytes, EmbeddingStore};
+use crate::nn::Dcn;
+use crate::runtime::ModelEntry;
+
+/// The one shared gather → DCN-forward body. `emb` is caller scratch of
+/// at least `umax * store.dim()` floats: rows beyond the batch's uniques
+/// are zeroed so the shape-static forward always sees a full `[umax, d]`
+/// table. Pure in `(store contents, dense, batch)` — the same batch
+/// scores to the same bits on any thread.
+pub fn score_batch(
+    store: &dyn EmbeddingStore,
+    dcn: &Dcn,
+    dense: &[f32],
+    umax: usize,
+    batch: &Batch,
+    emb: &mut [f32],
+) -> Vec<f32> {
+    let d = store.dim();
+    let n_u = batch.unique.len();
+    debug_assert!(n_u <= umax, "batch uniques exceed umax");
+    emb[n_u * d..umax * d].fill(0.0);
+    store.gather(&batch.unique, &mut emb[..n_u * d]);
+    dcn.infer(&emb[..umax * d], &batch.idx, dense)
+}
+
+/// Per-thread scoring scratch: the `[umax, d]` dequantized-row buffer
+/// the forward pass reads. One per scoring thread — never shared.
+pub struct ScoreScratch {
+    emb: Vec<f32>,
+}
+
+impl ScoreScratch {
+    /// Scratch sized for `engine` (umax × dim floats).
+    pub fn for_engine(engine: &InferenceEngine) -> Self {
+        Self { emb: vec![0.0; engine.entry.umax * engine.entry.emb_dim] }
+    }
+}
+
+std::thread_local! {
+    // fallback scratch for `score`: one buffer per OS thread, grown to
+    // the largest engine that thread has scored with
+    static TLS_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// An immutable, concurrency-safe inference bundle restored from a
+/// checkpoint (or assembled from parts). See the module docs.
+pub struct InferenceEngine {
+    store: Box<dyn EmbeddingStore>,
+    dense: Vec<f32>,
+    dcn: Dcn,
+    entry: ModelEntry,
+    exp: Experiment,
+    /// Checkpoint read + validation time in milliseconds (0 when built
+    /// from parts).
+    load_ms: f64,
+}
+
+// the engine is shared across scoring threads behind an Arc; fail the
+// build, not the first deploy, if a field ever stops being Sync
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<InferenceEngine>();
+};
+
+impl InferenceEngine {
+    /// Restore an engine from a checkpoint file: store rows (uniform v1
+    /// and grouped mixed-precision v2 alike), dense params, and the
+    /// model geometry from the experiment echo — validated before any
+    /// scoring can happen.
+    pub fn from_checkpoint(path: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let ckpt = Checkpoint::read(path)?;
+        let (store, exp) = load_store(&ckpt)?;
+        let dense = dense_params(&ckpt)?;
+        let mut engine = Self::from_parts(store, dense, exp)?;
+        engine.load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(engine)
+    }
+
+    /// Assemble an engine from already-restored parts, validating the
+    /// store and dense-parameter geometry against the model entry.
+    pub fn from_parts(
+        store: Box<dyn EmbeddingStore>,
+        dense: Vec<f32>,
+        exp: Experiment,
+    ) -> Result<Self> {
+        let entry = builtin_entry(&exp.model)?;
+        ensure!(
+            dense.len() == entry.n_params,
+            "checkpoint holds {} dense params, model {:?} expects {}",
+            dense.len(),
+            exp.model,
+            entry.n_params
+        );
+        ensure!(
+            store.dim() == entry.emb_dim,
+            "checkpoint embedding dim {} does not match model {:?} \
+             (dim {})",
+            store.dim(),
+            exp.model,
+            entry.emb_dim
+        );
+        let dcn = Dcn::new(entry.dcn_config());
+        Ok(Self { store, dense, dcn, entry, exp, load_ms: 0.0 })
+    }
+
+    /// Score one batch through caller-provided scratch (the allocation-
+    /// controlled path: one [`ScoreScratch`] per scoring thread).
+    pub fn score_with(
+        &self,
+        batch: &Batch,
+        scratch: &mut ScoreScratch,
+    ) -> Vec<f32> {
+        let need = self.entry.umax * self.entry.emb_dim;
+        if scratch.emb.len() < need {
+            scratch.emb.resize(need, 0.0);
+        }
+        score_batch(
+            self.store.as_ref(),
+            &self.dcn,
+            &self.dense,
+            self.entry.umax,
+            batch,
+            &mut scratch.emb,
+        )
+    }
+
+    /// Score one batch through this thread's thread-local scratch — the
+    /// convenience path for callers that don't manage scratch buffers.
+    pub fn score(&self, batch: &Batch) -> Vec<f32> {
+        TLS_SCRATCH.with(|cell| {
+            let mut emb = cell.borrow_mut();
+            let need = self.entry.umax * self.entry.emb_dim;
+            if emb.len() < need {
+                emb.resize(need, 0.0);
+            }
+            score_batch(
+                self.store.as_ref(),
+                &self.dcn,
+                &self.dense,
+                self.entry.umax,
+                batch,
+                &mut emb,
+            )
+        })
+    }
+
+    /// Score up to `batch_size` raw feature-index records (`[n, fields]`
+    /// row-major global ids) and return one logit per record. Validates
+    /// shape and id bounds — this is the wire-facing entry point, so bad
+    /// input must error, never panic. Per-record logits are independent
+    /// of batch composition (the DCN forward is row-wise), so a record
+    /// scores to the same bits alone, micro-batched, or in the offline
+    /// eval loop.
+    pub fn score_records(&self, features: &[u32]) -> Result<Vec<f32>> {
+        let f = self.entry.fields;
+        ensure!(
+            !features.is_empty() && features.len() % f == 0,
+            "request holds {} feature ids, expected a non-empty multiple \
+             of {f} (model {:?})",
+            features.len(),
+            self.exp.model
+        );
+        let n = features.len() / f;
+        ensure!(
+            n <= self.entry.batch,
+            "request holds {n} records, the engine batch is {}",
+            self.entry.batch
+        );
+        let limit = self.store.n_features() as u32;
+        for &id in features {
+            ensure!(
+                id < limit,
+                "feature id {id} out of range (table holds {limit} rows)"
+            );
+        }
+        let labels = vec![0u8; n];
+        let batch = build_batch(features, &labels, f, self.entry.batch);
+        let mut logits = self.score(&batch);
+        logits.truncate(n);
+        Ok(logits)
+    }
+
+    // ------------------------------------------------------- accessors
+
+    pub fn method_name(&self) -> &'static str {
+        self.store.method_name()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.store.n_features()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    /// Bytes to ship the restored table for inference.
+    pub fn infer_bytes(&self) -> usize {
+        self.store.infer_bytes()
+    }
+
+    /// The fp32 baseline for the same geometry.
+    pub fn fp_bytes(&self) -> usize {
+        fp_bytes(self.store.n_features(), self.store.dim())
+    }
+
+    /// The model's (shape-static) batch size — the micro-batching cap.
+    pub fn batch_size(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn fields(&self) -> usize {
+        self.entry.fields
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn exp(&self) -> &Experiment {
+        &self.exp
+    }
+
+    pub fn store(&self) -> &dyn EmbeddingStore {
+        self.store.as_ref()
+    }
+
+    pub fn load_ms(&self) -> f64 {
+        self.load_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, PrecisionPlan, RoundingMode};
+    use crate::coordinator::Trainer;
+    use crate::data::registry;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alpt_engine_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn engine_for(bits: &str, name: &str) -> InferenceEngine {
+        let exp = Experiment {
+            method: Method::Lpt(RoundingMode::Sr),
+            bits: PrecisionPlan::parse(bits).unwrap(),
+            model: "tiny".into(),
+            dataset: "synthetic:tiny".into(),
+            n_samples: 1500,
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = registry::schema_for(&exp).unwrap().n_features();
+        let tr = Trainer::new(exp, n).unwrap();
+        let path = tmp(name);
+        tr.save_checkpoint(&path).unwrap();
+        let engine = InferenceEngine::from_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        engine
+    }
+
+    #[test]
+    fn tls_and_explicit_scratch_agree() {
+        let engine = engine_for("8", "scratch.ckpt");
+        let features: Vec<u32> = (0..engine.fields() as u32).collect();
+        let labels = [1u8];
+        let batch = build_batch(
+            &features,
+            &labels,
+            engine.fields(),
+            engine.batch_size(),
+        );
+        let mut scratch = ScoreScratch::for_engine(&engine);
+        let a = engine.score(&batch);
+        let b = engine.score_with(&batch, &mut scratch);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), engine.batch_size());
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn score_records_validates_and_matches_batched() {
+        let engine = engine_for("f0:4,default:8", "records.ckpt");
+        let f = engine.fields();
+        // three records over valid per-field ids
+        let schema =
+            registry::schema_for(engine.exp()).unwrap();
+        let mut features = Vec::new();
+        for r in 0..3u32 {
+            for field in 0..f {
+                features.push(schema.global_id(field, r % 2));
+            }
+        }
+        let logits = engine.score_records(&features).unwrap();
+        assert_eq!(logits.len(), 3);
+        // single-record scoring is bit-identical: batch composition
+        // must not change a record's logit
+        for r in 0..3 {
+            let solo = engine
+                .score_records(&features[r * f..(r + 1) * f])
+                .unwrap();
+            assert_eq!(solo[0].to_bits(), logits[r].to_bits(), "r={r}");
+        }
+        // shape errors
+        assert!(engine.score_records(&[]).is_err());
+        assert!(engine.score_records(&features[..f - 1]).is_err());
+        // id out of range
+        let mut bad = features.clone();
+        bad[0] = engine.n_features() as u32;
+        assert!(engine.score_records(&bad).is_err());
+        // too many records
+        let huge = vec![0u32; (engine.batch_size() + 1) * f];
+        assert!(engine.score_records(&huge).is_err());
+    }
+}

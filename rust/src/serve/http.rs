@@ -1,0 +1,771 @@
+//! Std-only HTTP/1.1 scoring server (`alpt serve --listen`).
+//!
+//! No web framework — the repo is offline-vendored, so the server is a
+//! `TcpListener`, a small worker-thread pool, and a hand-rolled
+//! HTTP/1.1 request parser. Endpoints:
+//!
+//! * `POST /score`  — JSON feature-index records → logits/probabilities
+//!   (micro-batched through [`crate::serve::batch::MicroBatcher`]);
+//! * `GET  /healthz` — liveness + the live model's identity;
+//! * `GET  /stats`  — request counters and p50/p95/p99 latency from a
+//!   [`LatencyHistogram`];
+//! * `POST /reload` — atomic checkpoint hot-swap (see [`EngineHandle`]);
+//! * `POST /shutdown` — stop accepting, drain, and return from `run`.
+//!
+//! Wire protocol (see README.md "Online serving"): a score request body
+//! is `{"records": [[id, …], …]}` (or a bare array of records), each
+//! record exactly `fields` global feature ids; the response is
+//! `{"logits": [...], "probs": [...]}` in request order. Malformed
+//! bodies get HTTP 400 and the worker lives on.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::{sigmoid, LatencyHistogram};
+use crate::serve::batch::MicroBatcher;
+use crate::serve::engine::InferenceEngine;
+use crate::util::json::Json;
+
+/// The hot-swap slot: the live engine sits behind `Mutex<Arc<_>>`, and
+/// readers only ever hold the lock for the `Arc` clone (a pointer copy +
+/// refcount bump — never during scoring), so a swap waits on no reader
+/// and a reader waits on no swap-in-progress load. In-flight requests
+/// keep their cloned `Arc` and finish on the model they started with;
+/// the old engine is freed when its last in-flight request drops it.
+pub struct EngineHandle {
+    slot: Mutex<Arc<InferenceEngine>>,
+    reloads: AtomicU64,
+}
+
+impl EngineHandle {
+    pub fn new(engine: InferenceEngine) -> Self {
+        Self {
+            slot: Mutex::new(Arc::new(engine)),
+            reloads: AtomicU64::new(0),
+        }
+    }
+
+    /// The live engine (O(1): pointer clone, no scoring under the lock).
+    pub fn current(&self) -> Arc<InferenceEngine> {
+        Arc::clone(&self.slot.lock().unwrap())
+    }
+
+    /// Atomically publish `engine`; returns the replaced one.
+    pub fn swap(&self, engine: InferenceEngine) -> Arc<InferenceEngine> {
+        let mut slot = self.slot.lock().unwrap();
+        let old = std::mem::replace(&mut *slot, Arc::new(engine));
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        old
+    }
+
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Load `path` and swap it in — shared by `/reload` and `--watch`.
+    /// The new checkpoint may use any store family / precision plan /
+    /// checkpoint format version, but must keep the wire protocol: the
+    /// field count cannot change under live clients.
+    pub fn reload_from(&self, path: &std::path::Path) -> Result<()> {
+        let fresh = InferenceEngine::from_checkpoint(path)
+            .with_context(|| format!("reloading {}", path.display()))?;
+        let live_fields = self.current().fields();
+        if fresh.fields() != live_fields {
+            bail!(
+                "checkpoint model has {} fields, the live server speaks \
+                 {live_fields}-field records",
+                fresh.fields()
+            );
+        }
+        self.swap(fresh);
+        Ok(())
+    }
+}
+
+/// Server configuration (`alpt serve --listen …`).
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks a free port).
+    pub listen: String,
+    /// Checkpoint to serve (and the default `/reload` target).
+    pub ckpt: PathBuf,
+    /// Connection-handler threads.
+    pub workers: usize,
+    /// Micro-batch coalescing budget after the first queued record.
+    pub max_wait: Duration,
+    /// Bound on queued (unscored) records; beyond it `/score` gets 503.
+    pub queue_cap: usize,
+    /// Poll the checkpoint file and hot-swap on mtime change (`None`
+    /// disables watching).
+    pub watch: Option<Duration>,
+}
+
+impl ServerConfig {
+    pub fn new(listen: &str, ckpt: &std::path::Path) -> Self {
+        Self {
+            listen: listen.to_string(),
+            ckpt: ckpt.to_path_buf(),
+            workers: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+            watch: None,
+        }
+    }
+}
+
+/// Request counters shared across workers (all lock-free).
+struct Stats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    latency: LatencyHistogram,
+    started: Instant,
+}
+
+/// Flips its flag to false when dropped — including on unwind, so a
+/// panicking scorer thread is detected by `/healthz` instead of leaving
+/// a server that looks healthy while every `/score` fails.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
+/// A bound scoring server. `bind` loads the checkpoint and claims the
+/// port (so callers can read [`Server::local_addr`] before serving);
+/// [`Server::run`] blocks until `POST /shutdown`.
+pub struct Server {
+    cfg: ServerConfig,
+    listener: TcpListener,
+    handle: Arc<EngineHandle>,
+    stats: Arc<Stats>,
+    stop: Arc<AtomicBool>,
+    /// Checkpoint mtime captured *before* the engine load, so a file
+    /// rewritten during (or right after) the load still triggers the
+    /// first `--watch` reload instead of silently becoming the baseline.
+    ckpt_mtime: Option<std::time::SystemTime>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let ckpt_mtime = std::fs::metadata(&cfg.ckpt)
+            .and_then(|m| m.modified())
+            .ok();
+        let engine = InferenceEngine::from_checkpoint(&cfg.ckpt)?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        Ok(Server {
+            cfg,
+            listener,
+            handle: Arc::new(EngineHandle::new(engine)),
+            stats: Arc::new(Stats {
+                requests: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+                latency: LatencyHistogram::new(),
+                started: Instant::now(),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            ckpt_mtime,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The live-engine handle (tests swap through it directly).
+    pub fn engine_handle(&self) -> Arc<EngineHandle> {
+        Arc::clone(&self.handle)
+    }
+
+    /// Accept-and-serve until `POST /shutdown`. Spawns the scorer, the
+    /// optional checkpoint watcher, and `workers` connection handlers;
+    /// joins them all before returning, so a clean return means every
+    /// queued record was scored or answered.
+    pub fn run(self) -> Result<()> {
+        let (mb, scorer) =
+            MicroBatcher::new(self.cfg.queue_cap, self.cfg.max_wait);
+        let scorer_alive = Arc::new(AtomicBool::new(true));
+        let scorer_handle = {
+            let h = Arc::clone(&self.handle);
+            let guard = AliveGuard(Arc::clone(&scorer_alive));
+            std::thread::spawn(move || {
+                let _guard = guard;
+                scorer.run(move || h.current())
+            })
+        };
+        let watcher_handle = self.cfg.watch.map(|period| {
+            let h = Arc::clone(&self.handle);
+            let stop = Arc::clone(&self.stop);
+            let path = self.cfg.ckpt.clone();
+            let baseline = self.ckpt_mtime;
+            std::thread::spawn(move || {
+                watch_loop(&h, &stop, &path, period, baseline)
+            })
+        });
+
+        // bounded dispatch: when every worker is busy and the backlog
+        // is full, shed the connection instead of queueing fds without
+        // bound (a flood would otherwise exhaust descriptors)
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(
+            self.cfg.workers.max(1) * 4,
+        );
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<_> = (0..self.cfg.workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let ctx = Ctx {
+                    handle: Arc::clone(&self.handle),
+                    stats: Arc::clone(&self.stats),
+                    stop: Arc::clone(&self.stop),
+                    scorer_alive: Arc::clone(&scorer_alive),
+                    mb: mb.clone(),
+                    ckpt: self.cfg.ckpt.clone(),
+                };
+                std::thread::spawn(move || loop {
+                    let stream = match rx.lock().unwrap().recv() {
+                        Ok(s) => s,
+                        Err(_) => return,
+                    };
+                    // per-connection failures must never kill a worker
+                    let _ = handle_connection(stream, &ctx);
+                })
+            })
+            .collect();
+
+        // poll-based accept: shutdown must not depend on one more
+        // connection arriving (or on a best-effort loopback nudge), and
+        // accept errors (EMFILE under flood) must back off, not spin
+        self.listener.set_nonblocking(true)?;
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((s, _)) => {
+                    // workers do blocking reads with timeouts
+                    if s.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    // full backlog: drop the connection (load shedding)
+                    let _ = tx.try_send(s);
+                }
+                // WouldBlock (no connection waiting) and real accept
+                // errors (EMFILE under flood) both back off one tick
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        // drain: close the dispatch channel, let workers finish their
+        // current connection, then retire the scorer
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
+        }
+        mb.close();
+        let _ = scorer_handle.join();
+        if let Some(w) = watcher_handle {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+/// `--watch`: poll the checkpoint's mtime; on change, reload + swap.
+/// `last` is the baseline captured at bind time, before the engine
+/// load — not re-read here, so no write window is ever missed.
+fn watch_loop(
+    handle: &EngineHandle,
+    stop: &AtomicBool,
+    path: &std::path::Path,
+    period: Duration,
+    mut last: Option<std::time::SystemTime>,
+) {
+    let mtime_of = |p: &std::path::Path| {
+        std::fs::metadata(p).and_then(|m| m.modified()).ok()
+    };
+    // sleep in short ticks (stop-flag responsiveness) but only poll the
+    // mtime once per configured period — a long --watch-ms is a
+    // debounce for slow checkpoint writers, not a suggestion
+    let tick = period.min(Duration::from_millis(200)).max(
+        Duration::from_millis(10),
+    );
+    let mut since_poll = Duration::ZERO;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        since_poll += tick;
+        if since_poll < period {
+            continue;
+        }
+        since_poll = Duration::ZERO;
+        let now = mtime_of(path);
+        if now.is_some() && now != last {
+            match handle.reload_from(path) {
+                Ok(()) => {
+                    last = now;
+                    eprintln!(
+                        "[watch] reloaded {} ({})",
+                        path.display(),
+                        handle.current().method_name()
+                    );
+                }
+                // a half-written file fails validation and is retried on
+                // the next tick; the live engine keeps serving
+                Err(e) => eprintln!("[watch] reload failed: {e:#}"),
+            }
+        }
+    }
+}
+
+/// Per-worker context.
+struct Ctx {
+    handle: Arc<EngineHandle>,
+    stats: Arc<Stats>,
+    stop: Arc<AtomicBool>,
+    /// False once the scorer thread has exited (panic included) — flips
+    /// `/healthz` to 503 so orchestrators stop routing traffic here.
+    scorer_alive: Arc<AtomicBool>,
+    mb: MicroBatcher,
+    ckpt: PathBuf,
+}
+
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Serve requests off one connection until EOF, error, or shutdown.
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    // a client that stops reading must not wedge a worker in write_all
+    // forever (enough of those would starve even POST /shutdown)
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_nodelay(true).ok();
+    let mut pending = Vec::new();
+    loop {
+        let req = match read_request(&mut stream, &mut pending) {
+            Ok(Some(r)) => r,
+            // clean EOF between requests: client is done
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // syntactically broken request: answer 400 and drop the
+                // connection (framing is unrecoverable), worker survives
+                let _ = respond_json(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    &err_json(&format!("{e:#}")),
+                    false,
+                );
+                return Ok(());
+            }
+        };
+        let keep = req.keep_alive;
+        route(&mut stream, ctx, req)?;
+        if !keep || ctx.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+fn route(stream: &mut TcpStream, ctx: &Ctx, req: Request) -> Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/score") => {
+            ctx.stats.requests.fetch_add(1, Ordering::Relaxed);
+            let t = Instant::now();
+            match score_body(ctx, &req.body) {
+                Ok(json) => {
+                    ctx.stats
+                        .latency
+                        .record_ms(t.elapsed().as_secs_f64() * 1e3);
+                    respond_json(stream, 200, "OK", &json, req.keep_alive)
+                }
+                Err(fail) => {
+                    ctx.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let (code, reason, msg) = fail.status();
+                    respond_json(
+                        stream,
+                        code,
+                        reason,
+                        &err_json(&msg),
+                        req.keep_alive,
+                    )
+                }
+            }
+        }
+        ("GET", "/healthz") => {
+            let engine = ctx.handle.current();
+            // a dead scorer means every /score fails: report unhealthy
+            // so load balancers stop routing here, instead of a 200
+            // façade over a server that 503s all traffic
+            let alive = ctx.scorer_alive.load(Ordering::SeqCst);
+            let (code, reason, status) = if alive {
+                (200, "OK", "ok")
+            } else {
+                (503, "Service Unavailable", "unhealthy: scorer exited")
+            };
+            let json = Json::obj(vec![
+                ("method", Json::str(engine.method_name())),
+                ("model", Json::str(&engine.exp().model)),
+                ("n_features", Json::num(engine.n_features() as f64)),
+                ("status", Json::str(status)),
+            ]);
+            respond_json(stream, code, reason, &json, req.keep_alive)
+        }
+        ("GET", "/stats") => {
+            let engine = ctx.handle.current();
+            let lat = &ctx.stats.latency;
+            let json = Json::obj(vec![
+                (
+                    "errors",
+                    Json::num(
+                        ctx.stats.errors.load(Ordering::Relaxed) as f64
+                    ),
+                ),
+                ("method", Json::str(engine.method_name())),
+                ("p50_ms", Json::num(lat.percentile_ms(50.0))),
+                ("p95_ms", Json::num(lat.percentile_ms(95.0))),
+                ("p99_ms", Json::num(lat.percentile_ms(99.0))),
+                ("batches_scored", Json::num(ctx.mb.batches_scored() as f64)),
+                ("records_scored", Json::num(ctx.mb.records_scored() as f64)),
+                ("reloads", Json::num(ctx.handle.reloads() as f64)),
+                (
+                    "requests",
+                    Json::num(
+                        ctx.stats.requests.load(Ordering::Relaxed) as f64
+                    ),
+                ),
+                (
+                    "uptime_s",
+                    Json::num(ctx.stats.started.elapsed().as_secs_f64()),
+                ),
+            ]);
+            respond_json(stream, 200, "OK", &json, req.keep_alive)
+        }
+        ("POST", "/reload") => {
+            let path = reload_path(&req.body, &ctx.ckpt);
+            match path.and_then(|p| {
+                ctx.handle.reload_from(&p)?;
+                Ok(p)
+            }) {
+                Ok(p) => {
+                    let engine = ctx.handle.current();
+                    let json = Json::obj(vec![
+                        ("ckpt", Json::str(&p.display().to_string())),
+                        ("method", Json::str(engine.method_name())),
+                        ("reloaded", Json::Bool(true)),
+                        (
+                            "reloads",
+                            Json::num(ctx.handle.reloads() as f64),
+                        ),
+                    ]);
+                    respond_json(stream, 200, "OK", &json, req.keep_alive)
+                }
+                Err(e) => {
+                    ctx.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    respond_json(
+                        stream,
+                        409,
+                        "Conflict",
+                        &err_json(&format!("{e:#}")),
+                        req.keep_alive,
+                    )
+                }
+            }
+        }
+        ("POST", "/shutdown") => {
+            // the poll-based accept loop notices the flag within one
+            // poll tick — no wake-up connection needed
+            ctx.stop.store(true, Ordering::SeqCst);
+            respond_json(
+                stream,
+                200,
+                "OK",
+                &Json::obj(vec![("ok", Json::Bool(true))]),
+                false,
+            )
+        }
+        (_, path) => respond_json(
+            stream,
+            404,
+            "Not Found",
+            &err_json(&format!("no route {path:?}")),
+            req.keep_alive,
+        ),
+    }
+}
+
+/// Why a `/score` request failed, typed so the HTTP status reflects the
+/// actual condition: client mistakes get 400, server overload/shutdown
+/// 503 (retryable), a scorer that exists but cannot keep up 504.
+enum ScoreFailure {
+    BadRequest(String),
+    Unavailable(String),
+    Timeout(String),
+}
+
+impl ScoreFailure {
+    fn status(self) -> (u16, &'static str, String) {
+        match self {
+            ScoreFailure::BadRequest(m) => (400, "Bad Request", m),
+            ScoreFailure::Unavailable(m) => {
+                (503, "Service Unavailable", m)
+            }
+            ScoreFailure::Timeout(m) => (504, "Gateway Timeout", m),
+        }
+    }
+}
+
+/// Parse + score a `/score` body through the micro-batch queue.
+fn score_body(ctx: &Ctx, body: &[u8]) -> Result<Json, ScoreFailure> {
+    let bad = ScoreFailure::BadRequest;
+    let text = std::str::from_utf8(body)
+        .map_err(|_| bad("body is not UTF-8".into()))?;
+    let json = Json::parse(text)
+        .map_err(|e| bad(format!("body is not valid JSON: {e:#}")))?;
+    let records = match &json {
+        Json::Array(v) => v.as_slice(),
+        Json::Object(_) => json
+            .opt("records")
+            .ok_or_else(|| bad("body object has no \"records\" key".into()))?
+            .as_array()
+            .map_err(|_| bad("\"records\" is not an array".into()))?,
+        _ => {
+            return Err(bad(
+                "body must be a records array or {\"records\": …}".into(),
+            ))
+        }
+    };
+    if records.is_empty() {
+        return Err(bad("no records to score".into()));
+    }
+    // a request that exceeds the queue capacity can never be accepted —
+    // that's a client error (400), not retryable overload (503)
+    if records.len() > ctx.mb.capacity() {
+        return Err(bad(format!(
+            "request holds {} records, the scoring queue capacity is {}",
+            records.len(),
+            ctx.mb.capacity()
+        )));
+    }
+    let engine = ctx.handle.current();
+    let fields = engine.fields();
+    let limit = engine.n_features();
+    let mut features = Vec::with_capacity(records.len());
+    for (i, rec) in records.iter().enumerate() {
+        let ids = rec
+            .as_array()
+            .map_err(|_| bad(format!("record {i} is not an array")))?;
+        if ids.len() != fields {
+            return Err(bad(format!(
+                "record {i} holds {} ids, model expects {fields}",
+                ids.len()
+            )));
+        }
+        let mut rec_ids = Vec::with_capacity(fields);
+        for v in ids {
+            let id = v.as_usize().map_err(|_| {
+                bad(format!("record {i}: bad feature id"))
+            })?;
+            // full validation before anything queues: one bad record
+            // fails the request fast with 400 instead of wasting
+            // forward-pass work on its siblings
+            if id >= limit {
+                return Err(bad(format!(
+                    "record {i}: feature id {id} out of range (table \
+                     holds {limit} rows)"
+                )));
+            }
+            rec_ids.push(id as u32);
+        }
+        features.push(rec_ids);
+    }
+    // all-or-nothing: a rejected request leaves nothing queued behind;
+    // the engine the records were validated against travels with them,
+    // so a hot swap mid-queue cannot invalidate an accepted request
+    let receivers = ctx
+        .mb
+        .submit_many(Arc::clone(&engine), features)
+        .map_err(|e| ScoreFailure::Unavailable(e.to_string()))?;
+    let mut logits = Vec::with_capacity(receivers.len());
+    // one deadline for the whole request, not per record — N records
+    // must not stretch the documented 30 s budget to N × 30 s
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(Ok(z)) => logits.push(z as f64),
+            Ok(Err(msg)) => return Err(bad(format!("record {i}: {msg}"))),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                return Err(ScoreFailure::Timeout(format!(
+                    "record {i}: scoring timed out"
+                )))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(ScoreFailure::Unavailable(format!(
+                    "record {i}: scorer shut down before replying"
+                )))
+            }
+        }
+    }
+    let probs: Vec<f64> =
+        logits.iter().map(|&z| sigmoid(z as f32) as f64).collect();
+    Ok(Json::obj(vec![
+        ("logits", Json::arr_f64(&logits)),
+        ("probs", Json::arr_f64(&probs)),
+    ]))
+}
+
+/// `/reload` body: empty → the server's own checkpoint path; otherwise
+/// `{"ckpt": "path"}`.
+fn reload_path(body: &[u8], default: &std::path::Path) -> Result<PathBuf> {
+    let text = std::str::from_utf8(body).unwrap_or("").trim();
+    if text.is_empty() {
+        return Ok(default.to_path_buf());
+    }
+    let json = Json::parse(text).context("reload body is not JSON")?;
+    match json.opt("ckpt") {
+        Some(v) => Ok(PathBuf::from(v.as_str()?)),
+        None => Ok(default.to_path_buf()),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+/// Read one HTTP/1.1 request. `Ok(None)` on clean EOF before any bytes
+/// of a new request (keep-alive connection closed by the client).
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+) -> Result<Option<Request>> {
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(n) => n,
+            // an idle keep-alive connection hitting the read timeout is
+            // not a malformed request: close silently, never answer 400
+            // to a client that hasn't sent anything
+            Err(e)
+                if buf.is_empty()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(e).context("reading request"),
+        };
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line =
+        lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing method"))?
+        .to_uppercase();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing path"))?
+        .to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+
+    let mut content_length = 0usize;
+    // HTTP/1.1 defaults to keep-alive, 1.0 to close
+    let mut keep_alive = version.ends_with("1.1");
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+        if k == "content-length" {
+            content_length = v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad Content-Length {v:?}"))?;
+        } else if k == "connection" {
+            keep_alive = !v.eq_ignore_ascii_case("close");
+        } else if k == "transfer-encoding" {
+            // we only frame bodies by Content-Length; silently treating
+            // a chunked body as empty would desync the connection
+            bail!(
+                "Transfer-Encoding {v:?} is not supported; send a \
+                 Content-Length body"
+            );
+        } else if k == "expect"
+            && v.eq_ignore_ascii_case("100-continue")
+        {
+            // curl sends this for bodies over ~1 KiB and stalls ~1 s
+            // waiting for the interim response
+            expect_continue = true;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+    }
+    if expect_continue {
+        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    }
+
+    let body_start = head_end + 4;
+    while buf.len() < body_start + content_length {
+        let n = stream.read(&mut chunk).context("reading body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    // keep any pipelined bytes for the next request on this connection
+    buf.drain(..body_start + content_length);
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> Result<()> {
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! The online inference subsystem: one immutable, concurrency-safe
+//! [`engine::InferenceEngine`] shared by every scoring entry point
+//! (offline batch eval, trainer evaluation, the HTTP server, the serve
+//! example), a bounded [`batch::MicroBatcher`] that coalesces concurrent
+//! single-record requests into engine batches, and a std-only
+//! [`http::Server`] with atomic checkpoint hot-swap
+//! ([`http::EngineHandle`]).
+
+pub mod batch;
+pub mod engine;
+pub mod http;
+
+pub use batch::MicroBatcher;
+pub use engine::{score_batch, InferenceEngine, ScoreScratch};
+pub use http::{EngineHandle, Server, ServerConfig};

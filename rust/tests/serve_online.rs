@@ -1,0 +1,332 @@
+//! Online-serving integration tests: concurrent clients against one
+//! shared `InferenceEngine` are bit-identical to the serial offline
+//! serving path (uniform v1 and mixed-precision v2 checkpoints alike),
+//! and the std-only HTTP server survives malformed input, scores
+//! identically to the offline path, and hot-swaps checkpoints without
+//! dropping in-flight requests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
+use alpt::coordinator::Trainer;
+use alpt::data::batcher::{Batch, StreamBatcher, Tail};
+use alpt::data::registry;
+use alpt::serve::{InferenceEngine, Server, ServerConfig};
+use alpt::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("alpt_serve_online_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Train-free checkpoint for `method`/`bits` on the streaming tiny
+/// dataset (serving only needs a consistent store + dense params).
+fn make_ckpt(name: &str, method: Method, bits: &str) -> PathBuf {
+    let exp = Experiment {
+        method,
+        bits: PrecisionPlan::parse(bits).unwrap(),
+        model: "tiny".into(),
+        dataset: "synthetic:tiny".into(),
+        n_samples: 1500,
+        use_runtime: false,
+        threads: 1,
+        ..Experiment::default()
+    };
+    let n = registry::schema_for(&exp).unwrap().n_features();
+    let tr = Trainer::new(exp, n).unwrap();
+    let path = tmp(name);
+    tr.save_checkpoint(&path).unwrap();
+    path
+}
+
+/// The exact batches the offline `serve_checkpoint` loop scores: the
+/// held-out split, deterministic order, padded final batch.
+fn val_batches(engine: &InferenceEngine, max: usize) -> Vec<Batch> {
+    let exp = engine.exp().clone();
+    let source = registry::open_source(&exp).unwrap();
+    let stream = registry::val_stream(source.as_ref(), &exp).unwrap();
+    StreamBatcher::new(
+        stream,
+        engine.fields(),
+        engine.batch_size(),
+        Tail::Pad,
+    )
+    .take(max)
+    .map(|r| r.unwrap())
+    .collect()
+}
+
+#[test]
+fn concurrent_clients_are_bit_identical_to_serial() {
+    for (name, method, bits, want_method) in [
+        (
+            "conc_uniform.ckpt",
+            Method::Lpt(RoundingMode::Sr),
+            "8",
+            "LPT(SR)",
+        ),
+        (
+            "conc_mixed.ckpt",
+            Method::Alpt(RoundingMode::Sr),
+            "f0:4,f1:8,default:2",
+            "ALPT(SR)[mixed]",
+        ),
+    ] {
+        let path = make_ckpt(name, method, bits);
+        let engine =
+            Arc::new(InferenceEngine::from_checkpoint(&path).unwrap());
+        assert_eq!(engine.method_name(), want_method);
+        let batches = val_batches(&engine, 4);
+        assert!(!batches.is_empty());
+        // the serial serve_checkpoint path
+        let serial: Vec<Vec<f32>> =
+            batches.iter().map(|b| engine.score(b)).collect();
+        // N threads, each scoring every batch through the one shared
+        // engine, repeatedly — all must match the serial bits
+        let n_threads = 6;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let engine = Arc::clone(&engine);
+                let batches = &batches;
+                let serial = &serial;
+                s.spawn(move || {
+                    for round in 0..3 {
+                        for (i, b) in batches.iter().enumerate() {
+                            let got = engine.score(b);
+                            assert_eq!(
+                                got, serial[i],
+                                "{name}: thread {t} round {round} \
+                                 batch {i} diverged"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+// ------------------------------------------------------------- HTTP
+
+/// One raw HTTP/1.1 request over a fresh connection (Connection: close).
+fn http(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\
+         \r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("status code");
+    let payload = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, payload)
+}
+
+fn start_server(ckpt: &std::path::Path) -> (String, std::thread::JoinHandle<()>) {
+    let mut cfg = ServerConfig::new("127.0.0.1:0", ckpt);
+    cfg.workers = 3;
+    cfg.max_wait = Duration::from_millis(2);
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn record_json(features: &[u32]) -> String {
+    let ids: Vec<String> =
+        features.iter().map(|id| id.to_string()).collect();
+    format!("[{}]", ids.join(","))
+}
+
+#[test]
+fn http_scores_match_offline_and_survives_malformed_bodies() {
+    let path = make_ckpt("http_basic.ckpt", Method::Lpt(RoundingMode::Sr), "8");
+    let engine = InferenceEngine::from_checkpoint(&path).unwrap();
+    let (addr, handle) = start_server(&path);
+
+    // healthz first: the server is up and names the model
+    let (code, body) = http(&addr, "GET", "/healthz", "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"ok\""), "{body}");
+    assert!(body.contains("LPT(SR)"), "{body}");
+
+    // malformed bodies: HTTP 400, worker survives
+    for bad in [
+        "not json at all",
+        "{\"records\": 7}",
+        "[[1,2]]",             // wrong arity for an 8-field model
+        "[[1,2,3,4,5,6,7,-1]]", // negative id
+        "[[1,2,3,4,5,6,7,99999999]]", // id beyond the table
+        "{}",
+        "[]",
+    ] {
+        let (code, body) = http(&addr, "POST", "/score", bad);
+        assert_eq!(code, 400, "body {bad:?} -> {body}");
+        assert!(body.contains("error"), "{body}");
+    }
+
+    // a valid request still scores, and matches the offline engine bits
+    let records: Vec<Vec<u32>> = (0..5u32)
+        .map(|r| (0..engine.fields() as u32).map(|f| (r + f) % 8).collect())
+        .collect();
+    let body_json = format!(
+        "{{\"records\": [{}]}}",
+        records
+            .iter()
+            .map(|r| record_json(r))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let (code, body) = http(&addr, "POST", "/score", &body_json);
+    assert_eq!(code, 200, "{body}");
+    let parsed = Json::parse(&body).unwrap();
+    let logits = parsed.get("logits").unwrap().as_array().unwrap();
+    let probs = parsed.get("probs").unwrap().as_array().unwrap();
+    assert_eq!(logits.len(), records.len());
+    assert_eq!(probs.len(), records.len());
+    for (rec, z) in records.iter().zip(logits) {
+        let want = engine.score_records(rec).unwrap()[0];
+        let got = z.as_f64().unwrap() as f32;
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "HTTP logit diverged from the offline engine"
+        );
+    }
+
+    // stats reflect the traffic
+    let (code, body) = http(&addr, "GET", "/stats", "");
+    assert_eq!(code, 200);
+    let stats = Json::parse(&body).unwrap();
+    assert!(stats.get("requests").unwrap().as_usize().unwrap() >= 1);
+    assert!(stats.get("errors").unwrap().as_usize().unwrap() >= 6);
+    assert!(
+        stats.get("records_scored").unwrap().as_usize().unwrap()
+            >= records.len()
+    );
+    // unknown routes 404
+    let (code, _) = http(&addr, "GET", "/nope", "");
+    assert_eq!(code, 404);
+
+    let (code, _) = http(&addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn reload_hot_swaps_without_dropping_requests() {
+    // v1 uniform checkpoint live, v2 mixed-precision checkpoint swapped
+    // in — zero-downtime across checkpoint format versions
+    let a = make_ckpt("reload_a.ckpt", Method::Lpt(RoundingMode::Sr), "8");
+    let b = make_ckpt(
+        "reload_b.ckpt",
+        Method::Alpt(RoundingMode::Sr),
+        "f0:4,f1:8,default:2",
+    );
+    let engine_b = InferenceEngine::from_checkpoint(&b).unwrap();
+    let (addr, handle) = start_server(&a);
+
+    let record: Vec<u32> =
+        (0..engine_b.fields() as u32).map(|f| f % 8).collect();
+    let body = format!("[{}]", record_json(&record));
+
+    // background clients hammer /score while the swap happens
+    let stop = Arc::new(AtomicBool::new(false));
+    let failures = Arc::new(AtomicUsize::new(0));
+    let scored = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let (stop, failures, scored) = (
+                Arc::clone(&stop),
+                Arc::clone(&failures),
+                Arc::clone(&scored),
+            );
+            let (addr, body) = (addr.clone(), body.clone());
+            s.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let (code, _) = http(&addr, "POST", "/score", &body);
+                    if code == 200 {
+                        scored.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        failures.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+
+        // let the clients get going, then swap under them
+        while scored.load(Ordering::SeqCst) < 5 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let reload_body = format!("{{\"ckpt\": {:?}}}", b.display().to_string());
+        let (code, resp) = http(&addr, "POST", "/reload", &reload_body);
+        assert_eq!(code, 200, "{resp}");
+        assert!(resp.contains("ALPT(SR)[mixed]"), "{resp}");
+        // and keep scoring on the new model for a bit
+        let after_swap = scored.load(Ordering::SeqCst);
+        while scored.load(Ordering::SeqCst) < after_swap + 5 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::SeqCst);
+    });
+    assert_eq!(
+        failures.load(Ordering::SeqCst),
+        0,
+        "requests failed across the hot swap"
+    );
+
+    // the live engine is now B: HTTP scores match engine B's bits
+    let (code, resp) = http(&addr, "POST", "/score", &body);
+    assert_eq!(code, 200);
+    let want = engine_b.score_records(&record).unwrap()[0];
+    let got = Json::parse(&resp)
+        .unwrap()
+        .get("logits")
+        .unwrap()
+        .as_array()
+        .unwrap()[0]
+        .as_f64()
+        .unwrap() as f32;
+    assert_eq!(got.to_bits(), want.to_bits());
+
+    // reload of a missing file: 409, live engine untouched
+    let (code, resp) =
+        http(&addr, "POST", "/reload", "{\"ckpt\": \"/nonexistent.ckpt\"}");
+    assert_eq!(code, 409, "{resp}");
+    let (code, resp) = http(&addr, "GET", "/stats", "");
+    assert_eq!(code, 200);
+    let stats = Json::parse(&resp).unwrap();
+    assert_eq!(stats.get("reloads").unwrap().as_usize().unwrap(), 1);
+
+    let (code, _) = http(&addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().unwrap();
+    std::fs::remove_file(&a).ok();
+    std::fs::remove_file(&b).ok();
+}

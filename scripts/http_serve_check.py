@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""CI client for the `alpt serve --listen` online scoring server.
+
+Stdlib-only. Drives the full online-serve CI leg:
+
+1. wait for `GET /healthz` to come up;
+2. replay the offline-scored requests dumped by
+   `alpt serve --ckpt ... --dump-requests N` (JSON lines of
+   {"features": [...], "logit": ...}) through `POST /score` and assert
+   the HTTP logits match the offline ones;
+3. assert malformed bodies get HTTP 400 without killing the server;
+4. `POST /reload` onto a second checkpoint while a background thread
+   keeps scoring — no request may fail across the swap;
+5. check `GET /stats` counters, then `POST /shutdown`.
+
+Usage:
+  python3 scripts/http_serve_check.py --addr 127.0.0.1:8091 \
+      --requests /tmp/requests.jsonl [--reload-ckpt /tmp/other.ckpt]
+"""
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+TOL = 1e-6
+
+
+def call(addr, method, path, body=None, timeout=30):
+    """One HTTP request; returns (status, parsed-or-raw body)."""
+    data = None if body is None else body.encode()
+    req = urllib.request.Request(
+        f"http://{addr}{path}", data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as e:
+        try:
+            return e.code, json.loads(e.read().decode())
+        except Exception:
+            return e.code, {}
+
+
+def wait_healthy(addr, budget_s=60):
+    deadline = time.time() + budget_s
+    while time.time() < deadline:
+        try:
+            code, body = call(addr, "GET", "/healthz", timeout=5)
+            if code == 200 and body.get("status") == "ok":
+                return body
+        except Exception:
+            pass
+        time.sleep(0.5)
+    sys.exit(f"FAIL: server at {addr} not healthy within {budget_s}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", required=True)
+    ap.add_argument("--requests", required=True,
+                    help="JSON-lines file from `alpt serve --dump-requests`")
+    ap.add_argument("--reload-ckpt", default=None)
+    args = ap.parse_args()
+
+    health = wait_healthy(args.addr)
+    print(f"healthy: {health}")
+
+    requests = [json.loads(line) for line in open(args.requests)
+                if line.strip()]
+    assert requests, "empty requests file"
+
+    # --- offline == online -------------------------------------------
+    records = [r["features"] for r in requests]
+    code, body = call(args.addr, "POST", "/score",
+                      json.dumps({"records": records}))
+    assert code == 200, f"score returned {code}: {body}"
+    logits = body["logits"]
+    assert len(logits) == len(requests), (len(logits), len(requests))
+    worst = max(abs(z - r["logit"]) for z, r in zip(logits, requests))
+    assert worst <= TOL, \
+        f"FAIL: HTTP logits diverge from offline scores (worst {worst})"
+    assert all(0.0 <= p <= 1.0 for p in body["probs"])
+    print(f"scored {len(requests)} records over HTTP; "
+          f"max |http - offline| = {worst:.2e}")
+
+    # --- malformed input ---------------------------------------------
+    for bad in ["this is not json", "{\"records\": 42}", "[[1]]"]:
+        code, body = call(args.addr, "POST", "/score", bad)
+        assert code == 400, f"malformed body {bad!r} -> {code} (want 400)"
+    code, _ = call(args.addr, "POST", "/score",
+                   json.dumps({"records": [records[0]]}))
+    assert code == 200, "server died after malformed input"
+    print("malformed bodies -> 400, server alive")
+
+    # --- hot swap under load -----------------------------------------
+    if args.reload_ckpt:
+        stop = threading.Event()
+        failures, scored = [], []
+
+        def hammer():
+            while not stop.is_set():
+                try:
+                    c, _ = call(args.addr, "POST", "/score",
+                                json.dumps({"records": [records[0]]}),
+                                timeout=30)
+                    (scored if c == 200 else failures).append(c)
+                except Exception as e:  # noqa: BLE001
+                    failures.append(str(e))
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        while len(scored) < 3:
+            time.sleep(0.05)
+        code, body = call(args.addr, "POST", "/reload",
+                          json.dumps({"ckpt": args.reload_ckpt}))
+        assert code == 200, f"reload returned {code}: {body}"
+        print(f"reloaded onto {args.reload_ckpt}: {body}")
+        seen = len(scored)
+        while len(scored) < seen + 3:
+            time.sleep(0.05)
+        stop.set()
+        t.join()
+        assert not failures, \
+            f"FAIL: {len(failures)} requests failed across the hot swap"
+        # still scoring valid logits on the new model
+        code, body = call(args.addr, "POST", "/score",
+                          json.dumps({"records": [records[0]]}))
+        assert code == 200
+        print(f"hot swap dropped 0 of {len(scored)} in-flight requests")
+
+    # --- stats + shutdown --------------------------------------------
+    code, stats = call(args.addr, "GET", "/stats")
+    assert code == 200
+    assert stats["requests"] >= 2, stats
+    assert stats["records_scored"] >= len(requests), stats
+    if args.reload_ckpt:
+        assert stats["reloads"] == 1, stats
+    print(f"stats: {stats}")
+
+    code, _ = call(args.addr, "POST", "/shutdown")
+    assert code == 200
+    print("server shut down cleanly")
+    print("PASS: online-serve leg")
+
+
+if __name__ == "__main__":
+    main()
