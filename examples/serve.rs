@@ -11,9 +11,12 @@
 //! cargo run --release --example serve -- --ckpt examples/fixtures/tiny_lpt8.ckpt
 //! ```
 //!
-//! The committed fixture is a format/serving smoke checkpoint (see
-//! `scripts/make_fixture.py`), so its AUC is chance-level by design. To
-//! serve a *trained* model, produce a real checkpoint first:
+//! The committed fixture is a *trained* checkpoint: it is produced by
+//! `scripts/train_fixture.py`, which rebuilds the tiny dataset's latent
+//! ground truth bit-for-bit from the experiment seed, trains a DCN
+//! against it and quantizes onto the 8-bit LPT grid — so the AUC this
+//! demo reports is a real generalization number, not chance. To serve
+//! your own model, produce a checkpoint the usual way:
 //!
 //! ```bash
 //! cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \

@@ -1,0 +1,263 @@
+//! Env-gated fault-injection for the durability paths.
+//!
+//! A *failpoint* is a named site inside the checkpoint writer, delta
+//! journal appender, or compactor where a test (or the CI
+//! `crash-recovery` job) can make the process fail mid-operation. Sites
+//! are armed through the environment:
+//!
+//! ```text
+//! ALPT_FAILPOINT=ckpt.publish=crash
+//! ALPT_FAILPOINT=ckpt.section.3=truncate,journal.append=bitflip
+//! ```
+//!
+//! Actions:
+//!
+//! * `crash` — abort the process immediately, leaving whatever bytes the
+//!   OS already has (the `kill -9` model);
+//! * `truncate` — write roughly half of the pending bytes, flush them to
+//!   the OS, then abort (the torn-write model);
+//! * `bitflip` — flip one bit of the pending bytes and *continue* (the
+//!   silent-corruption model, for exercising CRC detection).
+//!
+//! The registry is process-global: parsed from the environment once, and
+//! overridable programmatically for in-process tests via
+//! [`set_failpoint`] / [`clear_failpoints`]. Every hook compiles to a
+//! single mutex-free `AtomicBool` load when no failpoint has ever been
+//! armed, so the production write path pays nothing measurable.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Environment variable holding the armed failpoints.
+pub const FAILPOINT_ENV: &str = "ALPT_FAILPOINT";
+
+/// What an armed failpoint does when its site is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Abort the process before the pending bytes are written.
+    Crash,
+    /// Write about half of the pending bytes, flush, then abort.
+    Truncate,
+    /// Flip one bit of the pending bytes and keep running.
+    Bitflip,
+}
+
+impl FailAction {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "crash" => Some(Self::Crash),
+            "truncate" => Some(Self::Truncate),
+            "bitflip" => Some(Self::Bitflip),
+            _ => None,
+        }
+    }
+}
+
+/// Fast-path gate: false until the first failpoint is armed (from the
+/// environment or a test), after which sites consult the registry map.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, FailAction>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, FailAction>>> =
+        OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(spec) = std::env::var(FAILPOINT_ENV) {
+            for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+                match parse_entry(part) {
+                    Some((site, action)) => {
+                        map.insert(site, action);
+                    }
+                    None => eprintln!(
+                        "[failpoint] ignoring malformed {FAILPOINT_ENV} \
+                         entry {part:?} (want <site>=crash|truncate|bitflip)"
+                    ),
+                }
+            }
+        }
+        if !map.is_empty() {
+            ARMED.store(true, Ordering::SeqCst);
+        }
+        Mutex::new(map)
+    })
+}
+
+fn parse_entry(part: &str) -> Option<(String, FailAction)> {
+    let (site, action) = part.trim().split_once('=')?;
+    let site = site.trim();
+    if site.is_empty() {
+        return None;
+    }
+    Some((site.to_string(), FailAction::parse(action.trim())?))
+}
+
+/// Arm `site` programmatically (tests). Overrides any env-armed action.
+pub fn set_failpoint(site: &str, action: FailAction) {
+    registry().lock().unwrap().insert(site.to_string(), action);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm every failpoint (tests). The fast-path gate stays armed so
+/// concurrently-running tests keep consulting the map.
+pub fn clear_failpoints() {
+    registry().lock().unwrap().clear();
+}
+
+/// The action armed at `site`, if any. Forces env parsing on first use.
+pub fn armed_action(site: &str) -> Option<FailAction> {
+    if !ARMED.load(Ordering::SeqCst) {
+        // cheap gate; still touch the registry once so env arming works
+        // even before any set_failpoint call
+        registry();
+        if !ARMED.load(Ordering::SeqCst) {
+            return None;
+        }
+    }
+    registry().lock().unwrap().get(site).copied()
+}
+
+/// Abort the process the way a `kill -9` would: no unwinding, no
+/// destructors, no buffered-writer flushes.
+fn die(site: &str) -> ! {
+    eprintln!("[failpoint] {site}: aborting process");
+    std::process::abort();
+}
+
+/// Byte sink a failpoint can tear mid-write. `write` appends bytes at
+/// the current position; `sync` must push them through OS buffers so a
+/// torn prefix is actually on disk when the process dies.
+pub trait FailSink {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()>;
+    fn sync(&mut self) -> std::io::Result<()>;
+}
+
+impl FailSink for std::io::BufWriter<std::fs::File> {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        std::io::Write::write_all(self, bytes)
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        std::io::Write::flush(self)?;
+        self.get_ref().sync_data()
+    }
+}
+
+impl FailSink for std::fs::File {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        std::io::Write::write_all(self, bytes)
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.sync_data()
+    }
+}
+
+/// Fire `site` against `pending`, the bytes about to be written.
+///
+/// * unarmed → write `pending` into `sink` and return `Ok`;
+/// * `crash` → abort before writing;
+/// * `truncate` → write the first half, sync, abort;
+/// * `bitflip` → flip one deterministic bit and write the damaged copy.
+pub fn write_through(
+    site: &str,
+    pending: &[u8],
+    sink: &mut dyn FailSink,
+) -> std::io::Result<()> {
+    match armed_action(site) {
+        None => sink.write(pending),
+        Some(FailAction::Crash) => die(site),
+        Some(FailAction::Truncate) => {
+            let half = pending.len() / 2;
+            let _ = sink.write(&pending[..half]);
+            let _ = sink.sync();
+            die(site)
+        }
+        Some(FailAction::Bitflip) => {
+            if pending.is_empty() {
+                return sink.write(pending);
+            }
+            let mut damaged = pending.to_vec();
+            // deterministic target: middle byte, low bit
+            let at = damaged.len() / 2;
+            damaged[at] ^= 1;
+            eprintln!(
+                "[failpoint] {site}: flipped bit 0 of byte {at}/{}",
+                damaged.len()
+            );
+            sink.write(&damaged)
+        }
+    }
+}
+
+/// Fire a write-free `site` (e.g. right after a rename): `crash` and
+/// `truncate` abort, `bitflip` is a no-op.
+pub fn hit(site: &str) {
+    match armed_action(site) {
+        None | Some(FailAction::Bitflip) => {}
+        Some(FailAction::Crash) | Some(FailAction::Truncate) => die(site),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct VecSink(Vec<u8>);
+
+    impl FailSink for VecSink {
+        fn write(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+            self.0.extend_from_slice(bytes);
+            Ok(())
+        }
+
+        fn sync(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn parses_entries() {
+        assert_eq!(
+            parse_entry("ckpt.publish=crash"),
+            Some(("ckpt.publish".into(), FailAction::Crash))
+        );
+        assert_eq!(
+            parse_entry(" journal.append = truncate "),
+            Some(("journal.append".into(), FailAction::Truncate))
+        );
+        assert_eq!(
+            parse_entry("x=bitflip"),
+            Some(("x".into(), FailAction::Bitflip))
+        );
+        assert_eq!(parse_entry("no-action"), None);
+        assert_eq!(parse_entry("=crash"), None);
+        assert_eq!(parse_entry("x=explode"), None);
+    }
+
+    #[test]
+    fn bitflip_damages_exactly_one_bit_and_continues() {
+        let site = "test.unit.bitflip";
+        set_failpoint(site, FailAction::Bitflip);
+        let pending = [0u8; 8];
+        let mut sink = VecSink(Vec::new());
+        write_through(site, &pending, &mut sink).unwrap();
+        assert_eq!(sink.0.len(), 8);
+        let flipped: u32 = sink
+            .0
+            .iter()
+            .zip(&pending)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1);
+        registry().lock().unwrap().remove(site);
+    }
+
+    #[test]
+    fn unarmed_sites_write_verbatim() {
+        let mut sink = VecSink(Vec::new());
+        write_through("test.unit.unarmed", &[1, 2, 3], &mut sink).unwrap();
+        assert_eq!(sink.0, vec![1, 2, 3]);
+        hit("test.unit.unarmed"); // must not abort
+    }
+}

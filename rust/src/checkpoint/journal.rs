@@ -1,0 +1,836 @@
+//! CRC-chained delta journal: continuous checkpointing between anchors.
+//!
+//! A full checkpoint (the *anchor*) is expensive to rewrite every
+//! `--save-every` steps, but between saves only the rows the sharded
+//! update path actually touched have changed — and ALPT persists rows as
+//! packed int codes, so a delta of a few thousand dirty rows is tiny
+//! even next to an 8-bit table. The journal makes those deltas durable:
+//!
+//! ```text
+//! <ckpt>            the anchor — a complete checkpoint file
+//! <ckpt>.journal    header + append-only chain of delta records
+//! ```
+//!
+//! Journal layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"ALPTJRNL"
+//! 8       4     u32    journal format version (1)
+//! 12      4     u32    anchor id — CRC-32 of the anchor's section CRCs
+//! 16      8     u64    anchor step — the store step counter at anchor
+//! 24      ...   records, back to back
+//! ```
+//!
+//! Each record:
+//!
+//! ```text
+//! +0      4     u32    marker b"DELT"
+//! +4      8     u64    sequence number (1-based, dense)
+//! +12     4     u32    previous link's payload CRC (record 1: anchor id)
+//! +16     8     u64    payload length in bytes
+//! +24     4     u32    CRC-32 of the payload
+//! +28     len   payload (a serialized [`Delta`])
+//! ```
+//!
+//! The chain is what makes recovery decisive. Every record names its
+//! predecessor by CRC, record 1 names the anchor by its id, and the
+//! anchor id is recomputable from the checkpoint's own section table
+//! ([`super::Checkpoint::anchor_id`]) — so a journal can never be
+//! replayed onto the wrong anchor, records can never apply out of
+//! order, and a single flipped bit anywhere in the chain is caught
+//! before any payload byte is interpreted.
+//!
+//! Salvage semantics: a crash during an append leaves a *prefix* of the
+//! final record (the appender writes each record with one `write` call
+//! and fsyncs before acknowledging). Readers therefore treat an
+//! incomplete trailing record — header cut short, or payload shorter
+//! than its declared length — as torn and ignore it, returning the
+//! valid prefix of the chain instead of refusing the whole run. Damage
+//! *inside* a complete record (bad marker, CRC mismatch, broken chain
+//! link, out-of-order sequence) is never salvaged: that is corruption,
+//! not a crash artifact, and loading errors out with the record named.
+//!
+//! A journal whose anchor fields match neither expectation is *stale*
+//! (left behind by a pre-compaction anchor when the process died
+//! between publishing the new anchor and resetting the journal — the
+//! `compact.reset` failpoint window); it is ignored, because the fresh
+//! anchor already contains everything the old chain held. Staleness
+//! requires both a different anchor id *and* an older anchor step;
+//! any other mismatch is corruption and errors precisely.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::embedding::EmbeddingStore;
+
+use super::failpoint;
+use super::format::{crc32, put_u32, put_u64, take_u32, take_u64};
+use super::writer::sync_parent_dir;
+
+/// Journal file magic: 8 bytes at offset 0.
+pub const JOURNAL_MAGIC: &[u8; 8] = b"ALPTJRNL";
+
+/// Journal format version.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Fixed byte size of the journal header.
+pub const JOURNAL_HEADER_BYTES: usize = 24;
+
+/// Fixed byte size of a record header (marker + seq + prev CRC + len +
+/// payload CRC).
+pub const RECORD_HEADER_BYTES: usize = 28;
+
+/// Record marker, b"DELT" read little-endian.
+pub const RECORD_MARKER: u32 = u32::from_le_bytes(*b"DELT");
+
+/// The journal path for a checkpoint at `path`.
+pub fn journal_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".journal");
+    PathBuf::from(os)
+}
+
+// ---------------------------------------------------------------- payload
+
+/// One delta: everything that changed since the previous link — the
+/// dirty embedding rows (raw packed bytes, verbatim) plus the small
+/// trainer state that changes every step. Applying the full chain onto
+/// its anchor reproduces a full checkpoint of the same moment bit for
+/// bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delta {
+    /// Store update-step counter after the steps this delta covers.
+    pub store_step: u64,
+    /// Dirty row ids, strictly ascending.
+    pub ids: Vec<u32>,
+    /// Concatenated raw row payloads in `ids` order. Row widths are not
+    /// stored: they are a function of the store geometry, which the
+    /// anchor pins down.
+    pub rows: Vec<u8>,
+    /// Concatenated per-row aux scalars (Δ/α) in `ids` order; empty for
+    /// stores without aux params.
+    pub aux: Vec<f32>,
+    /// The full dense-parameter vector (small next to the table).
+    pub dense: Vec<f32>,
+    /// Raw optimizer state, in the `Optimizer` section's encoding.
+    pub opt: Vec<u8>,
+    /// Trainer generator states, as in the `Rng` section (4 × u64).
+    pub rng: [u64; 4],
+    /// Training progress, as in the `Progress` section (6 × u64).
+    pub progress: [u64; 6],
+}
+
+impl Delta {
+    /// Serialize to the journal payload encoding.
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(
+            self.ids.windows(2).all(|w| w[0] < w[1]),
+            "delta ids must be strictly ascending"
+        );
+        let mut out = Vec::with_capacity(
+            8 + 8
+                + self.ids.len() * 4
+                + 8
+                + self.aux.len() * 4
+                + 8
+                + self.dense.len() * 4
+                + 8
+                + self.opt.len()
+                + 32
+                + 48
+                + 8
+                + self.rows.len(),
+        );
+        put_u64(&mut out, self.store_step);
+        put_u64(&mut out, self.ids.len() as u64);
+        for &id in &self.ids {
+            put_u32(&mut out, id);
+        }
+        put_u64(&mut out, self.aux.len() as u64);
+        for &x in &self.aux {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        put_u64(&mut out, self.dense.len() as u64);
+        for &x in &self.dense {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        put_u64(&mut out, self.opt.len() as u64);
+        out.extend_from_slice(&self.opt);
+        for &v in &self.rng {
+            put_u64(&mut out, v);
+        }
+        for &v in &self.progress {
+            put_u64(&mut out, v);
+        }
+        put_u64(&mut out, self.rows.len() as u64);
+        out.extend_from_slice(&self.rows);
+        out
+    }
+
+    /// Exact inverse of [`Delta::encode`]. The payload CRC has already
+    /// been checked by the chain reader, so a structural error here
+    /// means a writer bug or a hand-crafted file — it is never salvaged.
+    pub fn decode(src: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let store_step = take_u64(src, &mut pos)?;
+        let n = take_u64(src, &mut pos)? as usize;
+        ensure!(
+            n <= (src.len() - pos) / 4,
+            "delta claims {n} dirty rows, payload too short"
+        );
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(take_u32(src, &mut pos)?);
+        }
+        ensure!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "delta ids are not strictly ascending"
+        );
+        let take_f32s = |pos: &mut usize| -> Result<Vec<f32>> {
+            let len = take_u64(src, pos)? as usize;
+            ensure!(
+                len <= (src.len() - *pos) / 4,
+                "delta f32 run of {len} values overruns the payload"
+            );
+            let out = src[*pos..*pos + len * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            *pos += len * 4;
+            Ok(out)
+        };
+        let aux = take_f32s(&mut pos)?;
+        let dense = take_f32s(&mut pos)?;
+        let opt_len = take_u64(src, &mut pos)? as usize;
+        ensure!(
+            opt_len <= src.len() - pos,
+            "delta optimizer blob of {opt_len} bytes overruns the payload"
+        );
+        let opt = src[pos..pos + opt_len].to_vec();
+        pos += opt_len;
+        let mut rng = [0u64; 4];
+        for v in &mut rng {
+            *v = take_u64(src, &mut pos)?;
+        }
+        let mut progress = [0u64; 6];
+        for v in &mut progress {
+            *v = take_u64(src, &mut pos)?;
+        }
+        let rows_len = take_u64(src, &mut pos)? as usize;
+        ensure!(
+            rows_len <= src.len() - pos,
+            "delta rows blob of {rows_len} bytes overruns the payload"
+        );
+        let rows = src[pos..pos + rows_len].to_vec();
+        pos += rows_len;
+        ensure!(
+            pos == src.len(),
+            "delta payload has {} trailing bytes",
+            src.len() - pos
+        );
+        Ok(Self { store_step, ids, rows, aux, dense, opt, rng, progress })
+    }
+}
+
+// ------------------------------------------------------- row capture/apply
+
+/// Serialize the rows and aux scalars for `ids` (strictly ascending)
+/// out of `store`, in the journal's concatenated encoding. Grouped
+/// mixed-precision stores serialize each row through its own group's
+/// sub-store, so widths vary per row exactly as the anchor's format-v2
+/// layout does.
+pub fn capture_rows(
+    store: &dyn EmbeddingStore,
+    ids: &[u32],
+) -> Result<(Vec<u8>, Vec<f32>)> {
+    debug_assert!(ids.windows(2).all(|w| w[0] < w[1]));
+    let mut rows = Vec::new();
+    let mut aux = Vec::new();
+    if let Some(gs) = store.as_grouped() {
+        let per_row: Vec<usize> = (0..gs.n_groups())
+            .map(|g| aux_per_row(gs.group_store(g), gs.group_rows(g)))
+            .collect::<Result<_>>()?;
+        for &id in ids {
+            let (g, local) = gs.row_location(id);
+            let sub = gs.group_store(g);
+            let rb = sub.ckpt_row_bytes().ok_or_else(|| {
+                anyhow!("group {g} does not support checkpointing")
+            })?;
+            let at = rows.len();
+            rows.resize(at + rb, 0);
+            sub.save_rows(local, &mut rows[at..])?;
+            let p = per_row[g];
+            if p > 0 {
+                let a = sub.aux_params();
+                aux.extend_from_slice(&a[local * p..(local + 1) * p]);
+            }
+        }
+        return Ok((rows, aux));
+    }
+    let rb = store.ckpt_row_bytes().ok_or_else(|| {
+        anyhow!("{} does not support checkpointing", store.method_name())
+    })?;
+    let p = aux_per_row(store, store.n_features())?;
+    rows.resize(ids.len() * rb, 0);
+    for (i, &id) in ids.iter().enumerate() {
+        store.save_rows(id as usize, &mut rows[i * rb..(i + 1) * rb])?;
+        if p > 0 {
+            let a = store.aux_params();
+            let lo = id as usize * p;
+            aux.extend_from_slice(&a[lo..lo + p]);
+        }
+    }
+    Ok((rows, aux))
+}
+
+/// Aux scalars per row, derived from the full aux vector (0 when the
+/// store has none).
+fn aux_per_row(store: &dyn EmbeddingStore, rows: usize) -> Result<usize> {
+    let len = store.aux_params().len();
+    if len == 0 {
+        return Ok(0);
+    }
+    ensure!(
+        rows > 0 && len % rows == 0,
+        "{}: {len} aux params do not divide {rows} rows",
+        store.method_name()
+    );
+    Ok(len / rows)
+}
+
+/// Apply one delta's dirty rows, aux scalars and step counter onto
+/// `store`. Geometry is validated — ids in bounds, blob lengths exactly
+/// accounted for — before any row is touched.
+pub fn apply_rows(store: &mut dyn EmbeddingStore, d: &Delta) -> Result<()> {
+    let n = store.n_features();
+    if let Some(&last) = d.ids.last() {
+        ensure!(
+            (last as usize) < n,
+            "delta touches row {last}, the store has {n}"
+        );
+    }
+    ensure!(
+        d.ids.windows(2).all(|w| w[0] < w[1]),
+        "delta ids are not strictly ascending"
+    );
+    if store.as_grouped().is_some() {
+        return apply_rows_grouped(store, d);
+    }
+    let rb = store.ckpt_row_bytes().ok_or_else(|| {
+        anyhow!("{} does not support checkpointing", store.method_name())
+    })?;
+    let p = aux_per_row(store, n)?;
+    ensure!(
+        d.rows.len() == d.ids.len() * rb,
+        "delta rows blob is {} bytes for {} rows of {rb}",
+        d.rows.len(),
+        d.ids.len()
+    );
+    ensure!(
+        d.aux.len() == d.ids.len() * p,
+        "delta aux run is {} values for {} rows of {p}",
+        d.aux.len(),
+        d.ids.len()
+    );
+    for (i, &id) in d.ids.iter().enumerate() {
+        store.load_rows(id as usize, &d.rows[i * rb..(i + 1) * rb])?;
+    }
+    if p > 0 {
+        let mut full = store.aux_params().to_vec();
+        for (i, &id) in d.ids.iter().enumerate() {
+            full[id as usize * p..(id as usize + 1) * p]
+                .copy_from_slice(&d.aux[i * p..(i + 1) * p]);
+        }
+        store.load_aux_params(&full)?;
+    }
+    store.set_step_counter(d.store_step);
+    Ok(())
+}
+
+fn apply_rows_grouped(
+    store: &mut dyn EmbeddingStore,
+    d: &Delta,
+) -> Result<()> {
+    let gs = store.as_grouped_mut().expect("checked by apply_rows");
+    // resolve and validate the whole layout before mutating anything
+    let per_row: Vec<usize> = (0..gs.n_groups())
+        .map(|g| aux_per_row(gs.group_store(g), gs.group_rows(g)))
+        .collect::<Result<_>>()?;
+    let locs: Vec<(usize, usize)> =
+        d.ids.iter().map(|&id| gs.row_location(id)).collect();
+    let (mut rows_need, mut aux_need) = (0usize, 0usize);
+    for &(g, _) in &locs {
+        rows_need += gs.group_store(g).ckpt_row_bytes().ok_or_else(
+            || anyhow!("group {g} does not support checkpointing"),
+        )?;
+        aux_need += per_row[g];
+    }
+    ensure!(
+        d.rows.len() == rows_need,
+        "delta rows blob is {} bytes, the grouped layout needs {rows_need}",
+        d.rows.len()
+    );
+    ensure!(
+        d.aux.len() == aux_need,
+        "delta aux run is {} values, the grouped layout needs {aux_need}",
+        d.aux.len()
+    );
+    let mut row_at = 0usize;
+    let mut aux_at = 0usize;
+    // groups whose aux vectors were patched, rewritten once at the end
+    let mut patched: Vec<Option<Vec<f32>>> = vec![None; gs.n_groups()];
+    for &(g, local) in &locs {
+        let rb = gs.group_store(g).ckpt_row_bytes().unwrap();
+        gs.group_store_mut(g)
+            .load_rows(local, &d.rows[row_at..row_at + rb])?;
+        row_at += rb;
+        let p = per_row[g];
+        if p > 0 {
+            let full = patched[g].get_or_insert_with(|| {
+                gs.group_store(g).aux_params().to_vec()
+            });
+            full[local * p..(local + 1) * p]
+                .copy_from_slice(&d.aux[aux_at..aux_at + p]);
+            aux_at += p;
+        }
+    }
+    for (g, full) in patched.into_iter().enumerate() {
+        if let Some(full) = full {
+            gs.group_store_mut(g).load_aux_params(&full)?;
+        }
+    }
+    gs.set_step_counter(d.store_step);
+    Ok(())
+}
+
+// --------------------------------------------------------------- appender
+
+/// Appends CRC-chained delta records to `<ckpt>.journal`. Creating a
+/// writer truncates any previous journal — the caller does so right
+/// after publishing the anchor the new chain hangs off.
+pub struct JournalWriter {
+    file: File,
+    seq: u64,
+    prev_crc: u32,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal for the anchor at `ckpt_path` (truncating
+    /// any previous one), fsyncing the header and the directory before
+    /// returning. Failpoint site: `journal.reset`.
+    pub fn create(
+        ckpt_path: &Path,
+        anchor_id: u32,
+        anchor_step: u64,
+    ) -> Result<Self> {
+        let path = journal_path(ckpt_path);
+        let mut file = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut header = Vec::with_capacity(JOURNAL_HEADER_BYTES);
+        header.extend_from_slice(JOURNAL_MAGIC);
+        put_u32(&mut header, JOURNAL_VERSION);
+        put_u32(&mut header, anchor_id);
+        put_u64(&mut header, anchor_step);
+        failpoint::write_through("journal.reset", &header, &mut file)?;
+        file.sync_data()
+            .with_context(|| format!("fsyncing {}", path.display()))?;
+        sync_parent_dir(&path);
+        Ok(Self { file, seq: 0, prev_crc: anchor_id })
+    }
+
+    /// Append one delta; the record is written in a single system write
+    /// and fsynced before this returns, so a crash at any instant leaves
+    /// at most a torn *tail*, never a torn middle. Returns the record's
+    /// sequence number. Failpoint site: `journal.append`.
+    pub fn append(&mut self, delta: &Delta) -> Result<u64> {
+        let payload = delta.encode();
+        let payload_crc = crc32(&payload);
+        let mut pending =
+            Vec::with_capacity(RECORD_HEADER_BYTES + payload.len());
+        put_u32(&mut pending, RECORD_MARKER);
+        put_u64(&mut pending, self.seq + 1);
+        put_u32(&mut pending, self.prev_crc);
+        put_u64(&mut pending, payload.len() as u64);
+        put_u32(&mut pending, payload_crc);
+        pending.extend_from_slice(&payload);
+        failpoint::write_through(
+            "journal.append",
+            &pending,
+            &mut self.file,
+        )?;
+        self.file.sync_data().context("fsyncing journal append")?;
+        self.seq += 1;
+        self.prev_crc = payload_crc;
+        Ok(self.seq)
+    }
+
+    /// Records appended so far on this chain.
+    pub fn len(&self) -> u64 {
+        self.seq
+    }
+
+    /// True until the first append.
+    pub fn is_empty(&self) -> bool {
+        self.seq == 0
+    }
+}
+
+// ----------------------------------------------------------------- reader
+
+/// A validated delta chain, ready to fold onto its anchor.
+pub struct DeltaChain {
+    /// The chained deltas, in sequence order.
+    pub deltas: Vec<Delta>,
+    /// Bytes of torn trailing record that were salvaged away (0 for a
+    /// cleanly closed journal).
+    pub salvaged_bytes: u64,
+}
+
+/// Read and validate the delta chain next to `ckpt_path`, where the
+/// anchor's id is `anchor_id` and its store step `anchor_step` (both
+/// recomputable from the checkpoint itself).
+///
+/// Returns `None` when there is nothing to fold: no journal, a torn
+/// header (the process died inside the reset that follows a fresh
+/// anchor), or a stale journal left behind by a superseded anchor.
+/// Everything else either validates into a [`DeltaChain`] — possibly
+/// with a torn tail salvaged by ignoring it — or errors precisely.
+pub fn read_chain(
+    ckpt_path: &Path,
+    anchor_id: u32,
+    anchor_step: u64,
+) -> Result<Option<DeltaChain>> {
+    let path = journal_path(ckpt_path);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading {}", path.display()))
+        }
+    };
+    if bytes.len() < JOURNAL_HEADER_BYTES {
+        // torn header: only a crash inside the journal reset leaves
+        // this, and the anchor published just before already holds
+        // everything the previous chain did
+        return Ok(None);
+    }
+    ensure!(
+        &bytes[..8] == JOURNAL_MAGIC,
+        "{} is not a delta journal (bad magic)",
+        path.display()
+    );
+    let mut pos = 8usize;
+    let version = take_u32(&bytes, &mut pos)?;
+    ensure!(
+        version == JOURNAL_VERSION,
+        "unsupported journal version {version} (expected \
+         {JOURNAL_VERSION})"
+    );
+    let file_anchor = take_u32(&bytes, &mut pos)?;
+    let file_step = take_u64(&bytes, &mut pos)?;
+    if file_anchor != anchor_id && file_step < anchor_step {
+        // stale: chained off an earlier anchor the current one already
+        // folded in (died between compact-publish and journal reset)
+        return Ok(None);
+    }
+    ensure!(
+        file_anchor == anchor_id,
+        "journal anchors {file_anchor:#010x}, the checkpoint is \
+         {anchor_id:#010x}: file is corrupt"
+    );
+    ensure!(
+        file_step == anchor_step,
+        "journal anchor step {file_step} disagrees with the \
+         checkpoint's {anchor_step}: file is corrupt"
+    );
+
+    let mut deltas = Vec::new();
+    let mut prev_crc = anchor_id;
+    let mut next_seq = 1u64;
+    let mut salvaged = 0u64;
+    while pos < bytes.len() {
+        let remaining = bytes.len() - pos;
+        if remaining < RECORD_HEADER_BYTES {
+            salvaged = remaining as u64; // torn record header
+            break;
+        }
+        let marker = take_u32(&bytes, &mut pos)?;
+        ensure!(
+            marker == RECORD_MARKER,
+            "journal record {next_seq}: bad marker {marker:#010x}: \
+             file is corrupt"
+        );
+        let seq = take_u64(&bytes, &mut pos)?;
+        ensure!(
+            seq == next_seq,
+            "journal record out of order: found seq {seq}, expected \
+             {next_seq}"
+        );
+        let link = take_u32(&bytes, &mut pos)?;
+        ensure!(
+            link == prev_crc,
+            "journal record {seq}: chain break (links {link:#010x}, \
+             previous payload is {prev_crc:#010x})"
+        );
+        let len = take_u64(&bytes, &mut pos)? as usize;
+        if len > bytes.len() - pos - 4 {
+            // payload cut short: a torn append tail, by construction
+            // the last bytes of the file — salvage by ignoring it
+            salvaged = (remaining) as u64;
+            break;
+        }
+        let crc_want = take_u32(&bytes, &mut pos)?;
+        let payload = &bytes[pos..pos + len];
+        let crc_got = crc32(payload);
+        ensure!(
+            crc_got == crc_want,
+            "journal record {seq}: payload CRC mismatch (stored \
+             {crc_want:#010x}, computed {crc_got:#010x}): file is \
+             corrupt"
+        );
+        let delta = Delta::decode(payload).with_context(|| {
+            format!("decoding journal record {seq}")
+        })?;
+        deltas.push(delta);
+        pos += len;
+        prev_crc = crc_want;
+        next_seq += 1;
+    }
+    Ok(Some(DeltaChain { deltas, salvaged_bytes: salvaged }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Experiment, Method, PrecisionPlan, RoundingMode};
+    use crate::embedding::build_store;
+    use crate::util::rng::Pcg32;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("alpt_journal_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_delta(k: u64) -> Delta {
+        Delta {
+            store_step: 10 + k,
+            ids: vec![1, 5, 9 + k as u32],
+            rows: vec![k as u8; 18],
+            aux: vec![0.5 + k as f32, -1.25],
+            dense: vec![1.0, 2.0, 3.0 * k as f32],
+            opt: vec![7u8; 12],
+            rng: [k, k + 1, k + 2, k + 3],
+            progress: [1, 2, 3, 4, 5, 6 + k],
+        }
+    }
+
+    #[test]
+    fn delta_payload_roundtrips() {
+        let d = sample_delta(3);
+        let back = Delta::decode(&d.encode()).unwrap();
+        assert_eq!(back, d);
+        // empty delta too
+        let empty = Delta {
+            store_step: 0,
+            ids: vec![],
+            rows: vec![],
+            aux: vec![],
+            dense: vec![],
+            opt: vec![],
+            rng: [0; 4],
+            progress: [0; 6],
+        };
+        assert_eq!(Delta::decode(&empty.encode()).unwrap(), empty);
+        // trailing garbage is rejected
+        let mut enc = d.encode();
+        enc.push(0);
+        assert!(Delta::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn chain_roundtrips_and_validates() {
+        let ckpt = tmp("chain.ckpt");
+        let (anchor, step) = (0xABCD_1234u32, 40u64);
+        let mut w = JournalWriter::create(&ckpt, anchor, step).unwrap();
+        let deltas: Vec<Delta> = (0..3).map(sample_delta).collect();
+        for (i, d) in deltas.iter().enumerate() {
+            assert_eq!(w.append(d).unwrap(), i as u64 + 1);
+        }
+        drop(w);
+
+        let chain = read_chain(&ckpt, anchor, step).unwrap().unwrap();
+        assert_eq!(chain.salvaged_bytes, 0);
+        assert_eq!(chain.deltas, deltas);
+
+        // no journal at all
+        assert!(read_chain(&tmp("nope.ckpt"), 1, 1).unwrap().is_none());
+
+        // stale journal (older anchor): ignored
+        assert!(read_chain(&ckpt, anchor ^ 1, step + 5)
+            .unwrap()
+            .is_none());
+        // same step but different anchor: corrupt, not stale
+        assert!(read_chain(&ckpt, anchor ^ 1, step).is_err());
+        // same anchor, different step: corrupt
+        assert!(read_chain(&ckpt, anchor, step + 1).is_err());
+        std::fs::remove_file(journal_path(&ckpt)).ok();
+    }
+
+    #[test]
+    fn torn_tail_salvages_and_mid_chain_damage_errors() {
+        let ckpt = tmp("torn.ckpt");
+        let (anchor, step) = (77u32, 5u64);
+        let mut w = JournalWriter::create(&ckpt, anchor, step).unwrap();
+        let deltas: Vec<Delta> = (0..3).map(sample_delta).collect();
+        for d in &deltas {
+            w.append(d).unwrap();
+        }
+        drop(w);
+        let jp = journal_path(&ckpt);
+        let full = std::fs::read(&jp).unwrap();
+        let rec_bytes = RECORD_HEADER_BYTES
+            + deltas[0].encode().len();
+        let two_and_a_bit = JOURNAL_HEADER_BYTES + 2 * rec_bytes
+            + deltas[2].encode().len() / 2;
+
+        // torn tail (mid-record truncation): first two records salvage
+        std::fs::write(&jp, &full[..two_and_a_bit]).unwrap();
+        let chain = read_chain(&ckpt, anchor, step).unwrap().unwrap();
+        assert!(chain.salvaged_bytes > 0);
+        assert_eq!(chain.deltas, deltas[..2]);
+
+        // truncation inside a record *header* also salvages
+        std::fs::write(
+            &jp,
+            &full[..JOURNAL_HEADER_BYTES + rec_bytes + 9],
+        )
+        .unwrap();
+        let chain = read_chain(&ckpt, anchor, step).unwrap().unwrap();
+        assert_eq!(chain.deltas, deltas[..1]);
+
+        // torn journal header: nothing to fold, not an error
+        std::fs::write(&jp, &full[..JOURNAL_HEADER_BYTES / 2]).unwrap();
+        assert!(read_chain(&ckpt, anchor, step).unwrap().is_none());
+
+        // a flipped bit in a complete record is corruption, not a tear
+        for at in [
+            JOURNAL_HEADER_BYTES + 1,              // record 1 marker
+            JOURNAL_HEADER_BYTES + rec_bytes / 2,  // record 1 payload
+            JOURNAL_HEADER_BYTES + rec_bytes + 12, // record 2 prev link
+        ] {
+            let mut bad = full.clone();
+            bad[at] ^= 1;
+            std::fs::write(&jp, &bad).unwrap();
+            let err = read_chain(&ckpt, anchor, step);
+            assert!(err.is_err(), "flip at byte {at} was not caught");
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(
+                msg.contains("corrupt")
+                    || msg.contains("chain break")
+                    || msg.contains("out of order"),
+                "imprecise error for flip at {at}: {msg}"
+            );
+        }
+        std::fs::remove_file(&jp).ok();
+    }
+
+    #[test]
+    fn capture_apply_roundtrips_uniform_and_grouped() {
+        // stores A (source of truth) and B (stale copy) built from
+        // different seeds: applying A's captured rows onto B must make
+        // the touched rows — and only those — match A.
+        let cases: Vec<Experiment> = vec![
+            Experiment {
+                method: Method::Alpt(RoundingMode::Sr),
+                bits: PrecisionPlan::uniform(8),
+                model: "tiny".into(),
+                use_runtime: false,
+                threads: 1,
+                ..Experiment::default()
+            },
+            Experiment {
+                method: Method::Alpt(RoundingMode::Sr),
+                bits: PrecisionPlan::parse("f0:4,f1:8,default:2").unwrap(),
+                dataset: "tiny".into(),
+                model: "tiny".into(),
+                use_runtime: false,
+                threads: 1,
+                ..Experiment::default()
+            },
+        ];
+        for exp in cases {
+            let n = crate::data::registry::schema_for(&exp)
+                .unwrap()
+                .n_features();
+            let d = 4;
+            let a =
+                build_store(&exp, n, d, &mut Pcg32::seeded(1)).unwrap();
+            let mut b =
+                build_store(&exp, n, d, &mut Pcg32::seeded(2)).unwrap();
+            let ids: Vec<u32> =
+                (0..n as u32).filter(|i| i % 7 == 2).collect();
+            let (rows, aux) = capture_rows(a.as_ref(), &ids).unwrap();
+            let delta = Delta {
+                store_step: 123,
+                ids: ids.clone(),
+                rows,
+                aux,
+                dense: vec![],
+                opt: vec![],
+                rng: [0; 4],
+                progress: [0; 6],
+            };
+            apply_rows(b.as_mut(), &delta).unwrap();
+            assert_eq!(b.step_counter(), 123);
+            let mut wa = vec![0.0f32; ids.len() * d];
+            let mut wb = wa.clone();
+            a.gather(&ids, &mut wa);
+            b.gather(&ids, &mut wb);
+            assert_eq!(wa, wb, "{:?}: touched rows diverged", exp.bits);
+            // an untouched row keeps B's own value
+            let (rows_a, _) = capture_rows(a.as_ref(), &[0]).unwrap();
+            let (rows_b, _) = capture_rows(b.as_ref(), &[0]).unwrap();
+            assert_ne!(rows_a, rows_b, "untouched row was overwritten");
+        }
+    }
+
+    #[test]
+    fn apply_validates_before_mutating() {
+        let exp = Experiment {
+            method: Method::Lpt(RoundingMode::Sr),
+            bits: PrecisionPlan::uniform(8),
+            model: "tiny".into(),
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let mut store =
+            build_store(&exp, 50, 4, &mut Pcg32::seeded(3)).unwrap();
+        let (before, _) =
+            capture_rows(store.as_ref(), &(0..50).collect::<Vec<_>>())
+                .unwrap();
+        let bad = Delta {
+            store_step: 9,
+            ids: vec![10, 99], // 99 is out of bounds
+            rows: vec![0u8; 8],
+            aux: vec![],
+            dense: vec![],
+            opt: vec![],
+            rng: [0; 4],
+            progress: [0; 6],
+        };
+        assert!(apply_rows(store.as_mut(), &bad).is_err());
+        let (after, _) =
+            capture_rows(store.as_ref(), &(0..50).collect::<Vec<_>>())
+                .unwrap();
+        assert_eq!(before, after, "failed apply mutated the store");
+        assert_ne!(store.step_counter(), 9);
+    }
+}

@@ -25,13 +25,16 @@
 //! uninterrupted run would have drawn. Save → load → save produces
 //! byte-identical files.
 
+pub mod failpoint;
 pub mod format;
+pub mod journal;
 pub mod reader;
 pub mod writer;
 
 pub use format::SectionKind;
+pub use journal::{journal_path, Delta, DeltaChain, JournalWriter};
 pub use reader::{Checkpoint, Section};
-pub use writer::CheckpointWriter;
+pub use writer::{tmp_path, CheckpointWriter};
 
 use std::path::Path;
 
@@ -65,13 +68,13 @@ pub fn writer_for_store(
 }
 
 /// Serialize `store` (rows + aux scalars + metadata echoing `exp`) to
-/// `path`. Fails for stores that cannot be checkpointed (hashing,
-/// pruning).
+/// `path`, returning the published file's anchor id. Fails for stores
+/// that cannot be checkpointed (hashing, pruning).
 pub fn save_store(
     path: &Path,
     store: &dyn EmbeddingStore,
     exp: &Experiment,
-) -> Result<()> {
+) -> Result<u32> {
     let mut w = writer_for_store(path, store)?;
     write_store_sections(&mut w, store, exp)?;
     w.finish()
@@ -402,6 +405,7 @@ pub fn experiment_to_json(exp: &Experiment) -> Json {
         // pre-plan format); mixed plans as the plan string
         ("bits", exp.bits.echo_json()),
         ("clip", Json::num(exp.clip as f64)),
+        ("compact_every", Json::num(exp.compact_every as f64)),
         ("dataset", Json::str(&exp.dataset)),
         ("dropout_seed", Json::str(&exp.dropout_seed.to_string())),
         ("epochs", Json::num(exp.epochs as f64)),
@@ -506,6 +510,10 @@ pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
             defaults.prefetch_batches,
         )?,
         save_every: opt_usize("save_every", defaults.save_every)?,
+        compact_every: opt_usize(
+            "compact_every",
+            defaults.compact_every,
+        )?,
     })
 }
 
@@ -583,6 +591,7 @@ mod tests {
             shuffle_window: 777,
             prefetch_batches: 5,
             save_every: 123,
+            compact_every: 9,
             ..Experiment::default()
         };
         let back =
@@ -606,6 +615,7 @@ mod tests {
         assert_eq!(back.shuffle_window, 777);
         assert_eq!(back.prefetch_batches, 5);
         assert_eq!(back.save_every, 123);
+        assert_eq!(back.compact_every, 9);
     }
 
     #[test]
@@ -623,6 +633,7 @@ mod tests {
             "shuffle_window",
             "prefetch_batches",
             "save_every",
+            "compact_every",
         ] {
             assert!(map.remove(key).is_some(), "echo is missing {key}");
         }
@@ -635,6 +646,7 @@ mod tests {
         assert_eq!(back.shuffle_window, d.shuffle_window);
         assert_eq!(back.prefetch_batches, d.prefetch_batches);
         assert_eq!(back.save_every, d.save_every);
+        assert_eq!(back.compact_every, d.compact_every);
     }
 
     #[test]

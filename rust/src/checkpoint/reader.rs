@@ -28,12 +28,14 @@ pub struct Section<'a> {
     pub payload: &'a [u8],
 }
 
-/// Section table entry (kind, index, payload range into the buffer).
+/// Section table entry (kind, index, payload range into the buffer,
+/// payload CRC as stored — revalidated at parse time).
 #[derive(Clone, Debug)]
 struct SectionEntry {
     kind: SectionKind,
     index: u32,
     payload: Range<usize>,
+    crc: u32,
 }
 
 /// A fully validated checkpoint.
@@ -110,13 +112,31 @@ impl Checkpoint {
                  corrupt (stored {crc_want:#010x}, computed {crc_got:#010x})",
                 kind.name()
             );
-            sections.push(SectionEntry { kind, index, payload });
+            sections.push(SectionEntry { kind, index, payload, crc: crc_got });
         }
         ensure!(
             pos == bytes.len(),
             "trailing garbage: {} bytes past the last section",
             bytes.len() - pos
         );
+
+        // (kind, index) addresses a section: a duplicate means the file
+        // is corrupt (e.g. a flipped bit in a section header relabeled
+        // one) — refuse it rather than silently resolving to the first
+        let mut seen: Vec<(u32, u32)> = sections
+            .iter()
+            .map(|s| (s.kind.as_u32(), s.index))
+            .collect();
+        seen.sort_unstable();
+        if let Some(w) = seen.windows(2).find(|w| w[0] == w[1]) {
+            bail!(
+                "duplicate section {}/{}: file is corrupt",
+                SectionKind::from_u32(w[0].0)
+                    .map(|k| k.name())
+                    .unwrap_or("?"),
+                w[0].1
+            );
+        }
 
         let metas: Vec<&SectionEntry> = sections
             .iter()
@@ -175,6 +195,18 @@ impl Checkpoint {
             .filter(|s| s.kind == kind)
             .map(|s| self.view(s))
             .collect()
+    }
+
+    /// The checkpoint's anchor id: CRC-32 over the per-section payload
+    /// CRCs in file order. Matches what `CheckpointWriter::finish`
+    /// returned when this file was written — the delta journal chains
+    /// off it without anyone re-hashing the file.
+    pub fn anchor_id(&self) -> u32 {
+        let mut trail = Vec::with_capacity(self.sections.len() * 4);
+        for s in &self.sections {
+            trail.extend_from_slice(&s.crc.to_le_bytes());
+        }
+        crc32(&trail)
     }
 
     /// Convenience: a required integer metadata field.
@@ -297,6 +329,29 @@ mod tests {
         bytes.extend_from_slice(&0u32.to_le_bytes());
         let err = format!("{:#}", Checkpoint::parse(bytes).unwrap_err());
         assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_section_address() {
+        let path = tmp("dup.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, br#"{"n":4}"#).unwrap();
+        w.section(SectionKind::Rows, 2, &[1, 2]).unwrap();
+        w.section(SectionKind::Rows, 2, &[3, 4]).unwrap();
+        w.finish().unwrap();
+        let err = format!("{:#}", Checkpoint::read(&path).unwrap_err());
+        assert!(err.contains("duplicate"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn anchor_id_is_stable_across_reads() {
+        let path = tmp("anchor_stable.ckpt");
+        write_minimal(&path);
+        let a = Checkpoint::read(&path).unwrap().anchor_id();
+        let b = Checkpoint::read(&path).unwrap().anchor_id();
+        assert_eq!(a, b);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

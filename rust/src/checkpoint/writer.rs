@@ -1,4 +1,4 @@
-//! Streaming checkpoint writer.
+//! Streaming checkpoint writer with atomic publish.
 //!
 //! Sections are appended one at a time; the section count in the header
 //! is patched in by [`CheckpointWriter::finish`], so the writer never has
@@ -6,26 +6,56 @@
 //! tables reuse one shard-sized buffer across [`CheckpointWriter::section`]
 //! calls (see `checkpoint::write_store_sections`), keeping peak memory
 //! bounded by the shard size rather than the table size.
+//!
+//! Durability contract: every byte goes to `<path>.tmp`; `finish` fsyncs
+//! the temp file, renames it over `path`, and fsyncs the parent
+//! directory. A crash at any instant — including inside the rename —
+//! leaves either the complete old file or the complete new file at
+//! `path`, never a torn one. An unfinished writer removes its temp file
+//! on drop, so failed saves cannot litter the checkpoint directory.
+//!
+//! `finish` also returns the checkpoint's *anchor id*: the CRC-32 of the
+//! per-section payload CRCs in file order. The reader recomputes the
+//! same id from the section table ([`Checkpoint::anchor_id`]), and the
+//! delta journal chains off it — no re-hash of the file is ever needed.
+//!
+//! Failpoint sites (`checkpoint::failpoint`): `ckpt.section.<k>` before
+//! section `k`'s bytes, `ckpt.finish` before the header patch,
+//! `ckpt.publish` before the rename, `ckpt.published` right after it.
 
 use std::fs::File;
 use std::io::{BufWriter, Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use super::failpoint;
 use super::format::{crc32, SectionKind, MAGIC, VERSION};
 
-/// Writes one checkpoint file section by section.
+/// Writes one checkpoint file section by section, publishing atomically
+/// on [`CheckpointWriter::finish`].
 pub struct CheckpointWriter {
-    out: BufWriter<File>,
+    out: Option<BufWriter<File>>,
+    tmp: PathBuf,
+    target: PathBuf,
     n_sections: u32,
+    /// Little-endian payload CRCs in file order; the anchor id is the
+    /// CRC-32 of this byte string.
+    crc_trail: Vec<u8>,
+    published: bool,
+}
+
+/// The temp path a checkpoint at `path` is staged through.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
 }
 
 impl CheckpointWriter {
-    /// Create `path` (truncating any existing file) and write the header
-    /// with a zero section count placeholder. The default (version-1)
-    /// single-group format; grouped mixed-precision stores use
-    /// [`CheckpointWriter::create_with_version`].
+    /// Stage a checkpoint for `path` (writing to `tmp_path(path)`) with
+    /// the default (version-1) single-group format; grouped
+    /// mixed-precision stores use [`CheckpointWriter::create_with_version`].
     pub fn create(path: &Path) -> Result<Self> {
         Self::create_with_version(path, VERSION)
     }
@@ -33,13 +63,21 @@ impl CheckpointWriter {
     /// Like [`CheckpointWriter::create`] with an explicit header format
     /// version (`format::VERSION` or `format::VERSION_GROUPED`).
     pub fn create_with_version(path: &Path, version: u32) -> Result<Self> {
-        let file = File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
+        let tmp = tmp_path(path);
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
         let mut out = BufWriter::new(file);
         out.write_all(MAGIC)?;
         out.write_all(&version.to_le_bytes())?;
         out.write_all(&0u32.to_le_bytes())?; // patched by finish()
-        Ok(Self { out, n_sections: 0 })
+        Ok(Self {
+            out: Some(out),
+            tmp,
+            target: path.to_path_buf(),
+            n_sections: 0,
+            crc_trail: Vec::new(),
+            published: false,
+        })
     }
 
     /// Append one section (header + CRC + payload).
@@ -49,24 +87,86 @@ impl CheckpointWriter {
         index: u32,
         payload: &[u8],
     ) -> Result<()> {
-        self.out.write_all(&kind.as_u32().to_le_bytes())?;
-        self.out.write_all(&index.to_le_bytes())?;
-        self.out.write_all(&(payload.len() as u64).to_le_bytes())?;
-        self.out.write_all(&crc32(payload).to_le_bytes())?;
-        self.out.write_all(payload)?;
+        let crc = crc32(payload);
+        let out = self.out.as_mut().expect("writer already finished");
+        let site = format!("ckpt.section.{}", self.n_sections);
+        if failpoint::armed_action(&site).is_some() {
+            // slow path: assemble the full record so the failpoint can
+            // tear or damage it as one unit
+            let mut pending =
+                Vec::with_capacity(20 + payload.len());
+            pending.extend_from_slice(&kind.as_u32().to_le_bytes());
+            pending.extend_from_slice(&index.to_le_bytes());
+            pending
+                .extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            pending.extend_from_slice(&crc.to_le_bytes());
+            pending.extend_from_slice(payload);
+            failpoint::write_through(&site, &pending, out)?;
+        } else {
+            out.write_all(&kind.as_u32().to_le_bytes())?;
+            out.write_all(&index.to_le_bytes())?;
+            out.write_all(&(payload.len() as u64).to_le_bytes())?;
+            out.write_all(&crc.to_le_bytes())?;
+            out.write_all(payload)?;
+        }
+        self.crc_trail.extend_from_slice(&crc.to_le_bytes());
         self.n_sections += 1;
         Ok(())
     }
 
-    /// Patch the section count into the header and flush everything.
-    pub fn finish(mut self) -> Result<()> {
-        self.out.flush()?;
+    /// Patch the section count into the header, fsync the temp file,
+    /// rename it over the target, and fsync the parent directory.
+    /// Returns the anchor id the delta journal chains off.
+    pub fn finish(mut self) -> Result<u32> {
+        let mut out = self.out.take().expect("writer already finished");
+        out.flush()?;
         let count = self.n_sections;
-        let file = self.out.get_mut();
+        let file = out.get_mut();
         file.seek(SeekFrom::Start(12))?;
-        file.write_all(&count.to_le_bytes())?;
-        file.flush()?;
-        Ok(())
+        failpoint::write_through(
+            "ckpt.finish",
+            &count.to_le_bytes(),
+            file,
+        )?;
+        file.sync_all().with_context(|| {
+            format!("fsyncing {}", self.tmp.display())
+        })?;
+        drop(out);
+        failpoint::hit("ckpt.publish");
+        std::fs::rename(&self.tmp, &self.target).with_context(|| {
+            format!(
+                "publishing {} over {}",
+                self.tmp.display(),
+                self.target.display()
+            )
+        })?;
+        self.published = true;
+        failpoint::hit("ckpt.published");
+        sync_parent_dir(&self.target);
+        Ok(crc32(&self.crc_trail))
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        if !self.published {
+            // abandoned writer (error mid-save): the staged bytes are
+            // garbage, remove them; the published file is untouched
+            std::fs::remove_file(&self.tmp).ok();
+        }
+    }
+}
+
+/// Best-effort fsync of `path`'s parent directory so the rename itself
+/// is durable (directories may not be openable on every platform —
+/// failing to sync is not worth failing the save that just published).
+pub(crate) fn sync_parent_dir(path: &Path) {
+    let dir = path
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .unwrap_or(Path::new("."));
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
     }
 }
 
@@ -74,6 +174,7 @@ impl CheckpointWriter {
 mod tests {
     use super::*;
     use crate::checkpoint::format::HEADER_BYTES;
+    use crate::checkpoint::Checkpoint;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("alpt_ckpt_writer_tests");
@@ -119,6 +220,69 @@ mod tests {
         let short = std::fs::metadata(&path).unwrap().len();
         assert!(short < long);
         assert_eq!(short as usize, HEADER_BYTES);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn publish_is_atomic_and_leaves_no_temp_file() {
+        let path = tmp("atomic.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{\"v\":1}").unwrap();
+        // mid-save, the target does not exist yet (or still holds the
+        // previous bytes) and the staged bytes sit in the temp file
+        assert!(!path.exists(), "target appeared before finish");
+        assert!(tmp_path(&path).exists(), "no staged temp file");
+        w.finish().unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path(&path).exists(), "temp file left after publish");
+
+        // overwrite keeps the old file readable at every instant: stage a
+        // new checkpoint and read the old one before finishing
+        let old = std::fs::read(&path).unwrap();
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), old);
+        w.finish().unwrap();
+        assert_ne!(std::fs::read(&path).unwrap(), old);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn abandoned_writer_removes_temp_and_keeps_target() {
+        let path = tmp("abandoned.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{\"keep\":1}").unwrap();
+        w.finish().unwrap();
+        let published = std::fs::read(&path).unwrap();
+
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.section(SectionKind::Meta, 0, b"{\"junk\":1}").unwrap();
+            // dropped without finish — simulated failed save
+        }
+        assert!(!tmp_path(&path).exists(), "temp file survived the drop");
+        assert_eq!(std::fs::read(&path).unwrap(), published);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn anchor_id_matches_reader() {
+        let path = tmp("anchor.ckpt");
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{\"n\":1}").unwrap();
+        w.section(SectionKind::Rows, 0, &[1, 2, 3]).unwrap();
+        w.section(SectionKind::Rows, 1, &[4, 5, 6]).unwrap();
+        let anchor = w.finish().unwrap();
+        let ck = Checkpoint::read(&path).unwrap();
+        assert_eq!(ck.anchor_id(), anchor);
+
+        // different content → different anchor
+        let mut w = CheckpointWriter::create(&path).unwrap();
+        w.section(SectionKind::Meta, 0, b"{\"n\":1}").unwrap();
+        w.section(SectionKind::Rows, 0, &[1, 2, 7]).unwrap();
+        w.section(SectionKind::Rows, 1, &[4, 5, 6]).unwrap();
+        let anchor2 = w.finish().unwrap();
+        assert_ne!(anchor, anchor2);
         std::fs::remove_file(&path).ok();
     }
 }

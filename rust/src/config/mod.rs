@@ -389,6 +389,10 @@ pub struct Experiment {
     /// Streaming runs: checkpoint to the `--save` path every N steps
     /// (0 = only at the end), so `--resume` can continue mid-stream.
     pub save_every: usize,
+    /// Continuous checkpointing: fold the delta journal into a fresh
+    /// full anchor after this many appended deltas (0 = a library
+    /// default; see `Trainer::continuous_save`).
+    pub compact_every: usize,
 }
 
 impl Default for Experiment {
@@ -421,6 +425,7 @@ impl Default for Experiment {
             shuffle_window: 4096,
             prefetch_batches: 2,
             save_every: 0,
+            compact_every: 0,
         }
     }
 }
@@ -517,6 +522,9 @@ impl Experiment {
                 self.prefetch_batches = as_f(value)? as usize
             }
             "save_every" => self.save_every = as_f(value)? as usize,
+            "compact_every" => {
+                self.compact_every = as_f(value)? as usize
+            }
             "dropout_seed" => self.dropout_seed = as_f(value)? as u64,
             "artifacts_dir" => self.artifacts_dir = as_s(value)?,
             "use_runtime" => {

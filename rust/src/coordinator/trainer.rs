@@ -1,11 +1,13 @@
 //! The training coordinator.
 
+use std::collections::BTreeSet;
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::checkpoint::{self, Checkpoint, SectionKind};
+use crate::checkpoint::journal::{self, Delta, DeltaChain, JournalWriter};
+use crate::checkpoint::{self, failpoint, Checkpoint, SectionKind};
 use crate::config::Experiment;
 use crate::data::batcher::{
     with_prefetch, Batch, Batcher, StreamBatcher, Tail,
@@ -139,6 +141,12 @@ pub struct Trainer {
     /// progress section so a resumed run's early stopping continues
     /// where the saved one left off.
     pub early_stop: EarlyStop,
+    /// Open delta journal for continuous checkpointing (`None` until the
+    /// first [`Trainer::continuous_save`] publishes an anchor).
+    journal: Option<JournalWriter>,
+    /// Row ids dirtied since the last continuous save. Only maintained
+    /// while a journal is open — full saves never need it.
+    dirty: BTreeSet<u32>,
 }
 
 impl Trainer {
@@ -201,6 +209,8 @@ impl Trainer {
             epochs_done: 0,
             stream_records_done: 0,
             early_stop: EarlyStop::default(),
+            journal: None,
+            dirty: BTreeSet::new(),
         })
     }
 
@@ -424,6 +434,12 @@ impl Trainer {
         )?;
         self.store.end_step();
 
+        // rows this step touched become part of the next delta; only
+        // tracked while a journal is open (full saves never need it)
+        if self.journal.is_some() {
+            self.dirty.extend(batch.unique.iter().copied());
+        }
+
         Ok(StepOutput { loss, n_unique })
     }
 
@@ -634,10 +650,12 @@ impl Trainer {
     /// to the serial path), then held-out evaluation and early stop on
     /// val AUC.
     ///
-    /// With `save_to` set and `exp.save_every > 0`, a checkpoint is
-    /// written every `save_every` steps; a trainer resumed from it
-    /// continues bit-identically, *including mid-epoch* — the persisted
-    /// stream position fast-forwards the deterministic record stream.
+    /// With `save_to` set and `exp.save_every > 0`, state is persisted
+    /// every `save_every` steps through [`Trainer::continuous_save`]
+    /// (full anchor first, CRC-chained deltas after, periodic
+    /// compaction); a trainer resumed from it continues bit-identically,
+    /// *including mid-epoch* — the persisted stream position
+    /// fast-forwards the deterministic record stream.
     pub fn train_stream(
         &mut self,
         source: &dyn DataSource,
@@ -675,7 +693,7 @@ impl Trainer {
                 trainer.stream_records_done += b as u64;
                 if save_every > 0 && steps % save_every == 0 {
                     if let Some(path) = save_to {
-                        trainer.save_checkpoint(path)?;
+                        trainer.continuous_save(path)?;
                     }
                 }
                 Ok(true)
@@ -744,10 +762,12 @@ impl Trainer {
     /// Serialize the full training state to one checkpoint file: the
     /// store's packed rows + per-row scalars (via the `checkpoint`
     /// subsystem), the dense parameters, the Adam moments, and both
-    /// generator states. A trainer resumed from the file continues
-    /// *bit-identically* to an uninterrupted run — see the `StreamKey`
-    /// determinism contract in `util::rng`.
-    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+    /// generator states. The file is staged and atomically published
+    /// (see `checkpoint::writer`); the returned anchor id is what a
+    /// delta journal chains off. A trainer resumed from the file
+    /// continues *bit-identically* to an uninterrupted run — see the
+    /// `StreamKey` determinism contract in `util::rng`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<u32> {
         let mut w =
             checkpoint::writer_for_store(path, self.store.as_ref())?;
         checkpoint::write_store_sections(&mut w, self.store.as_ref(),
@@ -784,10 +804,91 @@ impl Trainer {
         w.finish()
     }
 
+    /// Continuous checkpointing: called every `--save-every` steps by
+    /// the streaming loop. The first call (per run — fresh or resumed)
+    /// publishes a full anchor and opens a fresh journal; later calls
+    /// append a CRC-chained delta of only the rows dirtied since the
+    /// previous call; every `compact_every` deltas the chain is folded
+    /// into a new anchor (a full save — the trainer *is* the folded
+    /// state) and the journal starts over. Failpoint sites:
+    /// `compact.anchor` / `compact.reset` around compaction, plus every
+    /// writer and appender site inside.
+    pub fn continuous_save(&mut self, path: &Path) -> Result<()> {
+        let compact_every = match self.exp.compact_every {
+            0 => 64,
+            n => n as u64,
+        };
+        let reanchor = match &self.journal {
+            None => true,
+            Some(j) => j.len() >= compact_every,
+        };
+        if reanchor {
+            let compacting = self.journal.is_some();
+            if compacting {
+                // close the superseded chain before re-anchoring; its
+                // file stays on disk (and readable) until the reset
+                self.journal = None;
+                failpoint::hit("compact.anchor");
+            }
+            let anchor = self.save_checkpoint(path)?;
+            if compacting {
+                failpoint::hit("compact.reset");
+            }
+            self.journal = Some(JournalWriter::create(
+                path,
+                anchor,
+                self.store.step_counter(),
+            )?);
+        } else {
+            let delta = self.capture_delta();
+            let (rows, aux) =
+                journal::capture_rows(self.store.as_ref(), &delta.ids)?;
+            let delta = Delta { rows, aux, ..delta };
+            self.journal
+                .as_mut()
+                .expect("journal open in the append branch")
+                .append(&delta)?;
+        }
+        self.dirty.clear();
+        Ok(())
+    }
+
+    /// Snapshot the per-step trainer state into a [`Delta`] (rows and
+    /// aux are filled in by the caller from the dirty set).
+    fn capture_delta(&self) -> Delta {
+        let (m, v, t) = self.adam.state();
+        let mut opt = Vec::with_capacity(8 + (m.len() + v.len()) * 4);
+        checkpoint::format::put_u64(&mut opt, t);
+        checkpoint::format::put_f32s(&mut opt, m);
+        checkpoint::format::put_f32s(&mut opt, v);
+        let (rs, ri) = self.rng.state();
+        let (ms, mi) = self.mask_rng.state();
+        Delta {
+            store_step: self.store.step_counter(),
+            ids: self.dirty.iter().copied().collect(),
+            rows: Vec::new(),
+            aux: Vec::new(),
+            dense: self.dense.clone(),
+            opt,
+            rng: [rs, ri, ms, mi],
+            progress: [
+                self.epochs_done as u64,
+                self.stream_records_done,
+                self.early_stop.best_epoch as u64,
+                self.early_stop.bad_epochs as u64,
+                self.early_stop.best_auc.to_bits(),
+                self.early_stop.best_logloss.to_bits(),
+            ],
+        }
+    }
+
     /// Rebuild a trainer from a checkpoint written by
     /// [`Trainer::save_checkpoint`]. The experiment configuration comes
     /// from the file's metadata echo; every piece of mutable training
-    /// state is then overwritten with the persisted values.
+    /// state is then overwritten with the persisted values. A delta
+    /// journal chained off this anchor is validated and folded in, so
+    /// resuming from anchor + chain lands on exactly the state of the
+    /// last published delta.
     pub fn resume(path: &Path) -> Result<Trainer> {
         let ckpt = Checkpoint::read(path)?;
         let exp =
@@ -795,7 +896,63 @@ impl Trainer {
         let n_features = ckpt.meta_usize("n")?;
         let mut trainer = Trainer::new(exp, n_features)?;
         trainer.restore_from(&ckpt)?;
+        let anchor_step = ckpt.meta_usize("step")? as u64;
+        if let Some(chain) =
+            journal::read_chain(path, ckpt.anchor_id(), anchor_step)?
+        {
+            if chain.salvaged_bytes > 0 {
+                eprintln!(
+                    "[resume] journal tail torn by a crash: ignoring \
+                     the last {} bytes",
+                    chain.salvaged_bytes
+                );
+            }
+            trainer.apply_chain(&chain)?;
+        }
         Ok(trainer)
+    }
+
+    /// Fold a validated delta chain onto the freshly-restored anchor
+    /// state: every delta's dirty rows apply in sequence; the dense /
+    /// optimizer / generator / progress state come from the last link
+    /// (each delta carries them whole).
+    fn apply_chain(&mut self, chain: &DeltaChain) -> Result<()> {
+        for d in &chain.deltas {
+            journal::apply_rows(self.store.as_mut(), d)?;
+        }
+        let Some(last) = chain.deltas.last() else {
+            return Ok(());
+        };
+        ensure!(
+            last.dense.len() == self.dense.len(),
+            "delta carries {} dense params, model {} expects {}",
+            last.dense.len(),
+            self.entry.name,
+            self.dense.len()
+        );
+        ensure!(
+            last.opt.len() == 8 + self.dense.len() * 8,
+            "delta optimizer blob is {} bytes, expected {}",
+            last.opt.len(),
+            8 + self.dense.len() * 8
+        );
+        let mut pos = 0usize;
+        let t = checkpoint::format::take_u64(&last.opt, &mut pos)?;
+        let moments = checkpoint::format::parse_f32s(&last.opt[pos..])?;
+        let (m, v) = moments.split_at(self.dense.len());
+        self.adam.load_state(m, v, t)?;
+        self.dense = last.dense.clone();
+        self.rng = Pcg32::from_state(last.rng[0], last.rng[1]);
+        self.mask_rng = Pcg32::from_state(last.rng[2], last.rng[3]);
+        self.epochs_done = last.progress[0] as usize;
+        self.stream_records_done = last.progress[1];
+        self.early_stop = EarlyStop {
+            best_epoch: last.progress[2] as usize,
+            bad_epochs: last.progress[3] as usize,
+            best_auc: f64::from_bits(last.progress[4]),
+            best_logloss: f64::from_bits(last.progress[5]),
+        };
+        Ok(())
     }
 
     /// Overwrite this trainer's mutable state from a validated

@@ -299,6 +299,12 @@ impl GroupedStore {
         self.groups[g].bits.bits()
     }
 
+    /// Public `(group, local row)` address of global row `id` — the
+    /// delta journal serializes single dirty rows through it.
+    pub fn row_location(&self, id: u32) -> (usize, usize) {
+        self.locate(id)
+    }
+
     /// Configure the sharding width (0 = one worker per hardware thread).
     /// Purely a performance knob: results are bit-identical at any value.
     pub fn set_threads(&mut self, threads: usize) {

@@ -28,6 +28,8 @@ USAGE:
               [--model NAME] [--no-runtime]
               [--hash-bits N] [--numeric-buckets N] [--shuffle-window N]
               [--prefetch-batches N] [--save-every STEPS]
+              [--compact-every DELTAS]  (fold the delta journal into a
+               fresh full checkpoint after this many deltas, 64)
               [--save FILE.ckpt] [--resume FILE.ckpt]
   alpt serve  --ckpt FILE.ckpt [--batches N]     (no training: load + serve)
               [--listen HOST:PORT]  (online HTTP scoring server: POST /score,
@@ -106,6 +108,8 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
     exp.prefetch_batches =
         args.get_parse("prefetch-batches", exp.prefetch_batches)?;
     exp.save_every = args.get_parse("save-every", exp.save_every)?;
+    exp.compact_every =
+        args.get_parse("compact-every", exp.compact_every)?;
     if args.flag("no-runtime") {
         exp.use_runtime = false;
     }

@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::checkpoint::{dense_params, load_store, Checkpoint};
+use crate::checkpoint::{dense_params, journal, load_store, Checkpoint};
 use crate::config::Experiment;
 use crate::coordinator::builtin_entry;
 use crate::data::batcher::{build_batch, Batch};
@@ -81,6 +81,9 @@ pub struct InferenceEngine {
     /// Checkpoint read + validation time in milliseconds (0 when built
     /// from parts).
     load_ms: f64,
+    /// Delta-journal records folded on top of the anchor at load time
+    /// (0 when built from parts or served from a bare checkpoint).
+    deltas_folded: usize,
 }
 
 // the engine is shared across scoring threads behind an Arc; fail the
@@ -94,14 +97,37 @@ impl InferenceEngine {
     /// Restore an engine from a checkpoint file: store rows (uniform v1
     /// and grouped mixed-precision v2 alike), dense params, and the
     /// model geometry from the experiment echo — validated before any
-    /// scoring can happen.
+    /// scoring can happen. A CRC-chained delta journal next to the file
+    /// (continuous training: `--save-every`) is validated and folded on
+    /// top, so serving picks up the state of the last published delta,
+    /// not just the last full anchor.
     pub fn from_checkpoint(path: &Path) -> Result<Self> {
         let t0 = Instant::now();
         let ckpt = Checkpoint::read(path)?;
-        let (store, exp) = load_store(&ckpt)?;
-        let dense = dense_params(&ckpt)?;
+        let (mut store, exp) = load_store(&ckpt)?;
+        let mut dense = dense_params(&ckpt)?;
+        let anchor_step = ckpt.meta_usize("step")? as u64;
+        let mut folded = 0usize;
+        if let Some(chain) =
+            journal::read_chain(path, ckpt.anchor_id(), anchor_step)?
+        {
+            for d in &chain.deltas {
+                journal::apply_rows(store.as_mut(), d)?;
+            }
+            if let Some(last) = chain.deltas.last() {
+                ensure!(
+                    last.dense.len() == dense.len(),
+                    "delta carries {} dense params, the anchor {}",
+                    last.dense.len(),
+                    dense.len()
+                );
+                dense = last.dense.clone();
+            }
+            folded = chain.deltas.len();
+        }
         let mut engine = Self::from_parts(store, dense, exp)?;
         engine.load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        engine.deltas_folded = folded;
         Ok(engine)
     }
 
@@ -129,7 +155,15 @@ impl InferenceEngine {
             entry.emb_dim
         );
         let dcn = Dcn::new(entry.dcn_config());
-        Ok(Self { store, dense, dcn, entry, exp, load_ms: 0.0 })
+        Ok(Self {
+            store,
+            dense,
+            dcn,
+            entry,
+            exp,
+            load_ms: 0.0,
+            deltas_folded: 0,
+        })
     }
 
     /// Score one batch through caller-provided scratch (the allocation-
@@ -256,6 +290,11 @@ impl InferenceEngine {
 
     pub fn load_ms(&self) -> f64 {
         self.load_ms
+    }
+
+    /// Delta-journal records folded on top of the anchor at load time.
+    pub fn deltas_folded(&self) -> usize {
+        self.deltas_folded
     }
 }
 

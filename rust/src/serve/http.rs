@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::journal_path;
 use crate::metrics::{sigmoid, LatencyHistogram};
 use crate::serve::batch::MicroBatcher;
 use crate::serve::engine::InferenceEngine;
@@ -41,6 +42,7 @@ use crate::util::json::Json;
 pub struct EngineHandle {
     slot: Mutex<Arc<InferenceEngine>>,
     reloads: AtomicU64,
+    reload_failures: AtomicU64,
 }
 
 impl EngineHandle {
@@ -48,6 +50,7 @@ impl EngineHandle {
         Self {
             slot: Mutex::new(Arc::new(engine)),
             reloads: AtomicU64::new(0),
+            reload_failures: AtomicU64::new(0),
         }
     }
 
@@ -68,11 +71,27 @@ impl EngineHandle {
         self.reloads.load(Ordering::Relaxed)
     }
 
+    /// Reload attempts that failed validation and kept the old engine.
+    pub fn reload_failures(&self) -> u64 {
+        self.reload_failures.load(Ordering::Relaxed)
+    }
+
     /// Load `path` and swap it in — shared by `/reload` and `--watch`.
     /// The new checkpoint may use any store family / precision plan /
     /// checkpoint format version, but must keep the wire protocol: the
-    /// field count cannot change under live clients.
+    /// field count cannot change under live clients. On any failure the
+    /// live engine stays published and the failure counter ticks up.
     pub fn reload_from(&self, path: &std::path::Path) -> Result<()> {
+        match self.try_reload(path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.reload_failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn try_reload(&self, path: &std::path::Path) -> Result<()> {
         let fresh = InferenceEngine::from_checkpoint(path)
             .with_context(|| format!("reloading {}", path.display()))?;
         let live_fields = self.current().fields();
@@ -146,17 +165,23 @@ pub struct Server {
     handle: Arc<EngineHandle>,
     stats: Arc<Stats>,
     stop: Arc<AtomicBool>,
-    /// Checkpoint mtime captured *before* the engine load, so a file
-    /// rewritten during (or right after) the load still triggers the
-    /// first `--watch` reload instead of silently becoming the baseline.
-    ckpt_mtime: Option<std::time::SystemTime>,
+    /// Checkpoint and delta-journal mtimes captured *before* the engine
+    /// load, so a file rewritten during (or right after) the load still
+    /// triggers the first `--watch` reload instead of silently becoming
+    /// the baseline.
+    watch_baseline: (
+        Option<std::time::SystemTime>,
+        Option<std::time::SystemTime>,
+    ),
 }
 
 impl Server {
     pub fn bind(cfg: ServerConfig) -> Result<Server> {
-        let ckpt_mtime = std::fs::metadata(&cfg.ckpt)
-            .and_then(|m| m.modified())
-            .ok();
+        let mtime_of = |p: &std::path::Path| {
+            std::fs::metadata(p).and_then(|m| m.modified()).ok()
+        };
+        let watch_baseline =
+            (mtime_of(&cfg.ckpt), mtime_of(&journal_path(&cfg.ckpt)));
         let engine = InferenceEngine::from_checkpoint(&cfg.ckpt)?;
         let listener = TcpListener::bind(&cfg.listen)
             .with_context(|| format!("binding {}", cfg.listen))?;
@@ -171,7 +196,7 @@ impl Server {
                 started: Instant::now(),
             }),
             stop: Arc::new(AtomicBool::new(false)),
-            ckpt_mtime,
+            watch_baseline,
         })
     }
 
@@ -204,7 +229,7 @@ impl Server {
             let h = Arc::clone(&self.handle);
             let stop = Arc::clone(&self.stop);
             let path = self.cfg.ckpt.clone();
-            let baseline = self.ckpt_mtime;
+            let baseline = self.watch_baseline;
             std::thread::spawn(move || {
                 watch_loop(&h, &stop, &path, period, baseline)
             })
@@ -273,47 +298,72 @@ impl Server {
     }
 }
 
-/// `--watch`: poll the checkpoint's mtime; on change, reload + swap.
-/// `last` is the baseline captured at bind time, before the engine
-/// load — not re-read here, so no write window is ever missed.
+/// `--watch`: poll the checkpoint's mtime — and its delta journal's, so
+/// continuous-training runs that only append deltas between full
+/// anchors still get picked up — and on change, reload + swap. `last`
+/// is the baseline captured at bind time, before the engine load — not
+/// re-read here, so no write window is ever missed.
+///
+/// A failed reload keeps the live engine and is retried with capped
+/// exponential backoff (period × 2^failures, capped at 64×): a
+/// persistently corrupt file is logged and counted in `/stats`
+/// (`reload_failures`) without hammering the disk every period, and the
+/// first good rewrite after a failure streak swaps in as soon as the
+/// backed-off poll fires.
 fn watch_loop(
     handle: &EngineHandle,
     stop: &AtomicBool,
     path: &std::path::Path,
     period: Duration,
-    mut last: Option<std::time::SystemTime>,
+    mut last: (
+        Option<std::time::SystemTime>,
+        Option<std::time::SystemTime>,
+    ),
 ) {
+    let journal = journal_path(path);
     let mtime_of = |p: &std::path::Path| {
         std::fs::metadata(p).and_then(|m| m.modified()).ok()
     };
     // sleep in short ticks (stop-flag responsiveness) but only poll the
-    // mtime once per configured period — a long --watch-ms is a
+    // mtimes once per configured period — a long --watch-ms is a
     // debounce for slow checkpoint writers, not a suggestion
     let tick = period.min(Duration::from_millis(200)).max(
         Duration::from_millis(10),
     );
     let mut since_poll = Duration::ZERO;
+    let mut failures = 0u32;
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(tick);
         since_poll += tick;
-        if since_poll < period {
+        let wait = period.saturating_mul(1 << failures.min(6));
+        if since_poll < wait {
             continue;
         }
         since_poll = Duration::ZERO;
-        let now = mtime_of(path);
-        if now.is_some() && now != last {
+        let now = (mtime_of(path), mtime_of(&journal));
+        if now.0.is_some() && now != last {
             match handle.reload_from(path) {
                 Ok(()) => {
                     last = now;
+                    failures = 0;
                     eprintln!(
-                        "[watch] reloaded {} ({})",
+                        "[watch] reloaded {} ({}, {} deltas folded)",
                         path.display(),
-                        handle.current().method_name()
+                        handle.current().method_name(),
+                        handle.current().deltas_folded()
                     );
                 }
-                // a half-written file fails validation and is retried on
-                // the next tick; the live engine keeps serving
-                Err(e) => eprintln!("[watch] reload failed: {e:#}"),
+                // a half-written file fails validation; the live engine
+                // keeps serving and the retry backs off
+                Err(e) => {
+                    failures = failures.saturating_add(1);
+                    eprintln!(
+                        "[watch] reload failed (retry in {:.1}s): {e:#}",
+                        period
+                            .saturating_mul(1 << failures.min(6))
+                            .as_secs_f64()
+                    );
+                }
             }
         }
     }
@@ -435,6 +485,10 @@ fn route(stream: &mut TcpStream, ctx: &Ctx, req: Request) -> Result<()> {
                 ("p99_ms", Json::num(lat.percentile_ms(99.0))),
                 ("batches_scored", Json::num(ctx.mb.batches_scored() as f64)),
                 ("records_scored", Json::num(ctx.mb.records_scored() as f64)),
+                (
+                    "reload_failures",
+                    Json::num(ctx.handle.reload_failures() as f64),
+                ),
                 ("reloads", Json::num(ctx.handle.reloads() as f64)),
                 (
                     "requests",

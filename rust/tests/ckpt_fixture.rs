@@ -1,6 +1,8 @@
 //! Validates the committed serving fixture against the real checkpoint
 //! reader: geometry, CRC-checked sections, grid-aligned gather values,
-//! a full inference pass, and the save→load→save byte-identity contract.
+//! a full inference pass, a far-from-chance served AUC (the fixture is
+//! *trained* — scripts/train_fixture.py), and the save→load→save
+//! byte-identity contract.
 //!
 //! Skips (with a note) only when the fixture file is absent; a present
 //! but malformed fixture is a hard failure.
@@ -11,7 +13,8 @@ use alpt::checkpoint::{
     dense_params, load_store, save_store, Checkpoint, SectionKind,
 };
 use alpt::config::{Method, RoundingMode};
-use alpt::coordinator::builtin_entry;
+use alpt::coordinator::{builtin_entry, serve_with_engine};
+use alpt::serve::InferenceEngine;
 use alpt::data::batcher::Batcher;
 use alpt::data::synthetic::{generate, SyntheticSpec};
 use alpt::data::Schema;
@@ -30,7 +33,7 @@ fn fixture_serves_without_training() {
     if !path.exists() {
         eprintln!(
             "skipping: no committed fixture (run \
-             `python3 scripts/make_fixture.py`)"
+             `python3 scripts/train_fixture.py`)"
         );
         return;
     }
@@ -38,8 +41,8 @@ fn fixture_serves_without_training() {
     let ckpt = Checkpoint::read(&path).expect("fixture must parse");
     let (store, exp) = load_store(&ckpt).expect("fixture store must load");
 
-    // the committed fixture predates precision plans: version-1 files
-    // load as a single-group (uniform) plan
+    // the committed fixture is deliberately written as a version-1
+    // (pre-precision-plan) file: v1 loads as a single-group uniform plan
     assert_eq!(ckpt.version, 1);
     assert!(store.as_grouped().is_none(), "v1 loads as a single group");
 
@@ -85,6 +88,22 @@ fn fixture_serves_without_training() {
     assert_eq!(logits.len(), entry.batch);
     assert!(logits.iter().all(|x| x.is_finite()), "non-finite logits");
 
+    // the fixture is trained against the seed's ground truth
+    // (scripts/train_fixture.py ports the latent model bit-for-bit), so
+    // the engine must score real — not chance-level — AUC over the
+    // eval split serve.rs regenerates from the checkpoint's own seed
+    let engine = InferenceEngine::from_checkpoint(&path)
+        .expect("fixture must load into the engine");
+    let report = serve_with_engine(&engine, usize::MAX)
+        .expect("fixture must serve the seed-regenerated split");
+    assert!(
+        report.auc > 0.6,
+        "fixture serves chance-level auc {:.4}: the committed \
+         checkpoint is not a trained model (regenerate it with \
+         `python3 scripts/train_fixture.py`)",
+        report.auc
+    );
+
     // save→load→save through the Rust writer is byte-identical
     let dir = std::env::temp_dir().join("alpt_fixture_test");
     std::fs::create_dir_all(&dir).unwrap();
@@ -92,10 +111,10 @@ fn fixture_serves_without_training() {
     let p2 = dir.join("fixture.2.ckpt");
     save_store(&p1, store.as_ref(), &exp).unwrap();
 
-    // uniform-plan equivalence anchor: the fixture was written *before*
-    // the precision-plan refactor, so the re-saved file's header version
+    // uniform-plan equivalence anchor: the fixture is written in the
+    // pre-precision-plan v1 shape, so the re-saved file's header version
     // and raw row payloads must match the committed bytes exactly —
-    // uniform checkpoints did not change shape
+    // uniform checkpoints did not change shape across the refactor
     let resaved = Checkpoint::read(&p1).unwrap();
     assert_eq!(resaved.version, ckpt.version, "uniform files stay v1");
     let old_rows = ckpt.sections_of(SectionKind::Rows);

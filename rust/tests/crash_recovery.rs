@@ -1,0 +1,347 @@
+//! Crash-recovery integration tests: kill the trainer binary at every
+//! durability failpoint and prove that resume never loses the last
+//! published state; check that anchor + delta-chain resume is
+//! bit-identical to resuming a monolithic checkpoint; and property-test
+//! that a single flipped bit anywhere in a checkpoint or journal file
+//! surfaces as a precise error (or a clean chain prefix) — never a
+//! panic, never a silently different model.
+//!
+//! The kill matrix drives the real `alpt` binary through
+//! `ALPT_FAILPOINT` (see `checkpoint::failpoint`), the same mechanism
+//! the CI `crash-recovery` job uses.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use alpt::checkpoint::{journal, journal_path, Checkpoint};
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
+use alpt::coordinator::{builtin_entry, Trainer};
+use alpt::data::batcher::{Batch, StreamBatcher, Tail};
+use alpt::data::registry;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("alpt_crash_recovery_tests")
+        .join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_alpt")
+}
+
+/// One `alpt train` invocation writing continuous checkpoints to
+/// `ckpt`. The first (non-resume) form trains epoch 1 from scratch;
+/// the resume form continues the run to epoch 2 — the experiment echo
+/// carries `save_every`/`compact_every`, so the continuation keeps
+/// saving through the same journal machinery.
+fn train_cmd(ckpt: &Path, resume: bool, failpoint: Option<&str>) -> Output {
+    let mut cmd = Command::new(bin());
+    cmd.arg("train");
+    if resume {
+        cmd.arg("--resume").arg(ckpt).args(["--epochs", "2"]);
+    } else {
+        cmd.args([
+            "--dataset",
+            "synthetic:tiny",
+            "--samples",
+            "2000",
+            "--epochs",
+            "1",
+            "--seed",
+            "7",
+            "--save-every",
+            "3",
+            "--compact-every",
+            "4",
+            "--no-runtime",
+        ]);
+    }
+    cmd.arg("--save").arg(ckpt).arg("--quiet");
+    cmd.env_remove("ALPT_FAILPOINT");
+    if let Some(spec) = failpoint {
+        cmd.env("ALPT_FAILPOINT", spec);
+    }
+    cmd.output().unwrap()
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Kill the trainer at every failpoint site mid-save; after each kill,
+/// the published checkpoint must still parse, and resuming must finish
+/// the run byte-identical to an uninterrupted reference.
+#[test]
+fn kill_at_every_failpoint_never_loses_published_state() {
+    let dir = tmp_dir("kill_matrix");
+    let base = dir.join("base.ckpt");
+    let out = train_cmd(&base, false, None);
+    assert!(out.status.success(), "base run failed: {}", stderr_of(&out));
+
+    // the uninterrupted reference continuation
+    let ref_ckpt = dir.join("ref.ckpt");
+    std::fs::copy(&base, &ref_ckpt).unwrap();
+    let out = train_cmd(&ref_ckpt, true, None);
+    assert!(out.status.success(), "ref run failed: {}", stderr_of(&out));
+    let want = std::fs::read(&ref_ckpt).unwrap();
+
+    // every site the writer, journal appender, and compactor expose;
+    // `truncate` variants leave half-written bytes synced to disk
+    let cases = [
+        ("ckpt.section.0", "crash"),
+        ("ckpt.section.2", "truncate"),
+        ("ckpt.section.4", "crash"),
+        ("ckpt.finish", "crash"),
+        ("ckpt.finish", "truncate"),
+        ("ckpt.publish", "crash"),
+        ("ckpt.published", "crash"),
+        ("journal.reset", "crash"),
+        ("journal.reset", "truncate"),
+        ("journal.append", "crash"),
+        ("journal.append", "truncate"),
+        ("compact.anchor", "crash"),
+        ("compact.reset", "crash"),
+    ];
+    for (site, action) in cases {
+        let spec = format!("{site}={action}");
+        let case =
+            dir.join(format!("{}_{action}.ckpt", site.replace('.', "_")));
+        std::fs::copy(&base, &case).unwrap();
+        std::fs::remove_file(journal_path(&case)).ok();
+
+        let out = train_cmd(&case, true, Some(&spec));
+        assert!(
+            !out.status.success(),
+            "{spec}: the armed run did not die\n{}",
+            stderr_of(&out)
+        );
+        // the published checkpoint survived the kill, whole
+        let ckpt = Checkpoint::read(&case).unwrap_or_else(|e| {
+            panic!("{spec}: published checkpoint torn by the kill: {e:#}")
+        });
+        // and whatever journal is on disk reads back cleanly (valid
+        // chain, stale leftover, or salvageable torn tail — never an
+        // unreadable state)
+        let step = ckpt.meta_usize("step").unwrap() as u64;
+        let chain = journal::read_chain(&case, ckpt.anchor_id(), step)
+            .unwrap_or_else(|e| {
+                panic!("{spec}: journal unreadable after the kill: {e:#}")
+            });
+        if spec == "journal.append=truncate" {
+            let chain = chain.expect("torn-append case lost its journal");
+            assert!(
+                chain.salvaged_bytes > 0,
+                "{spec}: expected a salvaged torn tail"
+            );
+        }
+
+        let out = train_cmd(&case, true, None);
+        assert!(
+            out.status.success(),
+            "{spec}: resume failed: {}",
+            stderr_of(&out)
+        );
+        if spec == "journal.append=truncate" {
+            assert!(
+                stderr_of(&out).contains("torn"),
+                "{spec}: resume did not report the salvaged tail:\n{}",
+                stderr_of(&out)
+            );
+        }
+        assert_eq!(
+            std::fs::read(&case).unwrap(),
+            want,
+            "{spec}: resumed run diverged from the uninterrupted reference"
+        );
+        std::fs::remove_file(&case).ok();
+        std::fs::remove_file(journal_path(&case)).ok();
+    }
+}
+
+/// Shared fixture: a trainer on the streaming tiny dataset plus an
+/// iterator of training batches to step it with.
+fn trainer_and_batches(
+    bits: &str,
+) -> (Trainer, impl Iterator<Item = Batch>) {
+    let exp = Experiment {
+        method: Method::Alpt(RoundingMode::Sr),
+        bits: PrecisionPlan::parse(bits).unwrap(),
+        model: "tiny".into(),
+        dataset: "synthetic:tiny".into(),
+        n_samples: 1500,
+        use_runtime: false,
+        threads: 1,
+        ..Experiment::default()
+    };
+    let entry = builtin_entry(&exp.model).unwrap();
+    let n = registry::schema_for(&exp).unwrap().n_features();
+    let tr = Trainer::new(exp.clone(), n).unwrap();
+    let source = registry::open_source(&exp).unwrap();
+    let stream =
+        registry::train_epoch_stream(source.as_ref(), &exp, 1).unwrap();
+    let batches =
+        StreamBatcher::new(stream, entry.fields, entry.batch, Tail::Drop)
+            .map(|r| r.unwrap());
+    (tr, batches)
+}
+
+/// Resuming from anchor + delta chain must land on exactly the state a
+/// monolithic full checkpoint of the same moment holds — checked for
+/// both the uniform v1 and the grouped mixed-precision v2 formats.
+#[test]
+fn anchor_plus_chain_resume_is_bit_identical_to_full_resume() {
+    for (tag, bits) in [("v1", "8"), ("v2", "f0:4,f1:8,default:2")] {
+        let dir = tmp_dir("chain_equiv");
+        let chain_path = dir.join(format!("{tag}_chain.ckpt"));
+        let full_path = dir.join(format!("{tag}_full.ckpt"));
+        std::fs::remove_file(journal_path(&chain_path)).ok();
+
+        let (mut tr, mut batches) = trainer_and_batches(bits);
+        for _ in 0..4 {
+            for _ in 0..2 {
+                tr.step(&batches.next().unwrap(), 1).unwrap();
+            }
+            tr.continuous_save(&chain_path).unwrap();
+        }
+        // the same live state, saved monolithically
+        tr.save_checkpoint(&full_path).unwrap();
+
+        // precondition: the continuous file really is anchor + deltas
+        let ckpt = Checkpoint::read(&chain_path).unwrap();
+        let step = ckpt.meta_usize("step").unwrap() as u64;
+        let chain = journal::read_chain(&chain_path, ckpt.anchor_id(), step)
+            .unwrap()
+            .expect("no journal next to the continuous checkpoint");
+        assert_eq!(chain.deltas.len(), 3, "{tag}");
+
+        let a = Trainer::resume(&chain_path).unwrap();
+        let b = Trainer::resume(&full_path).unwrap();
+        let out_a = dir.join(format!("{tag}_out_a.ckpt"));
+        let out_b = dir.join(format!("{tag}_out_b.ckpt"));
+        a.save_checkpoint(&out_a).unwrap();
+        b.save_checkpoint(&out_b).unwrap();
+        assert_eq!(
+            std::fs::read(&out_a).unwrap(),
+            std::fs::read(&out_b).unwrap(),
+            "{tag}: anchor+chain resume diverged from full-checkpoint \
+             resume"
+        );
+        for p in [&chain_path, &full_path, &out_a, &out_b] {
+            std::fs::remove_file(p).ok();
+            std::fs::remove_file(journal_path(p)).ok();
+        }
+    }
+}
+
+/// Bit positions to flip: every bit of the first 64 bytes (file header
+/// + first section/record header), then a deterministic stride across
+/// the rest of the file.
+fn flip_positions(len: usize) -> Vec<(usize, u8)> {
+    let mut v = Vec::new();
+    for off in 0..len.min(64) {
+        for bit in 0..8u8 {
+            v.push((off, bit));
+        }
+    }
+    if len > 64 {
+        let tail = len - 64;
+        let samples = tail.min(400);
+        for i in 0..samples {
+            let off = 64 + i * tail / samples;
+            v.push((off, (off % 8) as u8));
+        }
+    }
+    v
+}
+
+/// Flipping any single bit of a valid checkpoint must make every load
+/// fail with an error — magic, version, section-table, and CRC checks
+/// leave no byte unguarded — and flipping any single bit of the journal
+/// must yield an error or a clean prefix of the original chain. Nothing
+/// may panic, and a store under `apply` is never partially mutated
+/// (enforced by validate-before-mutate; unit-tested in
+/// `checkpoint::journal`).
+#[test]
+fn single_bitflips_fail_loudly_never_load_garbage() {
+    for (tag, bits) in [("v1", "8"), ("v2", "f0:4,f1:8,default:2")] {
+        let dir = tmp_dir("bitflip");
+        let path = dir.join(format!("{tag}.ckpt"));
+        std::fs::remove_file(journal_path(&path)).ok();
+
+        let (mut tr, mut batches) = trainer_and_batches(bits);
+        for _ in 0..3 {
+            for _ in 0..2 {
+                tr.step(&batches.next().unwrap(), 1).unwrap();
+            }
+            tr.continuous_save(&path).unwrap();
+        }
+
+        let ckpt_bytes = std::fs::read(&path).unwrap();
+        // what a clean resume of anchor + chain saves back out — the
+        // only acceptable result of a flip that still loads (e.g. a bit
+        // in the Meta section's unused index field)
+        let clean_path = dir.join(format!("{tag}_clean.ckpt"));
+        Trainer::resume(&path)
+            .unwrap()
+            .save_checkpoint(&clean_path)
+            .unwrap();
+        let clean = std::fs::read(&clean_path).unwrap();
+        let probe_path = dir.join(format!("{tag}_probe.ckpt"));
+        for (off, bit) in flip_positions(ckpt_bytes.len()) {
+            let mut damaged = ckpt_bytes.clone();
+            damaged[off] ^= 1 << bit;
+            std::fs::write(&path, &damaged).unwrap();
+            if let Ok(resumed) = Trainer::resume(&path) {
+                resumed.save_checkpoint(&probe_path).unwrap();
+                assert_eq!(
+                    std::fs::read(&probe_path).unwrap(),
+                    clean,
+                    "{tag}: flip at byte {off} bit {bit} loaded as a \
+                     *different* model instead of erroring"
+                );
+            }
+        }
+        std::fs::write(&path, &ckpt_bytes).unwrap();
+        std::fs::remove_file(&clean_path).ok();
+        std::fs::remove_file(&probe_path).ok();
+
+        // journal flips: error, or a validated prefix of the real chain
+        let ckpt = Checkpoint::read(&path).unwrap();
+        let step = ckpt.meta_usize("step").unwrap() as u64;
+        let jpath = journal_path(&path);
+        let jbytes = std::fs::read(&jpath).unwrap();
+        let original = journal::read_chain(&path, ckpt.anchor_id(), step)
+            .unwrap()
+            .expect("journal missing");
+        assert_eq!(original.deltas.len(), 2, "{tag}");
+        let encoded: Vec<Vec<u8>> =
+            original.deltas.iter().map(|d| d.encode()).collect();
+        for (off, bit) in flip_positions(jbytes.len()) {
+            let mut damaged = jbytes.clone();
+            damaged[off] ^= 1 << bit;
+            std::fs::write(&jpath, &damaged).unwrap();
+            match journal::read_chain(&path, ckpt.anchor_id(), step) {
+                Err(_) => {}
+                Ok(None) => {} // rejected whole: run starts from the anchor
+                Ok(Some(chain)) => {
+                    assert!(
+                        chain.deltas.len() <= encoded.len(),
+                        "{tag}: flip at {off}.{bit} grew the chain"
+                    );
+                    for (d, want) in chain.deltas.iter().zip(&encoded) {
+                        assert_eq!(
+                            &d.encode(),
+                            want,
+                            "{tag}: flip at byte {off} bit {bit} altered \
+                             a delta that still validated"
+                        );
+                    }
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&jpath).ok();
+    }
+}

@@ -12,8 +12,9 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use alpt::checkpoint::journal_path;
 use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
-use alpt::coordinator::Trainer;
+use alpt::coordinator::{builtin_entry, Trainer};
 use alpt::data::batcher::{Batch, StreamBatcher, Tail};
 use alpt::data::registry;
 use alpt::serve::{InferenceEngine, Server, ServerConfig};
@@ -315,7 +316,8 @@ fn reload_hot_swaps_without_dropping_requests() {
         .unwrap() as f32;
     assert_eq!(got.to_bits(), want.to_bits());
 
-    // reload of a missing file: 409, live engine untouched
+    // reload of a missing file: 409, live engine untouched, and the
+    // failure is counted instead of swallowed
     let (code, resp) =
         http(&addr, "POST", "/reload", "{\"ckpt\": \"/nonexistent.ckpt\"}");
     assert_eq!(code, 409, "{resp}");
@@ -323,10 +325,156 @@ fn reload_hot_swaps_without_dropping_requests() {
     assert_eq!(code, 200);
     let stats = Json::parse(&resp).unwrap();
     assert_eq!(stats.get("reloads").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        stats.get("reload_failures").unwrap().as_usize().unwrap(),
+        1
+    );
 
     let (code, _) = http(&addr, "POST", "/shutdown", "");
     assert_eq!(code, 200);
     handle.join().unwrap();
     std::fs::remove_file(&a).ok();
     std::fs::remove_file(&b).ok();
+}
+
+#[test]
+fn watch_folds_growing_delta_chain_without_dropping_requests() {
+    // A continuous-training run publishes one full anchor and then only
+    // appends CRC-chained deltas. `--watch` must pick up every append
+    // (the checkpoint file itself never changes mtime), fold the chain,
+    // and swap with zero dropped requests.
+    let path = tmp("watch_chain.ckpt");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(journal_path(&path)).ok();
+
+    let exp = Experiment {
+        method: Method::Alpt(RoundingMode::Sr),
+        bits: PrecisionPlan::parse("8").unwrap(),
+        model: "tiny".into(),
+        dataset: "synthetic:tiny".into(),
+        n_samples: 1500,
+        use_runtime: false,
+        threads: 1,
+        ..Experiment::default()
+    };
+    let entry = builtin_entry(&exp.model).unwrap();
+    let n = registry::schema_for(&exp).unwrap().n_features();
+    let mut tr = Trainer::new(exp.clone(), n).unwrap();
+    let source = registry::open_source(&exp).unwrap();
+    let stream =
+        registry::train_epoch_stream(source.as_ref(), &exp, 1).unwrap();
+    let mut batches =
+        StreamBatcher::new(stream, entry.fields, entry.batch, Tail::Drop)
+            .map(|r| r.unwrap());
+    let mut advance = |tr: &mut Trainer| {
+        for _ in 0..2 {
+            tr.step(&batches.next().unwrap(), 1).unwrap();
+        }
+    };
+
+    // anchor: the first continuous save is a full checkpoint + journal
+    advance(&mut tr);
+    tr.continuous_save(&path).unwrap();
+    assert!(journal_path(&path).exists());
+
+    let mut cfg = ServerConfig::new("127.0.0.1:0", &path);
+    cfg.workers = 3;
+    cfg.max_wait = Duration::from_millis(2);
+    cfg.watch = Some(Duration::from_millis(20));
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let record: Vec<u32> =
+        (0..entry.fields as u32).map(|f| f % 8).collect();
+    let body = format!("[{}]", record_json(&record));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let failures = Arc::new(AtomicUsize::new(0));
+    let scored = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let (stop, failures, scored) = (
+                Arc::clone(&stop),
+                Arc::clone(&failures),
+                Arc::clone(&scored),
+            );
+            let (addr, body) = (addr.clone(), body.clone());
+            s.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let (code, _) = http(&addr, "POST", "/score", &body);
+                    if code == 200 {
+                        scored.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        failures.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+        while scored.load(Ordering::SeqCst) < 5 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // grow the chain under load: each save appends one delta (the
+        // anchor file itself is never rewritten below compact_every)
+        for _ in 0..3 {
+            advance(&mut tr);
+            tr.continuous_save(&path).unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        // the watcher must converge on the full chain's bits
+        let want = InferenceEngine::from_checkpoint(&path)
+            .unwrap()
+            .score_records(&record)
+            .unwrap()[0];
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let (code, resp) = http(&addr, "POST", "/score", &body);
+            assert_eq!(code, 200, "{resp}");
+            let got = Json::parse(&resp)
+                .unwrap()
+                .get("logits")
+                .unwrap()
+                .as_array()
+                .unwrap()[0]
+                .as_f64()
+                .unwrap() as f32;
+            if got.to_bits() == want.to_bits() {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "watcher never folded the delta chain: live {got}, \
+                 chain {want}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        stop.store(true, Ordering::SeqCst);
+    });
+    assert_eq!(
+        failures.load(Ordering::SeqCst),
+        0,
+        "requests failed while the delta chain grew under --watch"
+    );
+
+    // the fresh load folded the whole chain, not just the anchor
+    let engine = InferenceEngine::from_checkpoint(&path).unwrap();
+    assert_eq!(engine.deltas_folded(), 3);
+    let (code, resp) = http(&addr, "GET", "/stats", "");
+    assert_eq!(code, 200);
+    let stats = Json::parse(&resp).unwrap();
+    assert!(
+        stats.get("reloads").unwrap().as_usize().unwrap() >= 1,
+        "{resp}"
+    );
+    assert_eq!(
+        stats.get("reload_failures").unwrap().as_usize().unwrap(),
+        0,
+        "{resp}"
+    );
+
+    let (code, _) = http(&addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().unwrap();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(journal_path(&path)).ok();
 }

@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Crash-recovery gate: kill the trainer at every durability failpoint
+# mid-save, then prove `--resume` restores the last published state and
+# finishes the run byte-identical to an uninterrupted reference run.
+#
+#   bash scripts/crash_recovery_check.sh
+#
+# Sites (see rust/src/checkpoint/failpoint.rs): ckpt.section.N,
+# ckpt.finish, ckpt.publish, ckpt.published (checkpoint writer);
+# journal.reset, journal.append (delta journal); compact.anchor,
+# compact.reset (compactor). Actions: crash = abort before the write,
+# truncate = half-write + sync + abort (the torn-tail model).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${BIN:-target/release/alpt}
+[ -x "$BIN" ] || cargo build --release
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+TRAIN_ARGS=(--dataset synthetic:tiny --samples 2000 --epochs 1 --seed 7
+            --save-every 3 --compact-every 4 --no-runtime --quiet)
+
+echo "== base: train epoch 1 with continuous checkpointing"
+"$BIN" train "${TRAIN_ARGS[@]}" --save "$WORK/base.ckpt"
+
+echo "== reference: uninterrupted continuation to epoch 2"
+cp "$WORK/base.ckpt" "$WORK/ref.ckpt"
+"$BIN" train --resume "$WORK/ref.ckpt" --epochs 2 \
+  --save "$WORK/ref.ckpt" --quiet
+REF_SHA=$(sha256sum "$WORK/ref.ckpt" | cut -d' ' -f1)
+
+SPECS=(
+  ckpt.section.0=crash
+  ckpt.section.2=truncate
+  ckpt.section.4=crash
+  ckpt.finish=crash
+  ckpt.finish=truncate
+  ckpt.publish=crash
+  ckpt.published=crash
+  journal.reset=crash
+  journal.reset=truncate
+  journal.append=crash
+  journal.append=truncate
+  compact.anchor=crash
+  compact.reset=crash
+)
+
+for SPEC in "${SPECS[@]}"; do
+  CASE="$WORK/case.ckpt"
+  rm -f "$CASE" "$CASE.journal" "$CASE.tmp"
+  cp "$WORK/base.ckpt" "$CASE"
+  echo "== kill at $SPEC"
+  if ALPT_FAILPOINT="$SPEC" "$BIN" train --resume "$CASE" --epochs 2 \
+       --save "$CASE" --quiet 2>"$WORK/killed.log"; then
+    echo "FAIL: $SPEC: the armed run did not die" >&2
+    exit 1
+  fi
+  grep -q failpoint "$WORK/killed.log" || {
+    echo "FAIL: $SPEC: the run died without reaching the failpoint" >&2
+    cat "$WORK/killed.log" >&2
+    exit 1
+  }
+  "$BIN" train --resume "$CASE" --epochs 2 --save "$CASE" --quiet \
+    2>"$WORK/resume.log"
+  if [ "$SPEC" = journal.append=truncate ]; then
+    # the half-written append must be reported as a salvaged torn tail
+    grep -q torn "$WORK/resume.log" || {
+      echo "FAIL: $SPEC: resume did not salvage the torn tail" >&2
+      cat "$WORK/resume.log" >&2
+      exit 1
+    }
+  fi
+  SHA=$(sha256sum "$CASE" | cut -d' ' -f1)
+  if [ "$SHA" != "$REF_SHA" ]; then
+    echo "FAIL: $SPEC: resumed final checkpoint diverged ($SHA != $REF_SHA)" >&2
+    exit 1
+  fi
+done
+
+echo "PASS: resume was bit-identical after a kill at every failpoint site"

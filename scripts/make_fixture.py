@@ -1,21 +1,24 @@
 #!/usr/bin/env python3
-"""Generate the committed serving fixture `examples/fixtures/tiny_lpt8.ckpt`.
+"""Checkpoint-writer helpers + untrained bootstrap fixture.
 
 Writes a valid version-1 ALPT checkpoint (see README.md "Checkpoint binary
 layout" / rust/src/checkpoint/format.rs) holding an 8-bit LPT table for
 the `tiny` synthetic dataset plus a deterministic dense-parameter vector.
 
-The fixture is a *format/serving smoke artifact*: its codes and dense
+Run directly, this writes a *format smoke artifact*: its codes and dense
 params follow fixed deterministic patterns, not a trained model, so the
-served AUC is chance-level. Regenerate a trained fixture with:
+served AUC is chance-level. The *committed* fixture is instead produced
+by `scripts/train_fixture.py`, which trains a real model against the
+seed's ground truth (numpy only, no Rust toolchain needed) and reuses
+this module's section writer; with cargo available the equivalent is:
 
     cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \
         --no-runtime --save examples/fixtures/tiny_lpt8.ckpt
 
-This script exists so the repo can carry a checkpoint fixture even when
-authored in a container without a Rust toolchain; the Rust test
-`fixture_serves_without_training` (rust/tests/ckpt_fixture.rs) validates
-every byte of it against the real reader.
+The Rust test `fixture_serves_without_training`
+(rust/tests/ckpt_fixture.rs) validates every byte of the committed file
+against the real reader — including a far-from-chance served AUC, which
+an artifact written by *this* script's deterministic patterns fails.
 """
 
 import json
@@ -60,6 +63,7 @@ def experiment_echo():
         "artifacts_dir": "artifacts",
         "bits": 8,
         "clip": f32(0.1),
+        "compact_every": 0,
         "dataset": "tiny",
         # u64 seeds are JSON strings (full 64-bit range; numbers only
         # carry 53 bits) — mirrors checkpoint::experiment_to_json
@@ -89,7 +93,7 @@ def experiment_echo():
     }
 
 
-def meta_json():
+def meta_json(step=0):
     meta = {
         "aux_len": 0,
         "d": D,
@@ -100,7 +104,7 @@ def meta_json():
         "n_shards": (N + SHARD_ROWS - 1) // SHARD_ROWS,
         "row_bytes": ROW_BYTES,
         "shard_rows": SHARD_ROWS,
-        "step": 0,
+        "step": step,
         "version": VERSION,
     }
     return json.dumps(meta, sort_keys=True, separators=(",", ":"))
@@ -140,17 +144,20 @@ def verify(path):
     assert data[:8] == MAGIC, "magic"
     version, n_sections = struct.unpack("<II", data[8:16])
     assert version == VERSION, version
-    pos, seen = 16, []
+    pos, seen, meta = 16, [], None
     for _ in range(n_sections):
         kind, index, length, crc = struct.unpack("<IIQI", data[pos:pos + 20])
         pos += 20
         payload = data[pos:pos + length]
         pos += length
         assert zlib.crc32(payload) & 0xFFFFFFFF == crc, f"crc kind={kind}"
+        if kind == KIND_META:
+            assert index == 0 and meta is None, "duplicate meta"
+            meta = json.loads(payload.decode("utf-8"))
         seen.append((kind, index, length))
     assert pos == len(data), "trailing bytes"
-    assert (KIND_META, 0, len(meta_json().encode())) in seen
-    meta = json.loads(meta_json())
+    assert meta is not None, "no meta section"
+    assert meta["n"] == N and meta["d"] == D, "meta geometry"
     assert meta["n"] * meta["row_bytes"] == [
         s for s in seen if s[0] == KIND_ROWS
     ][0][2]

@@ -1,0 +1,495 @@
+#!/usr/bin/env python3
+"""Train the committed serving fixture `examples/fixtures/tiny_lpt8.ckpt`.
+
+The serving eval (rust/src/coordinator/serve.rs) regenerates the `tiny`
+synthetic dataset from the checkpoint's experiment seed, so a fixture
+only reports a *real* AUC if its model was trained against the same
+latent ground truth. This script makes that possible without a Rust
+toolchain in the container:
+
+* exact ports of the repo's deterministic generators — `mix64`,
+  `Pcg32` (PCG-XSH-RR 64/32) and the stateless pair-interaction hash
+  (rust/src/util/rng.rs, rust/src/data/synthetic.rs) — rebuild the
+  ground-truth latent weights and field pairs bit-for-bit from the seed
+  (both are self-tested against published SplitMix64/PCG32 vectors);
+* training *samples* only need the right distribution, not the right
+  stream, so Zipf ranks, the per-field rank permutation and Bernoulli
+  labels are drawn vectorized with numpy against that ground truth;
+* a numpy DCN mirrors rust/src/nn/dcn.rs layer for layer (same cross /
+  MLP / head shapes and the same flat parameter layout), trained with
+  plain SGD while the embedding table is clamped to the LPT clip range;
+* the embedding table is quantized onto the fixed 8-bit LPT grid
+  (Δ = clip / 2^{m-1}, codes in [-127, 127]) and written as a version-1
+  checkpoint through scripts/make_fixture.py's section writer.
+
+The script refuses to write the fixture unless its own held-out AUC
+clears 0.65; rust/tests/ckpt_fixture.rs then re-asserts > 0.60 through
+the real Rust reader + engine on the seed-regenerated split, which
+fails loudly if the ground-truth port ever drifts from the Rust side.
+
+    python3 scripts/train_fixture.py        # numpy only, ~1 minute
+"""
+
+import math
+import os
+import struct
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from make_fixture import (  # noqa: E402
+    BATCH, CROSS_DEPTH, EMB_DIM, FIELDS, KIND_DENSE, KIND_META, KIND_ROWS,
+    MAGIC, MLP, N, ROW_BYTES, VERSION, VOCABS, meta_json, n_params, section,
+    verify,
+)
+
+# experiment echo constants (must agree with make_fixture.experiment_echo)
+SEED = 7
+CLIP = np.float32(0.1)
+BITS = 8
+DELTA = CLIP / np.float32(1 << (BITS - 1))  # delta_from_clip, f32
+# SyntheticSpec::tiny (rust/src/data/synthetic.rs)
+ZIPF_S = 1.1
+WEIGHT_STD = 1.2
+N_PAIRS = 4
+PAIR_STD = 0.6
+TARGET_CTR = 0.25
+OFFSETS = np.cumsum([0] + VOCABS[:-1])  # exclusive prefix sum (Schema)
+
+# training budget (distribution-matched fresh draws, not the eval split)
+N_TRAIN = 60_000
+N_EVAL = 10_000
+EPOCHS = 4
+LR_DENSE = 0.1
+LR_EMB = 0.5
+MIN_AUC = 0.65
+
+M64 = (1 << 64) - 1
+
+
+# ---- exact ports of rust/src/util/rng.rs ------------------------------
+
+
+def mix64(z):
+    """SplitMix64 finalizer on Python ints (wrapping u64)."""
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return (z ^ (z >> 31)) & M64
+
+
+class Pcg32:
+    """PCG-XSH-RR 64/32, bit-for-bit the Rust `Pcg32`."""
+
+    def __init__(self, seed, stream):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + mix64(seed)) & M64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        x = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((x >> rot) | (x << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self):
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def uniform_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        """Lemire's unbiased [0, n) (matches Rust draw-for-draw)."""
+        while True:
+            x = self.next_u32()
+            m = x * n
+            lo = m & 0xFFFFFFFF
+            if lo >= n or lo >= ((1 << 32) - n) % n:
+                return m >> 32
+
+    def normal(self):
+        """Box–Muller in f64, cast to f32 (Rust `normal`)."""
+        u1 = 1.0 - self.uniform_f64()
+        u2 = self.uniform_f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        return np.float32(r * math.cos(2.0 * math.pi * u2))
+
+    def normal_scaled(self, mean, std):
+        return np.float32(mean) + np.float32(std) * self.normal()
+
+
+def _selftest():
+    """Pin the ports to published reference vectors before trusting them."""
+    # SplitMix64(1234567): next() = mix64(state += golden gamma)
+    s = (1234567 + 0x9E3779B97F4A7C15) & M64
+    assert mix64(s) == 6457827717110365317, "mix64 port broken"
+    s = (s + 0x9E3779B97F4A7C15) & M64
+    assert mix64(s) == 3203168211198807973, "mix64 port broken"
+    # PCG32 demo vector (initstate 42, initseq 54) through the same
+    # next_u32 core; the Rust ctor only differs by mixing the seed first
+    r = Pcg32.__new__(Pcg32)
+    r.state, r.inc = 0, (54 << 1) | 1
+    r.next_u32()
+    r.state = (r.state + 42) & M64
+    r.next_u32()
+    got = [r.next_u32() for _ in range(6)]
+    assert got == [0xA15C02B7, 0x7B47F409, 0xBA1D3330, 0x83D2F293,
+                   0xBFA4784B, 0xCBED606E], f"pcg32 port broken: {got}"
+
+
+# ---- ground truth (exact latent model, rust/src/data/synthetic.rs) ----
+
+
+def mix64_np(z):
+    """Vectorized mix64 on uint64 arrays."""
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def interaction_np(a, b):
+    """Stateless pair weight: hash -> uniforms -> Box–Muller (exact)."""
+    h = mix64_np(np.uint64(SEED) ^ ((a << np.uint64(32)) | b))
+    u1 = np.maximum((h >> np.uint64(11)).astype(np.float64) * 2.0**-53,
+                    1e-12)
+    h2 = mix64_np(h ^ np.uint64(0x9E3779B97F4A7C15))
+    u2 = (h2 >> np.uint64(11)).astype(np.float64) * 2.0**-53
+    return (np.sqrt(-2.0 * np.log(u1))
+            * np.cos(2.0 * np.pi * u2)).astype(np.float32)
+
+
+def ground_truth_weights():
+    """Latent per-feature weights + field pairs, bit-for-bit the Rust
+    GroundTruth::new draws (Pcg32 streams 0x17EA)."""
+    rng = Pcg32(SEED, 0x17EA)
+    per_field = np.float32(WEIGHT_STD) / np.sqrt(np.float32(FIELDS))
+    weights = np.array(
+        [rng.normal_scaled(0.0, per_field) for _ in range(N)],
+        dtype=np.float32,
+    )
+    pairs = []
+    while len(pairs) < N_PAIRS:
+        a = rng.below(FIELDS)
+        b = rng.below(FIELDS)
+        if a != b and (min(a, b), max(a, b)) not in pairs:
+            pairs.append((min(a, b), max(a, b)))
+    return weights, pairs
+
+
+def gt_logit(weights, pairs, bias, feats):
+    """True logit for [n, FIELDS] global-id samples."""
+    z = weights[feats].sum(axis=1, dtype=np.float64)
+    scale = PAIR_STD / math.sqrt(len(pairs))
+    g = feats.astype(np.uint64)
+    for a, b in pairs:
+        z += scale * interaction_np(g[:, a], g[:, b]).astype(np.float64)
+    return z + bias
+
+
+# ---- distribution-matched sampling (numpy-vectorized) -----------------
+
+
+def zipf_ranks(nprng, n, size):
+    """Zipf(s) ranks over [0, n) by rejection-inversion (same scheme as
+    rust Zipf::sample, batch-vectorized with numpy draws)."""
+    one_s = 1.0 - ZIPF_S
+
+    def h(x):
+        return (np.power(x, one_s) - 1.0) / one_s
+
+    def h_inv(y):
+        return np.power(1.0 + y * one_s, 1.0 / one_s)
+
+    h_lo, h_hi = h(0.5), h(n + 0.5)
+    out = np.empty(size, dtype=np.int64)
+    filled = 0
+    while filled < size:
+        m = size - filled
+        x = h_inv(h_lo + nprng.random(m) * (h_hi - h_lo))
+        k = np.clip(np.round(x), 1.0, float(n))
+        bucket = np.maximum(h(k + 0.5) - h(k - 0.5), 1e-300)
+        acc = nprng.random(m) <= np.power(k, -ZIPF_S) / bucket
+        ka = k[acc].astype(np.int64) - 1
+        out[filled:filled + ka.size] = ka
+        filled += ka.size
+    return out
+
+
+def permute_np(ranks, n, seed):
+    """Exact port of synthetic.rs `permute` (bijective cycle-walk)."""
+    if n <= 1:
+        return np.zeros_like(ranks)
+    bits = (n - 1).bit_length()
+    mask = np.uint64((1 << bits) - 1)
+    keys = [np.uint64(mix64(seed ^ (r * 0xA5A5A5A5))) for r in range(3)]
+    shift = np.uint64(max(bits // 2, 1))
+    v = ranks.astype(np.uint64)
+    pending = np.ones(v.shape, dtype=bool)
+    while pending.any():
+        w = v[pending]
+        for k in keys:
+            w ^= (k >> np.uint64(7)) & mask
+            w = (w * np.uint64(0x9E3779B9 | 1)) & mask
+            w ^= w >> shift
+            w &= mask
+        v[pending] = w
+        pending = v >= np.uint64(n)
+    return v.astype(np.int64)
+
+
+def sample_features(nprng, size):
+    """[size, FIELDS] global feature ids from the tiny spec."""
+    feats = np.empty((size, FIELDS), dtype=np.int64)
+    for f, vocab in enumerate(VOCABS):
+        ranks = zipf_ranks(nprng, vocab, size)
+        feats[:, f] = OFFSETS[f] + permute_np(ranks, vocab, SEED ^ f)
+    return feats
+
+
+def calibrate_bias(weights, pairs, nprng):
+    """Bisect the CTR bias like GroundTruth::new (fresh calibration
+    draws; only the constant differs from Rust's by sampling noise)."""
+    feats = sample_features(nprng, 20_000)
+    raw = gt_logit(weights, pairs, 0.0, feats)
+    lo, hi = -10.0, 10.0
+    for _ in range(50):
+        mid = 0.5 * (lo + hi)
+        if np.mean(1.0 / (1.0 + np.exp(-(raw + mid)))) < TARGET_CTR:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+# ---- numpy DCN mirroring rust/src/nn/dcn.rs ---------------------------
+
+
+class DcnParams:
+    """Dense parameters in the exact flat layout `param_layout` defines:
+    cross w/b pairs, MLP w/b pairs, final_w, final_b."""
+
+    def __init__(self, nprng):
+        k = FIELDS * EMB_DIM
+        self.cross_w = [np.asarray(nprng.normal(0.0, 0.01, k),
+                                   dtype=np.float32)
+                        for _ in range(CROSS_DEPTH)]
+        self.cross_b = [np.zeros(k, dtype=np.float32)
+                        for _ in range(CROSS_DEPTH)]
+        self.mlp_w, self.mlp_b = [], []
+        prev = k
+        for width in MLP:
+            a = math.sqrt(6.0 / (prev + width))
+            self.mlp_w.append(np.asarray(
+                nprng.uniform(-a, a, (prev, width)), dtype=np.float32))
+            self.mlp_b.append(np.zeros(width, dtype=np.float32))
+            prev = width
+        a = math.sqrt(6.0 / (k + prev + 1))
+        self.final_w = np.asarray(nprng.uniform(-a, a, k + prev),
+                                  dtype=np.float32)
+        self.final_b = np.float32(0.0)
+
+    def flat(self):
+        parts = []
+        for w, b in zip(self.cross_w, self.cross_b):
+            parts += [w, b]
+        for w, b in zip(self.mlp_w, self.mlp_b):
+            parts += [w.reshape(-1), b]
+        parts += [self.final_w, np.array([self.final_b], dtype=np.float32)]
+        out = np.concatenate(parts).astype(np.float32)
+        assert out.size == n_params(), (out.size, n_params())
+        return out
+
+
+def forward(p, emb, feats):
+    """Logits + cache for a [B, FIELDS] batch of global ids."""
+    b = feats.shape[0]
+    k = FIELDS * EMB_DIM
+    x0 = emb[feats].reshape(b, k)
+    xs = [x0]
+    for l in range(CROSS_DEPTH):
+        xl = xs[-1]
+        s = xl @ p.cross_w[l]
+        xs.append(x0 * s[:, None] + p.cross_b[l][None, :] + xl)
+    pre, act = [], []
+    h = x0
+    for i in range(len(MLP)):
+        z = h @ p.mlp_w[i] + p.mlp_b[i][None, :]
+        pre.append(z)
+        h = np.maximum(z, np.float32(0.0))
+        act.append(h)
+    out = np.concatenate([xs[-1], h], axis=1)
+    logits = out @ p.final_w + p.final_b
+    return logits, (x0, xs, pre, act, out)
+
+
+def backward(p, cache, logits, labels):
+    """Gradients in the same shapes; mirrors Dcn::backward with an
+    all-ones dropout mask."""
+    x0, xs, pre, act, out = cache
+    b = labels.shape[0]
+    k = FIELDS * EMB_DIM
+    dlogit = ((1.0 / (1.0 + np.exp(-logits)) - labels)
+              / np.float32(b)).astype(np.float32)
+    g = DcnParams.__new__(DcnParams)
+    g.final_w = out.T @ dlogit
+    g.final_b = dlogit.sum()
+    dout = dlogit[:, None] * p.final_w[None, :]
+    dxl, da = dout[:, :k], dout[:, k:]
+    # deep tower
+    dx0 = np.zeros_like(x0)
+    g.mlp_w = [None] * len(MLP)
+    g.mlp_b = [None] * len(MLP)
+    for i in reversed(range(len(MLP))):
+        dz = da * (pre[i] > 0)
+        h_prev = x0 if i == 0 else act[i - 1]
+        g.mlp_w[i] = h_prev.T @ dz
+        g.mlp_b[i] = dz.sum(axis=0)
+        da = dz @ p.mlp_w[i].T
+        if i == 0:
+            dx0 += da
+    # cross tower
+    gk = dxl.copy()
+    g.cross_w = [None] * CROSS_DEPTH
+    g.cross_b = [None] * CROSS_DEPTH
+    for l in reversed(range(CROSS_DEPTH)):
+        xl = xs[l]
+        s = xl @ p.cross_w[l]
+        r = (gk * x0).sum(axis=1)
+        g.cross_w[l] = xl.T @ r
+        g.cross_b[l] = gk.sum(axis=0)
+        dx0 += gk * s[:, None]
+        gk = gk + r[:, None] * p.cross_w[l][None, :]
+    dx0 += gk
+    return g, dx0
+
+
+def sgd(p, g, lr):
+    for l in range(CROSS_DEPTH):
+        p.cross_w[l] -= lr * g.cross_w[l]
+        p.cross_b[l] -= lr * g.cross_b[l]
+    for i in range(len(MLP)):
+        p.mlp_w[i] -= lr * g.mlp_w[i]
+        p.mlp_b[i] -= lr * g.mlp_b[i]
+    p.final_w -= lr * g.final_w
+    p.final_b -= np.float32(lr * g.final_b)
+
+
+def auc_of(logits, labels):
+    order = np.argsort(logits, kind="stable")
+    ranks = np.empty(len(logits), dtype=np.float64)
+    ranks[order] = np.arange(1, len(logits) + 1)
+    # average ties so the estimate is exact
+    sorted_l = logits[order]
+    i = 0
+    while i < len(sorted_l):
+        j = i
+        while j + 1 < len(sorted_l) and sorted_l[j + 1] == sorted_l[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = 0.5 * (i + 1 + j + 1)
+        i = j + 1
+    pos = labels > 0.5
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return (ranks[pos].sum() - n_pos * (n_pos + 1) / 2.0) / (n_pos * n_neg)
+
+
+def main():
+    _selftest()
+    weights, pairs = ground_truth_weights()
+    nprng = np.random.default_rng(SEED)
+    bias = calibrate_bias(weights, pairs, nprng)
+    print(f"ground truth: {N} latent weights, pairs {pairs}, "
+          f"bias {bias:+.4f}")
+
+    def draw(n):
+        feats = sample_features(nprng, n)
+        z = gt_logit(weights, pairs, bias, feats)
+        labels = (nprng.random(n) < 1.0 / (1.0 + np.exp(-z)))
+        return feats, labels.astype(np.float32)
+
+    train_x, train_y = draw(N_TRAIN)
+    eval_x, eval_y = draw(N_EVAL)
+    ctr = float(train_y.mean())
+    assert abs(ctr - TARGET_CTR) < 0.05, f"ctr {ctr} off target"
+    bayes = auc_of(gt_logit(weights, pairs, bias, eval_x), eval_y)
+    print(f"drew {N_TRAIN} train / {N_EVAL} eval samples, ctr {ctr:.3f}, "
+          f"bayes auc {bayes:.4f}")
+
+    emb = np.asarray(nprng.normal(0.0, 0.01, (N, EMB_DIM)),
+                     dtype=np.float32)
+    params = DcnParams(nprng)
+    steps = 0
+    for epoch in range(EPOCHS):
+        lr_scale = 0.5 ** epoch
+        order = nprng.permutation(N_TRAIN)
+        losses = []
+        for start in range(0, N_TRAIN - BATCH + 1, BATCH):
+            idx = order[start:start + BATCH]
+            feats, y = train_x[idx], train_y[idx]
+            logits, cache = forward(params, emb, feats)
+            z = logits.astype(np.float64)
+            losses.append(np.mean(np.maximum(z, 0) - z * y
+                                  + np.log1p(np.exp(-np.abs(z)))))
+            g, dx0 = backward(params, cache, logits, y)
+            sgd(params, g, np.float32(LR_DENSE * lr_scale))
+            rows = dx0.reshape(BATCH, FIELDS, EMB_DIM)
+            np.add.at(emb, feats.reshape(-1),
+                      -np.float32(LR_EMB * lr_scale)
+                      * rows.reshape(-1, EMB_DIM))
+            touched = np.unique(feats)
+            emb[touched] = np.clip(emb[touched], -CLIP, CLIP)
+            steps += 1
+        print(f"epoch {epoch + 1}/{EPOCHS}: loss {np.mean(losses):.5f}")
+
+    # quantize onto the fixed LPT grid and evaluate what will be served
+    np.clip(emb, -CLIP, CLIP, out=emb)
+    codes = np.clip(np.round(emb / DELTA), -127, 127).astype(np.int64)
+    emb_q = (codes.astype(np.float32) * DELTA).astype(np.float32)
+
+    def eval_auc(table):
+        logits = np.empty(N_EVAL, dtype=np.float32)
+        for start in range(0, N_EVAL, BATCH):
+            chunk = eval_x[start:start + BATCH]
+            pad = BATCH - chunk.shape[0]
+            if pad:
+                chunk = np.vstack([chunk, chunk[:pad]])
+            out, _ = forward(params, table, chunk)
+            logits[start:start + BATCH - pad] = out[:BATCH - pad]
+        return auc_of(logits, eval_y)
+
+    auc_fp = eval_auc(emb)
+    auc_q = eval_auc(emb_q)
+    print(f"held-out auc: fp32 {auc_fp:.4f}, 8-bit quantized {auc_q:.4f} "
+          f"(bayes {bayes:.4f})")
+    assert auc_q > MIN_AUC, (
+        f"trained auc {auc_q:.4f} below {MIN_AUC}; not writing the fixture"
+    )
+
+    # write the version-1 checkpoint through the shared section writer
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "examples", "fixtures", "tiny_lpt8.ckpt")
+    rows = (codes.reshape(-1) & 0xFF).astype(np.uint8).tobytes()
+    assert len(rows) == N * ROW_BYTES
+    dense = params.flat().astype("<f4").tobytes()
+    sections = [
+        section(KIND_META, 0, meta_json(step=steps).encode("utf-8")),
+        section(KIND_ROWS, 0, rows),
+        section(KIND_DENSE, 0, dense),
+    ]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(sections)))
+        for s in sections:
+            f.write(s)
+    verify(path)
+    print(f"wrote {path}: {os.path.getsize(path)} bytes, "
+          f"step {steps}, quantized auc {auc_q:.4f}")
+
+
+if __name__ == "__main__":
+    main()
