@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (§Perf): packed-table row ops (word-at-a-time
 //! unpack, fused quantize→pack), counter-RNG stream throughput, serial vs
-//! sharded store gather/update at every bit width, batch dedup, AUC, the
-//! Rust-nn training step, and PJRT artifact execution latency.
+//! sharded store gather/update at every bit width, the budget planner,
+//! batch dedup, AUC, the Rust-nn training step, and PJRT artifact
+//! execution latency.
 //!
 //! Output feeds ROADMAP.md §Performance; machine-readable mirror in
 //! `BENCH_micro.json` at the repo root (cross-PR perf trajectory) plus
@@ -337,6 +338,27 @@ fn main() {
                     .unwrap();
             },
         );
+    }
+
+    // --------------------------------------------------- budget planner
+    section("budget planner: plan_for_budget, criteo-like geometry \
+             (plans/s)");
+    {
+        use alpt::analysis::{plan_for_budget, static_field_scores};
+        // 39 fields with vocabs spanning 4 orders of magnitude, a
+        // mid-range budget so the greedy loop runs several upgrade
+        // rounds before settling
+        let vocabs: Vec<u32> =
+            (0..39u32).map(|f| 1u32 << (2 + (f % 18))).collect();
+        let scores = static_field_scores(&vocabs);
+        let total: u64 = vocabs.iter().map(|&v| v as u64).sum();
+        let budget = total * 12;
+        b.bench_units("plan_for_budget 39 fields d=16", Some(1.0), || {
+            let p = plan_for_budget(&vocabs, &scores, 16, true, budget,
+                                    true)
+                .expect("mid-range budget is feasible");
+            std::hint::black_box(p.bytes);
+        });
     }
 
     // ------------------------------- shared inference engine throughput

@@ -1,14 +1,22 @@
-//! The paper's synthetic convex experiment (§3.1, Figure 3): minimize
-//! f(w) = (w − 0.5)² for 1000 independent parameters under full-precision
-//! SGD vs LPT with deterministic / stochastic rounding.
+//! Offline analyses: the paper's synthetic convex experiment (§3.1,
+//! Figure 3) and the budgeted precision planner behind `auto:<bytes>`
+//! plans and `alpt plan --budget`.
 //!
-//! Expected shape (Theorems 1–2, Remark 1): SR tracks the FP trajectory,
-//! DR stalls as soon as every update satisfies |η∇f| < Δ/2 and the
-//! parameter distribution freezes away from the optimum.
+//! Convex experiment — minimize f(w) = (w − 0.5)² for 1000 independent
+//! parameters under full-precision SGD vs LPT with deterministic /
+//! stochastic rounding. Expected shape (Theorems 1–2, Remark 1): SR
+//! tracks the FP trajectory, DR stalls as soon as every update satisfies
+//! |η∇f| < Δ/2 and the parameter distribution freezes away from the
+//! optimum.
+//!
+//! Budget planner — see [`plan_for_budget`].
 
+use crate::config::{FieldSel, GroupKind, PrecisionPlan};
+use crate::data::Schema;
 use crate::quant::{round_dr, round_sr, BitWidth};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Histogram;
+use anyhow::{bail, ensure, Result};
 
 /// Training mode for the convex experiment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +150,217 @@ pub fn run_convex(
     out
 }
 
+// ------------------------------------------------------- budget planner
+
+/// The packed widths the planner climbs through, cheapest first.
+pub const PLAN_WIDTHS: [u32; 4] = [2, 4, 8, 16];
+
+/// What [`plan_for_budget`] decided: the emitted plan, its predicted
+/// inference footprint under the same cost model the greedy search used,
+/// and the raw per-field assignments in field order.
+#[derive(Clone, Debug)]
+pub struct BudgetPlan {
+    pub plan: PrecisionPlan,
+    /// Predicted inference bytes of `plan` ([`plan_bytes`]); ≤ the budget
+    /// whenever `plan_for_budget` succeeds.
+    pub bytes: u64,
+    /// Per-field [`GroupKind`] assignment, indexed by field.
+    pub kinds: Vec<GroupKind>,
+}
+
+/// Predicted inference footprint, in bytes, of a per-field assignment.
+///
+/// Matches each store's `infer_bytes` accounting:
+///
+/// * packed width `b`: `rows · ceil(d·b/8)` code bytes, plus 4 bytes per
+///   row of learned Δ under ALPT, or one shared 4-byte Δ per distinct
+///   width group under LPT;
+/// * `hash`: the quotient–remainder tables at remainder 2 —
+///   `(2 + ceil(rows/2)) · d` f32s;
+/// * `prune`: the schedule's steady state (R_x = 0.5 → half the dense
+///   weights survive), `rows · d · 2` bytes. Early in the ramp the live
+///   table is bigger; the budget is a shipping target, not a transient
+///   training bound.
+pub fn plan_bytes(
+    kinds: &[GroupKind],
+    vocabs: &[u32],
+    dim: usize,
+    is_alpt: bool,
+) -> u64 {
+    let d = dim as u64;
+    let mut total = 0u64;
+    let mut width_mask = 0u32;
+    for (kind, &vocab) in kinds.iter().zip(vocabs) {
+        let rows = vocab as u64;
+        total += match kind {
+            GroupKind::Bits(b) => {
+                width_mask |= b; // widths are distinct powers of two
+                let row_bytes = (d * *b as u64).div_ceil(8);
+                rows * row_bytes + if is_alpt { rows * 4 } else { 0 }
+            }
+            GroupKind::Hashed => (2 + rows.div_ceil(2)) * d * 4,
+            GroupKind::Pruned => rows * d * 2,
+        };
+    }
+    if !is_alpt {
+        total += width_mask.count_ones() as u64 * 4;
+    }
+    total
+}
+
+/// Mean access count per allocated row, field by field — the hotness
+/// score [`plan_for_budget`] ranks on. Fields whose traffic concentrates
+/// on a small vocabulary score high (every row is hot); long-tail fields
+/// score low (most rows are cold). A field nobody touched scores 0.
+pub fn field_scores_from_counts(
+    counts: &[u32],
+    schema: &Schema,
+) -> Vec<f64> {
+    (0..schema.n_fields())
+        .map(|f| {
+            let lo = schema.offsets[f] as usize;
+            let hi = lo + schema.vocabs[f] as usize;
+            let total: u64 =
+                counts[lo..hi].iter().map(|&c| c as u64).sum();
+            total as f64 / schema.vocabs[f] as f64
+        })
+        .collect()
+}
+
+/// The data-free fallback ranking (used to materialize `auto:<bytes>`
+/// before any batch has run): under a uniform-traffic assumption each
+/// field's per-row heat is inversely proportional to its vocabulary.
+pub fn static_field_scores(vocabs: &[u32]) -> Vec<f64> {
+    vocabs.iter().map(|&v| 1.0 / v as f64).collect()
+}
+
+/// Resolve a byte budget into a concrete per-field precision plan.
+///
+/// Deterministic greedy: every field starts at 2-bit (fields with score
+/// 0 start `prune`d when `allow_structural` — nobody reads them, so the
+/// dense-but-masked group costs quality nothing), then fields are
+/// upgraded 2→4→8→16 one width per round in hotness order
+/// ([`field_scores_from_counts`]; ties broken by field index) for as
+/// long as the predicted footprint stays within `budget`. Zero-score
+/// fields are never upgraded. `allow_structural` is off on the online
+/// re-planning path, where a structural group would block future
+/// migrations (shared parameters cannot be requantized row-by-row).
+///
+/// Errors when even the cheapest all-2-bit assignment overflows the
+/// budget, naming the minimum feasible size.
+pub fn plan_for_budget(
+    vocabs: &[u32],
+    scores: &[f64],
+    dim: usize,
+    is_alpt: bool,
+    budget: u64,
+    allow_structural: bool,
+) -> Result<BudgetPlan> {
+    ensure!(!vocabs.is_empty(), "no fields to plan");
+    ensure!(
+        vocabs.len() == scores.len(),
+        "planner got {} fields but {} scores",
+        vocabs.len(),
+        scores.len()
+    );
+    ensure!(budget > 0, "budget must be positive");
+
+    let n = vocabs.len();
+    let mut kinds: Vec<GroupKind> = scores
+        .iter()
+        .map(|&s| {
+            if allow_structural && s <= 0.0 {
+                GroupKind::Pruned
+            } else {
+                GroupKind::Bits(2)
+            }
+        })
+        .collect();
+
+    // A pruned group still ships half its dense f32s — 8x a 2-bit row —
+    // so under a tight budget untouched fields fall back to 2-bit codes,
+    // biggest field first.
+    let mut bytes = plan_bytes(&kinds, vocabs, dim, is_alpt);
+    if bytes > budget {
+        let mut pruned: Vec<usize> = (0..n)
+            .filter(|&f| kinds[f] == GroupKind::Pruned)
+            .collect();
+        pruned.sort_by_key(|&f| std::cmp::Reverse(vocabs[f]));
+        for f in pruned {
+            if bytes <= budget {
+                break;
+            }
+            kinds[f] = GroupKind::Bits(2);
+            bytes = plan_bytes(&kinds, vocabs, dim, is_alpt);
+        }
+    }
+    if bytes > budget {
+        bail!(
+            "budget of {budget} bytes cannot hold even an all-2-bit plan \
+             for this geometry ({n} fields, dim {dim}: minimum {bytes} \
+             bytes); raise the budget or shrink the embedding dim"
+        );
+    }
+
+    // hotness order: score descending, field index breaking ties
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+
+    loop {
+        let mut upgraded = false;
+        for &f in &order {
+            if scores[f] <= 0.0 {
+                continue;
+            }
+            let GroupKind::Bits(b) = kinds[f] else { continue };
+            if b >= 16 {
+                continue;
+            }
+            let mut trial = kinds.clone();
+            trial[f] = GroupKind::Bits(b * 2);
+            let trial_bytes = plan_bytes(&trial, vocabs, dim, is_alpt);
+            if trial_bytes <= budget {
+                kinds = trial;
+                bytes = trial_bytes;
+                upgraded = true;
+            }
+        }
+        if !upgraded {
+            break;
+        }
+    }
+
+    // Emit the most-common width as the plan default (ties to the wider
+    // width) and one fN rule per field that differs — the compactest
+    // spelling that round-trips through the plan grammar.
+    let mut default_bits = 0u32;
+    let mut best = 0usize;
+    for &width in &PLAN_WIDTHS {
+        let c = kinds
+            .iter()
+            .filter(|k| **k == GroupKind::Bits(width))
+            .count();
+        if c > 0 && c >= best {
+            best = c;
+            default_bits = width;
+        }
+    }
+    if default_bits == 0 {
+        default_bits = 8; // all-structural plan: default backs nothing
+    }
+    let rules: Vec<(FieldSel, GroupKind)> = (0..n)
+        .filter(|&f| kinds[f] != GroupKind::Bits(default_bits))
+        .map(|f| (FieldSel::Field(f), kinds[f]))
+        .collect();
+    let plan = PrecisionPlan::from_rules(rules, default_bits);
+    Ok(BudgetPlan { plan, bytes, kinds })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +412,114 @@ mod tests {
         for s in &snaps {
             assert_eq!(s.histogram.total() as usize, spec.n_params);
         }
+    }
+
+    // ------------------------------------------------- budget planner
+
+    #[test]
+    fn planner_respects_budget_and_ranks_by_heat() {
+        let vocabs = [16u32, 4096, 256];
+        let scores = [50.0, 0.01, 3.0];
+        let budget = 12_000u64;
+        let got =
+            plan_for_budget(&vocabs, &scores, 8, false, budget, false)
+                .unwrap();
+        assert!(got.bytes <= budget, "{} > {budget}", got.bytes);
+        assert_eq!(
+            got.bytes,
+            plan_bytes(&got.kinds, &vocabs, 8, false),
+            "reported bytes disagree with the cost model"
+        );
+        let width =
+            |f: usize| got.kinds[f].bits().expect("packed assignment");
+        assert!(
+            width(0) >= width(2) && width(2) >= width(1),
+            "heat order violated: {:?}",
+            got.kinds
+        );
+        // the emitted grammar round-trips to the same plan
+        let reparsed = PrecisionPlan::parse(&got.plan.key()).unwrap();
+        assert_eq!(reparsed, got.plan);
+    }
+
+    #[test]
+    fn planner_is_deterministic() {
+        let vocabs = [40u32, 1000, 8, 300];
+        let scores = [1.0, 0.2, 9.0, 0.2];
+        let a = plan_for_budget(&vocabs, &scores, 16, true, 40_000, true)
+            .unwrap();
+        let b = plan_for_budget(&vocabs, &scores, 16, true, 40_000, true)
+            .unwrap();
+        assert_eq!(a.kinds, b.kinds);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn zero_score_fields_prune_only_when_structural_is_allowed() {
+        let vocabs = [100u32, 100];
+        let scores = [1.0, 0.0];
+        let strict =
+            plan_for_budget(&vocabs, &scores, 8, false, 1 << 20, false)
+                .unwrap();
+        assert!(strict.kinds.iter().all(|k| !k.is_structural()));
+        // the cold field is never upgraded past the 2-bit floor
+        assert_eq!(strict.kinds[1], GroupKind::Bits(2));
+
+        let loose =
+            plan_for_budget(&vocabs, &scores, 8, false, 1 << 20, true)
+                .unwrap();
+        assert_eq!(loose.kinds[1], GroupKind::Pruned);
+        assert_eq!(loose.kinds[0], GroupKind::Bits(16), "budget is ample");
+    }
+
+    #[test]
+    fn tight_budget_downgrades_pruned_fields_to_codes() {
+        // pruned = rows*d*2 bytes; 2-bit = rows*d/4: only the downgrade
+        // fits this budget
+        let vocabs = [1000u32, 1000];
+        let scores = [1.0, 0.0];
+        let dim = 8;
+        let all2 = plan_bytes(
+            &[GroupKind::Bits(2), GroupKind::Bits(2)],
+            &vocabs,
+            dim,
+            false,
+        );
+        let got = plan_for_budget(
+            &vocabs, &scores, dim, false, all2 + 16, true,
+        )
+        .unwrap();
+        assert_eq!(got.kinds[1], GroupKind::Bits(2));
+        assert!(got.bytes <= all2 + 16);
+    }
+
+    #[test]
+    fn infeasible_budget_names_the_minimum() {
+        let err = plan_for_budget(&[1 << 20], &[1.0], 32, false, 64, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("all-2-bit"), "{err}");
+        assert!(err.contains("minimum"), "{err}");
+    }
+
+    #[test]
+    fn alpt_plans_charge_the_per_row_delta() {
+        let kinds = [GroupKind::Bits(4), GroupKind::Bits(4)];
+        let vocabs = [100u32, 50];
+        let lpt = plan_bytes(&kinds, &vocabs, 8, false);
+        let alpt = plan_bytes(&kinds, &vocabs, 8, true);
+        assert_eq!(alpt, lpt - 4 + 150 * 4); // shared Δ out, row Δs in
+    }
+
+    #[test]
+    fn count_scores_average_per_row_traffic() {
+        let schema = Schema::new(vec![2, 3]);
+        // field 0 rows hit [4, 0]; field 1 rows hit [1, 1, 1]
+        let counts = [4u32, 0, 1, 1, 1];
+        let scores = field_scores_from_counts(&counts, &schema);
+        assert_eq!(scores, vec![2.0, 1.0]);
+        let stat = static_field_scores(&[2, 4]);
+        assert_eq!(stat, vec![0.5, 0.25]);
     }
 }

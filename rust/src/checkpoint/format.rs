@@ -46,6 +46,16 @@ pub const VERSION: u32 = 1;
 /// as a single-group plan.
 pub const VERSION_GROUPED: u32 = 2;
 
+/// Kinded format version: like [`VERSION_GROUPED`], but group headers
+/// carry a `kind` token ("lpt" / "alpt" / "hash" / "prune") and groups —
+/// or whole single-store files — may be *aux-only* (`row_bytes` 0, no
+/// `Rows` sections): their state is one shared parameter block persisted
+/// through the `Aux` section alone, the layout hashing's
+/// quotient–remainder tables need. Written only when a structural group
+/// or aux-only store is present, so every pre-existing plan keeps its
+/// version-1/-2 bytes unchanged. Readers accept all three versions.
+pub const VERSION_KINDED: u32 = 3;
+
 /// Fixed byte size of the file header (magic + version + section count).
 pub const HEADER_BYTES: usize = 16;
 

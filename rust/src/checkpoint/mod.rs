@@ -45,7 +45,8 @@ use crate::embedding::{build_store, EmbeddingStore, GroupedStore};
 use crate::quant::GradScale;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
-use format::{parse_f32s, put_f32s, VERSION, VERSION_GROUPED};
+use format::{parse_f32s, put_f32s, VERSION, VERSION_GROUPED,
+             VERSION_KINDED};
 
 /// Rows per `Rows` section. Fixed (not tied to the thread config) so the
 /// file layout is identical no matter how the writer was parallelized;
@@ -53,23 +54,30 @@ use format::{parse_f32s, put_f32s, VERSION, VERSION_GROUPED};
 pub const SHARD_ROWS: usize = 1 << 16;
 
 /// Open a writer whose header version matches `store`'s checkpoint
-/// format: single-group stores write version 1 (byte-identical to the
-/// pre-grouping layout), grouped mixed-precision stores version 2.
+/// format: single-group stores with per-row payloads write version 1
+/// (byte-identical to the pre-grouping layout), grouped mixed-precision
+/// stores version 2, and anything holding aux-only state — hashing, or a
+/// grouped store with structural (hashed/pruned) groups — version 3.
 pub fn writer_for_store(
     path: &Path,
     store: &dyn EmbeddingStore,
 ) -> Result<CheckpointWriter> {
-    let version = if store.as_grouped().is_some() {
-        VERSION_GROUPED
-    } else {
-        VERSION
-    };
-    CheckpointWriter::create_with_version(path, version)
+    CheckpointWriter::create_with_version(path, store_version(store))
+}
+
+/// The checkpoint format version `store` serializes as (see
+/// [`writer_for_store`]).
+fn store_version(store: &dyn EmbeddingStore) -> u32 {
+    match store.as_grouped() {
+        Some(gs) if gs.has_structural_groups() => VERSION_KINDED,
+        Some(_) => VERSION_GROUPED,
+        None if store.ckpt_row_bytes().is_none() => VERSION_KINDED,
+        None => VERSION,
+    }
 }
 
 /// Serialize `store` (rows + aux scalars + metadata echoing `exp`) to
-/// `path`, returning the published file's anchor id. Fails for stores
-/// that cannot be checkpointed (hashing, pruning).
+/// `path`, returning the published file's anchor id.
 pub fn save_store(
     path: &Path,
     store: &dyn EmbeddingStore,
@@ -93,12 +101,16 @@ pub fn write_store_sections(
     if let Some(gs) = store.as_grouped() {
         return write_grouped_sections(w, gs, exp);
     }
-    let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
-        anyhow!("{} does not support checkpointing", store.method_name())
-    })?;
+    // aux-only stores (hashing: shared tables, no per-row payload) write
+    // row_bytes 0 / n_shards 0 and persist everything through Aux —
+    // that's the version-3 single-store layout
+    let row_bytes = store.ckpt_row_bytes().unwrap_or(0);
     let n = store.n_features();
-    let n_shards = n.div_ceil(SHARD_ROWS);
+    let n_shards =
+        if row_bytes == 0 { 0 } else { n.div_ceil(SHARD_ROWS) };
     let aux_len = store.aux_params().len();
+    let version =
+        if row_bytes == 0 { VERSION_KINDED } else { VERSION };
 
     let meta = Json::obj(vec![
         ("aux_len", Json::num(aux_len as f64)),
@@ -111,7 +123,7 @@ pub fn write_store_sections(
         ("row_bytes", Json::num(row_bytes as f64)),
         ("shard_rows", Json::num(SHARD_ROWS as f64)),
         ("step", Json::num(store.step_counter() as f64)),
-        ("version", Json::num(VERSION as f64)),
+        ("version", Json::num(version as f64)),
     ]);
     w.section(SectionKind::Meta, 0, meta.to_string().as_bytes())?;
 
@@ -133,31 +145,42 @@ pub fn write_store_sections(
     Ok(())
 }
 
-/// Format-v2 store sections: the meta carries one `{aux_len, bits,
+/// Format-v2/-v3 store sections: the meta carries one `{aux_len, bits,
 /// row_bytes, rows}` header per precision group; `Rows` sections run
 /// group by group with one global shard counter; each group's per-row
 /// scalars live in an `Aux` section indexed by the group number. Every
 /// group's payload goes through the same [`EmbeddingStore`] hooks the
 /// single-group path uses, so the raw packed bytes stay verbatim.
+///
+/// Plans with structural (hashed/pruned) groups write version 3: each
+/// group header additionally names its `kind`, and aux-only groups
+/// (hashing) record `row_bytes` 0 and contribute no `Rows` sections.
+/// The `kind` key is withheld from version-2 files so packed-only plans
+/// keep their pre-v3 bytes.
 fn write_grouped_sections(
     w: &mut CheckpointWriter,
     gs: &GroupedStore,
     exp: &Experiment,
 ) -> Result<()> {
     let n = gs.n_features();
+    let kinded = gs.has_structural_groups();
+    let version =
+        if kinded { VERSION_KINDED } else { VERSION_GROUPED };
     let groups_json = Json::Array(
         (0..gs.n_groups())
             .map(|g| {
                 let sub = gs.group_store(g);
-                let row_bytes = sub.ckpt_row_bytes().expect(
-                    "grouped sub-stores are always checkpointable",
-                );
-                Json::obj(vec![
+                let row_bytes = sub.ckpt_row_bytes().unwrap_or(0);
+                let mut fields = vec![
                     ("aux_len", Json::num(sub.aux_params().len() as f64)),
                     ("bits", Json::num(gs.group_bits(g) as f64)),
-                    ("row_bytes", Json::num(row_bytes as f64)),
-                    ("rows", Json::num(gs.group_rows(g) as f64)),
-                ])
+                ];
+                if kinded {
+                    fields.push(("kind", Json::str(gs.group_kind(g))));
+                }
+                fields.push(("row_bytes", Json::num(row_bytes as f64)));
+                fields.push(("rows", Json::num(gs.group_rows(g) as f64)));
+                Json::obj(fields)
             })
             .collect(),
     );
@@ -170,7 +193,7 @@ fn write_grouped_sections(
         ("n", Json::num(n as f64)),
         ("shard_rows", Json::num(SHARD_ROWS as f64)),
         ("step", Json::num(gs.step_counter() as f64)),
-        ("version", Json::num(VERSION_GROUPED as f64)),
+        ("version", Json::num(version as f64)),
     ]);
     w.section(SectionKind::Meta, 0, meta.to_string().as_bytes())?;
 
@@ -178,7 +201,9 @@ fn write_grouped_sections(
     let mut shard_idx = 0u32;
     for g in 0..gs.n_groups() {
         let sub = gs.group_store(g);
-        let row_bytes = sub.ckpt_row_bytes().unwrap();
+        let Some(row_bytes) = sub.ckpt_row_bytes() else {
+            continue; // aux-only group: no Rows sections
+        };
         let rows_total = gs.group_rows(g);
         for shard in 0..rows_total.div_ceil(SHARD_ROWS) {
             let lo = shard * SHARD_ROWS;
@@ -251,9 +276,7 @@ pub fn load_store_into(
          (precision plan mismatch?)",
         store.method_name()
     );
-    let row_bytes = store.ckpt_row_bytes().ok_or_else(|| {
-        anyhow!("{} does not support checkpointing", store.method_name())
-    })?;
+    let row_bytes = store.ckpt_row_bytes().unwrap_or(0);
     ensure!(
         row_bytes == ckpt.meta_usize("row_bytes")?,
         "row payload width mismatch: checkpoint has {} bytes/row, the \
@@ -265,8 +288,10 @@ pub fn load_store_into(
     let shard_rows = ckpt.meta_usize("shard_rows")?;
     ensure!(shard_rows > 0, "shard_rows must be positive");
     let n_shards = ckpt.meta_usize("n_shards")?;
+    let want_shards =
+        if row_bytes == 0 { 0 } else { n.div_ceil(shard_rows) };
     ensure!(
-        n_shards == n.div_ceil(shard_rows),
+        n_shards == want_shards,
         "inconsistent shard count: {n_shards} sections for {n} rows at \
          {shard_rows} rows/shard"
     );
@@ -343,14 +368,27 @@ fn load_grouped_into(
             gs.group_rows(g),
             gs.group_bits(g)
         );
+        // v3 headers name their kind; validate when present (v2 files
+        // predate kinds and are packed-only by construction)
+        if let Some(k) = gm.opt("kind") {
+            let kind = k.as_str()?;
+            ensure!(
+                kind == gs.group_kind(g),
+                "group {g}: checkpoint holds a {kind:?} group, the \
+                 rebuilt store has {:?} (precision plan mismatch?)",
+                gs.group_kind(g)
+            );
+        }
         let sub_row_bytes =
-            gs.group_store(g).ckpt_row_bytes().unwrap();
+            gs.group_store(g).ckpt_row_bytes().unwrap_or(0);
         ensure!(
             row_bytes == sub_row_bytes,
             "group {g}: row payload width mismatch ({row_bytes} vs \
              {sub_row_bytes} bytes/row)"
         );
-        for shard in 0..rows.div_ceil(shard_rows) {
+        let n_shards =
+            if row_bytes == 0 { 0 } else { rows.div_ceil(shard_rows) };
+        for shard in 0..n_shards {
             let lo = shard * shard_rows;
             let count = shard_rows.min(rows - lo);
             let sec = ckpt.section(SectionKind::Rows, shard_idx)?;
@@ -399,7 +437,7 @@ pub fn dense_params(ckpt: &Checkpoint) -> Result<Vec<f32>> {
 /// strings (a JSON number only carries 53 bits) — so the echo is
 /// lossless for every representable value.
 pub fn experiment_to_json(exp: &Experiment) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("artifacts_dir", Json::str(&exp.artifacts_dir)),
         // uniform plans echo as a plain number (byte-identical to the
         // pre-plan format); mixed plans as the plan string
@@ -438,7 +476,20 @@ pub fn experiment_to_json(exp: &Experiment) -> Json {
         ("vocab_scale", Json::num(exp.vocab_scale)),
         ("wd_delta", Json::num(exp.wd_delta as f64)),
         ("wd_emb", Json::num(exp.wd_emb as f64)),
-    ])
+    ];
+    // emitted only when set so every pre-replan configuration keeps its
+    // exact pre-PR echo bytes (the byte-identity fixtures pin them)
+    if exp.replan_budget != 0 {
+        let at = fields
+            .iter()
+            .position(|(k, _)| *k == "save_every")
+            .expect("echo always carries save_every");
+        fields.insert(
+            at,
+            ("replan_budget", Json::num(exp.replan_budget as f64)),
+        );
+    }
+    Json::obj(fields)
 }
 
 /// Inverse of [`experiment_to_json`].
@@ -514,6 +565,7 @@ pub fn experiment_from_json(v: &Json) -> Result<Experiment> {
             "compact_every",
             defaults.compact_every,
         )?,
+        replan_budget: opt_usize("replan_budget", 0)?,
     })
 }
 
@@ -813,17 +865,101 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_stores_refuse_to_save() {
+    fn aux_only_and_masked_stores_roundtrip() {
+        // the former checkpoint-refusing orphans: hashing persists
+        // aux-only (format v3), pruning per-row f32 rows + mask aux (v1)
         for method in [Method::Hashing, Method::Pruning] {
             let exp = exp_for(method, 8, 1);
             let mut rng = Pcg32::seeded(9);
             let store = build_store(&exp, 50, 4, &mut rng).unwrap();
-            let path = tmp("unsupported.ckpt");
-            let err = save_store(&path, store.as_ref(), &exp).unwrap_err();
-            let msg = format!("{err:#}");
-            assert!(msg.contains("checkpoint"), "{method:?}: {msg}");
-            std::fs::remove_file(&path).ok();
+            let loaded =
+                roundtrip(&format!("orphan_{method:?}"), store.as_ref(),
+                          &exp);
+            assert_eq!(
+                gather_all(store.as_ref()),
+                gather_all(loaded.as_ref()),
+                "{method:?}: gather diverged after load"
+            );
+            assert_eq!(loaded.infer_bytes(), store.infer_bytes());
         }
+
+        let h_exp = exp_for(Method::Hashing, 8, 1);
+        let mut rng = Pcg32::seeded(10);
+        let h = build_store(&h_exp, 64, 4, &mut rng).unwrap();
+        let p = tmp("hashing_v3.ckpt");
+        save_store(&p, h.as_ref(), &h_exp).unwrap();
+        let ck = Checkpoint::read(&p).unwrap();
+        assert_eq!(ck.version, VERSION_KINDED, "aux-only store is v3");
+        assert_eq!(ck.meta_usize("row_bytes").unwrap(), 0);
+        assert_eq!(ck.meta_usize("n_shards").unwrap(), 0);
+        assert!(ck.sections_of(SectionKind::Rows).is_empty());
+        std::fs::remove_file(&p).ok();
+
+        let pr_exp = exp_for(Method::Pruning, 8, 1);
+        let pr = build_store(&pr_exp, 64, 4, &mut rng).unwrap();
+        let p = tmp("pruning_v1.ckpt");
+        save_store(&p, pr.as_ref(), &pr_exp).unwrap();
+        let ck = Checkpoint::read(&p).unwrap();
+        assert_eq!(ck.version, VERSION, "per-row stores stay v1");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn structural_grouped_checkpoint_is_v3_with_kinds() {
+        let exp = Experiment {
+            method: Method::Alpt(RoundingMode::Sr),
+            bits: PrecisionPlan::parse("f0:hash,f1:prune,default:4")
+                .unwrap(),
+            dataset: "tiny".into(),
+            model: "tiny".into(),
+            use_runtime: false,
+            threads: 1,
+            ..Experiment::default()
+        };
+        let n = crate::data::registry::schema_for(&exp)
+            .unwrap()
+            .n_features();
+        let mut rng = Pcg32::seeded(23);
+        let store = build_store(&exp, n, 5, &mut rng).unwrap();
+        let loaded =
+            roundtrip("grouped_structural", store.as_ref(), &exp);
+        assert_eq!(gather_all(store.as_ref()), gather_all(loaded.as_ref()));
+        assert_eq!(loaded.step_counter(), store.step_counter());
+
+        let p = tmp("grouped_v3.ckpt");
+        save_store(&p, store.as_ref(), &exp).unwrap();
+        let ck = Checkpoint::read(&p).unwrap();
+        assert_eq!(ck.version, VERSION_KINDED);
+        let groups = ck.meta.get("groups").unwrap().as_array().unwrap();
+        let kinds: Vec<&str> = groups
+            .iter()
+            .map(|g| g.get("kind").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(kinds, vec!["alpt", "hash", "prune"]);
+        assert_eq!(
+            groups[1].get("row_bytes").unwrap().as_usize().unwrap(),
+            0,
+            "hashed group is aux-only"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn replan_budget_echo_is_conditional() {
+        // absent at the default (pre-PR echoes must stay byte-identical),
+        // round-trips when set
+        let off = experiment_to_json(&Experiment::default());
+        assert!(off.opt("replan_budget").is_none());
+        let exp = Experiment {
+            replan_budget: 1 << 20,
+            ..Experiment::default()
+        };
+        let back =
+            experiment_from_json(&experiment_to_json(&exp)).unwrap();
+        assert_eq!(back.replan_budget, 1 << 20);
+        let missing =
+            experiment_from_json(&off).unwrap();
+        assert_eq!(missing.replan_budget, 0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::format::{
     crc32, take_u32, take_u64, SectionKind, HEADER_BYTES, MAGIC,
-    SECTION_HEADER_BYTES, VERSION, VERSION_GROUPED,
+    SECTION_HEADER_BYTES, VERSION, VERSION_GROUPED, VERSION_KINDED,
 };
 use crate::util::json::Json;
 
@@ -70,10 +70,13 @@ impl Checkpoint {
         }
         let mut pos = 8;
         let version = take_u32(&bytes, &mut pos)?;
-        if version != VERSION && version != VERSION_GROUPED {
+        if version != VERSION
+            && version != VERSION_GROUPED
+            && version != VERSION_KINDED
+        {
             bail!(
                 "unsupported checkpoint version {version} (this build \
-                 reads versions {VERSION} and {VERSION_GROUPED})"
+                 reads versions {VERSION} through {VERSION_KINDED})"
             );
         }
         let n_sections = take_u32(&bytes, &mut pos)? as usize;

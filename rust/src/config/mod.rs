@@ -123,28 +123,94 @@ impl FieldSel {
     }
 }
 
-/// Per-field embedding precision plan — the `bits` config key / `--bits`
-/// flag. Fields differ wildly in cardinality and gradient traffic, so
-/// they do not all deserve the same precision; a plan assigns each field
-/// a bit width and the embedding layer groups fields of equal width into
-/// one packed sub-table each.
+/// What a plan assigns to one field: a packed bit width, or one of the
+/// *structural* compression kinds (which replace the packed sub-table
+/// outright rather than narrowing it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GroupKind {
+    /// Packed integer codes at this width (2|4|8|16).
+    Bits(u32),
+    /// Quotient–remainder hashed sub-table (`hash`; Shi et al. 2020).
+    Hashed,
+    /// Magnitude-pruned dense sub-table (`prune`; Deng et al. 2021).
+    Pruned,
+}
+
+impl GroupKind {
+    /// Stable plan token — the inverse of [`GroupKind::parse`].
+    pub fn key(&self) -> String {
+        match self {
+            GroupKind::Bits(b) => b.to_string(),
+            GroupKind::Hashed => "hash".into(),
+            GroupKind::Pruned => "prune".into(),
+        }
+    }
+
+    /// Parse one rule value: a width or a structural token.
+    pub fn parse(s: &str) -> Result<GroupKind> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "hash" | "hashed" => GroupKind::Hashed,
+            "prune" | "pruned" => GroupKind::Pruned,
+            w => {
+                let bits = w.parse::<u32>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad plan value {s:?} (expected a bit width or \
+                         hash/prune)"
+                    )
+                })?;
+                ensure!(
+                    BitWidth::from_bits(bits).is_some(),
+                    "unsupported bit width {bits} (expected 2, 4, 8 or 16)"
+                );
+                GroupKind::Bits(bits)
+            }
+        })
+    }
+
+    /// The packed width, when this kind is one.
+    pub fn bits(&self) -> Option<u32> {
+        match self {
+            GroupKind::Bits(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_structural(&self) -> bool {
+        !matches!(self, GroupKind::Bits(_))
+    }
+}
+
+/// Per-field embedding precision plan — the `plan` config key / `--plan`
+/// flag (`--bits` is the deprecated alias). Fields differ wildly in
+/// cardinality and gradient traffic, so they do not all deserve the same
+/// precision; a plan assigns each field a bit width — or a structural
+/// compression kind — and the embedding layer groups fields of equal
+/// assignment into one sub-table each.
 ///
-/// Grammar (comma-separated `selector:bits` rules, widths in 2|4|8|16):
+/// Grammar (comma-separated `selector:value` rules, widths in 2|4|8|16,
+/// structural values in `hash`|`prune`):
 ///
 /// * `4` — uniform 4-bit (exactly the pre-plan behaviour);
 /// * `cat:4,num:8` — by field kind;
-/// * `f3:2,f7:16,default:8` — per-field overrides with a default.
+/// * `f3:2,f7:16,default:8` — per-field overrides with a default;
+/// * `f0:hash,f3:prune,default:8` — structural kinds per field;
+/// * `auto:<bytes>` — not a layout at all but a *budget directive*: the
+///   trainer (or `alpt plan`) resolves it into concrete per-field
+///   assignments whose inference footprint fits the byte budget.
 ///
 /// Precedence when several rules cover a field: `fN` beats `cat`/`num`
 /// beats `default`. Fields no rule names use `default:N` (8 when no
-/// default is given).
+/// default is given; the default must be a width, not a structural
+/// kind).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PrecisionPlan {
     /// Width for fields no rule selects; the whole plan when `rules` is
     /// empty.
     default_bits: u32,
-    /// `(selector, bits)` in parse order.
-    rules: Vec<(FieldSel, u32)>,
+    /// `(selector, kind)` in parse order.
+    rules: Vec<(FieldSel, GroupKind)>,
+    /// `Some(bytes)` for `auto:<bytes>` budget directives.
+    auto_budget: Option<u64>,
 }
 
 impl PrecisionPlan {
@@ -152,7 +218,26 @@ impl PrecisionPlan {
     /// validated here — [`Experiment::bit_width`] / [`PrecisionPlan::parse`]
     /// report unsupported widths.
     pub fn uniform(bits: u32) -> Self {
-        Self { default_bits: bits, rules: Vec::new() }
+        Self { default_bits: bits, rules: Vec::new(), auto_budget: None }
+    }
+
+    /// A budget directive (`auto:<bytes>`): resolved into concrete
+    /// per-field assignments by the planner before any table is built.
+    pub fn auto(budget: u64) -> Self {
+        Self {
+            default_bits: 8,
+            rules: Vec::new(),
+            auto_budget: Some(budget),
+        }
+    }
+
+    /// Build a concrete plan from explicit per-field rules (the planner's
+    /// output path). The default width backs warm-start surplus rows.
+    pub fn from_rules(
+        rules: Vec<(FieldSel, GroupKind)>,
+        default_bits: u32,
+    ) -> Self {
+        Self { default_bits, rules, auto_budget: None }
     }
 
     /// Parse the plan grammar (see the type docs). Every named width is
@@ -160,38 +245,50 @@ impl PrecisionPlan {
     pub fn parse(s: &str) -> Result<Self> {
         let s = s.trim();
         ensure!(!s.is_empty(), "empty precision plan");
-        let valid = |bits: u32| -> Result<u32> {
+        if let Some(budget) = s.strip_prefix("auto:") {
             ensure!(
-                BitWidth::from_bits(bits).is_some(),
-                "unsupported bit width {bits} (expected 2, 4, 8 or 16)"
+                !budget.contains(','),
+                "auto:<bytes> is a whole-plan directive and cannot be \
+                 combined with other rules ({s:?})"
             );
-            Ok(bits)
-        };
+            let bytes = parse_byte_budget(budget)?;
+            ensure!(bytes > 0, "auto budget must be positive");
+            return Ok(Self::auto(bytes));
+        }
         if !s.contains(':') {
             let bits = s
                 .parse::<u32>()
                 .map_err(|_| anyhow::anyhow!("bad bit width {s:?}"))?;
-            return Ok(Self::uniform(valid(bits)?));
+            ensure!(
+                BitWidth::from_bits(bits).is_some(),
+                "unsupported bit width {bits} (expected 2, 4, 8 or 16)"
+            );
+            return Ok(Self::uniform(bits));
         }
         let mut default_bits: Option<u32> = None;
         let mut rules = Vec::new();
         for part in s.split(',') {
             let part = part.trim();
-            let Some((sel, bits)) = part.split_once(':') else {
+            let Some((sel, value)) = part.split_once(':') else {
                 bail!(
-                    "bad plan rule {part:?} (expected selector:bits, e.g. \
-                     cat:4)"
+                    "bad plan rule {part:?} (expected selector:value, e.g. \
+                     cat:4 or f0:hash)"
                 );
             };
-            let bits = valid(bits.trim().parse::<u32>().map_err(|_| {
-                anyhow::anyhow!("bad bit width in rule {part:?}")
-            })?)?;
+            let kind = GroupKind::parse(value)?;
             let sel = match sel.trim().to_ascii_lowercase().as_str() {
                 "default" => {
                     ensure!(
                         default_bits.is_none(),
                         "duplicate default: rule in plan {s:?}"
                     );
+                    let Some(bits) = kind.bits() else {
+                        bail!(
+                            "default must be a bit width, not {:?} — \
+                             structural kinds apply to named fields only",
+                            kind.key()
+                        );
+                    };
                     default_bits = Some(bits);
                     continue;
                 }
@@ -213,21 +310,28 @@ impl PrecisionPlan {
                 "duplicate selector {:?} in plan {s:?}",
                 sel.key()
             );
-            rules.push((sel, bits));
+            rules.push((sel, kind));
         }
-        Ok(Self { default_bits: default_bits.unwrap_or(8), rules })
+        Ok(Self {
+            default_bits: default_bits.unwrap_or(8),
+            rules,
+            auto_budget: None,
+        })
     }
 
     /// Stable config/CLI token — the inverse of [`PrecisionPlan::parse`],
     /// used by the checkpoint metadata echo.
     pub fn key(&self) -> String {
+        if let Some(budget) = self.auto_budget {
+            return format!("auto:{budget}");
+        }
         if self.rules.is_empty() {
             return self.default_bits.to_string();
         }
         let mut parts: Vec<String> = self
             .rules
             .iter()
-            .map(|(sel, bits)| format!("{}:{bits}", sel.key()))
+            .map(|(sel, kind)| format!("{}:{}", sel.key(), kind.key()))
             .collect();
         parts.push(format!("default:{}", self.default_bits));
         parts.join(",")
@@ -235,11 +339,24 @@ impl PrecisionPlan {
 
     /// `Some(bits)` when this plan assigns one width to every field.
     pub fn as_uniform(&self) -> Option<u32> {
-        self.rules.is_empty().then_some(self.default_bits)
+        (self.rules.is_empty() && self.auto_budget.is_none())
+            .then_some(self.default_bits)
     }
 
     pub fn is_uniform(&self) -> bool {
-        self.rules.is_empty()
+        self.rules.is_empty() && self.auto_budget.is_none()
+    }
+
+    /// `Some(bytes)` for `auto:<bytes>` budget directives — plans the
+    /// trainer must resolve into concrete assignments before building a
+    /// table.
+    pub fn auto_budget(&self) -> Option<u64> {
+        self.auto_budget
+    }
+
+    /// Does any rule assign a structural kind (hash/prune)?
+    pub fn has_structural(&self) -> bool {
+        self.rules.iter().any(|(_, k)| k.is_structural())
     }
 
     /// The fallback width for fields no rule selects (also the width
@@ -255,28 +372,76 @@ impl PrecisionPlan {
         BitWidth::from_bits(self.default_bits).unwrap_or(BitWidth::B8)
     }
 
-    /// The width this plan assigns to `field` of `kind` (precedence:
+    /// The assignment this plan gives `field` of `kind` (precedence:
     /// `fN` > `cat`/`num` > default).
-    pub fn bits_for_field(&self, field: usize, kind: FieldKind) -> u32 {
-        for (sel, bits) in &self.rules {
+    pub fn kind_for_field(&self, field: usize, kind: FieldKind) -> GroupKind {
+        for (sel, k) in &self.rules {
             if *sel == FieldSel::Field(field) {
-                return *bits;
+                return *k;
             }
         }
-        for (sel, bits) in &self.rules {
+        for (sel, k) in &self.rules {
             match (sel, kind) {
                 (FieldSel::Cat, FieldKind::Categorical)
-                | (FieldSel::Num, FieldKind::Numeric) => return *bits,
+                | (FieldSel::Num, FieldKind::Numeric) => return *k,
                 _ => {}
             }
         }
-        self.default_bits
+        GroupKind::Bits(self.default_bits)
+    }
+
+    /// The width this plan assigns to `field` of `kind`; structural
+    /// assignments fall back to the default width (their sub-tables are
+    /// not packed, so the nominal width only labels the group).
+    pub fn bits_for_field(&self, field: usize, kind: FieldKind) -> u32 {
+        self.kind_for_field(field, kind)
+            .bits()
+            .unwrap_or(self.default_bits)
     }
 
     /// Resolve the plan against a concrete field layout: one validated
-    /// [`BitWidth`] per field. Errors on `fN` rules past the layout and
-    /// on unsupported widths (a hand-built uniform plan can hold one).
+    /// [`BitWidth`] per field. Errors on `fN` rules past the layout, on
+    /// unsupported widths (a hand-built uniform plan can hold one), and
+    /// on structural or auto rules — those resolve through
+    /// [`PrecisionPlan::resolve_kinds`] / the planner instead.
     pub fn resolve(&self, kinds: &[FieldKind]) -> Result<Vec<BitWidth>> {
+        ensure!(
+            self.auto_budget.is_none(),
+            "plan {:?} is a budget directive; run the planner to resolve \
+             it into per-field widths first",
+            self.key()
+        );
+        self.resolve_kinds(kinds)?
+            .into_iter()
+            .enumerate()
+            .map(|(f, k)| match k {
+                GroupKind::Bits(bits) => {
+                    BitWidth::from_bits(bits).ok_or_else(|| {
+                        anyhow::anyhow!("unsupported bit width {bits}")
+                    })
+                }
+                other => bail!(
+                    "field f{f} is assigned the structural kind {:?}, \
+                     which has no packed bit width",
+                    other.key()
+                ),
+            })
+            .collect()
+    }
+
+    /// Resolve the plan against a concrete field layout: one
+    /// [`GroupKind`] per field (structural kinds allowed). Errors on
+    /// `fN` rules past the layout and on auto directives.
+    pub fn resolve_kinds(
+        &self,
+        kinds: &[FieldKind],
+    ) -> Result<Vec<GroupKind>> {
+        ensure!(
+            self.auto_budget.is_none(),
+            "plan {:?} is a budget directive; run the planner to resolve \
+             it into per-field assignments first",
+            self.key()
+        );
         for (sel, _) in &self.rules {
             if let FieldSel::Field(i) = sel {
                 ensure!(
@@ -286,16 +451,11 @@ impl PrecisionPlan {
                 );
             }
         }
-        kinds
+        Ok(kinds
             .iter()
             .enumerate()
-            .map(|(f, &kind)| {
-                let bits = self.bits_for_field(f, kind);
-                BitWidth::from_bits(bits).ok_or_else(|| {
-                    anyhow::anyhow!("unsupported bit width {bits}")
-                })
-            })
-            .collect()
+            .map(|(f, &kind)| self.kind_for_field(f, kind))
+            .collect())
     }
 
     /// The checkpoint-echo encoding: a JSON number for uniform plans
@@ -330,6 +490,28 @@ impl FromStr for PrecisionPlan {
     fn from_str(s: &str) -> Result<Self> {
         Self::parse(s)
     }
+}
+
+/// Parse an `auto:` byte budget: a plain integer, optionally suffixed
+/// `k`/`m`/`g` (binary multiples, case-insensitive). The canonical
+/// [`PrecisionPlan::key`] form always prints plain bytes.
+pub fn parse_byte_budget(s: &str) -> Result<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    ensure!(!s.is_empty(), "empty byte budget");
+    let (digits, mult) = match s.as_bytes()[s.len() - 1] {
+        b'k' => (&s[..s.len() - 1], 1u64 << 10),
+        b'm' => (&s[..s.len() - 1], 1u64 << 20),
+        b'g' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (&s[..], 1u64),
+    };
+    let n = digits.trim().parse::<u64>().map_err(|_| {
+        anyhow::anyhow!(
+            "bad byte budget {s:?} (expected bytes, optionally with a \
+             k/m/g suffix)"
+        )
+    })?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte budget {s:?} overflows u64"))
 }
 
 /// A full training experiment (one Table-1 cell).
@@ -393,6 +575,10 @@ pub struct Experiment {
     /// full anchor after this many appended deltas (0 = a library
     /// default; see `Trainer::continuous_save`).
     pub compact_every: usize,
+    /// Online re-planning: at every epoch boundary, re-derive a budgeted
+    /// plan from the epoch's per-row access counts and migrate rows
+    /// between width groups to fit this many inference bytes (0 = off).
+    pub replan_budget: usize,
 }
 
 impl Default for Experiment {
@@ -426,6 +612,7 @@ impl Default for Experiment {
             prefetch_batches: 2,
             save_every: 0,
             compact_every: 0,
+            replan_budget: 0,
         }
     }
 }
@@ -493,11 +680,11 @@ impl Experiment {
             "n_samples" => self.n_samples = as_f(value)? as usize,
             "model" => self.model = as_s(value)?,
             "method" => self.method = Method::parse(&as_s(value)?)?,
-            "bits" => {
+            "bits" | "plan" => {
                 self.bits = match value {
                     V::Num(x) => PrecisionPlan::uniform(*x as u32),
                     V::Str(s) => PrecisionPlan::parse(s)?,
-                    _ => bail!("bits: expected a number or a plan string"),
+                    _ => bail!("{key}: expected a number or a plan string"),
                 }
             }
             "epochs" => self.epochs = as_f(value)? as usize,
@@ -524,6 +711,9 @@ impl Experiment {
             "save_every" => self.save_every = as_f(value)? as usize,
             "compact_every" => {
                 self.compact_every = as_f(value)? as usize
+            }
+            "replan_budget" => {
+                self.replan_budget = as_f(value)? as usize
             }
             "dropout_seed" => self.dropout_seed = as_f(value)? as u64,
             "artifacts_dir" => self.artifacts_dir = as_s(value)?,
@@ -763,15 +953,138 @@ mod tests {
     }
 
     #[test]
+    fn precision_plan_structural_rules() {
+        let p = PrecisionPlan::parse("f0:hash,f2:prune,default:4").unwrap();
+        assert!(p.has_structural());
+        assert!(!p.is_uniform());
+        assert_eq!(
+            p.kind_for_field(0, FieldKind::Categorical),
+            GroupKind::Hashed
+        );
+        assert_eq!(
+            p.kind_for_field(2, FieldKind::Categorical),
+            GroupKind::Pruned
+        );
+        assert_eq!(
+            p.kind_for_field(1, FieldKind::Categorical),
+            GroupKind::Bits(4)
+        );
+        assert_eq!(p.key(), "f0:hash,f2:prune,default:4");
+        // width-only resolution refuses structural fields by name
+        let kinds = [FieldKind::Categorical; 3];
+        let err = p.resolve(&kinds).unwrap_err();
+        assert!(format!("{err:#}").contains("structural"), "{err:#}");
+        // kind-aware resolution succeeds
+        assert_eq!(
+            p.resolve_kinds(&kinds).unwrap(),
+            vec![GroupKind::Hashed, GroupKind::Bits(4), GroupKind::Pruned]
+        );
+        // spelled-out aliases parse to the same kinds
+        assert_eq!(
+            PrecisionPlan::parse("f0:hashed,f2:pruned,default:4").unwrap(),
+            p
+        );
+        // a structural default is rejected (no width for surplus rows)
+        assert!(PrecisionPlan::parse("default:hash").is_err());
+        assert!(PrecisionPlan::parse("cat:giraffe").is_err());
+    }
+
+    #[test]
+    fn precision_plan_auto_budget() {
+        let p = PrecisionPlan::parse("auto:1048576").unwrap();
+        assert_eq!(p.auto_budget(), Some(1 << 20));
+        assert!(!p.is_uniform());
+        assert_eq!(p.as_uniform(), None);
+        assert_eq!(p.key(), "auto:1048576");
+        // k/m/g suffixes normalize to plain bytes
+        assert_eq!(
+            PrecisionPlan::parse("auto:1m").unwrap().auto_budget(),
+            Some(1 << 20)
+        );
+        assert_eq!(
+            PrecisionPlan::parse("auto:64K").unwrap().auto_budget(),
+            Some(64 << 10)
+        );
+        // a directive cannot resolve to widths
+        assert!(p.resolve(&[FieldKind::Categorical]).is_err());
+        assert!(p.resolve_kinds(&[FieldKind::Categorical]).is_err());
+        // echo round-trips through JSON like any other plan string
+        assert_eq!(PrecisionPlan::from_json(&p.echo_json()).unwrap(), p);
+        // malformed budgets
+        assert!(PrecisionPlan::parse("auto:").is_err());
+        assert!(PrecisionPlan::parse("auto:0").is_err());
+        assert!(PrecisionPlan::parse("auto:12q").is_err());
+        assert!(PrecisionPlan::parse("auto:1m,cat:4").is_err());
+    }
+
+    #[test]
+    fn replan_budget_key_applies() {
+        let doc =
+            TomlDoc::parse("replan_budget = 4096\nplan = \"cat:4\"").unwrap();
+        let e = Experiment::from_toml(&doc).unwrap();
+        assert_eq!(e.replan_budget, 4096);
+        assert_eq!(e.bits, PrecisionPlan::parse("cat:4").unwrap());
+        assert_eq!(Experiment::default().replan_budget, 0);
+    }
+
+    #[test]
     fn precision_plan_key_roundtrips() {
         for s in ["8", "2", "cat:4,num:8", "f0:2,f7:16,default:4",
-                  "num:16,default:2"] {
+                  "num:16,default:2", "f0:hash,cat:prune,default:8",
+                  "auto:4096"] {
             let p = PrecisionPlan::parse(s).unwrap();
             assert_eq!(PrecisionPlan::parse(&p.key()).unwrap(), p, "{s}");
             // FromStr/Display agree with parse/key
             assert_eq!(s.parse::<PrecisionPlan>().unwrap(), p);
             assert_eq!(p.to_string(), p.key());
         }
+    }
+
+    #[test]
+    fn plan_grammar_roundtrips_for_generated_plans() {
+        use crate::util::prop::{check, Gen};
+        // any plan the planner can emit — distinct selectors, widths
+        // from the supported set, structural kinds on named fields —
+        // must survive key() → parse() and Display → FromStr unchanged
+        check("plan key/parse roundtrip", 300, |g: &mut Gen| {
+            let widths = [2u32, 4, 8, 16];
+            let default_bits = *g.pick(&widths);
+            let mut pool: Vec<FieldSel> = vec![FieldSel::Cat, FieldSel::Num];
+            pool.extend((0..6).map(FieldSel::Field));
+            let mut rules = Vec::new();
+            for _ in 0..g.usize_in(0, pool.len()) {
+                let sel = pool.swap_remove(g.usize_in(0, pool.len() - 1));
+                let kind = match g.usize_in(0, 3) {
+                    0 => GroupKind::Hashed,
+                    1 => GroupKind::Pruned,
+                    _ => GroupKind::Bits(*g.pick(&widths)),
+                };
+                rules.push((sel, kind));
+            }
+            let plan = PrecisionPlan::from_rules(rules, default_bits);
+            let key = plan.key();
+            let reparsed = PrecisionPlan::parse(&key)
+                .map_err(|e| format!("{key:?} failed to parse: {e}"))?;
+            if reparsed != plan {
+                return Err(format!(
+                    "{key:?} reparsed as {:?}",
+                    reparsed.key()
+                ));
+            }
+            let from_str: PrecisionPlan = key
+                .parse()
+                .map_err(|e| format!("{key:?} FromStr: {e}"))?;
+            if from_str != plan {
+                return Err(format!("FromStr disagrees on {key:?}"));
+            }
+            if plan.to_string() != key {
+                return Err(format!(
+                    "Display {:?} != key {key:?}",
+                    plan.to_string()
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

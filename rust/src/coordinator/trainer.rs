@@ -6,9 +6,13 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::analysis::{
+    field_scores_from_counts, plan_for_budget, static_field_scores,
+};
 use crate::checkpoint::journal::{self, Delta, DeltaChain, JournalWriter};
 use crate::checkpoint::{self, failpoint, Checkpoint, SectionKind};
-use crate::config::Experiment;
+use crate::config::{Experiment, Method};
+use crate::embedding::GroupedStore;
 use crate::data::batcher::{
     with_prefetch, Batch, Batcher, StreamBatcher, Tail,
 };
@@ -151,7 +155,7 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build a trainer for `exp` over a feature space of `n_features`.
-    pub fn new(exp: Experiment, n_features: usize) -> Result<Self> {
+    pub fn new(mut exp: Experiment, n_features: usize) -> Result<Self> {
         let mut rng = Pcg32::new(exp.seed, 0x7A11);
         let runtime = if exp.use_runtime {
             Some(Runtime::load(Path::new(&exp.artifacts_dir))?)
@@ -170,6 +174,38 @@ impl Trainer {
             entry.layout_matches_rust(),
             "manifest layout disagrees with the Rust DCN layout"
         );
+        // `auto:<bytes>` resolves into concrete per-field widths before
+        // any table exists. No batch has run yet, so the ranking is the
+        // data-free one (small vocab = hot rows); with --replan-budget
+        // the first epoch's real counts re-derive it. The resolved plan
+        // is what the checkpoint echo records, so resumed runs skip
+        // straight to it.
+        if let Some(budget) = exp.bits.auto_budget() {
+            ensure!(
+                exp.method.trains_quantized(),
+                "--plan auto:{budget} picks per-field bit widths, which \
+                 only quantized-training methods use; method {} has no \
+                 packed table (use lpt/alpt or a concrete plan)",
+                exp.method.key()
+            );
+            let schema = registry::schema_for(&exp)?;
+            let scores = static_field_scores(&schema.vocabs);
+            let resolved = plan_for_budget(
+                &schema.vocabs,
+                &scores,
+                entry.emb_dim,
+                matches!(exp.method, Method::Alpt(_)),
+                budget,
+                false,
+            )?;
+            println!(
+                "auto:{budget} resolved to plan {} ({} predicted \
+                 inference bytes)",
+                resolved.plan.key(),
+                resolved.bytes
+            );
+            exp.bits = resolved.plan;
+        }
         let dcn = Dcn::new(entry.dcn_config());
         let dense = entry.init_params(&mut rng);
         let adam = Adam::new(dense.len(), exp.lr_dense);
@@ -613,9 +649,100 @@ impl Trainer {
             if self.early_stop.observe(epoch, &ev, self.exp.patience) {
                 break;
             }
+            if epoch < self.exp.epochs {
+                self.replan_at_boundary(verbose)?;
+            }
         }
 
         Ok(self.train_result(t0, history))
+    }
+
+    /// End-of-epoch online re-planning (`--replan-budget`): re-derive a
+    /// budgeted plan from the epoch's per-row access counts and, when it
+    /// differs from the current one, migrate every row into a fresh
+    /// [`GroupedStore`] via the deterministic requantize-on-migrate path.
+    /// The counters reset afterwards either way, so each boundary ranks
+    /// fields by the *latest* epoch's traffic — and a checkpoint written
+    /// after the boundary resumes bit-identically (counts are in-memory
+    /// only and start the next epoch at zero in both runs).
+    ///
+    /// Called between epochs only (never after the last), and a no-op
+    /// unless re-planning is on.
+    fn replan_at_boundary(&mut self, verbose: bool) -> Result<()> {
+        let budget = self.exp.replan_budget as u64;
+        if budget == 0 {
+            return Ok(());
+        }
+        let Some(gs) = self.store.as_grouped() else {
+            // build_store routes every re-planning run through the
+            // grouped store; a different store means a resumed
+            // pre-replan checkpoint — leave it alone
+            return Ok(());
+        };
+        if gs.has_structural_groups() {
+            eprintln!(
+                "warning: skipping end-of-epoch re-planning: the current \
+                 plan has hashed/pruned groups, whose shared parameters \
+                 cannot be migrated row-by-row"
+            );
+            self.store.reset_access_counts();
+            return Ok(());
+        }
+        let schema = registry::schema_for(&self.exp)?;
+        let counts = self
+            .store
+            .access_counts()
+            .expect("grouped stores track access counts");
+        ensure!(
+            counts.len() >= schema.n_features(),
+            "access counters cover {} rows, schema needs {}",
+            counts.len(),
+            schema.n_features()
+        );
+        let scores = field_scores_from_counts(counts, &schema);
+        let resolved = plan_for_budget(
+            &schema.vocabs,
+            &scores,
+            self.entry.emb_dim,
+            matches!(self.exp.method, Method::Alpt(_)),
+            budget,
+            false,
+        )?;
+        if resolved.plan != self.exp.bits {
+            let kinds = registry::field_kinds(&self.exp)?;
+            let mut new_exp = self.exp.clone();
+            new_exp.bits = resolved.plan.clone();
+            let old = self
+                .store
+                .as_grouped()
+                .expect("checked above");
+            let migrated = GroupedStore::migrate_from(
+                old, &new_exp, &schema, &kinds, &mut self.rng,
+            )?;
+            self.store = Box::new(migrated);
+            self.exp.bits = resolved.plan;
+            // §3.2 gradient scale follows the plan's default width, the
+            // same value a run resumed under the new plan computes
+            self.grad_scale_val = self.exp.grad_scale.value(
+                self.entry.batch,
+                self.entry.emb_dim,
+                self.exp.bits.scale_width(),
+            );
+            // rows moved between groups: any open delta journal describes
+            // the old layout, so the next continuous save re-anchors
+            self.journal = None;
+            self.dirty.clear();
+            if verbose {
+                println!(
+                    "  [replan] plan -> {} ({} predicted bytes / budget \
+                     {budget})",
+                    self.exp.bits.key(),
+                    resolved.bytes
+                );
+            }
+        }
+        self.store.reset_access_counts();
+        Ok(())
     }
 
     /// Assemble the [`TrainResult`] both training loops return.
@@ -747,6 +874,9 @@ impl Trainer {
             if self.early_stop.observe(epoch, &ev, self.exp.patience) {
                 break;
             }
+            if epoch < self.exp.epochs {
+                self.replan_at_boundary(verbose)?;
+            }
         }
 
         Ok(self.train_result(t0, history))
@@ -814,6 +944,18 @@ impl Trainer {
     /// `compact.anchor` / `compact.reset` around compaction, plus every
     /// writer and appender site inside.
     pub fn continuous_save(&mut self, path: &Path) -> Result<()> {
+        // aux-only stores (hashing) and grouped stores with structural
+        // groups have no per-row delta payload to journal; every
+        // continuous save is a full anchor for them
+        let journaled = match self.store.as_grouped() {
+            Some(gs) => !gs.has_structural_groups(),
+            None => self.store.ckpt_row_bytes().is_some(),
+        };
+        if !journaled {
+            self.save_checkpoint(path)?;
+            self.dirty.clear();
+            return Ok(());
+        }
         let compact_every = match self.exp.compact_every {
             0 => 64,
             n => n as u64,
@@ -1212,6 +1354,88 @@ mod tests {
         let first = res.history.first().unwrap().mean_loss;
         let last = res.history.last().unwrap().mean_loss;
         assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn auto_plan_resolves_before_any_table_is_built() {
+        use crate::config::PrecisionPlan;
+        let n = registry::schema_for(&tiny_exp(
+            Method::Alpt(RoundingMode::Sr),
+            false,
+        ))
+        .unwrap()
+        .n_features();
+        // mid-range budget: wide enough for >2-bit, too tight for all-16
+        let budget = (n * 16) as u64;
+        let mut exp = tiny_exp(Method::Alpt(RoundingMode::Sr), false);
+        exp.bits = PrecisionPlan::parse(&format!("auto:{budget}")).unwrap();
+        let tr = Trainer::new(exp, n).unwrap();
+        assert!(
+            tr.exp.bits.auto_budget().is_none(),
+            "auto directive should be gone after resolution: {}",
+            tr.exp.bits.key()
+        );
+        assert!(
+            tr.store.infer_bytes() as u64 <= budget,
+            "{} > {budget}",
+            tr.store.infer_bytes()
+        );
+
+        // methods without packed tables reject the directive
+        let mut bad = tiny_exp(Method::Fp, false);
+        bad.bits = PrecisionPlan::parse("auto:1m").unwrap();
+        let err = Trainer::new(bad, n).unwrap_err().to_string();
+        assert!(err.contains("quantized"), "{err}");
+    }
+
+    #[test]
+    fn replan_budget_migrates_at_the_epoch_boundary() {
+        use crate::config::PrecisionPlan;
+        let spec = SyntheticSpec::for_dataset("tiny", 42, 1.0).unwrap();
+        let ds = generate(&spec, 3000);
+        let (train, val, _) = ds.split((0.8, 0.1, 0.1), 42);
+        let n = ds.schema.n_features();
+        let d = builtin_entry("tiny").unwrap().emb_dim;
+
+        let mut exp = tiny_exp(Method::Alpt(RoundingMode::Sr), false);
+        exp.epochs = 2;
+        exp.bits = PrecisionPlan::uniform(2);
+        // generous budget: every field fits 16-bit codes + the Δ rows,
+        // so the epoch-1 boundary upgrades the whole table
+        exp.replan_budget = n * (2 * d + 4) + 64;
+        let budget = exp.replan_budget as u64;
+
+        let mut tr = Trainer::new(exp, n).unwrap();
+        assert!(
+            tr.store.as_grouped().is_some(),
+            "re-planning runs build through the grouped store"
+        );
+        let res = tr.train(&train, &val, false).unwrap();
+        assert_eq!(res.epochs_run, 2);
+        assert_eq!(
+            tr.exp.bits.as_uniform(),
+            Some(16),
+            "boundary replan should upgrade everything: {}",
+            tr.exp.bits.key()
+        );
+        assert!(tr.store.infer_bytes() as u64 <= budget);
+        assert!(res.best_auc > 0.4, "auc={}", res.best_auc);
+        // counters were reset at the boundary: what is left is epoch 2's
+        // update traffic alone (unique rows per step), which fits under
+        // epoch 2's slot count — without the reset, epoch 1's updates
+        // would push the total past it
+        let total: u64 = tr
+            .store
+            .access_counts()
+            .unwrap()
+            .iter()
+            .map(|&c| c as u64)
+            .sum();
+        let epoch2_slots = (res.history[1].steps
+            * tr.entry.batch
+            * tr.entry.fields) as u64;
+        assert!(total > 0);
+        assert!(total <= epoch2_slots, "{total} > {epoch2_slots}");
     }
 
     #[test]

@@ -20,7 +20,8 @@
 
 use super::lpt::ids_unique;
 use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
-            SecondPass, UpdateHp, MIN_ROWS_PER_THREAD};
+            Persistable, RowStats, SecondPass, UpdateHp,
+            MIN_ROWS_PER_THREAD};
 use crate::quant::{delta_from_clip, init_delta, BitWidth, PackedTable,
                    Rounding};
 use crate::util::rng::{Pcg32, StreamKey};
@@ -45,6 +46,8 @@ pub struct AlptStore {
     delta_t: Vec<f32>,
     /// reusable per-row bit-width buffer handed to the second pass
     bw_t: Vec<BitWidth>,
+    /// per-row update counts (in-memory only; see [`RowStats`])
+    counts: Vec<u32>,
 }
 
 impl AlptStore {
@@ -153,6 +156,7 @@ impl AlptStore {
             w_new: Vec::new(),
             delta_t: Vec::new(),
             bw_t: Vec::new(),
+            counts: vec![0; n],
         }
     }
 
@@ -187,6 +191,27 @@ impl AlptStore {
     pub(crate) fn read_codes_into(&self, row: usize, out: &mut [i32]) {
         self.codes.read_row(row, out);
     }
+
+    /// Serially quantize one row from a float value under an explicit
+    /// learned Δ — the grouped-store migration kernel. The row's Δ is
+    /// set first (rescaled by the caller so the representable range
+    /// carries across widths), then the value is packed from the
+    /// caller-supplied SR stream, keeping migration a pure function of
+    /// `(plan, seed, step)`.
+    pub(crate) fn write_row_from_f32(
+        &mut self,
+        row: usize,
+        w: &[f32],
+        delta: f32,
+        rrng: &mut Pcg32,
+    ) {
+        // a collapsed Δ would freeze the row forever (same floor as the
+        // Δ update)
+        self.delta[row] = delta.max(1e-8);
+        self.codes.quantize_row_packed(row, w, self.delta[row],
+                                       self.rounding, rrng);
+    }
+
 }
 
 impl EmbeddingStore for AlptStore {
@@ -226,6 +251,10 @@ impl EmbeddingStore for AlptStore {
         let n_u = ids.len();
         debug_assert_eq!(emb_hat.len(), n_u * d);
         debug_assert_eq!(grads.len(), n_u * d);
+        for &id in ids {
+            let id = id as usize;
+            self.counts[id] = self.counts[id].saturating_add(1);
+        }
         let lr = hp.lr_emb * hp.lr_scale;
         let wd = hp.wd_emb;
         // Step 3 writes rows by id, so sharding it requires unique ids
@@ -337,7 +366,9 @@ impl EmbeddingStore for AlptStore {
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+}
 
+impl Persistable for AlptStore {
     fn ckpt_row_bytes(&self) -> Option<usize> {
         Some(self.codes.row_bytes())
     }
@@ -371,6 +402,16 @@ impl EmbeddingStore for AlptStore {
 
     fn set_step_counter(&mut self, step: u64) {
         self.step = step;
+    }
+}
+
+impl RowStats for AlptStore {
+    fn access_counts(&self) -> Option<&[u32]> {
+        Some(&self.counts)
+    }
+
+    fn reset_access_counts(&mut self) {
+        self.counts.fill(0);
     }
 }
 

@@ -1,7 +1,7 @@
 //! Full-precision embedding table (the FP baseline, no compression).
 
 use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
-            SecondPass, UpdateHp};
+            Persistable, RowStats, SecondPass, UpdateHp};
 use crate::optim::sgd_update;
 use crate::util::rng::Pcg32;
 use anyhow::Result;
@@ -13,6 +13,8 @@ pub struct FpStore {
     table: Vec<f32>,
     /// sharding width for gather (resolved; >= 1)
     threads: usize,
+    /// per-row update counts (in-memory only; see [`RowStats`])
+    counts: Vec<u32>,
 }
 
 impl FpStore {
@@ -22,6 +24,7 @@ impl FpStore {
             d,
             table: init_weights(n, d, rng),
             threads: resolve_threads(0),
+            counts: vec![0; n],
         }
     }
 
@@ -74,6 +77,7 @@ impl EmbeddingStore for FpStore {
         let lr = hp.lr_emb * hp.lr_scale;
         for (i, &id) in ids.iter().enumerate() {
             let id = id as usize;
+            self.counts[id] = self.counts[id].saturating_add(1);
             let row = &mut self.table[id * self.d..(id + 1) * self.d];
             sgd_update(row, &grads[i * self.d..(i + 1) * self.d], lr,
                        hp.wd_emb);
@@ -88,7 +92,9 @@ impl EmbeddingStore for FpStore {
     fn infer_bytes(&self) -> usize {
         self.table.len() * 4
     }
+}
 
+impl Persistable for FpStore {
     fn ckpt_row_bytes(&self) -> Option<usize> {
         Some(self.d * 4)
     }
@@ -99,6 +105,16 @@ impl EmbeddingStore for FpStore {
 
     fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
         super::load_f32_rows(&mut self.table, self.n, self.d, lo, src)
+    }
+}
+
+impl RowStats for FpStore {
+    fn access_counts(&self) -> Option<&[u32]> {
+        Some(&self.counts)
+    }
+
+    fn reset_access_counts(&mut self) {
+        self.counts.fill(0);
     }
 }
 

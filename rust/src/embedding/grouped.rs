@@ -31,27 +31,34 @@
 
 use super::{
     par_gather, resolve_threads, rounding_of, AlptStore, EmbeddingStore,
-    LptStore, SecondPass, UpdateHp,
+    HashingStore, LptStore, Persistable, PruningStore, RowStats,
+    SecondPass, UpdateHp,
 };
-use crate::config::{Experiment, FieldKind, Method};
+use crate::config::{Experiment, FieldKind, GroupKind, Method};
 use crate::data::Schema;
 use crate::quant::BitWidth;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{Pcg32, StreamKey};
 use anyhow::{bail, ensure, Result};
 
-/// One precision group: a packed sub-table holding every row whose field
-/// the plan assigned `bits`.
+/// One plan group: a sub-table holding every row whose field the plan
+/// gave the same assignment. For packed groups `bits` is the real code
+/// width; for structural groups (hashed / pruned) it is the plan's
+/// *nominal* default width — a label for checkpoint headers and
+/// diagnostics, not a storage parameter.
 struct Group {
     bits: BitWidth,
     rows: usize,
     store: SubStore,
 }
 
-/// The concrete sub-table families a plan can build. Only quantized
-/// stores group — per-field precision is meaningless for float masters.
+/// The concrete sub-table families a plan can build: the packed
+/// quantized stores (grouped by width) plus the structural kinds, which
+/// replace packing outright for the fields that select them.
 enum SubStore {
     Lpt(LptStore),
     Alpt(AlptStore),
+    Hashed(HashingStore),
+    Pruned(PruningStore),
 }
 
 impl SubStore {
@@ -59,6 +66,8 @@ impl SubStore {
         match self {
             SubStore::Lpt(s) => s,
             SubStore::Alpt(s) => s,
+            SubStore::Hashed(s) => s,
+            SubStore::Pruned(s) => s,
         }
     }
 
@@ -66,27 +75,52 @@ impl SubStore {
         match self {
             SubStore::Lpt(s) => s,
             SubStore::Alpt(s) => s,
+            SubStore::Hashed(s) => s,
+            SubStore::Pruned(s) => s,
         }
+    }
+
+    /// Checkpoint group-kind token (format v3's `kind` header).
+    fn kind_key(&self) -> &'static str {
+        match self {
+            SubStore::Lpt(_) => "lpt",
+            SubStore::Alpt(_) => "alpt",
+            SubStore::Hashed(_) => "hash",
+            SubStore::Pruned(_) => "prune",
+        }
+    }
+
+    fn is_structural(&self) -> bool {
+        matches!(self, SubStore::Hashed(_) | SubStore::Pruned(_))
     }
 
     fn read_row_dequant_into(&self, local: usize, out: &mut [f32]) {
         match self {
             SubStore::Lpt(s) => s.read_row_dequant_into(local, out),
             SubStore::Alpt(s) => s.read_row_dequant_into(local, out),
+            // structural kinds have no codes to dequantize; their gather
+            // is already a pure per-row function
+            SubStore::Hashed(s) => s.gather(&[local as u32], out),
+            SubStore::Pruned(s) => s.gather(&[local as u32], out),
         }
     }
 
+    /// Integer codes of one row. Callers must route around structural
+    /// groups (`quantized_view` reports them by returning `false`).
     fn read_codes_into(&self, local: usize, out: &mut [i32]) {
         match self {
             SubStore::Lpt(s) => s.read_codes_into(local, out),
             SubStore::Alpt(s) => s.read_codes_into(local, out),
+            _ => unreachable!("structural groups hold no packed codes"),
         }
     }
 
+    /// Per-row step size. Callers must route around structural groups.
     fn row_delta(&self, local: usize) -> f32 {
         match self {
             SubStore::Lpt(s) => s.delta(),
             SubStore::Alpt(s) => s.delta_of(local as u32),
+            _ => unreachable!("structural groups hold no step sizes"),
         }
     }
 
@@ -94,6 +128,8 @@ impl SubStore {
         match self {
             SubStore::Lpt(s) => s.set_threads(threads),
             SubStore::Alpt(s) => s.set_threads(threads),
+            // structural sub-stores are serial; nothing to configure
+            SubStore::Hashed(_) | SubStore::Pruned(_) => {}
         }
     }
 }
@@ -115,6 +151,9 @@ pub struct GroupedStore {
     is_alpt: bool,
     groups: Vec<Group>,
     ranges: Vec<RowRange>,
+    /// per-global-row update counts (in-memory only; see [`RowStats`]) —
+    /// the frequency signal the budget planner reads at epoch boundaries
+    counts: Vec<u32>,
     /// sharding width for gather (resolved; >= 1)
     threads: usize,
     // ---- update scratch, reused across steps (grown on demand)
@@ -154,7 +193,7 @@ impl GroupedStore {
             "table of {n_features} rows is smaller than the schema's {}",
             schema.n_features()
         );
-        let per_field = exp.bits.resolve(kinds)?;
+        let per_field = exp.bits.resolve_kinds(kinds)?;
         let (mode, name, is_alpt) = match exp.method {
             Method::Lpt(m) => (
                 m,
@@ -179,19 +218,44 @@ impl GroupedStore {
             ),
         };
 
-        // distinct widths, ascending — the fixed group order every run
-        // (and every checkpoint) uses
-        let mut widths: Vec<BitWidth> = per_field.clone();
+        // Fixed group order: distinct packed widths ascending first —
+        // constructed in the same order (and consuming the generator in
+        // the same order) as before structural kinds existed, so
+        // quant-only plans stay byte-identical — then one hashed group,
+        // then one pruned group.
+        let mut widths: Vec<BitWidth> = Vec::new();
+        for k in &per_field {
+            if let GroupKind::Bits(b) = k {
+                let Some(bw) = BitWidth::from_bits(*b) else {
+                    bail!("unsupported bit width {b}");
+                };
+                if !widths.contains(&bw) {
+                    widths.push(bw);
+                }
+            }
+        }
         widths.sort_by_key(|bw| bw.bits());
-        widths.dedup();
-        let gidx = |bw: BitWidth| -> u32 {
-            widths.iter().position(|&w| w == bw).unwrap() as u32
+        let has_hashed = per_field.contains(&GroupKind::Hashed);
+        let has_pruned = per_field.contains(&GroupKind::Pruned);
+        let hash_gidx = widths.len();
+        let prune_gidx = widths.len() + has_hashed as usize;
+        let n_groups =
+            widths.len() + has_hashed as usize + has_pruned as usize;
+        let gidx = |k: GroupKind| -> u32 {
+            (match k {
+                GroupKind::Bits(b) => widths
+                    .iter()
+                    .position(|w| w.bits() == b)
+                    .unwrap(),
+                GroupKind::Hashed => hash_gidx,
+                GroupKind::Pruned => prune_gidx,
+            }) as u32
         };
 
-        let mut rows_per = vec![0usize; widths.len()];
+        let mut rows_per = vec![0usize; n_groups];
         let mut ranges = Vec::with_capacity(schema.n_fields() + 1);
-        for (f, &bw) in per_field.iter().enumerate() {
-            let g = gidx(bw);
+        for (f, &k) in per_field.iter().enumerate() {
+            let g = gidx(k);
             ranges.push(RowRange {
                 start: schema.offsets[f],
                 group: g,
@@ -210,36 +274,56 @@ impl GroupedStore {
             rows_per[g as usize] += surplus;
         }
 
-        let groups = widths
-            .iter()
-            .zip(&rows_per)
-            .map(|(&bw, &rows)| {
-                let store = if is_alpt {
-                    SubStore::Alpt(AlptStore::init_with_clip_threads(
+        // structural groups label their checkpoint headers with the
+        // plan's default width (they hold no packed codes)
+        let nominal = exp.bits.scale_width();
+        let groups = (0..n_groups)
+            .map(|g| {
+                let rows = rows_per[g];
+                if g < widths.len() {
+                    let bw = widths[g];
+                    let store = if is_alpt {
+                        SubStore::Alpt(AlptStore::init_with_clip_threads(
+                            rows,
+                            dim,
+                            bw,
+                            rounding_of(mode),
+                            exp.clip,
+                            exp.threads,
+                            rng,
+                        ))
+                    } else {
+                        SubStore::Lpt(LptStore::init_with_threads(
+                            rows,
+                            dim,
+                            bw,
+                            exp.clip,
+                            rounding_of(mode),
+                            exp.threads,
+                            rng,
+                        ))
+                    };
+                    Group { bits: bw, rows, store }
+                } else if has_hashed && g == hash_gidx {
+                    Group {
+                        bits: nominal,
                         rows,
-                        dim,
-                        bw,
-                        rounding_of(mode),
-                        exp.clip,
-                        exp.threads,
-                        rng,
-                    ))
+                        store: SubStore::Hashed(HashingStore::init(
+                            rows, dim, 2, rng,
+                        )),
+                    }
                 } else {
-                    SubStore::Lpt(LptStore::init_with_threads(
+                    Group {
+                        bits: nominal,
                         rows,
-                        dim,
-                        bw,
-                        exp.clip,
-                        rounding_of(mode),
-                        exp.threads,
-                        rng,
-                    ))
-                };
-                Group { bits: bw, rows, store }
+                        store: SubStore::Pruned(PruningStore::init(
+                            rows, dim, 0.5, 0.99, 3000.0, rng,
+                        )),
+                    }
+                }
             })
             .collect::<Vec<_>>();
 
-        let n_groups = groups.len();
         Ok(GroupedStore {
             n: n_features,
             d: dim,
@@ -247,6 +331,7 @@ impl GroupedStore {
             is_alpt,
             groups,
             ranges,
+            counts: vec![0; n_features],
             threads: resolve_threads(exp.threads),
             ids_g: vec![Vec::new(); n_groups],
             pos_g: vec![Vec::new(); n_groups],
@@ -256,6 +341,72 @@ impl GroupedStore {
             sp_delta: Vec::new(),
             sp_bw: Vec::new(),
         })
+    }
+
+    /// Rebuild this store under a *new* all-packed plan (carried in
+    /// `exp.bits`), migrating every row: its float value is read from
+    /// the old group and deterministically re-quantized into its new
+    /// group on a counter-based per-row SR stream keyed by one serial
+    /// draw and the store's step counter — so migration is a pure
+    /// function of `(old store, new plan, rng state)` and bit-identical
+    /// at any thread count. ALPT step sizes carry over rescaled by
+    /// `qp_old / qp_new`, preserving each row's representable range
+    /// across width changes. Structural groups cannot migrate (their
+    /// parameters are not per-row); both sides must be packed-only.
+    pub fn migrate_from(
+        old: &GroupedStore,
+        exp: &Experiment,
+        schema: &Schema,
+        kinds: &[FieldKind],
+        rng: &mut Pcg32,
+    ) -> Result<GroupedStore> {
+        ensure!(
+            !old.has_structural_groups(),
+            "cannot migrate away from a plan with hashed/pruned groups: \
+             their parameters are shared, not per-row"
+        );
+        ensure!(
+            !exp.bits.has_structural(),
+            "cannot migrate into plan {:?}: hashed/pruned groups have no \
+             per-row payload to requantize into",
+            exp.bits.key()
+        );
+        let mut new = GroupedStore::from_plan(
+            exp,
+            schema,
+            kinds,
+            old.n_features(),
+            old.dim(),
+            rng,
+        )?;
+        let step = old.step_counter();
+        let key = StreamKey::for_step(rng.next_u64(), step);
+        let d = old.dim();
+        let mut w = vec![0.0f32; d];
+        for id in 0..old.n_features() as u32 {
+            let (og, olocal) = old.locate(id);
+            let (ng, nlocal) = new.locate(id);
+            old.groups[og].store.read_row_dequant_into(olocal, &mut w);
+            let mut rrng = key.row_rng(id as u64);
+            match &mut new.groups[ng].store {
+                SubStore::Lpt(s) => {
+                    s.write_row_from_f32(nlocal, &w, &mut rrng);
+                }
+                SubStore::Alpt(s) => {
+                    let qp_old = old.groups[og].bits.qp() as f32;
+                    let qp_new = new.groups[ng].bits.qp() as f32;
+                    let delta = old.groups[og].store.row_delta(olocal)
+                        * (qp_old / qp_new);
+                    s.write_row_from_f32(nlocal, &w, delta, &mut rrng);
+                }
+                _ => unreachable!("checked packed-only above"),
+            }
+        }
+        // the SR step counter and the epoch's frequency signal both
+        // survive the move
+        new.set_step_counter(step);
+        new.counts.copy_from_slice(&old.counts);
+        Ok(new)
     }
 
     /// Map a global row id to its `(group, local row)`.
@@ -297,6 +448,17 @@ impl GroupedStore {
     pub fn bits_of_row(&self, id: u32) -> u32 {
         let (g, _) = self.locate(id);
         self.groups[g].bits.bits()
+    }
+
+    /// Checkpoint group-kind token of group `g` ("lpt" / "alpt" /
+    /// "hash" / "prune") — format v3's per-group `kind` header.
+    pub fn group_kind(&self, g: usize) -> &'static str {
+        self.groups[g].store.kind_key()
+    }
+
+    /// Whether the plan routed any field to a hashed/pruned group.
+    pub fn has_structural_groups(&self) -> bool {
+        self.groups.iter().any(|g| g.store.is_structural())
     }
 
     /// Public `(group, local row)` address of global row `id` — the
@@ -360,6 +522,8 @@ impl EmbeddingStore for GroupedStore {
             v.clear();
         }
         for (i, &id) in ids.iter().enumerate() {
+            self.counts[id as usize] =
+                self.counts[id as usize].saturating_add(1);
             let (g, local) = self.locate(id);
             self.ids_g[g].push(local as u32);
             self.pos_g[g].push(i as u32);
@@ -378,8 +542,21 @@ impl EmbeddingStore for GroupedStore {
             self.sp_bw.resize(n_u, BitWidth::B8);
             for (i, &id) in ids.iter().enumerate() {
                 let (g, local) = self.locate(id);
-                self.sp_delta[i] = self.groups[g].store.row_delta(local);
-                self.sp_bw[i] = self.groups[g].bits;
+                if self.groups[g].store.is_structural() {
+                    // structural rows have no Δ-grid; park them on a
+                    // fine 16-bit grid scaled to the row's own range so
+                    // fake-quantization passes them through unchanged
+                    let m = emb_hat[i * d..(i + 1) * d]
+                        .iter()
+                        .fold(0.0f32, |a, &v| a.max(v.abs()));
+                    self.sp_bw[i] = BitWidth::B16;
+                    self.sp_delta[i] =
+                        (m / BitWidth::B16.qp() as f32).max(1e-12);
+                } else {
+                    self.sp_delta[i] =
+                        self.groups[g].store.row_delta(local);
+                    self.sp_bw[i] = self.groups[g].bits;
+                }
             }
         }
 
@@ -457,6 +634,11 @@ impl EmbeddingStore for GroupedStore {
         codes: &mut [i32],
         delta: &mut [f32],
     ) -> bool {
+        // hashed/pruned rows hold no integer codes — the whole table
+        // falls back to the float path, like the standalone stores
+        if self.has_structural_groups() {
+            return false;
+        }
         debug_assert_eq!(codes.len(), ids.len() * self.d);
         debug_assert_eq!(delta.len(), ids.len());
         for (i, &id) in ids.iter().enumerate() {
@@ -477,13 +659,9 @@ impl EmbeddingStore for GroupedStore {
         self.groups.iter().map(|g| g.store.as_store().infer_bytes()).sum()
     }
 
-    fn step_counter(&self) -> u64 {
-        self.groups[0].store.as_store().step_counter()
-    }
-
-    fn set_step_counter(&mut self, step: u64) {
+    fn end_step(&mut self) {
         for group in &mut self.groups {
-            group.store.as_store_mut().set_step_counter(step);
+            group.store.as_store_mut().end_step();
         }
     }
 
@@ -496,9 +674,39 @@ impl EmbeddingStore for GroupedStore {
     }
 }
 
+impl Persistable for GroupedStore {
+    // Row/aux payloads serialize *per group* (checkpoint formats v2/v3
+    // walk `group_store`); only the shared step counter lives here. The
+    // sub-stores advance in lockstep (packed groups step in `update`,
+    // structural ones in `end_step`), so reading any one group — the
+    // first — reports the store-wide count.
+    fn step_counter(&self) -> u64 {
+        self.groups[0].store.as_store().step_counter()
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        for group in &mut self.groups {
+            group.store.as_store_mut().set_step_counter(step);
+        }
+    }
+}
+
+impl RowStats for GroupedStore {
+    fn access_counts(&self) -> Option<&[u32]> {
+        Some(&self.counts)
+    }
+
+    fn reset_access_counts(&mut self) {
+        self.counts.fill(0);
+        for group in &mut self.groups {
+            group.store.as_store_mut().reset_access_counts();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::{eq7_second_pass, hp};
+    use super::super::testutil::{eq7_second_pass, hp, no_second_pass};
     use super::*;
     use crate::config::{PrecisionPlan, RoundingMode};
     use crate::util::prop::{check, Gen};
@@ -767,6 +975,195 @@ mod tests {
                 },
             );
         }
+    }
+
+    #[test]
+    fn structural_plan_builds_hash_and_prune_groups() {
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(
+            Method::Lpt(RoundingMode::Sr),
+            "f0:hash,f2:prune,default:8",
+        );
+        let mut rng = Pcg32::seeded(11);
+        let mut store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        assert_eq!(store.n_groups(), 3, "packed + hashed + pruned");
+        assert_eq!(store.group_kind(0), "lpt");
+        assert_eq!(store.group_kind(1), "hash");
+        assert_eq!(store.group_kind(2), "prune");
+        assert!(store.has_structural_groups());
+        // structural groups carry the plan's nominal (default) width
+        assert_eq!(store.group_bits(1), 8);
+        assert_eq!(store.group_bits(2), 8);
+        assert_eq!(store.group_rows(0), 100, "field 1 stays packed");
+        assert_eq!(store.group_rows(1), 40, "field 0 rows");
+        assert_eq!(store.group_rows(2), 60, "field 2 rows");
+        // no integer-code view once structural groups exist
+        let ids = [3u32, 50, 150];
+        let mut codes = vec![0i32; 3 * 4];
+        let mut delta = vec![0.0f32; 3];
+        assert!(!store.quantized_view(&ids, &mut codes, &mut delta));
+        // gather + update cross all three kinds and learn
+        let grads = vec![1.0f32; 3 * 4];
+        let mut h = hp();
+        h.lr_emb = 0.3;
+        let mut sp = no_second_pass();
+        let mut rng2 = Pcg32::seeded(12);
+        let mut what = vec![0.0f32; 3 * 4];
+        for _ in 0..20 {
+            store.gather(&ids, &mut what);
+            store
+                .update(&ids, &what, &grads, &h, &mut rng2, &mut sp)
+                .unwrap();
+            store.end_step();
+        }
+        store.gather(&ids, &mut what);
+        assert!(
+            what.iter().sum::<f32>() < -1.0,
+            "rows did not descend: {what:?}"
+        );
+        // packed groups step in update, structural ones in end_step —
+        // one shared counter describes them all
+        assert_eq!(store.step_counter(), 20);
+        for g in 0..store.n_groups() {
+            assert_eq!(store.group_store(g).step_counter(), 20, "group {g}");
+        }
+        // the store-level frequency signal saw every touch
+        let counts = store.access_counts().unwrap();
+        for &id in &ids {
+            assert_eq!(counts[id as usize], 20, "row {id}");
+        }
+        assert_eq!(counts.iter().map(|&c| c as u64).sum::<u64>(), 60);
+        store.reset_access_counts();
+        assert!(store.access_counts().unwrap().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn alpt_second_pass_spans_structural_rows() {
+        // the full-batch Δ-gradient context must hold sane entries for
+        // hashed rows sitting in the same batch as packed ALPT rows
+        let (schema, kinds) = toy_layout();
+        let exp = mixed_exp(
+            Method::Alpt(RoundingMode::Sr),
+            "f0:hash,default:4",
+        );
+        let mut rng = Pcg32::seeded(13);
+        let mut store = GroupedStore::from_plan(
+            &exp, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        let ids = [5u32, 80, 170]; // hashed, packed, packed
+        let grads = vec![0.2f32; 3 * 4];
+        let mut sp = eq7_second_pass();
+        let mut rng2 = Pcg32::seeded(14);
+        let mut what = vec![0.0f32; 3 * 4];
+        for _ in 0..10 {
+            store.gather(&ids, &mut what);
+            store
+                .update(&ids, &what, &grads, &hp(), &mut rng2, &mut sp)
+                .unwrap();
+            store.end_step();
+        }
+        store.gather(&ids, &mut what);
+        assert!(what.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn migrate_requantizes_deterministically() {
+        let (schema, kinds) = toy_layout();
+        let exp_old =
+            mixed_exp(Method::Alpt(RoundingMode::Sr), "num:4,cat:8");
+        let mut rng = Pcg32::seeded(21);
+        let mut old = GroupedStore::from_plan(
+            &exp_old, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        // train a little so the table is away from init
+        let ids: Vec<u32> = (0..200u32).step_by(7).collect();
+        let grads: Vec<f32> = (0..ids.len() * 4)
+            .map(|i| ((i % 5) as f32 - 2.0) * 0.05)
+            .collect();
+        let mut sp = eq7_second_pass();
+        let mut rng_u = Pcg32::seeded(22);
+        let mut what = vec![0.0f32; ids.len() * 4];
+        for _ in 0..5 {
+            old.gather(&ids, &mut what);
+            old.update(&ids, &what, &grads, &hp(), &mut rng_u, &mut sp)
+                .unwrap();
+        }
+        let exp_new =
+            mixed_exp(Method::Alpt(RoundingMode::Sr), "num:8,cat:2");
+        let mk = || {
+            let mut r = Pcg32::seeded(33);
+            GroupedStore::migrate_from(&old, &exp_new, &schema, &kinds,
+                                       &mut r)
+                .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(
+            gather_all(&a),
+            gather_all(&b),
+            "migration is not a pure function of (store, plan, rng)"
+        );
+        assert_eq!(a.step_counter(), old.step_counter());
+        assert_eq!(a.access_counts().unwrap(), old.access_counts().unwrap());
+        assert_eq!(a.bits_of_row(0), 8, "numeric field widened");
+        assert_eq!(a.bits_of_row(50), 2, "categorical field narrowed");
+        // SR lands each migrated value on one of the two grid points
+        // bracketing the old value: |new - old| <= the row's new Δ
+        let before = gather_all(&old);
+        let after = gather_all(&a);
+        let all_ids: Vec<u32> = (0..200).collect();
+        let mut codes = vec![0i32; 200 * 4];
+        let mut delta = vec![0.0f32; 200];
+        assert!(a.quantized_view(&all_ids, &mut codes, &mut delta));
+        for (i, (&x, &y)) in before.iter().zip(&after).enumerate() {
+            let tol = delta[i / 4] + 1e-6;
+            assert!(
+                (x - y).abs() <= tol,
+                "row {} col {}: {x} -> {y} (Δ={})",
+                i / 4,
+                i % 4,
+                delta[i / 4]
+            );
+        }
+    }
+
+    #[test]
+    fn migrate_rejects_structural_plans_on_either_side() {
+        let (schema, kinds) = toy_layout();
+        let exp_packed =
+            mixed_exp(Method::Lpt(RoundingMode::Sr), "num:4,cat:8");
+        let exp_structural = mixed_exp(
+            Method::Lpt(RoundingMode::Sr),
+            "f0:hash,default:8",
+        );
+        let mut rng = Pcg32::seeded(41);
+        let packed = GroupedStore::from_plan(
+            &exp_packed, &schema, &kinds, schema.n_features(), 4, &mut rng,
+        )
+        .unwrap();
+        let structural = GroupedStore::from_plan(
+            &exp_structural, &schema, &kinds, schema.n_features(), 4,
+            &mut rng,
+        )
+        .unwrap();
+        let mut r = Pcg32::seeded(42);
+        let err = GroupedStore::migrate_from(
+            &packed, &exp_structural, &schema, &kinds, &mut r,
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no per-row payload"), "{err:#}");
+        let err = GroupedStore::migrate_from(
+            &structural, &exp_packed, &schema, &kinds, &mut r,
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("shared"), "{err:#}");
     }
 
     #[test]

@@ -6,19 +6,29 @@
 //! With r = 2 the parameter count is ~n/2 ⇒ 2× compression at train AND
 //! inference, at the cost of forced parameter sharing (the accuracy hit
 //! Table 1 shows).
+//!
+//! Persistence: the two tables are *shared* across feature ids — a
+//! feature's embedding does not decompose into a per-row payload — so
+//! the store persists through [`Persistable::aux_params`] alone
+//! (`ckpt_row_bytes` stays `None`): one flat block of `r·d + ⌈n/r⌉·d`
+//! floats, E1 first. That is checkpoint format v3's "aux-only" store /
+//! group kind.
 
-use super::{EmbeddingStore, SecondPass, UpdateHp};
+use super::{EmbeddingStore, Persistable, RowStats, SecondPass, UpdateHp};
 use crate::util::rng::Pcg32;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 pub struct HashingStore {
     n: usize,
     d: usize,
     r: usize,
-    /// remainder table `[r, d]`
-    e1: Vec<f32>,
-    /// quotient table `[ceil(n/r), d]`
-    e2: Vec<f32>,
+    /// Both tables in one flat block: the remainder table `[r, d]`
+    /// followed by the quotient table `[ceil(n/r), d]` — the layout
+    /// `aux_params` persists verbatim.
+    params: Vec<f32>,
+    /// Update steps completed (persisted so resumed runs keep counting
+    /// from where they stopped, like every other store).
+    step: u64,
 }
 
 impl HashingStore {
@@ -26,16 +36,24 @@ impl HashingStore {
         assert!(r >= 1);
         let q_rows = n.div_ceil(r);
         // init near 1 x small so products start near the usual N(0, 0.01):
-        // e1 ~ N(1, 0.1) (gating), e2 ~ N(0, 0.01) (content)
-        let e1 = (0..r * d).map(|_| rng.normal_scaled(1.0, 0.1)).collect();
-        let e2 =
-            (0..q_rows * d).map(|_| rng.normal_scaled(0.0, 0.01)).collect();
-        Self { n, d, r, e1, e2 }
+        // e1 ~ N(1, 0.1) (gating), e2 ~ N(0, 0.01) (content).
+        // Draw order (e1 fully, then e2) is part of the determinism
+        // contract: it must match the pre-split two-vector layout.
+        let mut params = Vec::with_capacity((r + q_rows) * d);
+        params.extend((0..r * d).map(|_| rng.normal_scaled(1.0, 0.1)));
+        params
+            .extend((0..q_rows * d).map(|_| rng.normal_scaled(0.0, 0.01)));
+        Self { n, d, r, params, step: 0 }
     }
 
     #[inline]
     fn split(&self, id: u32) -> (usize, usize) {
         ((id as usize % self.r), (id as usize / self.r))
+    }
+
+    /// Total persisted parameter count (`aux_params().len()`).
+    pub fn n_params(&self) -> usize {
+        self.params.len()
     }
 }
 
@@ -54,10 +72,11 @@ impl EmbeddingStore for HashingStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         let d = self.d;
+        let e2 = &self.params[self.r * d..];
         for (i, &id) in ids.iter().enumerate() {
             let (rem, quo) = self.split(id);
-            let a = &self.e1[rem * d..(rem + 1) * d];
-            let b = &self.e2[quo * d..(quo + 1) * d];
+            let a = &self.params[rem * d..(rem + 1) * d];
+            let b = &e2[quo * d..(quo + 1) * d];
             let o = &mut out[i * d..(i + 1) * d];
             for j in 0..d {
                 o[j] = a[j] * b[j];
@@ -75,17 +94,18 @@ impl EmbeddingStore for HashingStore {
         _second_pass: &mut SecondPass,
     ) -> Result<()> {
         let d = self.d;
+        let e1_len = self.r * d;
         let lr = hp.lr_emb * hp.lr_scale;
         for (i, &id) in ids.iter().enumerate() {
             let (rem, quo) = self.split(id);
             let g = &grads[i * d..(i + 1) * d];
             // chain rule through the product, with decoupled weight decay
             for j in 0..d {
-                let a = self.e1[rem * d + j];
-                let b = self.e2[quo * d + j];
-                self.e1[rem * d + j] -=
+                let a = self.params[rem * d + j];
+                let b = self.params[e1_len + quo * d + j];
+                self.params[rem * d + j] -=
                     lr * (g[j] * b + hp.wd_emb * a);
-                self.e2[quo * d + j] -=
+                self.params[e1_len + quo * d + j] -=
                     lr * (g[j] * a + hp.wd_emb * b);
             }
         }
@@ -93,13 +113,51 @@ impl EmbeddingStore for HashingStore {
     }
 
     fn train_bytes(&self) -> usize {
-        (self.e1.len() + self.e2.len()) * 4
+        self.params.len() * 4
     }
 
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+
+    fn end_step(&mut self) {
+        self.step = self.step.wrapping_add(1);
+    }
 }
+
+impl Persistable for HashingStore {
+    // ckpt_row_bytes stays None: the shared tables do not decompose into
+    // per-feature rows, so the whole parameter block persists as aux.
+
+    fn aux_params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        ensure!(
+            aux.len() == self.params.len(),
+            "hashing parameter count mismatch: checkpoint has {}, \
+             table (n={}, d={}, r={}) expects {}",
+            aux.len(),
+            self.n,
+            self.d,
+            self.r,
+            self.params.len()
+        );
+        self.params.copy_from_slice(aux);
+        Ok(())
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.step
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        self.step = step;
+    }
+}
+
+impl RowStats for HashingStore {}
 
 #[cfg(test)]
 mod tests {
@@ -164,5 +222,33 @@ mod tests {
                 .unwrap();
         }
         assert!(last < first * 0.01, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn aux_roundtrip_restores_every_parameter() {
+        let mut rng = Pcg32::seeded(4);
+        let mut store = HashingStore::init(30, 4, 2, &mut rng);
+        // perturb, snapshot, restore into a freshly-initialized twin
+        let grads = vec![0.7f32; 4];
+        let emb = vec![0.0f32; 4];
+        store
+            .update(&[11], &emb, &grads, &hp(), &mut rng,
+                    &mut no_second_pass())
+            .unwrap();
+        store.end_step();
+        let saved = store.aux_params().to_vec();
+        let mut rng2 = Pcg32::seeded(99);
+        let mut twin = HashingStore::init(30, 4, 2, &mut rng2);
+        twin.load_aux_params(&saved).unwrap();
+        twin.set_step_counter(store.step_counter());
+        assert_eq!(twin.aux_params(), store.aux_params());
+        assert_eq!(twin.step_counter(), 1);
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        store.gather(&[11], &mut a);
+        twin.gather(&[11], &mut b);
+        assert_eq!(a, b);
+        // wrong geometry is rejected
+        assert!(twin.load_aux_params(&saved[1..]).is_err());
     }
 }

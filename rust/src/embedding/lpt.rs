@@ -14,7 +14,8 @@
 //! ([`StreamKey`]), so results are bit-identical at any thread count.
 
 use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
-            SecondPass, UpdateHp, MIN_ROWS_PER_THREAD};
+            Persistable, RowStats, SecondPass, UpdateHp,
+            MIN_ROWS_PER_THREAD};
 use crate::quant::{delta_from_clip, BitWidth, PackedTable, Rounding};
 use crate::util::rng::{Pcg32, StreamKey};
 use crate::util::threadpool::parallel_ranges;
@@ -31,6 +32,8 @@ pub struct LptStore {
     threads: usize,
     /// update-step counter feeding the per-step stream key
     step: u64,
+    /// per-row update counts (in-memory only; see [`RowStats`])
+    counts: Vec<u32>,
 }
 
 impl LptStore {
@@ -83,7 +86,17 @@ impl LptStore {
                 }
             });
         }
-        Self { n, d, bw, rounding, delta, codes, threads, step: 0 }
+        Self {
+            n,
+            d,
+            bw,
+            rounding,
+            delta,
+            codes,
+            threads,
+            step: 0,
+            counts: vec![0; n],
+        }
     }
 
     pub fn delta(&self) -> f32 {
@@ -111,6 +124,21 @@ impl LptStore {
     pub(crate) fn read_codes_into(&self, row: usize, out: &mut [i32]) {
         self.codes.read_row(row, out);
     }
+
+    /// Serially quantize one row from a float value with this table's
+    /// fixed Δ — the grouped-store migration kernel (requantize a row
+    /// moving into this group). The caller supplies the SR stream so
+    /// migration stays a pure function of `(plan, seed, step)`.
+    pub(crate) fn write_row_from_f32(
+        &mut self,
+        row: usize,
+        w: &[f32],
+        rrng: &mut Pcg32,
+    ) {
+        self.codes
+            .quantize_row_packed(row, w, self.delta, self.rounding, rrng);
+    }
+
 }
 
 impl EmbeddingStore for LptStore {
@@ -156,6 +184,10 @@ impl EmbeddingStore for LptStore {
         // race); the trainer always passes deduped `batch.unique`, and
         // any other caller with duplicates falls back to the serial loop,
         // which keeps the old last-write-wins-in-batch-order semantics.
+        for &id in ids {
+            let id = id as usize;
+            self.counts[id] = self.counts[id].saturating_add(1);
+        }
         let lr = hp.lr_emb * hp.lr_scale;
         let wd = hp.wd_emb;
         let d = self.d;
@@ -216,7 +248,9 @@ impl EmbeddingStore for LptStore {
     fn infer_bytes(&self) -> usize {
         self.train_bytes()
     }
+}
 
+impl Persistable for LptStore {
     fn ckpt_row_bytes(&self) -> Option<usize> {
         Some(self.codes.row_bytes())
     }
@@ -235,6 +269,16 @@ impl EmbeddingStore for LptStore {
 
     fn set_step_counter(&mut self, step: u64) {
         self.step = step;
+    }
+}
+
+impl RowStats for LptStore {
+    fn access_counts(&self) -> Option<&[u32]> {
+        Some(&self.counts)
+    }
+
+    fn reset_access_counts(&mut self) {
+        self.counts.fill(0);
     }
 }
 

@@ -60,9 +60,89 @@ pub struct UpdateHp {
 pub type SecondPass<'a> =
     dyn FnMut(&[f32], &[f32], &[BitWidth]) -> Result<Vec<f32>> + 'a;
 
+/// Persistence capability: how a store's state maps onto checkpoint
+/// sections. Split out of [`EmbeddingStore`] so the checkpoint subsystem
+/// depends only on what it actually needs, and so each store's
+/// persistence story is explicit: packed/float tables persist raw row
+/// payloads (`ckpt_row_bytes` is `Some`), parameter-shared stores like
+/// hashing persist everything through `aux_params` (`ckpt_row_bytes`
+/// stays `None` — their parameters do not decompose into per-feature
+/// rows), and per-row scalars (Δ, α, masks) ride in `aux_params` either
+/// way.
+///
+/// Contract: `save_rows` → `load_rows` is bit-identical on the raw
+/// payload — packed stores hand over their packed bytes verbatim (never
+/// dequantize/requantize), float-backed stores their f32 bits.
+pub trait Persistable {
+    /// Bytes of one row's raw checkpoint payload, or `None` when this
+    /// store has no per-row payload (its state is all in `aux_params`).
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// Serialize rows `[lo, lo + dst.len()/ckpt_row_bytes())` into `dst`.
+    fn save_rows(&self, _lo: usize, _dst: &mut [u8]) -> Result<()> {
+        bail!("this store has no per-row checkpoint payload")
+    }
+
+    /// Restore rows from bytes produced by `save_rows` (exact inverse).
+    fn load_rows(&mut self, _lo: usize, _src: &[u8]) -> Result<()> {
+        bail!("this store has no per-row checkpoint payload")
+    }
+
+    /// Learned scalars to persist alongside the rows (Δ for ALPT/LSQ, α
+    /// for PACT, the mask for pruning, the whole shared parameter block
+    /// for hashing); empty for stores without any.
+    fn aux_params(&self) -> &[f32] {
+        &[]
+    }
+
+    /// Restore the scalars `aux_params` returned at save time.
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        ensure!(
+            aux.is_empty(),
+            "this store holds no aux params, checkpoint has {}",
+            aux.len()
+        );
+        Ok(())
+    }
+
+    /// Update-step counter feeding the per-step SR stream key (0 for
+    /// stores that draw no per-step noise). Persisted so a resumed run
+    /// continues the exact noise stream an uninterrupted one would use.
+    fn step_counter(&self) -> u64 {
+        0
+    }
+
+    /// Restore the update-step counter captured by `step_counter`.
+    fn set_step_counter(&mut self, _step: u64) {}
+}
+
+/// Per-row access statistics: how often each row was touched by `update`
+/// since the last reset. Feeds the budgeted precision planner
+/// (`analysis::plan_for_budget`) and end-of-epoch re-planning. Counts are
+/// in-memory only — never checkpointed — and reset at every epoch
+/// boundary, so boundary saves resume bit-identically whether or not
+/// counting is on.
+pub trait RowStats {
+    /// Per-row update counts indexed by global row id, or `None` when
+    /// this store does not track them.
+    fn access_counts(&self) -> Option<&[u32]> {
+        None
+    }
+
+    /// Zero the counters (epoch boundary).
+    fn reset_access_counts(&mut self) {}
+}
+
 /// Common interface over all embedding-table variants. `Send + Sync` so
 /// sharded workers can gather from their partitions in parallel.
-pub trait EmbeddingStore: Send + Sync {
+///
+/// The gather/update core lives here; persistence is the [`Persistable`]
+/// supertrait and access-frequency tracking the [`RowStats`] supertrait,
+/// so subsystems can depend on exactly the capability they use (and a
+/// store's lack of one is a type-level fact, not a runtime surprise).
+pub trait EmbeddingStore: Persistable + RowStats + Send + Sync {
     fn method_name(&self) -> &'static str;
     fn n_features(&self) -> usize;
     fn dim(&self) -> usize;
@@ -105,58 +185,6 @@ pub trait EmbeddingStore: Send + Sync {
 
     /// Hook for per-step housekeeping (pruning schedules).
     fn end_step(&mut self) {}
-
-    // ------------------------------------------------------ checkpointing
-    //
-    // The `checkpoint` subsystem serializes stores through the five hooks
-    // below. Contract: `save_rows` → `load_rows` is bit-identical on the
-    // raw payload — packed stores hand over their packed bytes verbatim
-    // (never dequantize/requantize), float-backed stores their f32 bits.
-    // Stores that cannot be persisted (hashing, pruning) keep the
-    // defaults and fail with a clear message.
-
-    /// Bytes of one row's raw checkpoint payload, or `None` when this
-    /// store cannot be checkpointed.
-    fn ckpt_row_bytes(&self) -> Option<usize> {
-        None
-    }
-
-    /// Serialize rows `[lo, lo + dst.len()/ckpt_row_bytes())` into `dst`.
-    fn save_rows(&self, _lo: usize, _dst: &mut [u8]) -> Result<()> {
-        bail!("{} does not support checkpointing", self.method_name())
-    }
-
-    /// Restore rows from bytes produced by `save_rows` (exact inverse).
-    fn load_rows(&mut self, _lo: usize, _src: &[u8]) -> Result<()> {
-        bail!("{} does not support checkpointing", self.method_name())
-    }
-
-    /// Per-row learned scalars to persist (Δ for ALPT/LSQ, α for PACT);
-    /// empty for stores without any.
-    fn aux_params(&self) -> &[f32] {
-        &[]
-    }
-
-    /// Restore the scalars `aux_params` returned at save time.
-    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
-        ensure!(
-            aux.is_empty(),
-            "{} holds no aux params, checkpoint has {}",
-            self.method_name(),
-            aux.len()
-        );
-        Ok(())
-    }
-
-    /// Update-step counter feeding the per-step SR stream key (0 for
-    /// stores that draw no per-step noise). Persisted so a resumed run
-    /// continues the exact noise stream an uninterrupted one would use.
-    fn step_counter(&self) -> u64 {
-        0
-    }
-
-    /// Restore the update-step counter captured by `step_counter`.
-    fn set_step_counter(&mut self, _step: u64) {}
 
     /// Downcast to the mixed-precision [`GroupedStore`], whose checkpoint
     /// layout (format v2) carries one section run per precision group.
@@ -308,14 +336,37 @@ pub(crate) fn rounding_of(mode: RoundingMode) -> Rounding {
 /// (same calls, same generator consumption — byte-identical stores);
 /// mixed plans resolve the per-field widths against the experiment's
 /// dataset layout and build a [`GroupedStore`] with one packed sub-table
-/// per width.
+/// per width (plus hashed/pruned structural groups when the plan asks
+/// for them). With `replan_budget` set, even uniform plans build through
+/// the grouped path — a single-group grouped store is byte-identical to
+/// the plain one (property-tested in `grouped.rs`), and end-of-epoch
+/// re-planning needs the group machinery to migrate rows.
 pub fn build_store(
     exp: &Experiment,
     n_features: usize,
     dim: usize,
     rng: &mut Pcg32,
 ) -> Result<Box<dyn EmbeddingStore>> {
-    if !exp.bits.is_uniform() {
+    if let Some(budget) = exp.bits.auto_budget() {
+        bail!(
+            "--plan auto:{budget} is an analysis directive, not a store \
+             layout: the trainer resolves it into concrete per-field \
+             widths before building the table (alternatively, run `alpt \
+             plan --budget {budget}` and pass the emitted plan string)"
+        );
+    }
+    let replanning = exp.replan_budget > 0;
+    if replanning && !exp.method.trains_quantized() {
+        bail!(
+            "--replan-budget {} selects online width re-planning, which \
+             migrates rows between packed sub-tables — the {} store has \
+             no packed rows to requantize; use a quantized-training \
+             method (lpt/alpt) or drop --replan-budget",
+            exp.replan_budget,
+            exp.method.key(),
+        );
+    }
+    if !exp.bits.is_uniform() || replanning {
         let schema = crate::data::registry::schema_for(exp)?;
         let kinds = crate::data::registry::field_kinds(exp)?;
         // from_plan validates the layout (incl. table size >= schema)

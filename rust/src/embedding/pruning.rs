@@ -7,17 +7,28 @@
 //! pruned weights may grow back if their gradient resurrects them
 //! (prune-and-retrain). Training memory stays full-precision (ratio 1× in
 //! Table 1); inference ships only surviving weights (≈2× at R_x = 0.5).
+//!
+//! Persistence: the dense table is an ordinary per-row f32 payload
+//! (`ckpt_row_bytes = d·4`, plain checkpoint format v1 when standalone);
+//! the mask rides in `aux_params` as one f32 per element (1.0 = live,
+//! 0.0 = pruned) so the aux length divides the row count evenly — the
+//! invariant the delta journal's per-row aux capture relies on.
 
-use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use super::{
+    init_weights, EmbeddingStore, Persistable, RowStats, SecondPass,
+    UpdateHp,
+};
 use crate::optim::sgd_update;
 use crate::util::rng::Pcg32;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 pub struct PruningStore {
     n: usize,
     d: usize,
     table: Vec<f32>,
-    mask: Vec<bool>,
+    /// 1.0 = live, 0.0 = pruned — f32 so it persists through the same
+    /// aux channel as every other per-row scalar (see module docs).
+    mask: Vec<f32>,
     target_sparsity: f32,
     damping: f32,
     ramp_steps: f32,
@@ -39,7 +50,7 @@ impl PruningStore {
             n,
             d,
             table: init_weights(n, d, rng),
-            mask: vec![true; n * d],
+            mask: vec![1.0; n * d],
             target_sparsity,
             damping,
             ramp_steps,
@@ -77,8 +88,9 @@ impl PruningStore {
         let threshold = *nth;
         let mut pruned = 0usize;
         for (m, w) in self.mask.iter_mut().zip(self.table.iter_mut()) {
-            *m = w.abs() > threshold;
-            if !*m {
+            let live = w.abs() > threshold;
+            *m = if live { 1.0 } else { 0.0 };
+            if !live {
                 *w = 0.0;
                 pruned += 1;
             }
@@ -138,16 +150,66 @@ impl EmbeddingStore for PruningStore {
     }
 
     fn train_bytes(&self) -> usize {
-        // full dense table + 1-bit mask
+        // full dense table + the mask's 1-bit information content (the
+        // f32 in-memory representation is a persistence convenience, not
+        // what Table 1 charges the method for)
         self.table.len() * 4 + self.mask.len() / 8
     }
 
     fn infer_bytes(&self) -> usize {
         // surviving weights only (paper counts values, not index overhead)
-        let nnz = self.mask.iter().filter(|&&m| m).count();
+        let nnz = self.mask.iter().filter(|&&m| m != 0.0).count();
         nnz * 4
     }
 }
+
+impl Persistable for PruningStore {
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.d * 4)
+    }
+
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        super::save_f32_rows(&self.table, self.n, self.d, lo, dst)
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        super::load_f32_rows(&mut self.table, self.n, self.d, lo, src)
+    }
+
+    fn aux_params(&self) -> &[f32] {
+        &self.mask
+    }
+
+    fn load_aux_params(&mut self, aux: &[f32]) -> Result<()> {
+        ensure!(
+            aux.len() == self.mask.len(),
+            "pruning mask length mismatch: checkpoint has {}, table \
+             ({} rows x {} dims) expects {}",
+            aux.len(),
+            self.n,
+            self.d,
+            self.mask.len()
+        );
+        ensure!(
+            aux.iter().all(|&m| m == 0.0 || m == 1.0),
+            "pruning mask holds values other than 0.0/1.0"
+        );
+        self.mask.copy_from_slice(aux);
+        let pruned = self.mask.iter().filter(|&&m| m == 0.0).count();
+        self.current_sparsity = pruned as f32 / self.mask.len() as f32;
+        Ok(())
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.step
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        self.step = step;
+    }
+}
+
+impl RowStats for PruningStore {}
 
 #[cfg(test)]
 mod tests {
@@ -206,5 +268,35 @@ mod tests {
                 .unwrap();
             assert!(store.table[j] > 0.0, "weight did not grow back");
         }
+    }
+
+    #[test]
+    fn rows_and_mask_roundtrip_through_persistable_hooks() {
+        let mut rng = Pcg32::seeded(4);
+        let mut store =
+            PruningStore::init(60, 4, 0.5, 0.99, 50.0, &mut rng);
+        for _ in 0..600 {
+            store.end_step();
+        }
+        assert!(store.sparsity() > 0.0, "schedule never bit");
+        let rb = store.ckpt_row_bytes().unwrap();
+        let mut rows = vec![0u8; 60 * rb];
+        store.save_rows(0, &mut rows).unwrap();
+        let mask = store.aux_params().to_vec();
+
+        let mut rng2 = Pcg32::seeded(77);
+        let mut twin =
+            PruningStore::init(60, 4, 0.5, 0.99, 50.0, &mut rng2);
+        twin.load_rows(0, &rows).unwrap();
+        twin.load_aux_params(&mask).unwrap();
+        twin.set_step_counter(store.step_counter());
+        assert_eq!(twin.table, store.table);
+        assert_eq!(twin.mask, store.mask);
+        assert_eq!(twin.sparsity(), store.sparsity());
+        assert_eq!(twin.step_counter(), 600);
+        // a mask carrying non-binary values is rejected
+        let mut bad = mask.clone();
+        bad[0] = 0.5;
+        assert!(twin.load_aux_params(&bad).is_err());
     }
 }

@@ -9,7 +9,10 @@
 //! PACT) is learned from its own estimator. Inference ships packed
 //! integers + the quantizer parameter (4× at 8 bits).
 
-use super::{init_weights, EmbeddingStore, SecondPass, UpdateHp};
+use super::{
+    init_weights, EmbeddingStore, Persistable, RowStats, SecondPass,
+    UpdateHp,
+};
 use crate::quant::{
     init_delta, lsq_delta_grad_row, quantize_dr, ste_weight_grad_row,
     BitWidth,
@@ -111,7 +114,9 @@ impl EmbeddingStore for LsqStore {
         self.master.len() * (self.bw.bits() as usize) / 8
             + self.delta.len() * 4
     }
+}
 
+impl Persistable for LsqStore {
     fn ckpt_row_bytes(&self) -> Option<usize> {
         Some(self.d * 4)
     }
@@ -139,6 +144,8 @@ impl EmbeddingStore for LsqStore {
         Ok(())
     }
 }
+
+impl RowStats for LsqStore {}
 
 /// PACT: learned per-feature clipping value α; Δ = α / 2^{m-1}. The α
 /// estimator only receives gradient from *clipped* elements (its original
@@ -265,7 +272,9 @@ impl EmbeddingStore for PactStore {
         self.master.len() * (self.bw.bits() as usize) / 8
             + self.alpha.len() * 4
     }
+}
 
+impl Persistable for PactStore {
     fn ckpt_row_bytes(&self) -> Option<usize> {
         Some(self.d * 4)
     }
@@ -293,6 +302,8 @@ impl EmbeddingStore for PactStore {
         Ok(())
     }
 }
+
+impl RowStats for PactStore {}
 
 #[cfg(test)]
 mod tests {

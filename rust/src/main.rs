@@ -1,8 +1,9 @@
 //! `alpt` — the command-line launcher.
 //!
 //! ```text
-//! alpt train   --dataset avazu --method alpt-sr --bits 8 [--config f.toml]
-//! alpt train   --dataset criteo:path/to/train.tsv --method alpt --bits 8
+//! alpt train   --dataset avazu --method alpt-sr --plan 8 [--config f.toml]
+//! alpt train   --dataset criteo:path/to/train.tsv --method alpt --plan 8
+//! alpt plan    --dataset criteo:train.tsv --budget 64m   # budgeted plan
 //! alpt gen     --dataset criteo --samples 100000 --out data.ds
 //! alpt convex                      # the Figure-3 synthetic experiment
 //! alpt info                        # artifact manifest + environment
@@ -23,7 +24,10 @@ USAGE:
   alpt train  [--config FILE]
               [--dataset avazu|criteo|tiny|synthetic[:NAME]|criteo:FILE.tsv]
               [--method fp|lpt-sr|lpt-dr|alpt-sr|alpt-dr|lsq|pact|hashing|pruning]
-              [--bits 2|4|8|16 | --bits cat:4,num:8 | --bits f3:2,default:8]
+              [--plan 2|4|8|16 | --plan cat:4,num:8 | --plan f3:2,default:8
+               | --plan f0:hash,f2:prune,default:8 | --plan auto:BYTES]
+              [--replan-budget BYTES]  (re-derive a budgeted plan from each
+               epoch's access counts and migrate rows at the boundary)
               [--epochs N] [--samples N] [--seed N]
               [--model NAME] [--no-runtime]
               [--hash-bits N] [--numeric-buckets N] [--shuffle-window N]
@@ -31,6 +35,11 @@ USAGE:
               [--compact-every DELTAS]  (fold the delta journal into a
                fresh full checkpoint after this many deltas, 64)
               [--save FILE.ckpt] [--resume FILE.ckpt]
+  alpt plan   --budget BYTES[k|m|g]  (derive a per-field precision plan
+               whose predicted inference footprint fits the budget)
+              [--dataset ...] [--method ...] [--model NAME]
+              [--sample N]  (train records scanned for access counts, 1M)
+              [--out FILE]  (write the bare plan string to FILE)
   alpt serve  --ckpt FILE.ckpt [--batches N]     (no training: load + serve)
               [--listen HOST:PORT]  (online HTTP scoring server: POST /score,
                GET /healthz, GET /stats, POST /reload, POST /shutdown)
@@ -47,10 +56,11 @@ Datasets: plain names are in-memory synthetic specs; `criteo:FILE.tsv`
 streams a Criteo-format TSV (label + 13 numeric + 26 categorical columns)
 from disk with on-the-fly feature hashing — see README.md \"Datasets\".
 
-Precision plans: `--bits` takes one width for every field, or a
-per-field plan (`cat:4,num:8`, `f3:2,f7:16,default:8`) that packs each
-group of equal-width fields into its own sub-table — see README.md
-\"Precision plans\".
+Precision plans: `--plan` takes one width for every field, a per-field
+plan (`cat:4,num:8`, `f3:2,f7:16,default:8`, structural kinds `hash` /
+`prune`), or a budget directive (`auto:BYTES`) resolved by the planner;
+`--bits` is a deprecated alias with the same grammar — see README.md
+\"Precision plans\" and \"Budgeted precision plans\".
 ";
 
 fn main() -> Result<()> {
@@ -63,6 +73,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
         Some("serve") => serve(&args),
+        Some("plan") => plan(&args),
         Some("gen") => gen(&args),
         Some("convex") => {
             convex();
@@ -96,7 +107,17 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
     if let Some(m) = args.get("model") {
         exp.model = m.to_string();
     }
+    if args.get("bits").is_some() {
+        eprintln!(
+            "warning: --bits is deprecated; use --plan (same grammar)"
+        );
+    }
     exp.bits = args.get_parse("bits", exp.bits.clone())?;
+    exp.bits = args.get_parse("plan", exp.bits.clone())?;
+    if let Some(b) = args.get("replan-budget") {
+        exp.replan_budget =
+            alpt::config::parse_byte_budget(b)? as usize;
+    }
     exp.epochs = args.get_parse("epochs", exp.epochs)?;
     exp.seed = args.get_parse("seed", exp.seed)?;
     exp.n_samples = args.get_parse("samples", exp.n_samples)?;
@@ -252,6 +273,109 @@ fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
     if let Some(path) = save_path {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {}", path.display());
+    }
+    Ok(())
+}
+
+/// `alpt plan --budget BYTES`: the offline half of budgeted precision
+/// planning. Streams the dataset's training split once, tallying per-row
+/// access counts, ranks fields by mean per-row traffic, and greedily
+/// assigns bit widths (hot fields wide, cold fields 2-bit, untouched
+/// fields pruned) until the predicted inference footprint fills the
+/// budget. Prints the plan string — feed it back to `alpt train --plan`
+/// (or write it to a file with `--out`).
+fn plan(args: &Args) -> Result<()> {
+    use alpt::analysis::{field_scores_from_counts, plan_for_budget};
+    use alpt::data::registry::RecordStream;
+
+    let exp = build_experiment(args)?;
+    let budget = match args.get("budget") {
+        Some(s) => alpt::config::parse_byte_budget(s)?,
+        None => exp.bits.auto_budget().ok_or_else(|| {
+            anyhow::anyhow!(
+                "plan requires --budget BYTES (or --plan auto:BYTES)"
+            )
+        })?,
+    };
+    if !exp.method.trains_quantized() {
+        bail!(
+            "plan picks per-field bit widths, which only \
+             quantized-training methods use; method {} has no packed \
+             table (use --method lpt/alpt)",
+            exp.method.key()
+        );
+    }
+    let schema = registry::schema_for(&exp)?;
+    let entry = alpt::coordinator::builtin_entry(&exp.model)?;
+
+    // one pass over the training split (the same records epoch 1 sees),
+    // counting how often each embedding row is touched
+    let source = registry::open_source(&exp)?;
+    let mut stream =
+        registry::train_epoch_stream(source.as_ref(), &exp, 1)?;
+    let cap: u64 = args.get_parse("sample", 1_000_000u64)?;
+    let mut counts = vec![0u32; schema.n_features()];
+    let mut buf = vec![0u32; schema.n_fields()];
+    let mut seen = 0u64;
+    while seen < cap {
+        match stream.next_record(&mut buf)? {
+            None => break,
+            Some(_) => {
+                for &id in &buf {
+                    let c = &mut counts[id as usize];
+                    *c = c.saturating_add(1);
+                }
+                seen += 1;
+            }
+        }
+    }
+    for w in source.warnings() {
+        eprintln!("warning: {w}");
+    }
+    if seen == 0 {
+        bail!(
+            "the training split of {} produced no records to count",
+            source.name()
+        );
+    }
+
+    let scores = field_scores_from_counts(&counts, &schema);
+    let is_alpt =
+        matches!(exp.method, Method::Alpt(_));
+    let report = plan_for_budget(
+        &schema.vocabs,
+        &scores,
+        entry.emb_dim,
+        is_alpt,
+        budget,
+        true,
+    )?;
+    println!(
+        "scanned {seen} train records over {} fields ({} feature rows, \
+         dim {})",
+        schema.n_fields(),
+        schema.n_features(),
+        entry.emb_dim
+    );
+    for (f, kind) in report.kinds.iter().enumerate() {
+        println!(
+            "  f{f}: vocab {:>8}  score {:>10.3}  -> {}",
+            schema.vocabs[f],
+            scores[f],
+            kind.key()
+        );
+    }
+    println!("plan: {}", report.plan.key());
+    println!(
+        "predicted inference bytes: {} / budget {budget} ({:.1}%)",
+        report.bytes,
+        100.0 * report.bytes as f64 / budget as f64
+    );
+    assert!(report.bytes <= budget, "planner exceeded its budget");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, format!("{}\n", report.plan.key()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("plan written to {out}");
     }
     Ok(())
 }

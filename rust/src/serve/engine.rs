@@ -2,7 +2,8 @@
 //!
 //! [`InferenceEngine`] is an **immutable**, `Send + Sync` bundle of
 //! everything one model needs to score requests: the restored
-//! [`EmbeddingStore`] (fp / lpt / alpt / grouped mixed-precision), the
+//! [`EmbeddingStore`] (fp / lpt / alpt / hashing / pruning / grouped
+//! mixed-precision, including hashed+pruned structural groups), the
 //! DCN dense parameters, and the model geometry. Scoring takes `&self`
 //! and per-thread scratch, so any number of threads can score against
 //! one shared engine concurrently — and, because gather and the Rust
@@ -94,8 +95,9 @@ const _: () = {
 };
 
 impl InferenceEngine {
-    /// Restore an engine from a checkpoint file: store rows (uniform v1
-    /// and grouped mixed-precision v2 alike), dense params, and the
+    /// Restore an engine from a checkpoint file: store rows (uniform v1,
+    /// grouped mixed-precision v2 and kinded/aux-only v3 alike), dense
+    /// params, and the
     /// model geometry from the experiment echo — validated before any
     /// scoring can happen. A CRC-chained delta journal next to the file
     /// (continuous training: `--save-every`) is validated and folded on
@@ -348,6 +350,25 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.len(), engine.batch_size());
         assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn structural_plan_checkpoint_scores_after_reload() {
+        // hashed + pruned groups ride the v3 kinded format through
+        // save → reload → serve
+        let engine =
+            engine_for("f0:hash,f1:prune,default:4", "structural.ckpt");
+        let features: Vec<u32> = (0..engine.fields() as u32).collect();
+        let labels = [0u8];
+        let batch = build_batch(
+            &features,
+            &labels,
+            engine.fields(),
+            engine.batch_size(),
+        );
+        let logits = engine.score(&batch);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert!(engine.infer_bytes() > 0);
     }
 
     #[test]

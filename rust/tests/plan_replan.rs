@@ -1,0 +1,161 @@
+//! End-to-end tests for budget-driven precision plans: end-of-epoch
+//! re-planning migrates the table and resumes bit-identically from a
+//! post-migration checkpoint, and hashed/pruned structural group kinds
+//! survive the save → resume → serve round trip in the kinded v3 format.
+
+use std::path::PathBuf;
+
+use alpt::checkpoint::Checkpoint;
+use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
+use alpt::coordinator::{builtin_entry, serve_checkpoint, Trainer};
+use alpt::data::registry;
+use alpt::embedding::EmbeddingStore;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("alpt_plan_replan_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn gather_all(store: &dyn EmbeddingStore) -> Vec<f32> {
+    let ids: Vec<u32> = (0..store.n_features() as u32).collect();
+    let mut out = vec![0.0f32; ids.len() * store.dim()];
+    store.gather(&ids, &mut out);
+    out
+}
+
+fn replan_tiny_exp() -> Experiment {
+    Experiment {
+        dataset: "synthetic:tiny".into(),
+        model: "tiny".into(),
+        method: Method::Alpt(RoundingMode::Sr),
+        bits: PrecisionPlan::uniform(2),
+        epochs: 2,
+        n_samples: 700,
+        patience: 0,
+        use_runtime: false,
+        threads: 1,
+        shuffle_window: 64,
+        prefetch_batches: 2,
+        lr_emb: 0.3,
+        ..Experiment::default()
+    }
+}
+
+#[test]
+fn replan_then_mid_epoch_resume_is_bit_identical() {
+    // a generous byte budget makes the epoch-1 boundary upgrade the
+    // whole 2-bit table to 16 bits; the continuous saves of epoch 2 are
+    // therefore post-migration checkpoints, and resuming from the last
+    // one must replay the rest of the run bit-for-bit
+    let mut exp = Experiment { save_every: 5, ..replan_tiny_exp() };
+    let source = registry::open_source(&exp).unwrap();
+    let n = source.schema().n_features();
+    let d = builtin_entry("tiny").unwrap().emb_dim;
+    exp.replan_budget = n * (2 * d + 4) + 64;
+
+    let ckpt = tmp("replan_mid_epoch.ckpt");
+    let mut full = Trainer::new(exp.clone(), n).unwrap();
+    let res = full
+        .train_stream(source.as_ref(), false, Some(ckpt.as_path()))
+        .unwrap();
+    assert_eq!(res.epochs_run, 2);
+    assert_eq!(
+        full.exp.bits.as_uniform(),
+        Some(16),
+        "boundary replan should have upgraded the table: {}",
+        full.exp.bits.key()
+    );
+    // enough epoch-2 steps that at least one save landed post-migration
+    assert!(res.history[1].steps >= 5, "{:?}", res.history[1]);
+
+    let mut resumed = Trainer::resume(&ckpt).unwrap();
+    assert_eq!(
+        resumed.exp.bits.as_uniform(),
+        Some(16),
+        "the post-migration plan must be in the checkpoint echo"
+    );
+    assert_eq!(resumed.epochs_done, 1, "saved mid-epoch-2");
+    let source_b = registry::open_source(&resumed.exp).unwrap();
+    let res_b =
+        resumed.train_stream(source_b.as_ref(), false, None).unwrap();
+    assert_eq!(
+        gather_all(full.store.as_ref()),
+        gather_all(resumed.store.as_ref()),
+        "migrated tables diverged after mid-epoch resume"
+    );
+    assert_eq!(full.dense, resumed.dense, "dense params diverged");
+    assert_eq!(
+        res_b.history.last().unwrap().val_auc.to_bits(),
+        res.history.last().unwrap().val_auc.to_bits(),
+        "final val AUC diverged"
+    );
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn requantize_on_migrate_is_deterministic() {
+    // two identically-seeded runs must migrate to byte-identical tables:
+    // the requantize path draws from the per-row StreamKey streams, not
+    // from any shared mutable RNG state
+    let mut exp = replan_tiny_exp();
+    let n = registry::open_source(&exp).unwrap().schema().n_features();
+    let d = builtin_entry("tiny").unwrap().emb_dim;
+    exp.replan_budget = n * (2 * d + 4) + 64;
+
+    let run = |exp: &Experiment| {
+        let src = registry::open_source(exp).unwrap();
+        let mut tr = Trainer::new(exp.clone(), n).unwrap();
+        tr.train_stream(src.as_ref(), false, None).unwrap();
+        let p = tmp("replan_det.ckpt");
+        tr.save_checkpoint(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        (gather_all(tr.store.as_ref()), bytes)
+    };
+    let (gather_a, bytes_a) = run(&exp);
+    let (gather_b, bytes_b) = run(&exp);
+    assert_eq!(gather_a, gather_b, "migrated gathers diverged");
+    assert_eq!(bytes_a, bytes_b, "migrated checkpoints diverged");
+}
+
+#[test]
+fn structural_plan_survives_save_resume_serve() {
+    // hashed + pruned group kinds round-trip through the kinded v3
+    // checkpoint: train → save → resume scores bit-identically → the
+    // serving path loads the same file
+    let exp = Experiment {
+        bits: PrecisionPlan::parse("f0:hash,f1:prune,default:4").unwrap(),
+        epochs: 1,
+        ..replan_tiny_exp()
+    };
+    let source = registry::open_source(&exp).unwrap();
+    let n = source.schema().n_features();
+    let mut tr = Trainer::new(exp, n).unwrap();
+    {
+        let gs = tr.store.as_grouped().unwrap();
+        assert!(gs.has_structural_groups());
+    }
+    let res = tr.train_stream(source.as_ref(), false, None).unwrap();
+    assert!(res.best_auc.is_finite());
+
+    let ckpt = tmp("structural_roundtrip.ckpt");
+    tr.save_checkpoint(&ckpt).unwrap();
+    let ck = Checkpoint::read(&ckpt).unwrap();
+    assert_eq!(ck.version, 3, "structural groups need the kinded format");
+
+    let mut resumed = Trainer::resume(&ckpt).unwrap();
+    {
+        let gs = resumed.store.as_grouped().unwrap();
+        assert!(gs.has_structural_groups(), "kinds lost on resume");
+    }
+    let ev_a = tr.evaluate_source(source.as_ref()).unwrap();
+    let ev_b = resumed.evaluate_source(source.as_ref()).unwrap();
+    assert_eq!(ev_a.auc.to_bits(), ev_b.auc.to_bits(), "AUC diverged");
+
+    let report = serve_checkpoint(&ckpt, 8).unwrap();
+    assert_eq!(report.n_features, n);
+    assert!(report.auc.is_finite());
+    assert!(report.infer_bytes > 0);
+    std::fs::remove_file(&ckpt).ok();
+}
