@@ -1,71 +1,111 @@
-//! Distributed-training simulation: an embedding table sharded across W
-//! workers, parallel gathers, and the communication accounting that
+//! Distributed-training demo: shard a real embedding table across W
+//! worker serve loops over loopback TCP (the same `run_worker` that
+//! backs `alpt worker`), train an epoch through the CRC-framed
+//! GATHER/UPDATE RPC, and check the result is bit-identical to the
+//! single-process run — then the communication accounting that
 //! motivates training-time compression (paper §1: "the communication
 //! between multiple devices seriously affects the training efficiency").
 //!
 //! ```bash
-//! cargo run --release --example distributed -- --workers 8
+//! cargo run --release --example distributed -- --workers 2
 //! ```
 
 use alpt::cli::Args;
 use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
-use alpt::coordinator::sharding::{step_comm, ShardedStore};
+use alpt::coordinator::sharding::step_comm;
+use alpt::coordinator::{
+    run_worker, RpcConfig, Trainer, WorkerHub, WorkerOpts,
+};
 use alpt::data::batcher::Batcher;
+use alpt::data::registry;
 use alpt::data::synthetic::{generate, SyntheticSpec};
-use alpt::util::bench::fmt_rate;
-use anyhow::Result;
+use alpt::embedding::EmbeddingStore;
 use std::time::Instant;
+
+use anyhow::Result;
+
+fn gather_all(store: &dyn EmbeddingStore) -> Vec<f32> {
+    let ids: Vec<u32> = (0..store.n_features() as u32).collect();
+    let mut out = vec![0.0f32; ids.len() * store.dim()];
+    store.gather(&ids, &mut out);
+    out
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env(false, &[])?;
-    let workers: usize = args.get_parse("workers", 8)?;
+    let workers: usize = args.get_parse("workers", 2)?;
     let n_samples: usize = args.get_parse("samples", 50_000)?;
 
-    println!("=== sharded embedding table across {workers} workers ===\n");
-    let spec = SyntheticSpec::avazu(3);
-    let ds = generate(&spec, n_samples);
-    let n_features = ds.schema.n_features();
-    let dim = 16;
-    println!(
-        "dataset: {} samples, {} features; table dim {dim}",
-        ds.n_samples(),
-        n_features
-    );
-
-    // parallel sharded gather throughput
+    // --- real wire training over loopback -----------------------------
+    println!("=== ALPT-8bit over {workers} loopback workers ===\n");
     let exp = Experiment {
+        dataset: "synthetic:tiny".into(),
+        model: "tiny".into(),
         method: Method::Alpt(RoundingMode::Sr),
         bits: PrecisionPlan::uniform(8),
+        epochs: 1,
+        n_samples: 600,
+        patience: 0,
         use_runtime: false,
+        threads: 1,
+        shuffle_window: 64,
+        prefetch_batches: 2,
+        lr_emb: 0.3,
         ..Experiment::default()
     };
-    let mut sharded = ShardedStore::new(&exp, n_features, dim, workers)?;
-    let batches: Vec<_> = Batcher::new(&ds, 256, Some(1), true)
-        .take(200)
-        .collect();
-    let mut out = vec![0.0f32; 256 * 24 * dim];
-    let t0 = Instant::now();
-    let mut rows = 0u64;
-    for b in &batches {
-        sharded.gather(&b.unique, &mut out[..b.unique.len() * dim]);
-        rows += b.unique.len() as u64;
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "\nparallel gather over {workers} shards: {} batches, {} rows in \
-         {:.1} ms  ({} rows)",
-        batches.len(),
-        rows,
-        dt * 1e3,
-        fmt_rate(rows as f64 / dt)
-    );
-    println!(
-        "sharded table: {:.1} MB total across workers ({:.1} MB/worker)",
-        sharded.train_bytes() as f64 / 1e6,
-        sharded.train_bytes() as f64 / 1e6 / workers as f64
-    );
+    let n = registry::open_source(&exp)?.schema().n_features();
 
-    // per-epoch communication by method/bit width
+    // single-process reference
+    let mut local = Trainer::new(exp.clone(), n)?;
+    let src = registry::open_source(&exp)?;
+    local.train_stream(src.as_ref(), false, None)?;
+
+    // the same run with the table sharded across worker threads
+    let mut tr = Trainer::new(exp.clone(), n)?;
+    let hub = WorkerHub::bind("127.0.0.1:0", RpcConfig::default())?;
+    let addr = hub.local_addr()?.to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let opts = WorkerOpts {
+                connect: addr.clone(),
+                retry_delay_ms: 25,
+                ..WorkerOpts::default()
+            };
+            std::thread::spawn(move || run_worker(&opts))
+        })
+        .collect();
+    tr.attach_workers_hub(hub, workers)?;
+    let t0 = Instant::now();
+    let src = registry::open_source(&exp)?;
+    tr.train_stream(src.as_ref(), false, None)?;
+    println!(
+        "epoch over the wire in {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let identical = gather_all(tr.store.as_ref())
+        .iter()
+        .zip(gather_all(local.store.as_ref()).iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "bit-identical to single-process: {}",
+        if identical { "yes" } else { "NO (bug!)" }
+    );
+    assert!(identical);
+    tr.store.as_remote().expect("remote store").shutdown()?;
+    drop(tr);
+    for h in handles {
+        h.join().expect("worker thread")?;
+    }
+
+    // --- per-epoch communication by method/bit width ------------------
+    let spec = SyntheticSpec::avazu(3);
+    let ds = generate(&spec, n_samples);
+    let dim = 16;
+    println!(
+        "\ndataset: {} samples, {} features; table dim {dim}",
+        ds.n_samples(),
+        ds.schema.n_features()
+    );
     println!("\nper-epoch leader<->worker traffic (one pass over the data):");
     println!(
         "  {:<12} {:>6} {:>12} {:>12} {:>10} {:>12}",

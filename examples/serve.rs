@@ -19,7 +19,7 @@
 //! your own model, produce a checkpoint the usual way:
 //!
 //! ```bash
-//! cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \
+//! cargo run --release -- train --dataset tiny --method lpt-sr --plan 8 \
 //!     --no-runtime --save trained.ckpt
 //! cargo run --release --example serve -- --ckpt trained.ckpt
 //! ```

@@ -3,10 +3,10 @@
 //!
 //! ```bash
 //! cargo run --release --example train_ctr -- \
-//!     --dataset avazu --method alpt-sr --bits 8 --epochs 5 \
+//!     --dataset avazu --method alpt-sr --plan 8 --epochs 5 \
 //!     --samples 200000 --out results/alpt8_avazu.json
 //! # or from a config file (+ CLI overrides):
-//! cargo run --release --example train_ctr -- --config exp.toml --bits 4
+//! cargo run --release --example train_ctr -- --config exp.toml --plan 4
 //! ```
 
 use alpt::cli::Args;

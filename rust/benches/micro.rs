@@ -381,7 +381,7 @@ fn main() {
         };
         let spec = SyntheticSpec::tiny(exp.seed);
         let ds = generate(&spec, exp.n_samples);
-        let tr = Trainer::new(exp, ds.schema.n_features())
+        let mut tr = Trainer::new(exp, ds.schema.n_features())
             .expect("bench trainer");
         let ckpt = std::env::temp_dir().join("alpt_bench_engine.ckpt");
         tr.save_checkpoint(&ckpt).expect("bench checkpoint");

@@ -24,6 +24,14 @@
 //! input), so a resumed trainer draws exactly the SR noise an
 //! uninterrupted run would have drawn. Save → load → save produces
 //! byte-identical files.
+//!
+//! The same contract makes distributed checkpoints reshardable: rows are
+//! always persisted in canonical *global* order regardless of how a
+//! `RemoteStore` had them partitioned, and the worker partition
+//! (`coordinator::sharding::RowPartition`) is a pure function of
+//! `(id, n_shards)` that never enters the file — so a table trained on N
+//! workers resumes on M (or one process) from the unchanged v1/v2/v3
+//! formats.
 
 pub mod failpoint;
 pub mod format;
@@ -1105,7 +1113,7 @@ mod tests {
         let p1 = tmp("trainer.1.ckpt");
         let p2 = tmp("trainer.2.ckpt");
         tr.save_checkpoint(&p1).unwrap();
-        let resumed = Trainer::resume(&p1).unwrap();
+        let mut resumed = Trainer::resume(&p1).unwrap();
         resumed.save_checkpoint(&p2).unwrap();
         assert_eq!(
             std::fs::read(&p1).unwrap(),

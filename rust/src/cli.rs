@@ -85,6 +85,34 @@ impl Args {
     }
 }
 
+/// Parse a byte-size option value (`65536`, `64k`, `48m`, `2g`; binary
+/// multiples, case-insensitive). One grammar for every size-taking flag
+/// (`--budget`, `--replan-budget`, `--max-frame`); errors name the flag
+/// so the user knows which one to fix.
+pub fn parse_bytes(flag: &str, s: &str) -> Result<u64> {
+    crate::config::parse_byte_budget(s).map_err(|e| {
+        anyhow::anyhow!("bad value for --{flag}: {e} (expected e.g. 64k, 48m, 2g)")
+    })
+}
+
+/// Parse a `HOST:PORT` option value and return it in normalized
+/// `host:port` form. One grammar for every address-taking flag
+/// (`serve --listen`, `train --listen-worker`, `worker --connect`);
+/// errors name the flag.
+pub fn parse_host_port(flag: &str, s: &str) -> Result<String> {
+    let s = s.trim();
+    let Some((host, port)) = s.rsplit_once(':') else {
+        bail!("bad value for --{flag}: {s:?} (expected HOST:PORT, e.g. 127.0.0.1:4700)");
+    };
+    if host.is_empty() {
+        bail!("bad value for --{flag}: {s:?} has an empty host");
+    }
+    let port: u16 = port.parse().map_err(|_| {
+        anyhow::anyhow!("bad value for --{flag}: {s:?} has a bad port (expected 1-65535)")
+    })?;
+    Ok(format!("{host}:{port}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +170,36 @@ mod tests {
         assert!(b
             .get_parse::<PrecisionPlan>("bits", PrecisionPlan::uniform(8))
             .is_err());
+    }
+
+    #[test]
+    fn parse_bytes_shared_grammar() {
+        assert_eq!(parse_bytes("max-frame", "65536").unwrap(), 65536);
+        assert_eq!(parse_bytes("budget", "64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("budget", "48M").unwrap(), 48 << 20);
+        assert_eq!(parse_bytes("replan-budget", "2g").unwrap(), 2 << 30);
+        let err = parse_bytes("max-frame", "lots").unwrap_err().to_string();
+        assert!(err.contains("--max-frame"), "error names the flag: {err}");
+    }
+
+    #[test]
+    fn parse_host_port_shared_grammar() {
+        assert_eq!(
+            parse_host_port("listen", "127.0.0.1:4700").unwrap(),
+            "127.0.0.1:4700"
+        );
+        assert_eq!(
+            parse_host_port("connect", " localhost:80 ").unwrap(),
+            "localhost:80"
+        );
+        for bad in ["no-port", ":4700", "host:", "host:99999", "host:abc"] {
+            let err =
+                parse_host_port("listen-worker", bad).unwrap_err().to_string();
+            assert!(
+                err.contains("--listen-worker"),
+                "error names the flag: {err}"
+            );
+        }
     }
 
     #[test]

@@ -525,8 +525,8 @@ pub struct Experiment {
     /// Manifest model-config name ("avazu", "criteo", "tiny", "*_d32").
     pub model: String,
     pub method: Method,
-    /// Embedding precision: a uniform width (`--bits 4`) or a per-field
-    /// plan (`--bits cat:4,num:8` / `--bits f3:2,default:8`). Non-uniform
+    /// Embedding precision: a uniform width (`--plan 4`) or a per-field
+    /// plan (`--plan cat:4,num:8` / `--plan f3:2,default:8`). Non-uniform
     /// plans build a grouped store with one packed sub-table per width.
     pub bits: PrecisionPlan,
     pub epochs: usize,

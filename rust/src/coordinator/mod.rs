@@ -1,5 +1,5 @@
 //! The L3 coordinator: training loop, evaluation, epoch scheduling, and
-//! the sharded leader/worker communication simulation.
+//! distributed parameter-server training over the wire.
 //!
 //! The [`Trainer`] owns everything stateful — the embedding store, the
 //! dense parameters + Adam state, the PJRT runtime (or the pure-Rust nn
@@ -11,16 +11,28 @@
 //!              requantize ◀─ store.update ◀──┘   (+ ALPT second pass
 //!                                                  through train_fq)
 //! ```
+//!
+//! With `--workers N` the gather/update arrows cross process
+//! boundaries: [`sharding::RowPartition`] splits row ids across worker
+//! processes, [`net`] frames the CRC-checked GATHER/UPDATE RPC, and
+//! [`worker::run_worker`] is the `alpt worker` serve loop. The
+//! coordinator keeps the dense model and the data stream; workers keep
+//! the packed rows. Results are bit-identical to single-process at any
+//! worker count.
 
+pub mod net;
 pub mod serve;
 pub mod sharding;
 pub mod trainer;
+pub mod worker;
 
+pub use net::{RpcConfig, WorkerHub};
 pub use serve::{
     sample_requests, serve_checkpoint, serve_with_engine, SampleRequest,
     ServeReport,
 };
-pub use sharding::{CommStats, ShardedStore};
+pub use sharding::{CommStats, RowPartition};
 pub use trainer::{
     builtin_entry, EarlyStop, EpochReport, EvalReport, TrainResult, Trainer,
 };
+pub use worker::{run_worker, WorkerOpts};

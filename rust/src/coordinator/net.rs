@@ -1,0 +1,679 @@
+//! Compact binary RPC for distributed training, over std TCP.
+//!
+//! Every message is one length-prefixed frame, CRC32-checked like the
+//! checkpoint format (same `checkpoint::format::crc32` polynomial):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "ALPR" (LE u32)
+//! 4       1     opcode (HELLO/LOAD/GATHER/UPDATE/BARRIER/SHUTDOWN/ERR)
+//! 5       1     flags  (bit 0 = response)
+//! 6       2     seq    (LE u16; responses echo the request's seq)
+//! 8       4     len    (LE u32, payload bytes; capped by RpcConfig)
+//! 12      len   payload
+//! 12+len  4     crc32 over bytes [4, 12+len)  (opcode..payload)
+//! ```
+//!
+//! 16 bytes of overhead per frame. Embedding rows cross the wire in
+//! their packed m-bit form plus the f32 Δ aux — the whole point of
+//! low-precision training is that this is the cheap representation —
+//! and gradients go back as f32 (the paper does not quantize
+//! gradients). The frame codec is socket-free ([`encode_frame`] /
+//! [`decode_frame`]) so benches and tests can measure and corrupt
+//! frames without a connection; [`read_frame`]/[`write_frame`] move
+//! them over any `Read`/`Write`.
+
+use std::io::{ErrorKind, Read as IoRead, Write as IoWrite};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::format::{crc32, put_u32, put_u64, take_u32, take_u64};
+
+/// Frame magic: "ALPR" as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"ALPR");
+
+/// Wire protocol version, exchanged in HELLO.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Header bytes before the payload (magic + opcode + flags + seq + len).
+pub const HEADER_BYTES: usize = 12;
+
+/// Total framing overhead (header + trailing CRC32).
+pub const FRAME_OVERHEAD: usize = HEADER_BYTES + 4;
+
+/// Response flag: set on every reply, echoing the request's seq.
+pub const FLAG_RESPONSE: u8 = 1;
+
+/// RPC opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Worker → coordinator registration; reply carries the shard
+    /// assignment (JSON: shard, n_shards, table geometry, experiment).
+    Hello = 1,
+    /// Coordinator → worker: a contiguous chunk of the shard's local
+    /// rows (packed bytes + Δ aux), streamed at attach time.
+    Load = 2,
+    /// Coordinator → worker: global ids → packed rows + Δ aux.
+    Gather = 3,
+    /// Coordinator → worker: per-row f32 grads + the step counter and
+    /// RNG draw that key the stochastic-rounding streams.
+    Update = 4,
+    /// Epoch / quiesce barrier; reply means the worker is in sync.
+    Barrier = 5,
+    /// Clean shutdown; the worker acks and exits.
+    Shutdown = 6,
+    /// Error reply: payload is a UTF-8 message from the remote side.
+    Err = 7,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Option<Op> {
+        Some(match v {
+            1 => Op::Hello,
+            2 => Op::Load,
+            3 => Op::Gather,
+            4 => Op::Update,
+            5 => Op::Barrier,
+            6 => Op::Shutdown,
+            7 => Op::Err,
+            _ => return None,
+        })
+    }
+}
+
+/// Client-side transport knobs (coordinator and worker share these).
+#[derive(Clone, Copy, Debug)]
+pub struct RpcConfig {
+    /// Read timeout per call; a peer silent this long is declared dead.
+    pub timeout_ms: u64,
+    /// Connection attempts before giving up (workers usually start
+    /// before the coordinator's listener is up).
+    pub connect_retries: u32,
+    /// Delay between connection attempts.
+    pub retry_delay_ms: u64,
+    /// Largest accepted frame payload; oversized frames are a protocol
+    /// error, not an allocation.
+    pub max_frame: u64,
+    /// How long the coordinator waits for all workers to register.
+    pub accept_timeout_ms: u64,
+}
+
+impl Default for RpcConfig {
+    fn default() -> Self {
+        Self {
+            timeout_ms: 30_000,
+            connect_retries: 40,
+            retry_delay_ms: 250,
+            max_frame: 64 << 20,
+            accept_timeout_ms: 120_000,
+        }
+    }
+}
+
+/// Encode one frame to bytes (socket-free; benches measure `.len()`).
+pub fn encode_frame(op: Op, flags: u8, seq: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    put_u32(&mut out, MAGIC);
+    out.push(op as u8);
+    out.push(flags);
+    out.extend_from_slice(&seq.to_le_bytes());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[4..]);
+    put_u32(&mut out, crc);
+    out
+}
+
+/// Decode one complete frame from bytes; checks magic, length and CRC.
+pub fn decode_frame(buf: &[u8]) -> Result<(Op, u8, u16, &[u8])> {
+    if buf.len() < FRAME_OVERHEAD {
+        bail!("rpc frame truncated: {} bytes", buf.len());
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("rpc frame bad magic {magic:#010x}");
+    }
+    let len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if buf.len() != FRAME_OVERHEAD + len {
+        bail!(
+            "rpc frame length mismatch: header says {len}, have {}",
+            buf.len() - FRAME_OVERHEAD
+        );
+    }
+    let body = &buf[4..HEADER_BYTES + len];
+    let want =
+        u32::from_le_bytes(buf[HEADER_BYTES + len..].try_into().unwrap());
+    let got = crc32(body);
+    if got != want {
+        bail!("rpc frame crc mismatch: got {got:#010x}, want {want:#010x}");
+    }
+    let op = Op::from_u8(buf[4])
+        .with_context(|| format!("rpc frame unknown opcode {}", buf[4]))?;
+    let seq = u16::from_le_bytes([buf[6], buf[7]]);
+    Ok((op, buf[5], seq, &buf[HEADER_BYTES..HEADER_BYTES + len]))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(
+    w: &mut impl IoWrite,
+    op: Op,
+    flags: u8,
+    seq: u16,
+    payload: &[u8],
+) -> Result<()> {
+    let frame = encode_frame(op, flags, seq, payload);
+    w.write_all(&frame).context("rpc write")?;
+    w.flush().context("rpc flush")?;
+    Ok(())
+}
+
+/// Read one frame from a stream, enforcing the payload cap before
+/// allocating.
+pub fn read_frame(
+    r: &mut impl IoRead,
+    max_frame: u64,
+) -> Result<(Op, u8, u16, Vec<u8>)> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header).context("rpc read header")?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("rpc frame bad magic {magic:#010x}");
+    }
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as u64;
+    if len > max_frame {
+        bail!("rpc frame of {len} bytes exceeds --max-frame {max_frame}");
+    }
+    let mut rest = vec![0u8; len as usize + 4];
+    r.read_exact(&mut rest).context("rpc read payload")?;
+    let mut frame = Vec::with_capacity(HEADER_BYTES + rest.len());
+    frame.extend_from_slice(&header);
+    frame.extend_from_slice(&rest);
+    let (op, flags, seq, payload) = decode_frame(&frame)?;
+    Ok((op, flags, seq, payload.to_vec()))
+}
+
+// ---------------------------------------------------------------------------
+// Typed payload codecs. Each message body is flat little-endian, built
+// from the same put_/take_ primitives as the checkpoint sections.
+
+fn take_bytes<'a>(src: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if src.len() < *pos + n {
+        bail!("rpc payload truncated at byte {}", *pos);
+    }
+    let out = &src[*pos..*pos + n];
+    *pos += n;
+    Ok(out)
+}
+
+fn put_f32s_raw(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_f32s(src: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let raw = take_bytes(src, pos, n * 4)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn take_u32s(src: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u32>> {
+    let raw = take_bytes(src, pos, n * 4)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// GATHER request: global ids to fetch. `aux_only` skips the packed
+/// rows (used by the pre-save quiesce to mirror the Δ table).
+#[derive(Debug, PartialEq)]
+pub struct GatherReq {
+    pub aux_only: bool,
+    pub ids: Vec<u32>,
+}
+
+impl GatherReq {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(5 + self.ids.len() * 4);
+        out.push(self.aux_only as u8);
+        put_u32(&mut out, self.ids.len() as u32);
+        put_u32s(&mut out, &self.ids);
+        out
+    }
+
+    pub fn decode(src: &[u8]) -> Result<GatherReq> {
+        let mut pos = 0;
+        let aux_only = take_bytes(src, &mut pos, 1)?[0] != 0;
+        let count = take_u32(src, &mut pos)? as usize;
+        let ids = take_u32s(src, &mut pos, count)?;
+        Ok(GatherReq { aux_only, ids })
+    }
+}
+
+/// GATHER response: packed rows (in request order) + per-row Δ aux.
+/// `row_bytes == 0` for aux-only replies and for methods with no
+/// packed representation; `aux` is empty for methods with no per-row Δ.
+#[derive(Debug, PartialEq)]
+pub struct GatherResp {
+    pub row_bytes: u32,
+    pub rows: Vec<u8>,
+    pub aux: Vec<f32>,
+}
+
+impl GatherResp {
+    pub fn encode(&self) -> Vec<u8> {
+        let count = if self.row_bytes == 0 {
+            0
+        } else {
+            (self.rows.len() / self.row_bytes as usize) as u32
+        };
+        let mut out =
+            Vec::with_capacity(12 + self.rows.len() + self.aux.len() * 4);
+        put_u32(&mut out, count);
+        put_u32(&mut out, self.row_bytes);
+        put_u32(&mut out, self.aux.len() as u32);
+        out.extend_from_slice(&self.rows);
+        put_f32s_raw(&mut out, &self.aux);
+        out
+    }
+
+    pub fn decode(src: &[u8]) -> Result<GatherResp> {
+        let mut pos = 0;
+        let count = take_u32(src, &mut pos)? as usize;
+        let row_bytes = take_u32(src, &mut pos)?;
+        let aux_count = take_u32(src, &mut pos)? as usize;
+        let rows = take_bytes(src, &mut pos, count * row_bytes as usize)?
+            .to_vec();
+        let aux = take_f32s(src, &mut pos, aux_count)?;
+        Ok(GatherResp { row_bytes, rows, aux })
+    }
+}
+
+/// LOAD: a contiguous chunk of the shard's local rows, streamed at
+/// attach time (packed bytes + the matching slice of the Δ table).
+#[derive(Debug, PartialEq)]
+pub struct LoadReq {
+    pub start_local: u32,
+    pub row_bytes: u32,
+    pub rows: Vec<u8>,
+    pub aux: Vec<f32>,
+}
+
+impl LoadReq {
+    pub fn count(&self) -> usize {
+        if self.row_bytes == 0 {
+            0
+        } else {
+            self.rows.len() / self.row_bytes as usize
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(16 + self.rows.len() + self.aux.len() * 4);
+        put_u32(&mut out, self.start_local);
+        put_u32(&mut out, self.count() as u32);
+        put_u32(&mut out, self.row_bytes);
+        put_u32(&mut out, self.aux.len() as u32);
+        out.extend_from_slice(&self.rows);
+        put_f32s_raw(&mut out, &self.aux);
+        out
+    }
+
+    pub fn decode(src: &[u8]) -> Result<LoadReq> {
+        let mut pos = 0;
+        let start_local = take_u32(src, &mut pos)?;
+        let count = take_u32(src, &mut pos)? as usize;
+        let row_bytes = take_u32(src, &mut pos)?;
+        let aux_count = take_u32(src, &mut pos)? as usize;
+        let rows = take_bytes(src, &mut pos, count * row_bytes as usize)?
+            .to_vec();
+        let aux = take_f32s(src, &mut pos, aux_count)?;
+        Ok(LoadReq { start_local, row_bytes, rows, aux })
+    }
+}
+
+/// UPDATE: one training step's gradients for this shard's slice of the
+/// batch. `step` and `draw` key the counter-based SR streams
+/// (`StreamKey::for_step(draw, step).row_rng(global_id)`), which is
+/// what makes a worker's quantization bit-identical to single-process.
+/// `hp` is the step's scaled hyperparameters, in fixed order:
+/// `[lr_emb, wd_emb, lr_delta, wd_delta, grad_scale, lr_scale]`.
+#[derive(Debug, PartialEq)]
+pub struct UpdateReq {
+    pub step: u64,
+    pub draw: u64,
+    pub hp: [f32; 6],
+    pub ids: Vec<u32>,
+    pub grads: Vec<f32>,
+    pub d_delta: Vec<f32>,
+}
+
+impl UpdateReq {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            48 + self.ids.len() * 4
+                + self.grads.len() * 4
+                + self.d_delta.len() * 4,
+        );
+        put_u64(&mut out, self.step);
+        put_u64(&mut out, self.draw);
+        put_f32s_raw(&mut out, &self.hp);
+        put_u32(&mut out, self.ids.len() as u32);
+        put_u32(&mut out, self.d_delta.len() as u32);
+        put_u32s(&mut out, &self.ids);
+        put_f32s_raw(&mut out, &self.grads);
+        put_f32s_raw(&mut out, &self.d_delta);
+        out
+    }
+
+    pub fn decode(src: &[u8]) -> Result<UpdateReq> {
+        let mut pos = 0;
+        let step = take_u64(src, &mut pos)?;
+        let draw = take_u64(src, &mut pos)?;
+        let hp_v = take_f32s(src, &mut pos, 6)?;
+        let hp: [f32; 6] = hp_v.try_into().unwrap();
+        let count = take_u32(src, &mut pos)? as usize;
+        let aux_count = take_u32(src, &mut pos)? as usize;
+        let ids = take_u32s(src, &mut pos, count)?;
+        let remaining = src
+            .len()
+            .checked_sub(pos + aux_count * 4)
+            .with_context(|| "rpc update payload truncated")?;
+        if remaining % 4 != 0 {
+            bail!("rpc update grads not f32-aligned");
+        }
+        let grads = take_f32s(src, &mut pos, remaining / 4)?;
+        let d_delta = take_f32s(src, &mut pos, aux_count)?;
+        Ok(UpdateReq { step, draw, hp, ids, grads, d_delta })
+    }
+}
+
+/// BARRIER kinds: 0 = attach complete (worker arms its step counter),
+/// 1 = quiesce (all prior updates applied; safe to snapshot), 2 =
+/// epoch boundary.
+pub const BARRIER_ATTACHED: u8 = 0;
+pub const BARRIER_QUIESCE: u8 = 1;
+pub const BARRIER_EPOCH: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// Connections.
+
+/// Coordinator-side handle to one worker: sends requests, validates
+/// responses (magic, CRC, seq echo, response flag), surfaces remote
+/// `Err` frames as local errors naming the worker.
+pub struct WorkerLink {
+    stream: TcpStream,
+    seq: u16,
+    max_frame: u64,
+}
+
+impl WorkerLink {
+    /// Wrap an accepted connection (coordinator side).
+    pub fn from_stream(stream: TcpStream, cfg: &RpcConfig) -> Result<WorkerLink> {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(cfg.timeout_ms)))
+            .context("rpc set_read_timeout")?;
+        Ok(WorkerLink { stream, seq: 0, max_frame: cfg.max_frame })
+    }
+
+    /// Dial a coordinator (worker side), retrying while it boots.
+    pub fn connect(addr: &str, cfg: &RpcConfig) -> Result<WorkerLink> {
+        let mut last_err = None;
+        for attempt in 0..cfg.connect_retries.max(1) {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return WorkerLink::from_stream(stream, cfg),
+                Err(e) => {
+                    last_err = Some(e);
+                    if attempt + 1 < cfg.connect_retries.max(1) {
+                        std::thread::sleep(Duration::from_millis(
+                            cfg.retry_delay_ms,
+                        ));
+                    }
+                }
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!(
+                "could not connect to {addr} after {} attempts",
+                cfg.connect_retries.max(1)
+            )
+        })
+    }
+
+    pub fn peer_addr(&self) -> Option<SocketAddr> {
+        self.stream.peer_addr().ok()
+    }
+
+    /// One request/response round trip.
+    pub fn call(&mut self, op: Op, payload: &[u8]) -> Result<Vec<u8>> {
+        let seq = self.seq;
+        self.seq = self.seq.wrapping_add(1);
+        write_frame(&mut self.stream, op, 0, seq, payload)?;
+        let (rop, rflags, rseq, rpayload) =
+            read_frame(&mut self.stream, self.max_frame)?;
+        if rop == Op::Err {
+            bail!(
+                "remote error on {op:?}: {}",
+                String::from_utf8_lossy(&rpayload)
+            );
+        }
+        if rflags & FLAG_RESPONSE == 0 {
+            bail!("rpc {op:?}: peer sent a request, expected a response");
+        }
+        if rseq != seq {
+            bail!("rpc {op:?}: response seq {rseq} != request seq {seq}");
+        }
+        if rop != op {
+            bail!("rpc {op:?}: response opcode {rop:?} does not match");
+        }
+        Ok(rpayload)
+    }
+
+    /// The raw stream (the worker reuses its HELLO connection as the
+    /// serve loop's transport).
+    pub fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+}
+
+/// The coordinator's registration listener: bound before workers are
+/// told to dial in, polled with a deadline so a missing worker is a
+/// loud timeout instead of a hang.
+pub struct WorkerHub {
+    listener: TcpListener,
+    cfg: RpcConfig,
+}
+
+impl WorkerHub {
+    pub fn bind(addr: &str, cfg: RpcConfig) -> Result<WorkerHub> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding worker listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("worker listener set_nonblocking")?;
+        Ok(WorkerHub { listener, cfg })
+    }
+
+    pub fn cfg(&self) -> &RpcConfig {
+        &self.cfg
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("worker listener local_addr")
+    }
+
+    /// Accept one worker connection, or time out.
+    pub fn accept_worker(&self) -> Result<TcpStream> {
+        let deadline = Instant::now()
+            + Duration::from_millis(self.cfg.accept_timeout_ms);
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .context("worker stream set_nonblocking(false)")?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out after {} ms waiting for a worker to \
+                             register on {}",
+                            self.cfg.accept_timeout_ms,
+                            self.local_addr()
+                                .map(|a| a.to_string())
+                                .unwrap_or_else(|_| "?".into())
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    return Err(e).context("accepting worker connection")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"hello shard".to_vec();
+        let frame = encode_frame(Op::Gather, FLAG_RESPONSE, 7, &payload);
+        assert_eq!(frame.len(), FRAME_OVERHEAD + payload.len());
+        let (op, flags, seq, body) = decode_frame(&frame).unwrap();
+        assert_eq!(op, Op::Gather);
+        assert_eq!(flags, FLAG_RESPONSE);
+        assert_eq!(seq, 7);
+        assert_eq!(body, &payload[..]);
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        let frame = encode_frame(Op::Update, 0, 3, b"payload bytes");
+        // flip one payload bit -> CRC mismatch
+        let mut bad = frame.clone();
+        bad[HEADER_BYTES + 2] ^= 0x10;
+        let err = decode_frame(&bad).unwrap_err().to_string();
+        assert!(err.contains("crc"), "{err}");
+        // flip a header bit (opcode is covered by the CRC too)
+        let mut bad = frame.clone();
+        bad[4] ^= 1;
+        assert!(decode_frame(&bad).is_err());
+        // bad magic
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        let err = decode_frame(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // truncation
+        assert!(decode_frame(&frame[..frame.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn read_frame_enforces_cap() {
+        let frame = encode_frame(Op::Load, 0, 0, &[0u8; 256]);
+        let mut cursor = &frame[..];
+        let err = read_frame(&mut cursor, 64).unwrap_err().to_string();
+        assert!(err.contains("max-frame"), "{err}");
+        let mut cursor = &frame[..];
+        let (op, _, _, body) = read_frame(&mut cursor, 1024).unwrap();
+        assert_eq!(op, Op::Load);
+        assert_eq!(body.len(), 256);
+    }
+
+    #[test]
+    fn gather_codec_roundtrip() {
+        let req = GatherReq { aux_only: false, ids: vec![3, 99, 7] };
+        assert_eq!(GatherReq::decode(&req.encode()).unwrap(), req);
+        let resp = GatherResp {
+            row_bytes: 4,
+            rows: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            aux: vec![0.5, 0.25],
+        };
+        assert_eq!(GatherResp::decode(&resp.encode()).unwrap(), resp);
+        // aux-only: no rows, row_bytes 0
+        let resp = GatherResp {
+            row_bytes: 0,
+            rows: Vec::new(),
+            aux: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(GatherResp::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn load_codec_roundtrip() {
+        let req = LoadReq {
+            start_local: 17,
+            row_bytes: 3,
+            rows: vec![9, 8, 7, 6, 5, 4],
+            aux: vec![0.125, 0.5],
+        };
+        assert_eq!(req.count(), 2);
+        assert_eq!(LoadReq::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn update_codec_roundtrip() {
+        let req = UpdateReq {
+            step: 41,
+            draw: 0xDEAD_BEEF_CAFE_F00D,
+            hp: [0.01, 5e-8, 2e-5, 5e-8, 1.0, 0.1],
+            ids: vec![2, 10, 6],
+            grads: vec![0.1; 3 * 4],
+            d_delta: vec![0.5, -0.25, 0.0],
+        };
+        assert_eq!(UpdateReq::decode(&req.encode()).unwrap(), req);
+        // LPT sends no delta grads
+        let req = UpdateReq {
+            step: 0,
+            draw: 1,
+            hp: [0.0; 6],
+            ids: vec![1],
+            grads: vec![0.0; 4],
+            d_delta: Vec::new(),
+        };
+        assert_eq!(UpdateReq::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn loopback_call_roundtrip() {
+        let cfg = RpcConfig {
+            accept_timeout_ms: 5_000,
+            timeout_ms: 5_000,
+            ..RpcConfig::default()
+        };
+        let hub = WorkerHub::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let stream = hub.accept_worker().unwrap();
+            let mut link = WorkerLink::from_stream(stream, &cfg).unwrap();
+            // serve exactly one request, echoing the payload back
+            let (op, flags, seq, payload) =
+                read_frame(&mut link.stream, cfg.max_frame).unwrap();
+            assert_eq!(flags & FLAG_RESPONSE, 0);
+            write_frame(&mut link.stream, op, FLAG_RESPONSE, seq, &payload)
+                .unwrap();
+        });
+        let mut client = WorkerLink::connect(&addr, &cfg).unwrap();
+        let reply = client.call(Op::Barrier, &[BARRIER_EPOCH]).unwrap();
+        assert_eq!(reply, vec![BARRIER_EPOCH]);
+        server.join().unwrap();
+    }
+}

@@ -286,7 +286,7 @@ mod tests {
         };
         let spec = SyntheticSpec::tiny(exp.seed);
         let n = Schema::new(spec.vocabs.clone()).n_features();
-        let tr = Trainer::new(exp, n).unwrap();
+        let mut tr = Trainer::new(exp, n).unwrap();
         let path = tmp(name);
         tr.save_checkpoint(&path).unwrap();
         path
@@ -303,7 +303,7 @@ mod tests {
             ..Experiment::default()
         };
         let n = registry::schema_for(&exp).unwrap().n_features();
-        let tr = Trainer::new(exp, n).unwrap();
+        let mut tr = Trainer::new(exp, n).unwrap();
         let path = tmp(name);
         tr.save_checkpoint(&path).unwrap();
         path
@@ -414,7 +414,7 @@ mod tests {
         let n = crate::data::registry::schema_for(&exp)
             .unwrap()
             .n_features();
-        let tr = Trainer::new(exp, n).unwrap();
+        let mut tr = Trainer::new(exp, n).unwrap();
         let path = tmp("serve_mixed.ckpt");
         tr.save_checkpoint(&path).unwrap();
         let report = serve_checkpoint(&path, 4).unwrap();

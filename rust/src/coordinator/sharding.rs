@@ -1,33 +1,38 @@
-//! Sharded leader/worker simulation with communication accounting.
+//! Row partitioning + communication accounting for distributed training.
 //!
 //! The paper's motivation (§1): compressing embeddings at training time
 //! cuts the cross-device traffic that dominates distributed CTR training.
-//! [`ShardedStore`] range-partitions a store across `W` simulated workers;
-//! every gather/update tallies the bytes a parameter-server deployment
-//! would move:
+//! [`RowPartition`] is the one partition function both the wire path
+//! (`coordinator::net` / `embedding::RemoteStore`) and checkpoint
+//! resharding share: global row id → owning shard, shard-local row id,
+//! and back. Checkpoints always persist rows in canonical *global* order,
+//! so a table trained on N workers reshards transparently onto M (or
+//! onto one process) — the partition is a pure function of `(id,
+//! n_shards)` and never appears in the file format.
 //!
-//! * leader → compute: the batch's unique rows, in the store's wire format
-//!   (packed m-bit codes + Δ for LPT/ALPT, f32 rows otherwise);
-//! * compute → leader: f32 row gradients (gradients are not quantized in
-//!   the paper), plus one f32 Δ-gradient per row for ALPT.
+//! [`CommStats`] / [`step_comm`] stay as the analytical pricing layer on
+//! top: what a parameter-server deployment moves per step, given the
+//! store's wire format —
+//!
+//! * coordinator ← worker: the batch's unique rows, in the store's wire
+//!   format (packed m-bit codes + Δ for LPT/ALPT, f32 rows otherwise);
+//! * coordinator → worker: f32 row gradients (gradients are not
+//!   quantized in the paper), plus one f32 Δ-gradient per row for ALPT.
 //!
 //! Byte counts are exact given the format; the time estimate divides by a
-//! configurable link bandwidth.
+//! configurable link bandwidth. `benches/comm.rs` compares this model
+//! against measured bytes from the real frame encoder.
 
-use crate::config::{Experiment, Method};
+use crate::config::Method;
 use crate::data::batcher::Batch;
-use crate::embedding::{build_store, EmbeddingStore};
-use crate::util::rng::Pcg32;
-use crate::util::threadpool::parallel_map;
-use anyhow::Result;
 
 /// Accumulated communication statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommStats {
     pub steps: u64,
     pub rows_moved: u64,
-    pub bytes_down: u64, // leader -> compute (embedding rows)
-    pub bytes_up: u64,   // compute -> leader (gradients)
+    pub bytes_down: u64, // coordinator <- workers (embedding rows)
+    pub bytes_up: u64,   // coordinator -> workers (gradients)
 }
 
 impl CommStats {
@@ -85,92 +90,73 @@ pub fn step_comm(
     }
 }
 
-/// A table sharded across `W` simulated workers (id % W), gathering in
-/// parallel threads and accounting per-shard traffic.
-pub struct ShardedStore {
-    shards: Vec<Box<dyn EmbeddingStore>>,
-    method: Method,
-    bits: u32,
-    dim: usize,
-    pub n_workers: usize,
-    pub stats: CommStats,
+/// The partition of `n_rows` global row ids across `n_shards` workers:
+/// shard `s` owns the ids congruent to `s` mod `n_shards`, and its local
+/// row `l` is global id `s + l·n_shards` — so every shard's local ids are
+/// contiguous `0..shard_rows(s)`, which keeps worker tables dense and
+/// LOAD/checkpoint streaming chunkable.
+///
+/// The mapping is a pure function of `(id, n_shards)`; nothing about it
+/// is persisted. Checkpoints store rows in global order, so resharding
+/// N → M is just re-evaluating this function at load time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowPartition {
+    n_rows: usize,
+    n_shards: usize,
 }
 
-impl ShardedStore {
-    /// Build `n_workers` shard stores over id-partitioned feature spaces
-    /// (each worker holds ~n/W rows).
-    pub fn new(
-        exp: &Experiment,
-        n_features: usize,
-        dim: usize,
-        n_workers: usize,
-    ) -> Result<Self> {
-        assert!(n_workers >= 1);
-        let shard_features = n_features.div_ceil(n_workers);
-        let shards = (0..n_workers)
-            .map(|w| {
-                let mut rng =
-                    Pcg32::new(exp.seed.wrapping_add(w as u64), 0x5A4D);
-                build_store(exp, shard_features, dim, &mut rng)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Self {
-            shards,
-            method: exp.method,
-            // wire-cost accounting is a uniform-width simulation; mixed
-            // plans fall back to their default width here
-            bits: exp.bits.default_bits(),
-            dim,
-            n_workers,
-            stats: CommStats::default(),
-        })
+impl RowPartition {
+    pub fn new(n_rows: usize, n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "a partition needs at least one shard");
+        Self { n_rows, n_shards }
     }
 
-    pub fn shard(&self, w: usize) -> &dyn EmbeddingStore {
-        self.shards[w].as_ref()
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
     }
 
-    /// Total table bytes across shards.
-    pub fn train_bytes(&self) -> usize {
-        self.shards.iter().map(|s| s.train_bytes()).sum()
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
     }
 
-    /// Parallel gather across shards: each worker extracts its rows, the
-    /// leader reassembles (and the traffic is tallied).
-    pub fn gather(&mut self, ids: &[u32], out: &mut [f32]) {
-        let n_workers = self.n_workers;
-        let dim = self.dim;
-        // per-worker (positions, local ids)
+    /// Which shard owns global row `id`.
+    #[inline]
+    pub fn shard_of(&self, id: u32) -> usize {
+        id as usize % self.n_shards
+    }
+
+    /// The shard-local row id of global row `id` (on `shard_of(id)`).
+    #[inline]
+    pub fn local_of(&self, id: u32) -> u32 {
+        id / self.n_shards as u32
+    }
+
+    /// Inverse of (`shard_of`, `local_of`): the global id of `shard`'s
+    /// local row `local`.
+    #[inline]
+    pub fn global_of(&self, shard: usize, local: u32) -> u32 {
+        (shard + local as usize * self.n_shards) as u32
+    }
+
+    /// How many rows `shard` owns (locals are `0..shard_rows(shard)`).
+    pub fn shard_rows(&self, shard: usize) -> usize {
+        debug_assert!(shard < self.n_shards);
+        (self.n_rows + self.n_shards - 1 - shard) / self.n_shards
+    }
+
+    /// Split a batch's ids per shard: for each shard, the batch
+    /// positions it serves and the *global* ids to request (the wire
+    /// always carries global ids; workers map to locals themselves, so
+    /// both ends agree on the id space the SR streams are keyed by).
+    pub fn split(&self, ids: &[u32]) -> Vec<(Vec<usize>, Vec<u32>)> {
         let mut assign: Vec<(Vec<usize>, Vec<u32>)> =
-            vec![(Vec::new(), Vec::new()); n_workers];
+            vec![(Vec::new(), Vec::new()); self.n_shards];
         for (pos, &id) in ids.iter().enumerate() {
-            let w = (id as usize) % n_workers;
-            assign[w].0.push(pos);
-            assign[w].1.push(id / n_workers as u32);
+            let s = self.shard_of(id);
+            assign[s].0.push(pos);
+            assign[s].1.push(id);
         }
-        let shards = &self.shards;
-        let gathered: Vec<Vec<f32>> = parallel_map(n_workers, n_workers, |w| {
-            let (_, locals) = &assign[w];
-            let mut buf = vec![0.0f32; locals.len() * dim];
-            if !locals.is_empty() {
-                shards[w].gather(locals, &mut buf);
-            }
-            buf
-        });
-        for (w, buf) in gathered.into_iter().enumerate() {
-            for (k, &pos) in assign[w].0.iter().enumerate() {
-                out[pos * dim..(pos + 1) * dim]
-                    .copy_from_slice(&buf[k * dim..(k + 1) * dim]);
-            }
-        }
-        self.stats.add(&CommStats {
-            steps: 1,
-            rows_moved: ids.len() as u64,
-            bytes_down: (ids.len()
-                * row_wire_bytes(self.method, self.bits, dim))
-                as u64,
-            bytes_up: (ids.len() * grad_wire_bytes(self.method, dim)) as u64,
-        });
+        assign
     }
 }
 
@@ -239,29 +225,65 @@ mod tests {
     }
 
     #[test]
-    fn sharded_gather_matches_single_store() {
-        use crate::config::Experiment;
-        let exp = Experiment {
-            method: Method::Fp,
-            model: "tiny".into(),
-            use_runtime: false,
-            ..Experiment::default()
-        };
-        let (n_features, dim) = (64, 8);
-        let mut sharded =
-            ShardedStore::new(&exp, n_features, dim, 4).unwrap();
-        let ids: Vec<u32> = vec![0, 5, 17, 33, 63, 2];
-        let mut out = vec![0.0f32; ids.len() * dim];
-        sharded.gather(&ids, &mut out);
-        // every row must be that worker's row for local id
-        for (i, &id) in ids.iter().enumerate() {
-            let w = (id as usize) % 4;
-            let local = id / 4;
-            let mut want = vec![0.0f32; dim];
-            sharded.shard(w).gather(&[local], &mut want);
-            assert_eq!(&out[i * dim..(i + 1) * dim], &want[..], "id {id}");
+    fn partition_roundtrips_every_id() {
+        for n_shards in [1usize, 2, 3, 4, 7] {
+            let part = RowPartition::new(100, n_shards);
+            for id in 0..100u32 {
+                let s = part.shard_of(id);
+                let l = part.local_of(id);
+                assert!(s < n_shards);
+                assert_eq!(part.global_of(s, l), id, "W={n_shards} id={id}");
+                assert!(
+                    (l as usize) < part.shard_rows(s),
+                    "W={n_shards} id={id}: local {l} out of range"
+                );
+            }
         }
-        assert_eq!(sharded.stats.steps, 1);
-        assert_eq!(sharded.stats.rows_moved, 6);
+    }
+
+    #[test]
+    fn shard_rows_cover_the_table_exactly() {
+        for (n, w) in [(10usize, 4usize), (100, 7), (65_536, 3), (5, 8)] {
+            let part = RowPartition::new(n, w);
+            let total: usize = (0..w).map(|s| part.shard_rows(s)).sum();
+            assert_eq!(total, n, "n={n} W={w}");
+            // locals are dense: every (shard, local) maps into [0, n)
+            for s in 0..w {
+                for l in 0..part.shard_rows(s) as u32 {
+                    assert!((part.global_of(s, l) as usize) < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_stable_under_resharding() {
+        // the same global id keeps its identity across shard counts —
+        // resharding only re-evaluates the pure function, so a
+        // checkpoint written in global order reloads anywhere
+        let n = 1000;
+        for id in [0u32, 1, 13, 999] {
+            for w in [1usize, 2, 5] {
+                let p = RowPartition::new(n, w);
+                assert_eq!(p.global_of(p.shard_of(id), p.local_of(id)), id);
+            }
+        }
+    }
+
+    #[test]
+    fn split_preserves_positions_and_globals() {
+        let part = RowPartition::new(64, 4);
+        let ids: Vec<u32> = vec![0, 5, 17, 33, 63, 2];
+        let assign = part.split(&ids);
+        let mut seen = 0usize;
+        for (s, (positions, globals)) in assign.iter().enumerate() {
+            assert_eq!(positions.len(), globals.len());
+            for (&pos, &g) in positions.iter().zip(globals) {
+                assert_eq!(ids[pos], g, "shard {s}");
+                assert_eq!(part.shard_of(g), s);
+            }
+            seen += positions.len();
+        }
+        assert_eq!(seen, ids.len());
     }
 }

@@ -623,6 +623,11 @@ impl Trainer {
                 loss_sum += out.loss as f64;
                 steps += 1;
             }
+            // epoch barrier: every worker acks (liveness + all updates
+            // applied) before validation reads the table
+            if let Some(remote) = self.store.as_remote() {
+                remote.barrier()?;
+            }
             let ev = self.evaluate(val)?;
             let report = EpochReport {
                 epoch,
@@ -849,6 +854,11 @@ impl Trainer {
             self.stream_records_done = 0;
             self.epochs_done = epoch;
 
+            // epoch barrier: every worker acks (liveness + all updates
+            // applied) before validation reads the table
+            if let Some(remote) = self.store.as_remote() {
+                remote.barrier()?;
+            }
             let ev = self.evaluate_source(source)?;
             let report = EpochReport {
                 epoch,
@@ -887,6 +897,61 @@ impl Trainer {
         self.runtime.is_some()
     }
 
+    // ------------------------------------------------- distributed training
+
+    /// Shard the embedding table across `workers` remote processes:
+    /// bind `listen`, wait for `workers` registrations, stream the rows
+    /// out, and swap the local store for the RPC-backed
+    /// [`RemoteStore`]. Training afterwards is bit-identical to the
+    /// local run — see the determinism notes in `embedding::remote`.
+    ///
+    /// Works on fresh and resumed trainers alike (the worker layout is
+    /// CLI-level state, never part of the experiment or checkpoint).
+    pub fn attach_workers(
+        &mut self,
+        listen: &str,
+        workers: usize,
+        cfg: crate::coordinator::net::RpcConfig,
+    ) -> Result<()> {
+        let hub = crate::coordinator::net::WorkerHub::bind(listen, cfg)?;
+        println!(
+            "waiting for {workers} worker(s) on {} ...",
+            hub.local_addr()?
+        );
+        self.attach_workers_hub(hub, workers)
+    }
+
+    /// [`Trainer::attach_workers`] over a pre-bound hub (tests bind
+    /// port 0 and read the assigned address back).
+    pub fn attach_workers_hub(
+        &mut self,
+        hub: crate::coordinator::net::WorkerHub,
+        workers: usize,
+    ) -> Result<()> {
+        let remote = crate::embedding::RemoteStore::attach(
+            self.store.as_ref(),
+            &self.exp,
+            hub,
+            workers,
+        )?;
+        println!(
+            "embedding table sharded across {workers} worker(s): {} rows, \
+             {} per shard (max)",
+            remote.n_features(),
+            crate::coordinator::sharding::RowPartition::new(
+                remote.n_features(),
+                workers
+            )
+            .shard_rows(0),
+        );
+        self.store = Box::new(remote);
+        // any open journal addresses the local table; continuous saves
+        // re-anchor (remote stores opt out of journaling anyway)
+        self.journal = None;
+        self.dirty.clear();
+        Ok(())
+    }
+
     // ------------------------------------------------------ checkpointing
 
     /// Serialize the full training state to one checkpoint file: the
@@ -897,7 +962,10 @@ impl Trainer {
     /// delta journal chains off. A trainer resumed from the file
     /// continues *bit-identically* to an uninterrupted run — see the
     /// `StreamKey` determinism contract in `util::rng`.
-    pub fn save_checkpoint(&self, path: &Path) -> Result<u32> {
+    pub fn save_checkpoint(&mut self, path: &Path) -> Result<u32> {
+        // local stores no-op; a remote store quiesces its workers and
+        // mirrors the Δ table so the sections below see coherent state
+        self.store.prepare_save()?;
         let mut w =
             checkpoint::writer_for_store(path, self.store.as_ref())?;
         checkpoint::write_store_sections(&mut w, self.store.as_ref(),
@@ -945,12 +1013,14 @@ impl Trainer {
     /// writer and appender site inside.
     pub fn continuous_save(&mut self, path: &Path) -> Result<()> {
         // aux-only stores (hashing) and grouped stores with structural
-        // groups have no per-row delta payload to journal; every
-        // continuous save is a full anchor for them
-        let journaled = match self.store.as_grouped() {
-            Some(gs) => !gs.has_structural_groups(),
-            None => self.store.ckpt_row_bytes().is_some(),
-        };
+        // groups have no per-row delta payload to journal, and remote
+        // stores opt out (supports_delta_journal); every continuous
+        // save is a full anchor for them
+        let journaled = self.store.supports_delta_journal()
+            && match self.store.as_grouped() {
+                Some(gs) => !gs.has_structural_groups(),
+                None => self.store.ckpt_row_bytes().is_some(),
+            };
         if !journaled {
             self.save_checkpoint(path)?;
             self.dirty.clear();

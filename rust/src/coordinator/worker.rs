@@ -1,0 +1,409 @@
+//! The `alpt worker` process: owns one shard of the packed embedding
+//! table and serves GATHER/UPDATE over the `net` RPC.
+//!
+//! A worker dials the coordinator, registers with HELLO, receives its
+//! shard assignment (shard index, table geometry, and the full
+//! experiment config so hyperparameter derivations match), and then
+//! serves the coordinator's request loop until SHUTDOWN.
+//!
+//! Determinism: the worker applies exactly the update arithmetic of the
+//! local stores (`LptStore`/`AlptStore`), in the same f32 operation
+//! order, and draws stochastic-rounding noise from the same
+//! counter-based streams — `StreamKey::for_step(draw, step)` arrives in
+//! each UPDATE frame and rows key their streams by *global* id, so a
+//! row quantizes identically whether it lives in-process or on any
+//! shard of any N-worker layout.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint::experiment_from_json;
+use crate::config::Method;
+use crate::coordinator::net::{
+    read_frame, write_frame, GatherReq, GatherResp, LoadReq, Op, RpcConfig,
+    UpdateReq, WorkerLink, BARRIER_ATTACHED, FLAG_RESPONSE, PROTO_VERSION,
+};
+use crate::coordinator::sharding::RowPartition;
+use crate::embedding::{rounding_of, AlptStore, LptStore, Persistable};
+use crate::util::json::Json;
+use crate::util::rng::{Pcg32, StreamKey};
+
+/// `alpt worker` configuration (all CLI-level; nothing here is part of
+/// the experiment, so checkpoints stay layout-independent).
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Coordinator address (HOST:PORT).
+    pub connect: String,
+    /// Die if the coordinator is silent this long — the worker-side
+    /// heartbeat (the coordinator pings every worker at least once per
+    /// epoch barrier).
+    pub idle_timeout_ms: u64,
+    /// Largest accepted frame payload.
+    pub max_frame: u64,
+    /// Connection attempts before giving up (workers usually start
+    /// before the coordinator).
+    pub connect_retries: u32,
+    pub retry_delay_ms: u64,
+    /// Fault injection for tests/CI: abort (without responding) once
+    /// this many UPDATE frames have been served. `None` in production.
+    pub die_after_updates: Option<u64>,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        let rpc = RpcConfig::default();
+        Self {
+            connect: "127.0.0.1:4700".into(),
+            idle_timeout_ms: 600_000,
+            max_frame: rpc.max_frame,
+            connect_retries: rpc.connect_retries,
+            retry_delay_ms: rpc.retry_delay_ms,
+            die_after_updates: None,
+        }
+    }
+}
+
+/// One shard of the table: the uniform quantized stores are the only
+/// layouts the distributed path supports (mixed-precision plans and
+/// re-planning migrate rows between groups, which the row partition
+/// does not model yet).
+enum ShardStore {
+    Lpt(LptStore),
+    Alpt(AlptStore),
+}
+
+impl ShardStore {
+    fn row_bytes(&self) -> usize {
+        match self {
+            ShardStore::Lpt(s) => s.ckpt_row_bytes().unwrap(),
+            ShardStore::Alpt(s) => s.ckpt_row_bytes().unwrap(),
+        }
+    }
+
+    fn load_rows(&mut self, lo: usize, src: &[u8]) -> Result<()> {
+        match self {
+            ShardStore::Lpt(s) => s.load_rows(lo, src),
+            ShardStore::Alpt(s) => s.load_rows(lo, src),
+        }
+    }
+
+    fn save_row(&self, local: usize, dst: &mut [u8]) -> Result<()> {
+        match self {
+            ShardStore::Lpt(s) => s.save_rows(local, dst),
+            ShardStore::Alpt(s) => s.save_rows(local, dst),
+        }
+    }
+
+    fn read_dequant(&self, local: usize, out: &mut [f32]) {
+        match self {
+            ShardStore::Lpt(s) => s.read_row_dequant_into(local, out),
+            ShardStore::Alpt(s) => s.read_row_dequant_into(local, out),
+        }
+    }
+
+    fn delta_of(&self, local: usize) -> f32 {
+        match self {
+            ShardStore::Lpt(s) => s.delta(),
+            ShardStore::Alpt(s) => s.delta_of(local as u32),
+        }
+    }
+}
+
+/// The worker's shard assignment, as decoded from the HELLO reply.
+struct Assignment {
+    shard: usize,
+    part: RowPartition,
+    d: usize,
+    row_bytes: usize,
+    step: u64,
+    store: ShardStore,
+}
+
+fn build_assignment(reply: &[u8]) -> Result<Assignment> {
+    let text = std::str::from_utf8(reply)
+        .context("HELLO reply is not UTF-8")?;
+    let v = Json::parse(text).context("HELLO reply is not JSON")?;
+    let shard = v.get("shard")?.as_usize()?;
+    let n_shards = v.get("n_shards")?.as_usize()?;
+    let n = v.get("n")?.as_usize()?;
+    let d = v.get("d")?.as_usize()?;
+    let row_bytes = v.get("row_bytes")?.as_usize()?;
+    let step = v.get("step")?.as_f64()? as u64;
+    let exp = experiment_from_json(v.get("experiment")?)
+        .context("HELLO reply experiment")?;
+    ensure!(shard < n_shards, "assigned shard {shard} of {n_shards}");
+
+    let part = RowPartition::new(n, n_shards);
+    let shard_n = part.shard_rows(shard);
+    let bw = exp.bit_width().context(
+        "distributed training requires a uniform precision plan",
+    )?;
+    // throwaway generator: every row is overwritten by the LOAD stream
+    let mut rng = Pcg32::seeded(0);
+    let store = match exp.method {
+        Method::Lpt(mode) => ShardStore::Lpt(LptStore::init_with_threads(
+            shard_n.max(1),
+            d,
+            bw,
+            exp.clip,
+            rounding_of(mode),
+            exp.threads,
+            &mut rng,
+        )),
+        Method::Alpt(mode) => {
+            ShardStore::Alpt(AlptStore::init_with_clip_threads(
+                shard_n.max(1),
+                d,
+                bw,
+                rounding_of(mode),
+                exp.clip,
+                exp.threads,
+                &mut rng,
+            ))
+        }
+        other => bail!(
+            "distributed training shards packed tables; method {} has \
+             none (use lpt/alpt)",
+            other.key()
+        ),
+    };
+    ensure!(
+        store.row_bytes() == row_bytes,
+        "row_bytes mismatch: coordinator says {row_bytes}, shard table \
+         has {}",
+        store.row_bytes()
+    );
+    Ok(Assignment { shard, part, d, row_bytes, step, store })
+}
+
+/// Apply one UPDATE frame — the worker-side half of
+/// `LptStore::update`/`AlptStore::update`, bit-identical to the local
+/// stores: `what` is re-dequantized from the shard's packed bytes
+/// (equal to the coordinator's gathered `emb_hat` by construction),
+/// the f32 arithmetic runs in the same order, and the SR stream is
+/// keyed by (draw, step, global id).
+fn apply_update(a: &mut Assignment, req: &UpdateReq) -> Result<()> {
+    let d = a.d;
+    ensure!(
+        req.grads.len() == req.ids.len() * d,
+        "update grads: {} f32s for {} rows of dim {d}",
+        req.grads.len(),
+        req.ids.len()
+    );
+    if let ShardStore::Alpt(_) = a.store {
+        ensure!(
+            req.d_delta.len() == req.ids.len(),
+            "update delta grads: {} for {} rows",
+            req.d_delta.len(),
+            req.ids.len()
+        );
+    }
+    let [lr_emb, wd_emb, lr_delta, wd_delta, grad_scale, lr_scale] = req.hp;
+    let lr = lr_emb * lr_scale;
+    let wd = wd_emb;
+    let lr_d = lr_delta * lr_scale;
+    let key = StreamKey::for_step(req.draw, req.step);
+    let mut what = vec![0.0f32; d];
+    let mut w_new = vec![0.0f32; d];
+    for (k, &gid) in req.ids.iter().enumerate() {
+        ensure!(
+            a.part.shard_of(gid) == a.shard,
+            "row {gid} does not belong to shard {}",
+            a.shard
+        );
+        let local = a.part.local_of(gid) as usize;
+        a.store.read_dequant(local, &mut what);
+        let g = &req.grads[k * d..(k + 1) * d];
+        for j in 0..d {
+            w_new[j] = what[j] - lr * (g[j] + wd * what[j]);
+        }
+        let mut rrng = key.row_rng(gid as u64);
+        match &mut a.store {
+            ShardStore::Lpt(s) => {
+                s.write_row_from_f32(local, &w_new, &mut rrng);
+            }
+            ShardStore::Alpt(s) => {
+                let dl = s.delta_of(local as u32);
+                let gd = grad_scale * req.d_delta[k] + wd_delta * dl;
+                let dl_new = (dl - lr_d * gd).max(1e-8);
+                s.write_row_from_f32(local, &w_new, dl_new, &mut rrng);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn serve_gather(a: &Assignment, req: &GatherReq) -> Result<Vec<u8>> {
+    let rb = a.row_bytes;
+    let count = req.ids.len();
+    let mut rows = if req.aux_only {
+        Vec::new()
+    } else {
+        vec![0u8; count * rb]
+    };
+    let mut aux = Vec::new();
+    let want_aux = matches!(a.store, ShardStore::Alpt(_));
+    if want_aux {
+        aux.reserve(count);
+    }
+    for (k, &gid) in req.ids.iter().enumerate() {
+        ensure!(
+            a.part.shard_of(gid) == a.shard,
+            "row {gid} does not belong to shard {}",
+            a.shard
+        );
+        let local = a.part.local_of(gid) as usize;
+        if !req.aux_only {
+            a.store.save_row(local, &mut rows[k * rb..(k + 1) * rb])?;
+        }
+        if want_aux {
+            aux.push(a.store.delta_of(local));
+        }
+    }
+    let resp = GatherResp {
+        row_bytes: if req.aux_only { 0 } else { rb as u32 },
+        rows,
+        aux,
+    };
+    Ok(resp.encode())
+}
+
+/// Run one worker to completion: connect, register, serve, shut down.
+/// Any protocol or application error is returned (nonzero process
+/// exit); a silent coordinator trips the idle timeout rather than
+/// hanging forever.
+pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
+    let cfg = RpcConfig {
+        timeout_ms: opts.idle_timeout_ms,
+        connect_retries: opts.connect_retries,
+        retry_delay_ms: opts.retry_delay_ms,
+        max_frame: opts.max_frame,
+        ..RpcConfig::default()
+    };
+    let mut link = WorkerLink::connect(&opts.connect, &cfg)
+        .with_context(|| format!("worker dialing {}", opts.connect))?;
+    let mut hello = Vec::new();
+    crate::checkpoint::format::put_u32(&mut hello, PROTO_VERSION);
+    let reply = link
+        .call(Op::Hello, &hello)
+        .context("worker registration (HELLO)")?;
+    let mut a = build_assignment(&reply)?;
+    eprintln!(
+        "[worker] shard {}/{} of {} rows: {} local rows, {} bytes/row",
+        a.shard,
+        a.part.n_shards(),
+        a.part.n_rows(),
+        a.part.shard_rows(a.shard),
+        a.row_bytes,
+    );
+
+    // The Δ table streamed by LOAD is staged here and armed at the
+    // attach barrier (load_aux_params wants the whole shard at once).
+    let mut delta_stage = vec![0.0f32; a.part.shard_rows(a.shard).max(1)];
+    let mut updates_served: u64 = 0;
+    let mut stream = link.into_stream();
+    loop {
+        let (op, flags, seq, payload) = read_frame(&mut stream, cfg.max_frame)
+            .with_context(|| {
+                format!(
+                    "worker shard {}: coordinator connection lost or \
+                     silent past {} ms",
+                    a.shard, opts.idle_timeout_ms
+                )
+            })?;
+        if flags & FLAG_RESPONSE != 0 {
+            bail!("worker received a response frame as a request");
+        }
+        if op == Op::Update {
+            if let Some(limit) = opts.die_after_updates {
+                if updates_served >= limit {
+                    bail!(
+                        "worker shard {}: failpoint death after {limit} \
+                         updates",
+                        a.shard
+                    );
+                }
+            }
+            updates_served += 1;
+        }
+        let result: Result<Vec<u8>> = (|| match op {
+            Op::Load => {
+                let req = LoadReq::decode(&payload)?;
+                ensure!(
+                    req.row_bytes as usize == a.row_bytes,
+                    "LOAD row_bytes {} != shard row_bytes {}",
+                    req.row_bytes,
+                    a.row_bytes
+                );
+                let lo = req.start_local as usize;
+                a.store.load_rows(lo, &req.rows)?;
+                if !req.aux.is_empty() {
+                    ensure!(
+                        req.aux.len() == req.count(),
+                        "LOAD aux count {} != row count {}",
+                        req.aux.len(),
+                        req.count()
+                    );
+                    ensure!(
+                        lo + req.aux.len() <= delta_stage.len(),
+                        "LOAD aux out of range"
+                    );
+                    delta_stage[lo..lo + req.aux.len()]
+                        .copy_from_slice(&req.aux);
+                }
+                Ok(Vec::new())
+            }
+            Op::Gather => {
+                let req = GatherReq::decode(&payload)?;
+                serve_gather(&a, &req)
+            }
+            Op::Update => {
+                let req = UpdateReq::decode(&payload)?;
+                apply_update(&mut a, &req)?;
+                Ok(Vec::new())
+            }
+            Op::Barrier => {
+                ensure!(payload.len() == 1, "BARRIER payload");
+                if payload[0] == BARRIER_ATTACHED {
+                    if let ShardStore::Alpt(s) = &mut a.store {
+                        s.load_aux_params(&delta_stage)?;
+                        s.set_step_counter(a.step);
+                    }
+                    if let ShardStore::Lpt(s) = &mut a.store {
+                        s.set_step_counter(a.step);
+                    }
+                }
+                // quiesce/epoch barriers need no action: the serve loop
+                // is serial, so replying at all proves every prior
+                // update has been applied
+                Ok(Vec::new())
+            }
+            Op::Shutdown => Ok(Vec::new()),
+            other => bail!("unexpected request opcode {other:?}"),
+        })();
+        match result {
+            Ok(resp) => {
+                write_frame(&mut stream, op, FLAG_RESPONSE, seq, &resp)?;
+                if op == Op::Shutdown {
+                    eprintln!(
+                        "[worker] shard {} served {} updates, shutting down",
+                        a.shard, updates_served
+                    );
+                    return Ok(());
+                }
+            }
+            Err(e) => {
+                // tell the coordinator why before dying loudly
+                let msg = format!("{e:#}");
+                write_frame(
+                    &mut stream,
+                    Op::Err,
+                    FLAG_RESPONSE,
+                    seq,
+                    msg.as_bytes(),
+                )
+                .ok();
+                return Err(e);
+            }
+        }
+    }
+}

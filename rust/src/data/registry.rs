@@ -134,7 +134,7 @@ pub fn schema_for(exp: &Experiment) -> Result<Schema> {
 }
 
 /// The per-field kinds a dataset spec induces — the layout precision
-/// plans (`--bits cat:4,num:8`) resolve against. Criteo-format files
+/// plans (`--plan cat:4,num:8`) resolve against. Criteo-format files
 /// carry 13 numeric fields then 26 categorical ones; the synthetic
 /// generators are all-categorical. Like [`schema_for`], this needs no
 /// data generation or file access.

@@ -23,6 +23,7 @@ pub mod hashing;
 pub mod lpt;
 pub mod pruning;
 pub mod qat;
+pub mod remote;
 
 pub use alpt::AlptStore;
 pub use fp::FpStore;
@@ -31,6 +32,7 @@ pub use hashing::HashingStore;
 pub use lpt::LptStore;
 pub use pruning::PruningStore;
 pub use qat::{LsqStore, PactStore};
+pub use remote::RemoteStore;
 
 use crate::config::{Experiment, Method, RoundingMode};
 use crate::quant::{BitWidth, Rounding};
@@ -116,6 +118,24 @@ pub trait Persistable {
 
     /// Restore the update-step counter captured by `step_counter`.
     fn set_step_counter(&mut self, _step: u64) {}
+
+    /// Called once before a checkpoint's sections are serialized. Local
+    /// stores hold all their state in memory and need nothing; the
+    /// distributed [`RemoteStore`] uses this to quiesce its workers and
+    /// mirror the per-row Δ table so `aux_params` can serve the
+    /// borrowed-slice contract.
+    fn prepare_save(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Whether per-row delta journaling (`--save-every` incremental
+    /// checkpoints) can address this store's rows directly. The remote
+    /// store opts out — each journaled row would be a round trip, and
+    /// its aux mirror is only coherent at quiesce points — so continuous
+    /// saves fall back to full (still atomic) snapshots.
+    fn supports_delta_journal(&self) -> bool {
+        true
+    }
 }
 
 /// Per-row access statistics: how often each row was touched by `update`
@@ -195,6 +215,13 @@ pub trait EmbeddingStore: Persistable + RowStats + Send + Sync {
 
     /// Mutable counterpart of [`EmbeddingStore::as_grouped`].
     fn as_grouped_mut(&mut self) -> Option<&mut GroupedStore> {
+        None
+    }
+
+    /// Downcast to the distributed [`RemoteStore`] (rows live on worker
+    /// processes). The trainer uses this for epoch barriers and clean
+    /// worker shutdown; `None` for every local store.
+    fn as_remote(&self) -> Option<&RemoteStore> {
         None
     }
 }

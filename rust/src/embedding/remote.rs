@@ -1,0 +1,663 @@
+//! Coordinator-side store whose rows live on worker processes.
+//!
+//! [`RemoteStore`] implements the [`EmbeddingStore`] trait split over
+//! the `coordinator::net` RPC: `gather` fans GATHER requests out by
+//! [`RowPartition`], dequantizes the returned packed rows locally
+//! (quantized bytes cross the wire, not f32 — the paper's compression
+//! is also the transport's), and `update` ships per-row f32 gradients
+//! plus the `(draw, step)` pair that keys the stochastic-rounding
+//! streams, so workers quantize bit-identically to a single process.
+//!
+//! Checkpointing is layout-free: `save_rows` reassembles rows in
+//! canonical *global* order from whatever shards own them, so a
+//! checkpoint written under N workers is byte-identical to the
+//! single-process file and reloads under any M (resume on M workers,
+//! or on one process, or straight into `alpt serve`). Nothing about
+//! the worker layout is persisted.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint::experiment_to_json;
+use crate::config::{Experiment, Method};
+use crate::coordinator::net::{
+    read_frame, write_frame, GatherReq, GatherResp, LoadReq, Op, UpdateReq,
+    WorkerHub, WorkerLink, BARRIER_ATTACHED, BARRIER_EPOCH, BARRIER_QUIESCE,
+    FLAG_RESPONSE, PROTO_VERSION,
+};
+use crate::coordinator::sharding::RowPartition;
+use crate::embedding::{
+    EmbeddingStore, Persistable, RowStats, SecondPass, UpdateHp,
+};
+use crate::quant::{delta_from_clip, BitWidth, PackedTable};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Batch staging area: the packed rows + Δ of the last gathered batch,
+/// kept in wire form so `quantized_view` and ALPT's second pass read
+/// the exact bytes the workers hold.
+struct GatherCache {
+    ids: Vec<u32>,
+    cap: usize,
+    table: PackedTable,
+    delta: Vec<f32>,
+}
+
+/// An embedding table sharded across worker processes (see module
+/// docs). Built by [`RemoteStore::attach`], which consumes the local
+/// store's rows and streams them to registered workers.
+pub struct RemoteStore {
+    method_name: &'static str,
+    is_alpt: bool,
+    n: usize,
+    d: usize,
+    row_bytes: usize,
+    bw: BitWidth,
+    /// LPT's fixed shared step size (unused for ALPT).
+    lpt_delta: f32,
+    train_bytes: usize,
+    infer_bytes: usize,
+    /// Mirror of the workers' update-step counter: advanced once per
+    /// `update` exactly like the local stores, persisted in the
+    /// checkpoint meta so resumes continue the same SR streams.
+    step: u64,
+    part: RowPartition,
+    links: Vec<Mutex<WorkerLink>>,
+    max_frame: u64,
+    cache: Mutex<GatherCache>,
+    /// Δ table mirror for `aux_params`'s borrowed-slice contract;
+    /// refreshed at every `prepare_save` quiesce. Empty for LPT.
+    aux_cache: Vec<f32>,
+    shut: AtomicBool,
+}
+
+impl RemoteStore {
+    /// Accept `workers` registrations on `hub`, assign shard indices in
+    /// arrival order, stream the local store's rows out, and return the
+    /// remote handle that replaces it. The local store is left intact
+    /// (the caller drops it).
+    pub fn attach(
+        local: &dyn EmbeddingStore,
+        exp: &Experiment,
+        hub: WorkerHub,
+        workers: usize,
+    ) -> Result<RemoteStore> {
+        ensure!(workers >= 1, "--workers must be at least 1");
+        let is_alpt = match exp.method {
+            Method::Alpt(_) => true,
+            Method::Lpt(_) => false,
+            other => bail!(
+                "distributed training shards packed tables; method {} \
+                 has none (use lpt/alpt)",
+                other.key()
+            ),
+        };
+        ensure!(
+            exp.bits.is_uniform(),
+            "distributed training requires a uniform precision plan \
+             (got --plan {:?}); mixed plans migrate rows between \
+             groups, which the row partition does not model yet",
+            exp.bits.key()
+        );
+        ensure!(
+            exp.replan_budget == 0,
+            "--replan-budget and --workers are mutually exclusive: \
+             re-planning migrates rows between precision groups"
+        );
+        let bw = exp.bit_width()?;
+        let row_bytes = local.ckpt_row_bytes().context(
+            "distributed training requires a store with packed row \
+             payloads",
+        )?;
+        let n = local.n_features();
+        let d = local.dim();
+        let part = RowPartition::new(n, workers);
+        let cfg = *hub.cfg();
+        let exp_json = experiment_to_json(exp);
+
+        // registration: accept each worker, answer its HELLO with the
+        // shard assignment (index = arrival order)
+        let mut links = Vec::with_capacity(workers);
+        for shard in 0..workers {
+            let mut stream = hub.accept_worker().with_context(|| {
+                format!(
+                    "waiting for worker {}/{workers} to register",
+                    shard + 1
+                )
+            })?;
+            let (op, flags, seq, payload) =
+                read_frame(&mut stream, cfg.max_frame)
+                    .with_context(|| format!("worker {shard} HELLO"))?;
+            ensure!(
+                op == Op::Hello && flags & FLAG_RESPONSE == 0,
+                "worker {shard} opened with {op:?} instead of HELLO"
+            );
+            let mut pos = 0;
+            let proto =
+                crate::checkpoint::format::take_u32(&payload, &mut pos)?;
+            if proto != PROTO_VERSION {
+                let msg = format!(
+                    "protocol version mismatch: worker speaks v{proto}, \
+                     coordinator v{PROTO_VERSION}"
+                );
+                write_frame(
+                    &mut stream,
+                    Op::Err,
+                    FLAG_RESPONSE,
+                    seq,
+                    msg.as_bytes(),
+                )
+                .ok();
+                bail!("{msg}");
+            }
+            let assignment = Json::obj(vec![
+                ("shard", Json::num(shard as f64)),
+                ("n_shards", Json::num(workers as f64)),
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(d as f64)),
+                ("row_bytes", Json::num(row_bytes as f64)),
+                ("step", Json::num(local.step_counter() as f64)),
+                ("experiment", exp_json.clone()),
+            ])
+            .to_string();
+            write_frame(
+                &mut stream,
+                Op::Hello,
+                FLAG_RESPONSE,
+                seq,
+                assignment.as_bytes(),
+            )?;
+            links.push(Mutex::new(WorkerLink::from_stream(stream, &cfg)?));
+        }
+
+        // distribution: stream each shard's rows (+ Δ slice) in
+        // frame-sized chunks of contiguous locals, then arm it
+        let aux_all = local.aux_params();
+        let chunk_rows = frame_chunk_rows(cfg.max_frame, row_bytes);
+        let mut rowbuf = vec![0u8; chunk_rows * row_bytes];
+        for (shard, link) in links.iter_mut().enumerate() {
+            let link = link.get_mut().unwrap();
+            let shard_n = part.shard_rows(shard);
+            let mut lo = 0usize;
+            while lo < shard_n {
+                let hi = (lo + chunk_rows).min(shard_n);
+                let count = hi - lo;
+                let mut aux = Vec::with_capacity(if aux_all.is_empty() {
+                    0
+                } else {
+                    count
+                });
+                for k in 0..count {
+                    let g = part.global_of(shard, (lo + k) as u32) as usize;
+                    local.save_rows(
+                        g,
+                        &mut rowbuf[k * row_bytes..(k + 1) * row_bytes],
+                    )?;
+                    if !aux_all.is_empty() {
+                        aux.push(aux_all[g]);
+                    }
+                }
+                let req = LoadReq {
+                    start_local: lo as u32,
+                    row_bytes: row_bytes as u32,
+                    rows: rowbuf[..count * row_bytes].to_vec(),
+                    aux,
+                };
+                link.call(Op::Load, &req.encode()).with_context(|| {
+                    format!("loading rows onto worker shard {shard}")
+                })?;
+                lo = hi;
+            }
+            link.call(Op::Barrier, &[BARRIER_ATTACHED]).with_context(
+                || format!("arming worker shard {shard}"),
+            )?;
+        }
+
+        Ok(RemoteStore {
+            method_name: local.method_name(),
+            is_alpt,
+            n,
+            d,
+            row_bytes,
+            bw,
+            lpt_delta: delta_from_clip(exp.clip, bw),
+            train_bytes: local.train_bytes(),
+            infer_bytes: local.infer_bytes(),
+            step: local.step_counter(),
+            part,
+            links,
+            max_frame: cfg.max_frame,
+            cache: Mutex::new(GatherCache {
+                ids: Vec::new(),
+                cap: 0,
+                table: PackedTable::new(0, d, bw),
+                delta: Vec::new(),
+            }),
+            aux_cache: aux_all.to_vec(),
+            shut: AtomicBool::new(false),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.part.n_shards()
+    }
+
+    fn call_shard(
+        &self,
+        shard: usize,
+        op: Op,
+        payload: &[u8],
+    ) -> Result<Vec<u8>> {
+        self.links[shard]
+            .lock()
+            .unwrap()
+            .call(op, payload)
+            .with_context(|| format!("worker shard {shard}"))
+    }
+
+    /// Fetch packed rows + Δ for `ids` into the cache (the fallible
+    /// core of `gather`).
+    fn fetch_batch(&self, ids: &[u32]) -> Result<()> {
+        let rb = self.row_bytes;
+        let mut cache = self.cache.lock().unwrap();
+        if ids.len() > cache.cap {
+            cache.cap = ids.len().next_power_of_two();
+            cache.table = PackedTable::new(cache.cap, self.d, self.bw);
+        }
+        cache.delta.resize(cache.cap, 0.0);
+        for (shard, (positions, globals)) in
+            self.part.split(ids).into_iter().enumerate()
+        {
+            if globals.is_empty() {
+                continue;
+            }
+            let req = GatherReq { aux_only: false, ids: globals };
+            let resp = self.call_shard(shard, Op::Gather, &req.encode())?;
+            let resp = GatherResp::decode(&resp)?;
+            ensure!(
+                resp.row_bytes as usize == rb
+                    && resp.rows.len() == positions.len() * rb,
+                "shard {shard} GATHER returned {} bytes of {}-byte rows \
+                 for {} ids",
+                resp.rows.len(),
+                resp.row_bytes,
+                positions.len()
+            );
+            if self.is_alpt {
+                ensure!(
+                    resp.aux.len() == positions.len(),
+                    "shard {shard} GATHER returned {} deltas for {} ids",
+                    resp.aux.len(),
+                    positions.len()
+                );
+            }
+            for (k, &pos) in positions.iter().enumerate() {
+                cache
+                    .table
+                    .load_raw_rows(pos, &resp.rows[k * rb..(k + 1) * rb])?;
+                cache.delta[pos] = if self.is_alpt {
+                    resp.aux[k]
+                } else {
+                    self.lpt_delta
+                };
+            }
+        }
+        cache.ids.clear();
+        cache.ids.extend_from_slice(ids);
+        Ok(())
+    }
+
+    /// Per-id Δ for the batch, from the cache when it matches (the
+    /// trainer always gathers first) or a fresh aux round trip.
+    fn deltas_for(&self, ids: &[u32]) -> Result<Vec<f32>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.ids == ids {
+                return Ok(cache.delta[..ids.len()].to_vec());
+            }
+        }
+        let mut out = vec![0.0f32; ids.len()];
+        if !self.is_alpt {
+            out.fill(self.lpt_delta);
+            return Ok(out);
+        }
+        for (shard, (positions, globals)) in
+            self.part.split(ids).into_iter().enumerate()
+        {
+            if globals.is_empty() {
+                continue;
+            }
+            let req = GatherReq { aux_only: true, ids: globals };
+            let resp = self.call_shard(shard, Op::Gather, &req.encode())?;
+            let resp = GatherResp::decode(&resp)?;
+            ensure!(
+                resp.aux.len() == positions.len(),
+                "shard {shard} aux GATHER returned {} deltas for {} ids",
+                resp.aux.len(),
+                positions.len()
+            );
+            for (k, &pos) in positions.iter().enumerate() {
+                out[pos] = resp.aux[k];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Epoch barrier: every worker acks, proving it is alive and has
+    /// applied all updates sent so far.
+    pub fn barrier(&self) -> Result<()> {
+        for shard in 0..self.part.n_shards() {
+            self.call_shard(shard, Op::Barrier, &[BARRIER_EPOCH])
+                .with_context(|| {
+                    format!("epoch barrier: worker shard {shard}")
+                })?;
+        }
+        Ok(())
+    }
+
+    /// Clean shutdown: every worker acks SHUTDOWN and exits 0.
+    /// Idempotent; also attempted (best-effort) on drop.
+    pub fn shutdown(&self) -> Result<()> {
+        if self.shut.swap(true, Ordering::SeqCst) {
+            return Ok(());
+        }
+        for shard in 0..self.part.n_shards() {
+            self.call_shard(shard, Op::Shutdown, &[])?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RemoteStore {
+    fn drop(&mut self) {
+        if !self.shut.swap(true, Ordering::SeqCst) {
+            for link in &self.links {
+                if let Ok(mut link) = link.lock() {
+                    link.call(Op::Shutdown, &[]).ok();
+                }
+            }
+        }
+    }
+}
+
+/// Rows per frame so one chunk stays well under the frame cap.
+fn frame_chunk_rows(max_frame: u64, row_bytes: usize) -> usize {
+    ((max_frame as usize / 2) / row_bytes.max(1)).clamp(1, 1 << 16)
+}
+
+impl EmbeddingStore for RemoteStore {
+    fn method_name(&self) -> &'static str {
+        self.method_name
+    }
+
+    fn n_features(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Infallible by trait contract: a dead worker here means the
+    /// training step cannot produce correct results, so fail the
+    /// process loudly rather than return garbage.
+    fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.d);
+        if let Err(e) = self.fetch_batch(ids) {
+            panic!("distributed gather failed: {e:#}");
+        }
+        let cache = self.cache.lock().unwrap();
+        for (i, row) in out.chunks_mut(self.d).enumerate() {
+            cache.table.read_row_dequant(i, cache.delta[i], row);
+        }
+    }
+
+    fn update(
+        &mut self,
+        ids: &[u32],
+        emb_hat: &[f32],
+        grads: &[f32],
+        hp: &UpdateHp,
+        rng: &mut Pcg32,
+        second_pass: &mut SecondPass,
+    ) -> Result<()> {
+        let d = self.d;
+        let n_u = ids.len();
+        debug_assert_eq!(emb_hat.len(), n_u * d);
+        debug_assert_eq!(grads.len(), n_u * d);
+
+        // ALPT's second pass needs w^{t+1} and Δ^t on the coordinator
+        // (it runs the model); workers recompute w^{t+1} from the same
+        // grads with the same f32 ops, so only grads cross the wire.
+        let d_delta = if self.is_alpt && n_u > 0 {
+            let lr = hp.lr_emb * hp.lr_scale;
+            let wd = hp.wd_emb;
+            let mut w_new = vec![0.0f32; n_u * d];
+            for i in 0..n_u {
+                let what = &emb_hat[i * d..(i + 1) * d];
+                let g = &grads[i * d..(i + 1) * d];
+                let out = &mut w_new[i * d..(i + 1) * d];
+                for j in 0..d {
+                    out[j] = what[j] - lr * (g[j] + wd * what[j]);
+                }
+            }
+            let delta_t = self.deltas_for(ids)?;
+            let bw_t = vec![self.bw; n_u];
+            second_pass(&w_new, &delta_t, &bw_t)?
+        } else {
+            Vec::new()
+        };
+
+        // same per-update RNG protocol as the local stores: exactly one
+        // draw, taken after the second pass
+        let draw = rng.next_u64();
+        let step = self.step;
+        self.step = self.step.wrapping_add(1);
+        let hp_arr =
+            [hp.lr_emb, hp.wd_emb, hp.lr_delta, hp.wd_delta, hp.grad_scale,
+             hp.lr_scale];
+        for (shard, (positions, globals)) in
+            self.part.split(ids).into_iter().enumerate()
+        {
+            if globals.is_empty() {
+                continue;
+            }
+            let mut shard_grads = Vec::with_capacity(positions.len() * d);
+            let mut shard_dd = Vec::with_capacity(if self.is_alpt {
+                positions.len()
+            } else {
+                0
+            });
+            for &pos in &positions {
+                shard_grads.extend_from_slice(&grads[pos * d..(pos + 1) * d]);
+                if self.is_alpt {
+                    shard_dd.push(d_delta[pos]);
+                }
+            }
+            let req = UpdateReq {
+                step,
+                draw,
+                hp: hp_arr,
+                ids: globals,
+                grads: shard_grads,
+                d_delta: shard_dd,
+            };
+            self.call_shard(shard, Op::Update, &req.encode())
+                .context("distributed update")?;
+        }
+        Ok(())
+    }
+
+    fn quantized_view(
+        &self,
+        ids: &[u32],
+        codes: &mut [i32],
+        delta: &mut [f32],
+    ) -> bool {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.ids == ids {
+                for i in 0..ids.len() {
+                    cache
+                        .table
+                        .read_row(i, &mut codes[i * self.d..(i + 1) * self.d]);
+                    delta[i] = cache.delta[i];
+                }
+                return true;
+            }
+        }
+        // cold view (no preceding gather): fetch, then serve
+        if let Err(e) = self.fetch_batch(ids) {
+            panic!("distributed quantized_view failed: {e:#}");
+        }
+        let cache = self.cache.lock().unwrap();
+        for i in 0..ids.len() {
+            cache.table.read_row(i, &mut codes[i * self.d..(i + 1) * self.d]);
+            delta[i] = cache.delta[i];
+        }
+        true
+    }
+
+    fn train_bytes(&self) -> usize {
+        self.train_bytes
+    }
+
+    fn infer_bytes(&self) -> usize {
+        self.infer_bytes
+    }
+
+    fn as_remote(&self) -> Option<&RemoteStore> {
+        Some(self)
+    }
+}
+
+impl Persistable for RemoteStore {
+    fn ckpt_row_bytes(&self) -> Option<usize> {
+        Some(self.row_bytes)
+    }
+
+    /// Reassemble rows `[lo, lo + count)` in canonical global order
+    /// from whatever shards own them — this is what makes checkpoints
+    /// layout-free (byte-identical to single-process, reloadable under
+    /// any worker count).
+    fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
+        let rb = self.row_bytes;
+        ensure!(dst.len() % rb == 0, "unaligned row payload");
+        let count = dst.len() / rb;
+        ensure!(lo + count <= self.n, "rows out of range");
+        let chunk = frame_chunk_rows(self.max_frame, rb);
+        let mut c_lo = lo;
+        while c_lo < lo + count {
+            let c_hi = (c_lo + chunk).min(lo + count);
+            let ids: Vec<u32> = (c_lo..c_hi).map(|g| g as u32).collect();
+            for (shard, (positions, globals)) in
+                self.part.split(&ids).into_iter().enumerate()
+            {
+                if globals.is_empty() {
+                    continue;
+                }
+                let req = GatherReq { aux_only: false, ids: globals };
+                let resp =
+                    self.call_shard(shard, Op::Gather, &req.encode())?;
+                let resp = GatherResp::decode(&resp)?;
+                ensure!(
+                    resp.row_bytes as usize == rb
+                        && resp.rows.len() == positions.len() * rb,
+                    "shard {shard} returned a malformed checkpoint GATHER"
+                );
+                for (k, &pos) in positions.iter().enumerate() {
+                    let g = c_lo + pos;
+                    dst[(g - lo) * rb..(g - lo + 1) * rb]
+                        .copy_from_slice(&resp.rows[k * rb..(k + 1) * rb]);
+                }
+            }
+            c_lo = c_hi;
+        }
+        Ok(())
+    }
+
+    fn load_rows(&mut self, _lo: usize, _src: &[u8]) -> Result<()> {
+        bail!(
+            "a remote store cannot load checkpoint rows; resume into a \
+             local store first, then attach workers"
+        )
+    }
+
+    fn aux_params(&self) -> &[f32] {
+        &self.aux_cache
+    }
+
+    fn load_aux_params(&mut self, _aux: &[f32]) -> Result<()> {
+        bail!(
+            "a remote store cannot load checkpoint aux params; resume \
+             into a local store first, then attach workers"
+        )
+    }
+
+    fn step_counter(&self) -> u64 {
+        self.step
+    }
+
+    fn set_step_counter(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Quiesce every worker, then mirror the Δ table so the subsequent
+    /// `aux_params` calls serve checkpoint-coherent values.
+    fn prepare_save(&mut self) -> Result<()> {
+        for shard in 0..self.part.n_shards() {
+            self.call_shard(shard, Op::Barrier, &[BARRIER_QUIESCE])
+                .with_context(|| {
+                    format!("checkpoint quiesce: worker shard {shard}")
+                })?;
+        }
+        if !self.is_alpt {
+            return Ok(());
+        }
+        let mut aux = vec![0.0f32; self.n];
+        // aux-only gathers are 4 bytes/row; chunk as if rows were f32s
+        let chunk = frame_chunk_rows(self.max_frame, 4);
+        let mut lo = 0usize;
+        while lo < self.n {
+            let hi = (lo + chunk).min(self.n);
+            let ids: Vec<u32> = (lo..hi).map(|g| g as u32).collect();
+            for (shard, (positions, globals)) in
+                self.part.split(&ids).into_iter().enumerate()
+            {
+                if globals.is_empty() {
+                    continue;
+                }
+                let req = GatherReq { aux_only: true, ids: globals };
+                let resp =
+                    self.call_shard(shard, Op::Gather, &req.encode())?;
+                let resp = GatherResp::decode(&resp)?;
+                ensure!(
+                    resp.aux.len() == positions.len(),
+                    "shard {shard} returned {} deltas for {} ids",
+                    resp.aux.len(),
+                    positions.len()
+                );
+                for (k, &pos) in positions.iter().enumerate() {
+                    aux[lo + pos] = resp.aux[k];
+                }
+            }
+            lo = hi;
+        }
+        self.aux_cache = aux;
+        Ok(())
+    }
+
+    /// Journaled row writes would be one RPC per dirty row against a
+    /// Δ mirror that is only coherent at quiesce points; continuous
+    /// saves fall back to full snapshots instead.
+    fn supports_delta_journal(&self) -> bool {
+        false
+    }
+}
+
+impl RowStats for RemoteStore {
+    // access counts stay on the workers; re-planning (their one
+    // consumer) is mutually exclusive with --workers
+}

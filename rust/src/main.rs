@@ -5,6 +5,8 @@
 //! alpt train   --dataset criteo:path/to/train.tsv --method alpt --plan 8
 //! alpt plan    --dataset criteo:train.tsv --budget 64m   # budgeted plan
 //! alpt gen     --dataset criteo --samples 100000 --out data.ds
+//! alpt train   --dataset tiny --workers 2 --listen-worker 127.0.0.1:4700
+//! alpt worker  --connect 127.0.0.1:4700   # one embedding shard, run N of these
 //! alpt convex                      # the Figure-3 synthetic experiment
 //! alpt info                        # artifact manifest + environment
 //! ```
@@ -35,6 +37,17 @@ USAGE:
               [--compact-every DELTAS]  (fold the delta journal into a
                fresh full checkpoint after this many deltas, 64)
               [--save FILE.ckpt] [--resume FILE.ckpt]
+              [--workers N]  (shard the embedding table across N `alpt
+               worker` processes; bit-identical to single-process)
+              [--listen-worker HOST:PORT]  (worker registration address,
+               127.0.0.1:4700)
+              [--rpc-timeout-ms MS] [--max-frame BYTES[k|m|g]]
+  alpt worker [--connect HOST:PORT]  (serve one embedding shard to a
+               coordinator started with --workers; 127.0.0.1:4700)
+              [--idle-timeout-ms MS]  (exit if the coordinator goes
+               silent this long, 600000)
+              [--max-frame BYTES[k|m|g]] [--connect-retries N]
+              [--retry-delay-ms MS]
   alpt plan   --budget BYTES[k|m|g]  (derive a per-field precision plan
                whose predicted inference footprint fits the budget)
               [--dataset ...] [--method ...] [--model NAME]
@@ -72,6 +85,7 @@ fn main() -> Result<()> {
     }
     match args.subcommand.as_deref() {
         Some("train") => train(&args),
+        Some("worker") => worker(&args),
         Some("serve") => serve(&args),
         Some("plan") => plan(&args),
         Some("gen") => gen(&args),
@@ -108,15 +122,19 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
         exp.model = m.to_string();
     }
     if args.get("bits").is_some() {
-        eprintln!(
-            "warning: --bits is deprecated; use --plan (same grammar)"
-        );
+        // once per process: retry loops and multi-experiment drivers
+        // shouldn't drown real output in the same line
+        static BITS_DEPRECATED: std::sync::Once = std::sync::Once::new();
+        BITS_DEPRECATED.call_once(|| {
+            eprintln!(
+                "warning: --bits is deprecated; use --plan (same grammar)"
+            );
+        });
     }
     exp.bits = args.get_parse("bits", exp.bits.clone())?;
     exp.bits = args.get_parse("plan", exp.bits.clone())?;
     if let Some(b) = args.get("replan-budget") {
-        exp.replan_budget =
-            alpt::config::parse_byte_budget(b)? as usize;
+        exp.replan_budget = alpt::cli::parse_bytes("replan-budget", b)? as usize;
     }
     exp.epochs = args.get_parse("epochs", exp.epochs)?;
     exp.seed = args.get_parse("seed", exp.seed)?;
@@ -172,6 +190,26 @@ fn train(args: &Args) -> Result<()> {
         let n_features = registry::schema_for(&exp)?.n_features();
         Trainer::new(exp, n_features)?
     };
+    // --workers shards the embedding table across remote processes.
+    // Worker layout is CLI-level state (never in the experiment or the
+    // checkpoint), so fresh runs, resumes, and reshards all attach here.
+    let n_workers: usize = args.get_parse("workers", 0usize)?;
+    if n_workers > 0 {
+        let listen = alpt::cli::parse_host_port(
+            "listen-worker",
+            args.get_or("listen-worker", "127.0.0.1:4700"),
+        )?;
+        let d = alpt::coordinator::RpcConfig::default();
+        let cfg = alpt::coordinator::RpcConfig {
+            timeout_ms: args.get_parse("rpc-timeout-ms", d.timeout_ms)?,
+            max_frame: match args.get("max-frame") {
+                Some(s) => alpt::cli::parse_bytes("max-frame", s)?,
+                None => d.max_frame,
+            },
+            ..d
+        };
+        trainer.attach_workers(&listen, n_workers, cfg)?;
+    }
     let exp = trainer.exp.clone();
     if DatasetSpec::parse(&exp.dataset).is_streaming() {
         return train_streaming(&mut trainer, args);
@@ -202,6 +240,9 @@ fn train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save") {
         trainer.save_checkpoint(std::path::Path::new(path))?;
         println!("checkpoint saved to {path}");
+    }
+    if let Some(remote) = trainer.store.as_remote() {
+        remote.shutdown()?;
     }
     Ok(())
 }
@@ -274,7 +315,46 @@ fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {}", path.display());
     }
+    if let Some(remote) = trainer.store.as_remote() {
+        remote.shutdown()?;
+    }
     Ok(())
+}
+
+/// `alpt worker --connect HOST:PORT`: host one shard of the embedding
+/// table for a coordinator started with `--workers N`. Blocks until the
+/// coordinator sends SHUTDOWN (clean exit) or the connection dies
+/// (nonzero exit — the coordinator notices the same way).
+fn worker(args: &Args) -> Result<()> {
+    use alpt::cli::{parse_bytes, parse_host_port};
+    use alpt::coordinator::{run_worker, WorkerOpts};
+
+    // fault-injection hook (used by the CI kill leg): crash after
+    // serving this many UPDATE frames
+    let die_after_updates = match std::env::var("ALPT_WORKER_DIE_AFTER") {
+        Ok(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad ALPT_WORKER_DIE_AFTER {v:?} (expected a count)")
+        })?),
+        Err(_) => None,
+    };
+    let d = WorkerOpts::default();
+    let opts = WorkerOpts {
+        connect: parse_host_port(
+            "connect",
+            args.get_or("connect", "127.0.0.1:4700"),
+        )?,
+        idle_timeout_ms: args
+            .get_parse("idle-timeout-ms", d.idle_timeout_ms)?,
+        max_frame: match args.get("max-frame") {
+            Some(s) => parse_bytes("max-frame", s)?,
+            None => d.max_frame,
+        },
+        connect_retries: args
+            .get_parse("connect-retries", d.connect_retries)?,
+        retry_delay_ms: args.get_parse("retry-delay-ms", d.retry_delay_ms)?,
+        die_after_updates,
+    };
+    run_worker(&opts)
 }
 
 /// `alpt plan --budget BYTES`: the offline half of budgeted precision
@@ -290,7 +370,7 @@ fn plan(args: &Args) -> Result<()> {
 
     let exp = build_experiment(args)?;
     let budget = match args.get("budget") {
-        Some(s) => alpt::config::parse_byte_budget(s)?,
+        Some(s) => alpt::cli::parse_bytes("budget", s)?,
         None => exp.bits.auto_budget().ok_or_else(|| {
             anyhow::anyhow!(
                 "plan requires --budget BYTES (or --plan auto:BYTES)"
@@ -415,7 +495,8 @@ fn serve(args: &Args) -> Result<()> {
     }
 
     if let Some(listen) = args.get("listen") {
-        return serve_http(args, listen, ckpt);
+        let listen = alpt::cli::parse_host_port("listen", listen)?;
+        return serve_http(args, &listen, ckpt);
     }
 
     let max_batches = args.get_parse("batches", usize::MAX)?;

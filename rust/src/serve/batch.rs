@@ -376,7 +376,7 @@ mod tests {
             ..Experiment::default()
         };
         let n = registry::schema_for(&exp).unwrap().n_features();
-        let tr = Trainer::new(exp, n).unwrap();
+        let mut tr = Trainer::new(exp, n).unwrap();
         let dir = std::env::temp_dir().join("alpt_microbatch_tests");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("micro.ckpt");

@@ -325,7 +325,7 @@ mod tests {
             ..Experiment::default()
         };
         let n = registry::schema_for(&exp).unwrap().n_features();
-        let tr = Trainer::new(exp, n).unwrap();
+        let mut tr = Trainer::new(exp, n).unwrap();
         let path = tmp(name);
         tr.save_checkpoint(&path).unwrap();
         let engine = InferenceEngine::from_checkpoint(&path).unwrap();

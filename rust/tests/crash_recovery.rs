@@ -216,8 +216,8 @@ fn anchor_plus_chain_resume_is_bit_identical_to_full_resume() {
             .expect("no journal next to the continuous checkpoint");
         assert_eq!(chain.deltas.len(), 3, "{tag}");
 
-        let a = Trainer::resume(&chain_path).unwrap();
-        let b = Trainer::resume(&full_path).unwrap();
+        let mut a = Trainer::resume(&chain_path).unwrap();
+        let mut b = Trainer::resume(&full_path).unwrap();
         let out_a = dir.join(format!("{tag}_out_a.ckpt"));
         let out_b = dir.join(format!("{tag}_out_b.ckpt"));
         a.save_checkpoint(&out_a).unwrap();
@@ -283,17 +283,15 @@ fn single_bitflips_fail_loudly_never_load_garbage() {
         // only acceptable result of a flip that still loads (e.g. a bit
         // in the Meta section's unused index field)
         let clean_path = dir.join(format!("{tag}_clean.ckpt"));
-        Trainer::resume(&path)
-            .unwrap()
-            .save_checkpoint(&clean_path)
-            .unwrap();
+        let mut clean_tr = Trainer::resume(&path).unwrap();
+        clean_tr.save_checkpoint(&clean_path).unwrap();
         let clean = std::fs::read(&clean_path).unwrap();
         let probe_path = dir.join(format!("{tag}_probe.ckpt"));
         for (off, bit) in flip_positions(ckpt_bytes.len()) {
             let mut damaged = ckpt_bytes.clone();
             damaged[off] ^= 1 << bit;
             std::fs::write(&path, &damaged).unwrap();
-            if let Ok(resumed) = Trainer::resume(&path) {
+            if let Ok(mut resumed) = Trainer::resume(&path) {
                 resumed.save_checkpoint(&probe_path).unwrap();
                 assert_eq!(
                     std::fs::read(&probe_path).unwrap(),

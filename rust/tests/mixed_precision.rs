@@ -101,7 +101,7 @@ fn mixed_checkpoint_save_resume_save_is_byte_identical() {
     let p1 = tmp("mixed_roundtrip.1.ckpt");
     let p2 = tmp("mixed_roundtrip.2.ckpt");
     tr.save_checkpoint(&p1).unwrap();
-    let resumed = Trainer::resume(&p1).unwrap();
+    let mut resumed = Trainer::resume(&p1).unwrap();
     resumed.save_checkpoint(&p2).unwrap();
     assert_eq!(
         std::fs::read(&p1).unwrap(),

@@ -40,7 +40,7 @@ fn make_ckpt(name: &str, method: Method, bits: &str) -> PathBuf {
         ..Experiment::default()
     };
     let n = registry::schema_for(&exp).unwrap().n_features();
-    let tr = Trainer::new(exp, n).unwrap();
+    let mut tr = Trainer::new(exp, n).unwrap();
     let path = tmp(name);
     tr.save_checkpoint(&path).unwrap();
     path

@@ -15,7 +15,7 @@ to the other, row by row, so a full Avazu download trains with:
 
     python3 scripts/avazu_to_tsv.py train.csv --out avazu.tsv
     cargo run --release -- train --dataset criteo:avazu.tsv \\
-        --method alpt --bits 8 ...
+        --method alpt --plan 8 ...
 
 (The output must be a materialized file: the Rust reader re-opens the
 path once per epoch plus once for the held-out split, so a one-shot

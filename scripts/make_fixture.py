@@ -12,7 +12,7 @@ by `scripts/train_fixture.py`, which trains a real model against the
 seed's ground truth (numpy only, no Rust toolchain needed) and reuses
 this module's section writer; with cargo available the equivalent is:
 
-    cargo run --release -- train --dataset tiny --method lpt-sr --bits 8 \
+    cargo run --release -- train --dataset tiny --method lpt-sr --plan 8 \
         --no-runtime --save examples/fixtures/tiny_lpt8.ckpt
 
 The Rust test `fixture_serves_without_training`
