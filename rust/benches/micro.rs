@@ -1,8 +1,9 @@
 //! Hot-path microbenchmarks (§Perf): packed-table row ops (word-at-a-time
-//! unpack, fused quantize→pack), counter-RNG stream throughput, serial vs
-//! sharded store gather/update at every bit width, the budget planner,
-//! batch dedup, AUC, the Rust-nn training step, and PJRT artifact
-//! execution latency.
+//! unpack, fused quantize→pack), the SIMD kernel matrix (every available
+//! kernel vs the scalar oracle, with bit-identity asserted in-loop),
+//! counter-RNG stream throughput, serial vs sharded store gather/update
+//! at every bit width, the budget planner, batch dedup, AUC, the Rust-nn
+//! training step, and PJRT artifact execution latency.
 //!
 //! Output feeds ROADMAP.md §Performance; machine-readable mirror in
 //! `BENCH_micro.json` at the repo root (cross-PR perf trajectory) plus
@@ -19,7 +20,7 @@ use alpt::embedding::{
     AlptStore, EmbeddingStore, FpStore, GroupedStore, LptStore, UpdateHp,
 };
 use alpt::nn::{Dcn, DcnConfig};
-use alpt::quant::{quantize_row, BitWidth, PackedTable, Rounding};
+use alpt::quant::{kernels, quantize_row, BitWidth, PackedTable, Rounding};
 use alpt::util::bench::{section, Bencher};
 use alpt::util::json::Json;
 use alpt::util::rng::{Pcg32, StreamKey};
@@ -146,6 +147,133 @@ fn main() {
                                   &mut rng);
             std::hint::black_box(&t);
         });
+    }
+
+    // ------------------- SIMD kernel matrix: scalar oracle vs vectorized
+    section(&format!(
+        "SIMD kernel matrix, d=16 (rows/s): dequant / batched gather / \
+         DR quantize per kernel (active = {})",
+        kernels::active().name()
+    ));
+    {
+        let kernel_list = kernels::available();
+        for bits in ALL_BITS {
+            let bw = BitWidth::from_bits(bits).unwrap();
+            let mut t = PackedTable::new(n, d, bw);
+            let mut codes = vec![0i32; d];
+            for r in 0..n {
+                for (j, c) in codes.iter_mut().enumerate() {
+                    *c = ((((r * 31 + j * 7) % 255) as i32) - 128)
+                        .clamp(bw.qn(), bw.qp());
+                }
+                t.write_row(r, &codes);
+            }
+            let mut out = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            for &k in &kernel_list {
+                kernels::dequant_row(
+                    kernels::Kernel::Scalar,
+                    t.raw_rows(11, 1),
+                    d,
+                    bits,
+                    0.01,
+                    &mut want,
+                );
+                kernels::dequant_row(
+                    k, t.raw_rows(11, 1), d, bits, 0.01, &mut out,
+                );
+                assert_eq!(
+                    want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{} dequant diverged from scalar at {bits}-bit",
+                    k.name()
+                );
+                let mut row = 0usize;
+                b.bench_units(
+                    &format!("dequant row {bits}-bit [{}]", k.name()),
+                    Some(1.0),
+                    || {
+                        row = (row + 97) % n;
+                        kernels::dequant_row(
+                            k,
+                            t.raw_rows(row, 1),
+                            d,
+                            bits,
+                            0.01,
+                            &mut out,
+                        );
+                        std::hint::black_box(&out);
+                    },
+                );
+            }
+            // the acceptance rows: batched gather + fused DR quantize
+            // at the paper's serving widths
+            if bits == 4 || bits == 8 {
+                let kids: Vec<u32> =
+                    (0..4096u32).map(|i| (i * 131) % n as u32).collect();
+                let mut kout = vec![0.0f32; kids.len() * d];
+                let mut kwant = vec![0.0f32; kids.len() * d];
+                t.gather_dequant_with(
+                    kernels::Kernel::Scalar,
+                    &kids,
+                    |_| 0.01,
+                    &mut kwant,
+                );
+                for &k in &kernel_list {
+                    t.gather_dequant_with(k, &kids, |_| 0.01, &mut kout);
+                    assert_eq!(
+                        kwant
+                            .iter()
+                            .map(|x| x.to_bits())
+                            .collect::<Vec<_>>(),
+                        kout.iter()
+                            .map(|x| x.to_bits())
+                            .collect::<Vec<_>>(),
+                        "{} gather diverged from scalar at {bits}-bit",
+                        k.name()
+                    );
+                    b.bench_units(
+                        &format!(
+                            "packed gather 4096x16 {bits}-bit [{}]",
+                            k.name()
+                        ),
+                        Some(kids.len() as f64),
+                        || {
+                            t.gather_dequant_with(
+                                k,
+                                &kids,
+                                |_| 0.01,
+                                &mut kout,
+                            );
+                            std::hint::black_box(&kout);
+                        },
+                    );
+                }
+                let qw: Vec<f32> = (0..d)
+                    .map(|i| (i as f32 - 8.0) * 0.003)
+                    .collect();
+                for &k in &kernel_list {
+                    b.bench_units(
+                        &format!(
+                            "quantize_row_packed DR {bits}-bit [{}]",
+                            k.name()
+                        ),
+                        Some(d as f64),
+                        || {
+                            t.quantize_row_packed_with(
+                                k,
+                                1,
+                                &qw,
+                                0.01,
+                                Rounding::Deterministic,
+                                &mut rng,
+                            );
+                            std::hint::black_box(&t);
+                        },
+                    );
+                }
+            }
+        }
     }
 
     // ------------------------------- store gather: serial vs sharded
@@ -419,6 +547,24 @@ fn main() {
                 });
             },
         );
+        // saturation headline: same shape, but report whole requests
+        // per second (one request = one B=64 batch) with every core
+        // busy — the number a capacity planner actually provisions on
+        b.bench_units(
+            &format!("engine score saturation t{n_threads} (req/s)"),
+            Some(n_threads as f64),
+            || {
+                std::thread::scope(|s| {
+                    for t in 0..n_threads {
+                        let engine = Arc::clone(&engine);
+                        let batch = &batches[t % batches.len()];
+                        s.spawn(move || {
+                            std::hint::black_box(engine.score(batch));
+                        });
+                    }
+                });
+            },
+        );
         // concurrent scoring must stay bit-identical to the serial pass
         let threaded: Vec<Vec<f32>> = std::thread::scope(|s| {
             let handles: Vec<_> = batches
@@ -534,6 +680,7 @@ fn main() {
         ("bench", Json::str("micro")),
         ("quick", Json::Bool(quick)),
         ("threads_avail", Json::num(n_threads as f64)),
+        ("kernel", Json::str(kernels::active().name())),
     ];
     match b.write_report(std::path::Path::new("BENCH_micro.json"), meta) {
         Ok(()) => println!(

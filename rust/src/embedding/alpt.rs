@@ -19,9 +19,9 @@
 //! Table 1's 3.2× (vs 4×) training-compression ratio at d=16.
 
 use super::lpt::ids_unique;
-use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
-            Persistable, RowStats, SecondPass, UpdateHp,
-            MIN_ROWS_PER_THREAD};
+use super::{init_weights, par_gather, par_gather_chunks,
+            resolve_threads, EmbeddingStore, Persistable, RowStats,
+            SecondPass, UpdateHp, MIN_ROWS_PER_THREAD};
 use crate::quant::{delta_from_clip, init_delta, BitWidth, PackedTable,
                    Rounding};
 use crate::util::rng::{Pcg32, StreamKey};
@@ -192,6 +192,12 @@ impl AlptStore {
         self.codes.read_row(row, out);
     }
 
+    /// Prefetch hint for one local row — the grouped store's routed
+    /// gather issues this ahead of [`AlptStore::read_row_dequant_into`].
+    pub(crate) fn prefetch_row(&self, row: usize) {
+        self.codes.prefetch_row(row);
+    }
+
     /// Serially quantize one row from a float value under an explicit
     /// learned Δ — the grouped-store migration kernel. The row's Δ is
     /// set first (rescaled by the caller so the representable range
@@ -232,9 +238,13 @@ impl EmbeddingStore for AlptStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
-        par_gather(ids, self.d, out, self.threads, |_, id, row| {
-            self.codes
-                .read_row_dequant(id as usize, self.delta[id as usize], row);
+        par_gather_chunks(ids, self.d, out, self.threads,
+                          |_, chunk_ids, chunk| {
+            self.codes.gather_dequant(
+                chunk_ids,
+                |id| self.delta[id as usize],
+                chunk,
+            );
         });
     }
 

@@ -12,7 +12,7 @@
 //! gather/update hot path).
 //!
 //! **Determinism.** The `StreamKey` contract extends to groups: gather is
-//! a pure per-row function sharded with [`par_gather`], and update runs
+//! a pure per-row function sharded with [`par_gather_chunks`], and update runs
 //! the groups in a fixed (ascending-width) order, each sub-store drawing
 //! its own step key and per-row counter streams — so grouped sharded
 //! gather/update are bit-identical to the serial path at any thread
@@ -30,9 +30,9 @@
 //! for later groups, a sequential-coordinate flavour of Algorithm 1.
 
 use super::{
-    par_gather, resolve_threads, rounding_of, AlptStore, EmbeddingStore,
-    HashingStore, LptStore, Persistable, PruningStore, RowStats,
-    SecondPass, UpdateHp,
+    par_gather_chunks, resolve_threads, rounding_of, AlptStore,
+    EmbeddingStore, HashingStore, LptStore, Persistable, PruningStore,
+    RowStats, SecondPass, UpdateHp,
 };
 use crate::config::{Experiment, FieldKind, GroupKind, Method};
 use crate::data::Schema;
@@ -102,6 +102,16 @@ impl SubStore {
             // is already a pure per-row function
             SubStore::Hashed(s) => s.gather(&[local as u32], out),
             SubStore::Pruned(s) => s.gather(&[local as u32], out),
+        }
+    }
+
+    /// Prefetch hint for one local row (no-op for structural kinds —
+    /// their rows are plain f32, covered by the hardware prefetcher).
+    fn prefetch_row(&self, local: usize) {
+        match self {
+            SubStore::Lpt(s) => s.prefetch_row(local),
+            SubStore::Alpt(s) => s.prefetch_row(local),
+            SubStore::Hashed(_) | SubStore::Pruned(_) => {}
         }
     }
 
@@ -492,9 +502,28 @@ impl EmbeddingStore for GroupedStore {
 
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
-        par_gather(ids, self.d, out, self.threads, |_, id, row| {
-            let (g, local) = self.locate(id);
-            self.groups[g].store.read_row_dequant_into(local, row);
+        // Chunked like the single-table stores so prefetch hints can
+        // run ahead of the decode: each row is routed twice — once
+        // PREFETCH_AHEAD iterations early to start the line fill, once
+        // to decode — which trades a second binary search (L1-resident
+        // ranges) for the sub-table row's memory latency.
+        let d = self.d;
+        par_gather_chunks(ids, d, out, self.threads,
+                          |_, chunk_ids, chunk| {
+            for (k, (&id, row)) in chunk_ids
+                .iter()
+                .zip(chunk.chunks_mut(d))
+                .enumerate()
+            {
+                if let Some(&ahead) = chunk_ids
+                    .get(k + crate::quant::PackedTable::PREFETCH_AHEAD)
+                {
+                    let (ag, alocal) = self.locate(ahead);
+                    self.groups[ag].store.prefetch_row(alocal);
+                }
+                let (g, local) = self.locate(id);
+                self.groups[g].store.read_row_dequant_into(local, row);
+            }
         });
     }
 

@@ -13,8 +13,8 @@
 //! SR noise comes from counter-based per-row streams
 //! ([`StreamKey`]), so results are bit-identical at any thread count.
 
-use super::{init_weights, par_gather, resolve_threads, EmbeddingStore,
-            Persistable, RowStats, SecondPass, UpdateHp,
+use super::{init_weights, par_gather_chunks, resolve_threads,
+            EmbeddingStore, Persistable, RowStats, SecondPass, UpdateHp,
             MIN_ROWS_PER_THREAD};
 use crate::quant::{delta_from_clip, BitWidth, PackedTable, Rounding};
 use crate::util::rng::{Pcg32, StreamKey};
@@ -125,6 +125,12 @@ impl LptStore {
         self.codes.read_row(row, out);
     }
 
+    /// Prefetch hint for one local row — the grouped store's routed
+    /// gather issues this ahead of [`LptStore::read_row_dequant_into`].
+    pub(crate) fn prefetch_row(&self, row: usize) {
+        self.codes.prefetch_row(row);
+    }
+
     /// Serially quantize one row from a float value with this table's
     /// fixed Δ — the grouped-store migration kernel (requantize a row
     /// moving into this group). The caller supplies the SR stream so
@@ -160,8 +166,9 @@ impl EmbeddingStore for LptStore {
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
         let delta = self.delta;
-        par_gather(ids, self.d, out, self.threads, |_, id, row| {
-            self.codes.read_row_dequant(id as usize, delta, row);
+        par_gather_chunks(ids, self.d, out, self.threads,
+                          |_, chunk_ids, chunk| {
+            self.codes.gather_dequant(chunk_ids, |_| delta, chunk);
         });
     }
 

@@ -318,6 +318,30 @@ pub(crate) fn par_gather<F>(
 ) where
     F: Fn(usize, u32, &mut [f32]) + Send + Sync,
 {
+    par_gather_chunks(ids, d, out, threads, |lo, chunk_ids, chunk| {
+        for (k, (&id, row)) in
+            chunk_ids.iter().zip(chunk.chunks_mut(d)).enumerate()
+        {
+            fill(lo + k, id, row);
+        }
+    });
+}
+
+/// Chunk-granular flavour of [`par_gather`]: each worker gets its whole
+/// contiguous `(ids, rows)` chunk in one call, so stores can run the
+/// batched SIMD+prefetch table gather across the chunk instead of a
+/// per-row closure. `fill(lo, chunk_ids, chunk_rows)` must be a pure
+/// function of its arguments plus shared store state; chunk boundaries
+/// are row-aligned, so results stay bit-identical at any thread count.
+pub(crate) fn par_gather_chunks<F>(
+    ids: &[u32],
+    d: usize,
+    out: &mut [f32],
+    threads: usize,
+    fill: F,
+) where
+    F: Fn(usize, &[u32], &mut [f32]) + Send + Sync,
+{
     debug_assert_eq!(out.len(), ids.len() * d);
     let n = ids.len();
     if n == 0 || d == 0 {
@@ -326,11 +350,7 @@ pub(crate) fn par_gather<F>(
     let max_useful = n.div_ceil(MIN_ROWS_PER_THREAD);
     let threads = threads.max(1).min(max_useful);
     if threads <= 1 {
-        for (i, (&id, row)) in
-            ids.iter().zip(out.chunks_mut(d)).enumerate()
-        {
-            fill(i, id, row);
-        }
+        fill(0, ids, out);
         return;
     }
     let rows_per = n.div_ceil(threads);
@@ -339,13 +359,7 @@ pub(crate) fn par_gather<F>(
             let lo = t * rows_per;
             let chunk_ids = &ids[lo..lo + chunk.len() / d];
             let fill = &fill;
-            s.spawn(move || {
-                for (k, (&id, row)) in
-                    chunk_ids.iter().zip(chunk.chunks_mut(d)).enumerate()
-                {
-                    fill(lo + k, id, row);
-                }
-            });
+            s.spawn(move || fill(lo, chunk_ids, chunk));
         }
     });
 }

@@ -408,10 +408,10 @@ impl EmbeddingStore for RemoteStore {
         if let Err(e) = self.fetch_batch(ids) {
             panic!("distributed gather failed: {e:#}");
         }
+        // wire bytes were staged contiguously by fetch_batch; decode
+        // them with the batch-sequential SIMD dequantize
         let cache = self.cache.lock().unwrap();
-        for (i, row) in out.chunks_mut(self.d).enumerate() {
-            cache.table.read_row_dequant(i, cache.delta[i], row);
-        }
+        cache.table.dequant_rows(ids.len(), &cache.delta, out);
     }
 
     fn update(

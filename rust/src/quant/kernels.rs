@@ -1,0 +1,1302 @@
+//! SIMD kernels for the packed-row hot paths, behind one-time runtime
+//! dispatch.
+//!
+//! Every hot loop over packed codes — dequantize (codes → f32 with the
+//! Δ scale), unpack (codes → i32), and the deterministic-rounding half
+//! of the fused quantize→pack — funnels through the free functions in
+//! this module, which select an instruction set *once* per process
+//! (first use) via [`active`]:
+//!
+//! * x86_64: AVX2 (8 codes/iteration) when the CPU reports it, else
+//!   SSE4.1 (4 codes/iteration), detected with
+//!   `is_x86_feature_detected!`;
+//! * aarch64: NEON (8 codes/iteration for dequant, 4 for quantize);
+//! * anywhere else, or under `ALPT_FORCE_KERNEL=scalar`: the original
+//!   byte-wise kernels in [`super::packed`], kept verbatim as the
+//!   property-test oracle.
+//!
+//! **Bit-identity is the contract.** A kernel is not an approximation:
+//! for any input, every kernel must produce the same output *bits* as
+//! the scalar reference, so the repo-wide determinism guarantee
+//! ("bit-identical at any thread count") extends to "… and any
+//! kernel". That works because each vector op used here is IEEE-754
+//! exactly rounded and therefore equal to its scalar counterpart:
+//!
+//! * dequantize is `(code as f32) * delta` — int→f32 conversion is
+//!   exact for |code| ≤ 2^15 ≪ 2^24, and vector `mul_ps` rounds
+//!   identically to scalar `*`;
+//! * deterministic rounding is `floor(clamp(w/delta, qn, qp) + 0.5)`
+//!   — `div_ps`/`add_ps`/`floor_ps` are exactly rounded, min/max
+//!   clamping equals `f32::clamp` for finite inputs (stores guarantee
+//!   finite weights and Δ ≥ 1e-8), and after `floor` the value is
+//!   integral so truncating `cvttps` conversion is exact;
+//! * no FMA anywhere — a fused multiply-add rounds once where the
+//!   scalar reference rounds twice, which would break bit-identity.
+//!
+//! Stochastic rounding stays scalar by design: SR consumes one
+//! `Pcg32` draw per element *in column order*, and that draw-order
+//! contract (checkpointed generator states, resume bit-identity) is
+//! worth more than vectorizing the SR multiply.
+//!
+//! `ALPT_FORCE_KERNEL=scalar|sse41|avx2|neon` pins the choice for
+//! tests and benches; an unknown or unsupported name panics loudly —
+//! a forced kernel that silently fell back would let a CI matrix leg
+//! test the wrong code path and still come up green.
+
+use super::packed::{
+    dequant_codes, pack_codes, quantize_dr_codes, unpack_codes,
+};
+use super::BitWidth;
+use std::sync::OnceLock;
+
+/// One instruction-set implementation of the packed-row kernels.
+/// Variants exist on every architecture (so names parse everywhere);
+/// [`Kernel::is_supported`] says whether this build/CPU can run one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Byte-wise reference kernels ([`super::packed`]) — always
+    /// available, and the oracle every SIMD kernel is tested against.
+    Scalar,
+    /// x86_64 SSE4.1: 4 codes per iteration.
+    Sse41,
+    /// x86_64 AVX2: 8 codes per iteration.
+    Avx2,
+    /// aarch64 NEON: 8 codes per dequant iteration.
+    Neon,
+}
+
+impl Kernel {
+    /// The name `ALPT_FORCE_KERNEL` accepts and benches report.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Sse41 => "sse41",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`Kernel::name`].
+    pub fn from_name(name: &str) -> Option<Kernel> {
+        match name {
+            "scalar" => Some(Kernel::Scalar),
+            "sse41" => Some(Kernel::Sse41),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this build, on this CPU, run this kernel?
+    pub fn is_supported(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse41 => is_x86_feature_detected!("sse4.1"),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => {
+                std::arch::is_aarch64_feature_detected!("neon")
+            }
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+/// Every kernel this build/CPU can run, scalar first — the bench and
+/// property-test iteration order.
+pub fn available() -> Vec<Kernel> {
+    [Kernel::Scalar, Kernel::Sse41, Kernel::Avx2, Kernel::Neon]
+        .into_iter()
+        .filter(|k| k.is_supported())
+        .collect()
+}
+
+/// The process-wide kernel, selected once on first use: the
+/// `ALPT_FORCE_KERNEL` override if set and non-empty (panicking on an
+/// unknown or unsupported name), else the best supported instruction
+/// set.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+fn detect() -> Kernel {
+    match std::env::var("ALPT_FORCE_KERNEL") {
+        Ok(name) if !name.is_empty() => {
+            let k = Kernel::from_name(&name).unwrap_or_else(|| {
+                panic!(
+                    "ALPT_FORCE_KERNEL={name:?}: unknown kernel \
+                     (expected scalar|sse41|avx2|neon)"
+                )
+            });
+            assert!(
+                k.is_supported(),
+                "ALPT_FORCE_KERNEL={name:?}: kernel not supported by \
+                 this build/CPU"
+            );
+            k
+        }
+        _ => best(),
+    }
+}
+
+/// Best instruction set the CPU reports (no env override).
+fn best() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+        if is_x86_feature_detected!("sse4.1") {
+            return Kernel::Sse41;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+// ------------------------------------------------------------ dispatch
+
+/// Dequantize one byte-padded packed row: `out[c] = code[c] * delta`.
+pub fn dequant_row(
+    k: Kernel,
+    src: &[u8],
+    dim: usize,
+    bits: u32,
+    delta: f32,
+    out: &mut [f32],
+) {
+    debug_assert!(k.is_supported());
+    match k {
+        Kernel::Scalar => dequant_codes(src, dim, bits, delta, out),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: is_supported() verified the CPU feature above.
+        Kernel::Sse41 => unsafe {
+            x86::dequant_row_sse41(src, dim, bits, delta, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above.
+        Kernel::Avx2 => unsafe {
+            x86::dequant_row_avx2(src, dim, bits, delta, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: as above.
+        Kernel::Neon => unsafe {
+            neon::dequant_row(src, dim, bits, delta, out)
+        },
+        _ => unreachable!("kernel not compiled for this arch"),
+    }
+}
+
+/// Unpack one byte-padded packed row to sign-extended i32 codes.
+pub fn unpack_row(
+    k: Kernel,
+    src: &[u8],
+    dim: usize,
+    bits: u32,
+    out: &mut [i32],
+) {
+    debug_assert!(k.is_supported());
+    match k {
+        Kernel::Scalar => unpack_codes(src, dim, bits, out),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: is_supported() verified the CPU feature above.
+        Kernel::Sse41 => unsafe {
+            x86::unpack_row_sse41(src, dim, bits, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above.
+        Kernel::Avx2 => unsafe {
+            x86::unpack_row_avx2(src, dim, bits, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: as above.
+        Kernel::Neon => unsafe { neon::unpack_row(src, dim, bits, out) },
+        _ => unreachable!("kernel not compiled for this arch"),
+    }
+}
+
+/// Codes per quantize chunk. 64 codes hit a byte boundary at every
+/// width (64·2 bits = 16 B), so each chunk packs independently, and
+/// the i32 scratch stays on the stack for any `dim`.
+const QCHUNK: usize = 64;
+
+/// Fused deterministic quantize→pack of one row: vector-quantize
+/// `w/delta` (clamp, round-half-up) in [`QCHUNK`]-code chunks, then
+/// pack each chunk with the scalar byte packer (padding bits zero).
+/// Bit-identical to the scalar `quantize_dr` + `pack_codes` pipeline —
+/// see the module docs for the op-by-op argument.
+pub fn quantize_dr_row(
+    k: Kernel,
+    dst: &mut [u8],
+    dim: usize,
+    bits: u32,
+    bw: BitWidth,
+    w: &[f32],
+    delta: f32,
+) {
+    debug_assert!(k.is_supported());
+    if matches!(k, Kernel::Scalar) {
+        return quantize_dr_codes(dst, dim, bits, bw, w, delta);
+    }
+    let mut codes = [0i32; QCHUNK];
+    let mut col = 0;
+    while col < dim {
+        let len = QCHUNK.min(dim - col);
+        let chunk = &w[col..col + len];
+        match k {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: is_supported() verified the CPU feature above.
+            Kernel::Sse41 => unsafe {
+                x86::quantize_codes_dr_sse41(
+                    chunk,
+                    delta,
+                    bw,
+                    &mut codes[..len],
+                )
+            },
+            #[cfg(target_arch = "x86_64")]
+            // Safety: as above.
+            Kernel::Avx2 => unsafe {
+                x86::quantize_codes_dr_avx2(
+                    chunk,
+                    delta,
+                    bw,
+                    &mut codes[..len],
+                )
+            },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: as above.
+            Kernel::Neon => unsafe {
+                neon::quantize_codes_dr(
+                    chunk,
+                    delta,
+                    bw,
+                    &mut codes[..len],
+                )
+            },
+            _ => unreachable!("kernel not compiled for this arch"),
+        }
+        let lo = col * bits as usize / 8;
+        let hi = ((col + len) * bits as usize).div_ceil(8);
+        pack_codes(&mut dst[lo..hi], len, bits, &codes[..len]);
+        col += len;
+    }
+}
+
+/// Scalar extraction of one sign-extended code — the tail path shared
+/// by every SIMD kernel (mirrors `PackedTable::get`).
+#[inline]
+fn extract_code(src: &[u8], bits: u32, col: usize) -> i32 {
+    match bits {
+        8 => src[col] as i8 as i32,
+        16 => {
+            i16::from_le_bytes([src[2 * col], src[2 * col + 1]]) as i32
+        }
+        4 => {
+            let byte = src[col / 2];
+            let nib = if col % 2 == 0 { byte & 0xF } else { byte >> 4 };
+            ((nib as i32) << 28) >> 28
+        }
+        2 => {
+            let byte = src[col / 4];
+            let two = (byte >> ((col % 4) * 2)) & 0b11;
+            ((two as i32) << 30) >> 30
+        }
+        _ => unreachable!(),
+    }
+}
+
+// -------------------------------------------------- x86_64 (AVX2/SSE4.1)
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{quantize_dr, BitWidth};
+    use super::extract_code;
+    use core::arch::x86_64::*;
+
+    /// AVX2 dequantize: 8 codes per iteration, scalar ragged tail.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_row_avx2(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        delta: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let d = _mm256_set1_ps(delta);
+        let full = dim & !7;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let v = _mm_loadl_epi64(
+                        src.as_ptr().add(i) as *const __m128i
+                    );
+                    let x = _mm256_cvtepi8_epi32(v);
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_mul_ps(_mm256_cvtepi32_ps(x), d),
+                    );
+                    i += 8;
+                }
+            }
+            16 => {
+                while i < full {
+                    let v = _mm_loadu_si128(
+                        src.as_ptr().add(2 * i) as *const __m128i
+                    );
+                    let x = _mm256_cvtepi16_epi32(v);
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_mul_ps(_mm256_cvtepi32_ps(x), d),
+                    );
+                    i += 8;
+                }
+            }
+            4 => {
+                // 8 nibbles live in one 32-bit word: broadcast, shift
+                // each lane to its nibble, sign-extend via <<28 >>28.
+                let sh =
+                    _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                while i < full {
+                    let b = i / 2;
+                    let w = u32::from_le_bytes([
+                        src[b],
+                        src[b + 1],
+                        src[b + 2],
+                        src[b + 3],
+                    ]);
+                    let lanes = _mm256_srlv_epi32(
+                        _mm256_set1_epi32(w as i32),
+                        sh,
+                    );
+                    let x = _mm256_srai_epi32(
+                        _mm256_slli_epi32(lanes, 28),
+                        28,
+                    );
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_mul_ps(_mm256_cvtepi32_ps(x), d),
+                    );
+                    i += 8;
+                }
+            }
+            2 => {
+                let sh = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                while i < full {
+                    let b = i / 4;
+                    let w =
+                        u16::from_le_bytes([src[b], src[b + 1]]) as u32;
+                    let lanes = _mm256_srlv_epi32(
+                        _mm256_set1_epi32(w as i32),
+                        sh,
+                    );
+                    let x = _mm256_srai_epi32(
+                        _mm256_slli_epi32(lanes, 30),
+                        30,
+                    );
+                    _mm256_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm256_mul_ps(_mm256_cvtepi32_ps(x), d),
+                    );
+                    i += 8;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j) as f32 * delta;
+        }
+    }
+
+    /// AVX2 unpack to i32 codes (same lane decode as dequant, no Δ).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_row_avx2(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let full = dim & !7;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let v = _mm_loadl_epi64(
+                        src.as_ptr().add(i) as *const __m128i
+                    );
+                    _mm256_storeu_si256(
+                        out.as_mut_ptr().add(i) as *mut __m256i,
+                        _mm256_cvtepi8_epi32(v),
+                    );
+                    i += 8;
+                }
+            }
+            16 => {
+                while i < full {
+                    let v = _mm_loadu_si128(
+                        src.as_ptr().add(2 * i) as *const __m128i
+                    );
+                    _mm256_storeu_si256(
+                        out.as_mut_ptr().add(i) as *mut __m256i,
+                        _mm256_cvtepi16_epi32(v),
+                    );
+                    i += 8;
+                }
+            }
+            4 => {
+                let sh =
+                    _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                while i < full {
+                    let b = i / 2;
+                    let w = u32::from_le_bytes([
+                        src[b],
+                        src[b + 1],
+                        src[b + 2],
+                        src[b + 3],
+                    ]);
+                    let lanes = _mm256_srlv_epi32(
+                        _mm256_set1_epi32(w as i32),
+                        sh,
+                    );
+                    _mm256_storeu_si256(
+                        out.as_mut_ptr().add(i) as *mut __m256i,
+                        _mm256_srai_epi32(
+                            _mm256_slli_epi32(lanes, 28),
+                            28,
+                        ),
+                    );
+                    i += 8;
+                }
+            }
+            2 => {
+                let sh = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                while i < full {
+                    let b = i / 4;
+                    let w =
+                        u16::from_le_bytes([src[b], src[b + 1]]) as u32;
+                    let lanes = _mm256_srlv_epi32(
+                        _mm256_set1_epi32(w as i32),
+                        sh,
+                    );
+                    _mm256_storeu_si256(
+                        out.as_mut_ptr().add(i) as *mut __m256i,
+                        _mm256_srai_epi32(
+                            _mm256_slli_epi32(lanes, 30),
+                            30,
+                        ),
+                    );
+                    i += 8;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j);
+        }
+    }
+
+    /// AVX2 deterministic quantize: codes = floor(clamp(w/Δ) + 0.5),
+    /// 8 lanes per iteration, scalar `quantize_dr` on the tail.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_codes_dr_avx2(
+        w: &[f32],
+        delta: f32,
+        bw: BitWidth,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), w.len());
+        let d = _mm256_set1_ps(delta);
+        let qn = _mm256_set1_ps(bw.qn() as f32);
+        let qp = _mm256_set1_ps(bw.qp() as f32);
+        let half = _mm256_set1_ps(0.5);
+        let full = w.len() & !7;
+        let mut i = 0;
+        while i < full {
+            let x =
+                _mm256_div_ps(_mm256_loadu_ps(w.as_ptr().add(i)), d);
+            let x = _mm256_max_ps(_mm256_min_ps(x, qp), qn);
+            let x = _mm256_floor_ps(_mm256_add_ps(x, half));
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_cvttps_epi32(x),
+            );
+            i += 8;
+        }
+        for (j, o) in out[full..].iter_mut().enumerate() {
+            *o = quantize_dr(w[full + j], delta, bw);
+        }
+    }
+
+    /// SSE4.1 dequantize: 4 codes per iteration, scalar ragged tail.
+    ///
+    /// # Safety
+    /// The CPU must support SSE4.1 (checked by the dispatcher).
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dequant_row_sse41(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        delta: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let d = _mm_set1_ps(delta);
+        let full = dim & !3;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let w = i32::from_le_bytes([
+                        src[i],
+                        src[i + 1],
+                        src[i + 2],
+                        src[i + 3],
+                    ]);
+                    let x = _mm_cvtepi8_epi32(_mm_cvtsi32_si128(w));
+                    _mm_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm_mul_ps(_mm_cvtepi32_ps(x), d),
+                    );
+                    i += 4;
+                }
+            }
+            16 => {
+                while i < full {
+                    let v = _mm_loadl_epi64(
+                        src.as_ptr().add(2 * i) as *const __m128i
+                    );
+                    let x = _mm_cvtepi16_epi32(v);
+                    _mm_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm_mul_ps(_mm_cvtepi32_ps(x), d),
+                    );
+                    i += 4;
+                }
+            }
+            4 => {
+                // no variable-shift in SSE: spread the nibbles with
+                // scalar shifts, sign-extend all four lanes at once
+                while i < full {
+                    let b = i / 2;
+                    let w = u16::from_le_bytes([src[b], src[b + 1]])
+                        as i32;
+                    let lanes =
+                        _mm_setr_epi32(w, w >> 4, w >> 8, w >> 12);
+                    let x = _mm_srai_epi32(
+                        _mm_slli_epi32(lanes, 28),
+                        28,
+                    );
+                    _mm_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm_mul_ps(_mm_cvtepi32_ps(x), d),
+                    );
+                    i += 4;
+                }
+            }
+            2 => {
+                while i < full {
+                    let b = src[i / 4] as i32;
+                    let lanes =
+                        _mm_setr_epi32(b, b >> 2, b >> 4, b >> 6);
+                    let x = _mm_srai_epi32(
+                        _mm_slli_epi32(lanes, 30),
+                        30,
+                    );
+                    _mm_storeu_ps(
+                        out.as_mut_ptr().add(i),
+                        _mm_mul_ps(_mm_cvtepi32_ps(x), d),
+                    );
+                    i += 4;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j) as f32 * delta;
+        }
+    }
+
+    /// SSE4.1 unpack to i32 codes.
+    ///
+    /// # Safety
+    /// The CPU must support SSE4.1 (checked by the dispatcher).
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn unpack_row_sse41(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let full = dim & !3;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let w = i32::from_le_bytes([
+                        src[i],
+                        src[i + 1],
+                        src[i + 2],
+                        src[i + 3],
+                    ]);
+                    _mm_storeu_si128(
+                        out.as_mut_ptr().add(i) as *mut __m128i,
+                        _mm_cvtepi8_epi32(_mm_cvtsi32_si128(w)),
+                    );
+                    i += 4;
+                }
+            }
+            16 => {
+                while i < full {
+                    let v = _mm_loadl_epi64(
+                        src.as_ptr().add(2 * i) as *const __m128i
+                    );
+                    _mm_storeu_si128(
+                        out.as_mut_ptr().add(i) as *mut __m128i,
+                        _mm_cvtepi16_epi32(v),
+                    );
+                    i += 4;
+                }
+            }
+            4 => {
+                while i < full {
+                    let b = i / 2;
+                    let w = u16::from_le_bytes([src[b], src[b + 1]])
+                        as i32;
+                    let lanes =
+                        _mm_setr_epi32(w, w >> 4, w >> 8, w >> 12);
+                    _mm_storeu_si128(
+                        out.as_mut_ptr().add(i) as *mut __m128i,
+                        _mm_srai_epi32(_mm_slli_epi32(lanes, 28), 28),
+                    );
+                    i += 4;
+                }
+            }
+            2 => {
+                while i < full {
+                    let b = src[i / 4] as i32;
+                    let lanes =
+                        _mm_setr_epi32(b, b >> 2, b >> 4, b >> 6);
+                    _mm_storeu_si128(
+                        out.as_mut_ptr().add(i) as *mut __m128i,
+                        _mm_srai_epi32(_mm_slli_epi32(lanes, 30), 30),
+                    );
+                    i += 4;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j);
+        }
+    }
+
+    /// SSE4.1 deterministic quantize (4 lanes; see the AVX2 variant).
+    ///
+    /// # Safety
+    /// The CPU must support SSE4.1 (checked by the dispatcher).
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn quantize_codes_dr_sse41(
+        w: &[f32],
+        delta: f32,
+        bw: BitWidth,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), w.len());
+        let d = _mm_set1_ps(delta);
+        let qn = _mm_set1_ps(bw.qn() as f32);
+        let qp = _mm_set1_ps(bw.qp() as f32);
+        let half = _mm_set1_ps(0.5);
+        let full = w.len() & !3;
+        let mut i = 0;
+        while i < full {
+            let x = _mm_div_ps(_mm_loadu_ps(w.as_ptr().add(i)), d);
+            let x = _mm_max_ps(_mm_min_ps(x, qp), qn);
+            let x = _mm_floor_ps(_mm_add_ps(x, half));
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(i) as *mut __m128i,
+                _mm_cvttps_epi32(x),
+            );
+            i += 4;
+        }
+        for (j, o) in out[full..].iter_mut().enumerate() {
+            *o = quantize_dr(w[full + j], delta, bw);
+        }
+    }
+}
+
+// ------------------------------------------------------ aarch64 (NEON)
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::{quantize_dr, BitWidth};
+    use super::extract_code;
+    use core::arch::aarch64::*;
+
+    /// NEON dequantize: 8 codes per iteration (two 4-lane halves for
+    /// the sub-byte widths), scalar ragged tail.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (checked by the dispatcher).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_row(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        delta: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let full = dim & !7;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let v = vld1_s8(src.as_ptr().add(i) as *const i8);
+                    let w = vmovl_s8(v);
+                    let lo = vmovl_s16(vget_low_s16(w));
+                    let hi = vmovl_s16(vget_high_s16(w));
+                    vst1q_f32(
+                        out.as_mut_ptr().add(i),
+                        vmulq_n_f32(vcvtq_f32_s32(lo), delta),
+                    );
+                    vst1q_f32(
+                        out.as_mut_ptr().add(i + 4),
+                        vmulq_n_f32(vcvtq_f32_s32(hi), delta),
+                    );
+                    i += 8;
+                }
+            }
+            16 => {
+                while i < full {
+                    let w = vld1q_s16(
+                        src.as_ptr().add(2 * i) as *const i16
+                    );
+                    let lo = vmovl_s16(vget_low_s16(w));
+                    let hi = vmovl_s16(vget_high_s16(w));
+                    vst1q_f32(
+                        out.as_mut_ptr().add(i),
+                        vmulq_n_f32(vcvtq_f32_s32(lo), delta),
+                    );
+                    vst1q_f32(
+                        out.as_mut_ptr().add(i + 4),
+                        vmulq_n_f32(vcvtq_f32_s32(hi), delta),
+                    );
+                    i += 8;
+                }
+            }
+            4 => {
+                // negative vshlq_u32 counts = logical right shift;
+                // sign-extend via <<28 >>28 like the scalar kernel
+                const LO: [i32; 4] = [0, -4, -8, -12];
+                const HI: [i32; 4] = [-16, -20, -24, -28];
+                let sh_lo = vld1q_s32(LO.as_ptr());
+                let sh_hi = vld1q_s32(HI.as_ptr());
+                while i < full {
+                    let b = i / 2;
+                    let w = u32::from_le_bytes([
+                        src[b],
+                        src[b + 1],
+                        src[b + 2],
+                        src[b + 3],
+                    ]);
+                    let v = vdupq_n_u32(w);
+                    for (half, sh) in [(0, sh_lo), (4, sh_hi)] {
+                        let lanes = vreinterpretq_s32_u32(
+                            vshlq_u32(v, sh),
+                        );
+                        let x = vshrq_n_s32::<28>(
+                            vshlq_n_s32::<28>(lanes),
+                        );
+                        vst1q_f32(
+                            out.as_mut_ptr().add(i + half),
+                            vmulq_n_f32(vcvtq_f32_s32(x), delta),
+                        );
+                    }
+                    i += 8;
+                }
+            }
+            2 => {
+                const LO: [i32; 4] = [0, -2, -4, -6];
+                const HI: [i32; 4] = [-8, -10, -12, -14];
+                let sh_lo = vld1q_s32(LO.as_ptr());
+                let sh_hi = vld1q_s32(HI.as_ptr());
+                while i < full {
+                    let b = i / 4;
+                    let w = u16::from_le_bytes([src[b], src[b + 1]])
+                        as u32;
+                    let v = vdupq_n_u32(w);
+                    for (half, sh) in [(0, sh_lo), (4, sh_hi)] {
+                        let lanes = vreinterpretq_s32_u32(
+                            vshlq_u32(v, sh),
+                        );
+                        let x = vshrq_n_s32::<30>(
+                            vshlq_n_s32::<30>(lanes),
+                        );
+                        vst1q_f32(
+                            out.as_mut_ptr().add(i + half),
+                            vmulq_n_f32(vcvtq_f32_s32(x), delta),
+                        );
+                    }
+                    i += 8;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j) as f32 * delta;
+        }
+    }
+
+    /// NEON unpack to i32 codes.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (checked by the dispatcher).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack_row(
+        src: &[u8],
+        dim: usize,
+        bits: u32,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), dim);
+        let full = dim & !7;
+        let mut i = 0;
+        match bits {
+            8 => {
+                while i < full {
+                    let v = vld1_s8(src.as_ptr().add(i) as *const i8);
+                    let w = vmovl_s8(v);
+                    vst1q_s32(
+                        out.as_mut_ptr().add(i),
+                        vmovl_s16(vget_low_s16(w)),
+                    );
+                    vst1q_s32(
+                        out.as_mut_ptr().add(i + 4),
+                        vmovl_s16(vget_high_s16(w)),
+                    );
+                    i += 8;
+                }
+            }
+            16 => {
+                while i < full {
+                    let w = vld1q_s16(
+                        src.as_ptr().add(2 * i) as *const i16
+                    );
+                    vst1q_s32(
+                        out.as_mut_ptr().add(i),
+                        vmovl_s16(vget_low_s16(w)),
+                    );
+                    vst1q_s32(
+                        out.as_mut_ptr().add(i + 4),
+                        vmovl_s16(vget_high_s16(w)),
+                    );
+                    i += 8;
+                }
+            }
+            4 => {
+                const LO: [i32; 4] = [0, -4, -8, -12];
+                const HI: [i32; 4] = [-16, -20, -24, -28];
+                let sh_lo = vld1q_s32(LO.as_ptr());
+                let sh_hi = vld1q_s32(HI.as_ptr());
+                while i < full {
+                    let b = i / 2;
+                    let w = u32::from_le_bytes([
+                        src[b],
+                        src[b + 1],
+                        src[b + 2],
+                        src[b + 3],
+                    ]);
+                    let v = vdupq_n_u32(w);
+                    for (half, sh) in [(0, sh_lo), (4, sh_hi)] {
+                        let lanes = vreinterpretq_s32_u32(
+                            vshlq_u32(v, sh),
+                        );
+                        vst1q_s32(
+                            out.as_mut_ptr().add(i + half),
+                            vshrq_n_s32::<28>(
+                                vshlq_n_s32::<28>(lanes),
+                            ),
+                        );
+                    }
+                    i += 8;
+                }
+            }
+            2 => {
+                const LO: [i32; 4] = [0, -2, -4, -6];
+                const HI: [i32; 4] = [-8, -10, -12, -14];
+                let sh_lo = vld1q_s32(LO.as_ptr());
+                let sh_hi = vld1q_s32(HI.as_ptr());
+                while i < full {
+                    let b = i / 4;
+                    let w = u16::from_le_bytes([src[b], src[b + 1]])
+                        as u32;
+                    let v = vdupq_n_u32(w);
+                    for (half, sh) in [(0, sh_lo), (4, sh_hi)] {
+                        let lanes = vreinterpretq_s32_u32(
+                            vshlq_u32(v, sh),
+                        );
+                        vst1q_s32(
+                            out.as_mut_ptr().add(i + half),
+                            vshrq_n_s32::<30>(
+                                vshlq_n_s32::<30>(lanes),
+                            ),
+                        );
+                    }
+                    i += 8;
+                }
+            }
+            _ => unreachable!(),
+        }
+        for (j, o) in out[full..dim].iter_mut().enumerate() {
+            *o = extract_code(src, bits, full + j);
+        }
+    }
+
+    /// NEON deterministic quantize (4 lanes; `vrndmq_f32` is floor and
+    /// `vcvtq_s32_f32` truncates — exact after floor).
+    ///
+    /// # Safety
+    /// The CPU must support NEON (checked by the dispatcher).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quantize_codes_dr(
+        w: &[f32],
+        delta: f32,
+        bw: BitWidth,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), w.len());
+        let d = vdupq_n_f32(delta);
+        let qn = vdupq_n_f32(bw.qn() as f32);
+        let qp = vdupq_n_f32(bw.qp() as f32);
+        let half = vdupq_n_f32(0.5);
+        let full = w.len() & !3;
+        let mut i = 0;
+        while i < full {
+            let x = vdivq_f32(vld1q_f32(w.as_ptr().add(i)), d);
+            let x = vmaxq_f32(vminq_f32(x, qp), qn);
+            let x = vrndmq_f32(vaddq_f32(x, half));
+            vst1q_s32(out.as_mut_ptr().add(i), vcvtq_s32_f32(x));
+            i += 4;
+        }
+        for (j, o) in out[full..].iter_mut().enumerate() {
+            *o = quantize_dr(w[full + j], delta, bw);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{PackedTable, Rounding};
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    const ALL_WIDTHS: [BitWidth; 4] =
+        [BitWidth::B2, BitWidth::B4, BitWidth::B8, BitWidth::B16];
+
+    #[test]
+    fn kernel_names_round_trip() {
+        for k in
+            [Kernel::Scalar, Kernel::Sse41, Kernel::Avx2, Kernel::Neon]
+        {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("avx512"), None);
+        assert_eq!(Kernel::from_name(""), None);
+        assert_eq!(Kernel::from_name("AVX2"), None); // names are exact
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_first() {
+        let ks = available();
+        assert_eq!(ks[0], Kernel::Scalar);
+        assert!(ks.contains(&active()));
+        for k in ks {
+            assert!(k.is_supported());
+        }
+    }
+
+    /// Every available SIMD kernel must reproduce the scalar oracle's
+    /// dequantized f32 *bits* — all widths, odd/non-lane-multiple
+    /// dims, tails included.
+    #[test]
+    fn simd_dequant_matches_scalar_bits() {
+        check("simd dequant == scalar", 200, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 67);
+            let delta = g.f32_in(1e-4, 0.3);
+            let mut t = PackedTable::new(1, dim, bw);
+            let codes: Vec<i32> =
+                (0..dim).map(|_| g.i32_in(bw.qn(), bw.qp())).collect();
+            t.write_row(0, &codes);
+            let src = t.raw_rows(0, 1);
+
+            let mut want = vec![0.0f32; dim];
+            crate::quant::packed::dequant_codes(
+                src,
+                dim,
+                bw.bits(),
+                delta,
+                &mut want,
+            );
+            for k in available() {
+                let mut got = vec![f32::NAN; dim];
+                dequant_row(k, src, dim, bw.bits(), delta, &mut got);
+                for c in 0..dim {
+                    if got[c].to_bits() != want[c].to_bits() {
+                        return Err(format!(
+                            "{} col {c}: {} != {} ({}bit dim={dim})",
+                            k.name(),
+                            got[c],
+                            want[c],
+                            bw.bits()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Unpack: every kernel yields the scalar oracle's i32 codes.
+    #[test]
+    fn simd_unpack_matches_scalar() {
+        check("simd unpack == scalar", 200, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 67);
+            let mut t = PackedTable::new(1, dim, bw);
+            let codes: Vec<i32> =
+                (0..dim).map(|_| g.i32_in(bw.qn(), bw.qp())).collect();
+            t.write_row(0, &codes);
+            let src = t.raw_rows(0, 1);
+            for k in available() {
+                let mut got = vec![i32::MIN; dim];
+                unpack_row(k, src, dim, bw.bits(), &mut got);
+                if got != codes {
+                    return Err(format!(
+                        "{} ({}bit dim={dim}): {got:?} != {codes:?}",
+                        k.name(),
+                        bw.bits()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Deterministic quantize→pack: every kernel writes the scalar
+    /// oracle's packed bytes, and padding bits stay zero even when the
+    /// destination starts out dirty.
+    #[test]
+    fn simd_quantize_dr_matches_scalar_bytes() {
+        check("simd quantize DR == scalar", 200, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 67);
+            let delta = g.f32_in(1e-3, 0.1);
+            let w: Vec<f32> =
+                (0..dim).map(|_| g.f32_normal(0.05)).collect();
+            let row_bytes = (dim * bw.bits() as usize).div_ceil(8);
+
+            let mut want = vec![0u8; row_bytes];
+            crate::quant::packed::quantize_dr_codes(
+                &mut want,
+                dim,
+                bw.bits(),
+                bw,
+                &w,
+                delta,
+            );
+            let pad_bits = row_bytes * 8 - dim * bw.bits() as usize;
+            for k in available() {
+                let mut got = vec![0xAAu8; row_bytes];
+                quantize_dr_row(
+                    k,
+                    &mut got,
+                    dim,
+                    bw.bits(),
+                    bw,
+                    &w,
+                    delta,
+                );
+                if got != want {
+                    return Err(format!(
+                        "{} ({}bit dim={dim}): bytes differ",
+                        k.name(),
+                        bw.bits()
+                    ));
+                }
+                if pad_bits > 0
+                    && got[row_bytes - 1] >> (8 - pad_bits) != 0
+                {
+                    return Err(format!(
+                        "{} ({}bit dim={dim}): padding bits set",
+                        k.name(),
+                        bw.bits()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The dim=QCHUNK-straddling case: rows longer than one quantize
+    /// chunk must still match the scalar pipeline byte for byte.
+    #[test]
+    fn quantize_dr_spans_chunks() {
+        for bw in ALL_WIDTHS {
+            let dim = QCHUNK + 13;
+            let w: Vec<f32> = (0..dim)
+                .map(|c| ((c as f32) - 38.0) * 0.011)
+                .collect();
+            let row_bytes = (dim * bw.bits() as usize).div_ceil(8);
+            let mut want = vec![0u8; row_bytes];
+            crate::quant::packed::quantize_dr_codes(
+                &mut want,
+                dim,
+                bw.bits(),
+                bw,
+                &w,
+                0.02,
+            );
+            for k in available() {
+                let mut got = vec![0u8; row_bytes];
+                quantize_dr_row(
+                    k,
+                    &mut got,
+                    dim,
+                    bw.bits(),
+                    bw,
+                    &w,
+                    0.02,
+                );
+                assert_eq!(got, want, "{} {bw:?}", k.name());
+            }
+        }
+    }
+
+    /// The full fused path through `PackedTable` (the store update
+    /// hot loop) stays bit-identical across kernels for DR *and* SR —
+    /// SR is scalar everywhere, so the draws line up by construction.
+    #[test]
+    fn fused_table_quantize_identical_across_kernels() {
+        check("fused quantize across kernels", 100, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 37);
+            let delta = g.f32_in(1e-3, 0.1);
+            let w: Vec<f32> =
+                (0..dim).map(|_| g.f32_normal(0.05)).collect();
+            let seed = g.u32_any() as u64;
+            for rounding in
+                [Rounding::Deterministic, Rounding::Stochastic]
+            {
+                let mut want: Option<Vec<u8>> = None;
+                for k in available() {
+                    let mut t = PackedTable::new(1, dim, bw);
+                    let mut rng = Pcg32::seeded(seed);
+                    t.quantize_row_packed_with(
+                        k, 0, &w, delta, rounding, &mut rng,
+                    );
+                    match &want {
+                        None => want = Some(t.bytes().to_vec()),
+                        Some(want) => {
+                            if t.bytes() != &want[..] {
+                                return Err(format!(
+                                    "{} diverged for {rounding:?} \
+                                     {}bit dim={dim}",
+                                    k.name(),
+                                    bw.bits()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Batched gather (prefetch + per-id Δ) equals row-at-a-time
+    /// scalar dequant for every kernel, duplicate ids included.
+    #[test]
+    fn batched_gather_matches_per_row_scalar() {
+        check("gather_dequant == per-row", 120, |g: &mut Gen| {
+            let bw = *g.pick(&ALL_WIDTHS);
+            let dim = g.usize_in(1, 33);
+            let rows = g.usize_in(1, 50);
+            let mut t = PackedTable::new(rows, dim, bw);
+            let mut rng = Pcg32::seeded(g.u32_any() as u64);
+            for r in 0..rows {
+                let w: Vec<f32> =
+                    (0..dim).map(|_| g.f32_normal(0.1)).collect();
+                t.quantize_row_packed(
+                    r,
+                    &w,
+                    0.01,
+                    Rounding::Stochastic,
+                    &mut rng,
+                );
+            }
+            let deltas: Vec<f32> =
+                (0..rows).map(|_| g.f32_in(1e-4, 0.5)).collect();
+            let n = g.usize_in(1, 64);
+            let ids: Vec<u32> = (0..n)
+                .map(|_| g.usize_in(0, rows - 1) as u32)
+                .collect();
+
+            let mut want = vec![0.0f32; n * dim];
+            for (i, &id) in ids.iter().enumerate() {
+                crate::quant::packed::dequant_codes(
+                    t.raw_rows(id as usize, 1),
+                    dim,
+                    bw.bits(),
+                    deltas[id as usize],
+                    &mut want[i * dim..(i + 1) * dim],
+                );
+            }
+            for k in available() {
+                let mut got = vec![f32::NAN; n * dim];
+                t.gather_dequant_with(
+                    k,
+                    &ids,
+                    |id| deltas[id as usize],
+                    &mut got,
+                );
+                for (c, (a, b)) in
+                    got.iter().zip(&want).enumerate()
+                {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{} elem {c}: {a} != {b} ({}bit \
+                             dim={dim} n={n})",
+                            k.name(),
+                            bw.bits()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -6,8 +6,10 @@
 //! inside the AOT HLO on the model-execution path. Integration tests pin
 //! the two against each other.
 
+pub mod kernels;
 pub mod packed;
 
+pub use kernels::Kernel;
 pub use packed::{PackedTable, RowWriter};
 
 use crate::util::rng::Pcg32;

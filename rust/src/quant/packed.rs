@@ -16,11 +16,18 @@
 //! [`RowWriter`] extends the same write paths to concurrent per-row use
 //! from the sharded update engine.
 //!
+//! The row hot paths (unpack, dequantize, deterministic quantize→pack,
+//! and the batched [`PackedTable::gather_dequant`]) dispatch through
+//! [`super::kernels`] to SIMD implementations picked once per process;
+//! the byte-wise kernels at the bottom of this file are the scalar
+//! reference every SIMD kernel is property-tested against, bit for bit.
+//!
 //! A table's bit width is per *table*, not per process: the
 //! mixed-precision grouped store packs each precision group into its own
 //! `PackedTable`, so one model can mix 2/4/8/16-bit sub-tables while
 //! every kernel here stays width-specialized.
 
+use super::kernels::{self, Kernel};
 use super::{quantize_dr, quantize_sr, BitWidth, Rounding};
 use crate::util::rng::Pcg32;
 use anyhow::{ensure, Result};
@@ -155,64 +162,123 @@ impl PackedTable {
         &mut self.data[base..base + self.row_bytes]
     }
 
-    /// Unpack a whole row into `out` as i32 codes (whole bytes at a time).
+    /// Unpack a whole row into `out` as i32 codes (SIMD-dispatched).
     pub fn read_row(&self, row: usize, out: &mut [i32]) {
         debug_assert_eq!(out.len(), self.dim);
-        unpack_codes(self.row_slice(row), self.dim, self.bits, out);
+        kernels::unpack_row(
+            kernels::active(),
+            self.row_slice(row),
+            self.dim,
+            self.bits,
+            out,
+        );
     }
 
     /// Unpack a row straight to de-quantized f32 (`code * delta`) — the
-    /// gather hot path. Same byte-wise walk as [`PackedTable::read_row`]
-    /// with the scale fused into the store.
+    /// gather hot path, dispatched to the process-wide SIMD kernel
+    /// (bit-identical to the scalar reference; see [`super::kernels`]).
     pub fn read_row_dequant(&self, row: usize, delta: f32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dim);
-        let src = self.row_slice(row);
-        match self.bits {
-            8 => {
-                for (o, &b) in out.iter_mut().zip(src) {
-                    *o = (b as i8 as f32) * delta;
-                }
-            }
-            16 => {
-                for (o, pair) in out.iter_mut().zip(src.chunks_exact(2)) {
-                    *o = i16::from_le_bytes([pair[0], pair[1]]) as f32
-                        * delta;
-                }
-            }
-            4 => {
-                let full = self.dim / 2;
-                let (head, tail) = out.split_at_mut(full * 2);
-                for (o2, &b) in
-                    head.chunks_exact_mut(2).zip(&src[..full])
-                {
-                    o2[0] = (((b as i32) << 28) >> 28) as f32 * delta;
-                    o2[1] = (((b as i32) << 24) >> 28) as f32 * delta;
-                }
-                if let [last] = tail {
-                    *last = (((src[full] as i32) << 28) >> 28) as f32
-                        * delta;
-                }
-            }
-            2 => {
-                let full = self.dim / 4;
-                let (head, tail) = out.split_at_mut(full * 4);
-                for (o4, &b) in
-                    head.chunks_exact_mut(4).zip(&src[..full])
-                {
-                    let b = b as i32;
-                    o4[0] = ((b << 30) >> 30) as f32 * delta;
-                    o4[1] = ((b << 28) >> 30) as f32 * delta;
-                    o4[2] = ((b << 26) >> 30) as f32 * delta;
-                    o4[3] = ((b << 24) >> 30) as f32 * delta;
-                }
-                for (k, o) in tail.iter_mut().enumerate() {
-                    *o = (((src[full] as i32) << (30 - 2 * k as i32))
-                        >> 30) as f32
-                        * delta;
-                }
-            }
-            _ => unreachable!(),
+        kernels::dequant_row(
+            kernels::active(),
+            self.row_slice(row),
+            self.dim,
+            self.bits,
+            delta,
+            out,
+        );
+    }
+
+    /// Batched gather: dequantize the rows named by `ids` into `out`
+    /// (`ids.len() × dim`), with a per-id step size from `delta_of` and
+    /// software prefetch of upcoming row pointers — gathers are random
+    /// access over a table far larger than cache, so each row's bytes
+    /// are requested [`Self::PREFETCH_AHEAD`] iterations early.
+    pub fn gather_dequant(
+        &self,
+        ids: &[u32],
+        delta_of: impl Fn(u32) -> f32,
+        out: &mut [f32],
+    ) {
+        self.gather_dequant_with(kernels::active(), ids, delta_of, out)
+    }
+
+    /// How many rows ahead [`PackedTable::gather_dequant`] prefetches.
+    /// At dim 16 × 4-bit a row is 8 bytes, so ~8 rows ≈ one cache-miss
+    /// latency of decode work in flight.
+    pub const PREFETCH_AHEAD: usize = 8;
+
+    /// [`PackedTable::gather_dequant`] pinned to one kernel — the
+    /// bench/property-test entry point.
+    pub fn gather_dequant_with(
+        &self,
+        k: Kernel,
+        ids: &[u32],
+        delta_of: impl Fn(u32) -> f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), ids.len() * self.dim);
+        if self.dim == 0 {
+            return;
         }
+        for (i, (&id, row)) in
+            ids.iter().zip(out.chunks_mut(self.dim)).enumerate()
+        {
+            if let Some(&ahead) = ids.get(i + Self::PREFETCH_AHEAD) {
+                self.prefetch_row(ahead as usize);
+            }
+            kernels::dequant_row(
+                k,
+                self.row_slice(id as usize),
+                self.dim,
+                self.bits,
+                delta_of(id),
+                row,
+            );
+        }
+    }
+
+    /// Dequantize rows `0..n` in order, one per-row Δ each — the
+    /// wire-byte decode path of the distributed gather cache, where the
+    /// batch's packed rows were staged contiguously. One kernel
+    /// dispatch for the whole batch; no software prefetch (sequential
+    /// reads stream through the hardware prefetcher).
+    pub fn dequant_rows(&self, n: usize, deltas: &[f32], out: &mut [f32]) {
+        debug_assert!(n <= self.rows && n <= deltas.len());
+        debug_assert_eq!(out.len(), n * self.dim);
+        if self.dim == 0 {
+            return;
+        }
+        let k = kernels::active();
+        for (i, row) in out.chunks_mut(self.dim).enumerate() {
+            kernels::dequant_row(
+                k,
+                self.row_slice(i),
+                self.dim,
+                self.bits,
+                deltas[i],
+                row,
+            );
+        }
+    }
+
+    /// Hint the CPU to pull `row`'s first cache line — a no-op outside
+    /// x86_64 (aarch64 has no stable prefetch intrinsic; its hardware
+    /// prefetcher plus the small row footprint cover the gap).
+    #[inline]
+    pub fn prefetch_row(&self, row: usize) {
+        debug_assert!(row < self.rows);
+        #[cfg(target_arch = "x86_64")]
+        // Safety: prefetch is a hint; it cannot fault even on a bad
+        // address, and the pointer is in-bounds by the assert above.
+        unsafe {
+            use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch::<_MM_HINT_T0>(
+                self.data.as_ptr().add(row * self.row_bytes) as *const i8,
+            );
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = row;
     }
 
     /// Pack a row of i32 codes (whole bytes at a time; padding bits in the
@@ -236,11 +302,35 @@ impl PackedTable {
         rounding: Rounding,
         rng: &mut Pcg32,
     ) {
+        self.quantize_row_packed_with(
+            kernels::active(),
+            row,
+            w,
+            delta,
+            rounding,
+            rng,
+        );
+    }
+
+    /// [`PackedTable::quantize_row_packed`] pinned to one kernel — the
+    /// bench/property-test entry point. Only deterministic rounding is
+    /// vectorized; SR always runs the scalar column-order draw loop, so
+    /// every kernel consumes `rng` identically.
+    #[allow(clippy::too_many_arguments)]
+    pub fn quantize_row_packed_with(
+        &mut self,
+        k: Kernel,
+        row: usize,
+        w: &[f32],
+        delta: f32,
+        rounding: Rounding,
+        rng: &mut Pcg32,
+    ) {
         debug_assert_eq!(w.len(), self.dim);
         let (dim, bits) = (self.dim, self.bits);
         let bw = self.bit_width();
-        quantize_into(self.row_slice_mut(row), dim, bits, bw, w, delta,
-                      rounding, rng);
+        quantize_into(k, self.row_slice_mut(row), dim, bits, bw, w,
+                      delta, rounding, rng);
     }
 
     /// Raw packed bytes of rows `[lo, lo + count)` — the checkpoint
@@ -375,15 +465,24 @@ impl RowWriter<'_> {
     ) {
         debug_assert_eq!(w.len(), self.dim);
         let bw = BitWidth::from_bits(self.bits).unwrap();
-        quantize_into(self.row_slice_mut(row), self.dim, self.bits, bw, w,
-                      delta, rounding, rng);
+        quantize_into(kernels::active(), self.row_slice_mut(row),
+                      self.dim, self.bits, bw, w, delta, rounding, rng);
     }
 }
 
 // ------------------------------------------------- byte-wise row kernels
+//
+// The scalar reference kernels. `super::kernels` dispatches to these for
+// `Kernel::Scalar` (and property-tests every SIMD kernel against them),
+// which is why they are `pub(crate)` rather than private.
 
 /// Unpack `dim` sign-extended codes from a byte-padded row.
-fn unpack_codes(src: &[u8], dim: usize, bits: u32, out: &mut [i32]) {
+pub(crate) fn unpack_codes(
+    src: &[u8],
+    dim: usize,
+    bits: u32,
+    out: &mut [i32],
+) {
     match bits {
         8 => {
             for (o, &b) in out.iter_mut().zip(src) {
@@ -424,8 +523,67 @@ fn unpack_codes(src: &[u8], dim: usize, bits: u32, out: &mut [i32]) {
     }
 }
 
+/// Dequantize `dim` codes from a byte-padded row: `out[c] = code * delta`.
+pub(crate) fn dequant_codes(
+    src: &[u8],
+    dim: usize,
+    bits: u32,
+    delta: f32,
+    out: &mut [f32],
+) {
+    match bits {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(src) {
+                *o = (b as i8 as f32) * delta;
+            }
+        }
+        16 => {
+            for (o, pair) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = i16::from_le_bytes([pair[0], pair[1]]) as f32
+                    * delta;
+            }
+        }
+        4 => {
+            let full = dim / 2;
+            let (head, tail) = out.split_at_mut(full * 2);
+            for (o2, &b) in head.chunks_exact_mut(2).zip(&src[..full])
+            {
+                o2[0] = (((b as i32) << 28) >> 28) as f32 * delta;
+                o2[1] = (((b as i32) << 24) >> 28) as f32 * delta;
+            }
+            if let [last] = tail {
+                *last = (((src[full] as i32) << 28) >> 28) as f32
+                    * delta;
+            }
+        }
+        2 => {
+            let full = dim / 4;
+            let (head, tail) = out.split_at_mut(full * 4);
+            for (o4, &b) in head.chunks_exact_mut(4).zip(&src[..full])
+            {
+                let b = b as i32;
+                o4[0] = ((b << 30) >> 30) as f32 * delta;
+                o4[1] = ((b << 28) >> 30) as f32 * delta;
+                o4[2] = ((b << 26) >> 30) as f32 * delta;
+                o4[3] = ((b << 24) >> 30) as f32 * delta;
+            }
+            for (k, o) in tail.iter_mut().enumerate() {
+                *o = (((src[full] as i32) << (30 - 2 * k as i32))
+                    >> 30) as f32
+                    * delta;
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
 /// Pack `dim` codes into a byte-padded row; padding bits end up zero.
-fn pack_codes(dst: &mut [u8], dim: usize, bits: u32, codes: &[i32]) {
+pub(crate) fn pack_codes(
+    dst: &mut [u8],
+    dim: usize,
+    bits: u32,
+    codes: &[i32],
+) {
     #[cfg(debug_assertions)]
     {
         let bw = BitWidth::from_bits(bits).unwrap();
@@ -482,10 +640,14 @@ fn pack_codes(dst: &mut [u8], dim: usize, bits: u32, codes: &[i32]) {
 
 /// Quantize `w` and pack in one pass. SR draws happen in column order so
 /// the result is bit-identical to `quantize_row` + `write_row` run on the
-/// same generator state.
+/// same generator state. DR has no draws, so it is free to vectorize:
+/// it routes through `kernels::quantize_dr_row` for the chosen kernel,
+/// while SR always runs the scalar draw loop (any kernel, same bytes,
+/// same final generator state).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn quantize_into(
+    k: Kernel,
     dst: &mut [u8],
     dim: usize,
     bits: u32,
@@ -497,7 +659,7 @@ fn quantize_into(
 ) {
     match rounding {
         Rounding::Deterministic => {
-            pack_with(dst, dim, bits, w, &mut |x| quantize_dr(x, delta, bw))
+            kernels::quantize_dr_row(k, dst, dim, bits, bw, w, delta)
         }
         Rounding::Stochastic => {
             pack_with(dst, dim, bits, w, &mut |x| {
@@ -505,6 +667,20 @@ fn quantize_into(
             })
         }
     }
+}
+
+/// Scalar fused deterministic quantize→pack — the oracle
+/// `kernels::quantize_dr_row` reduces to for `Kernel::Scalar` and
+/// property-tests the SIMD kernels against.
+pub(crate) fn quantize_dr_codes(
+    dst: &mut [u8],
+    dim: usize,
+    bits: u32,
+    bw: BitWidth,
+    w: &[f32],
+    delta: f32,
+) {
+    pack_with(dst, dim, bits, w, &mut |x| quantize_dr(x, delta, bw));
 }
 
 /// Byte-wise packing driven by a per-element `code` closure, evaluated in

@@ -251,6 +251,12 @@ impl InferenceEngine {
         self.store.method_name()
     }
 
+    /// The SIMD kernel decoding packed rows under every score call
+    /// (process-wide dispatch; see [`crate::quant::kernels`]).
+    pub fn kernel_name(&self) -> &'static str {
+        crate::quant::kernels::active().name()
+    }
+
     pub fn n_features(&self) -> usize {
         self.store.n_features()
     }

@@ -479,6 +479,7 @@ fn route(stream: &mut TcpStream, ctx: &Ctx, req: Request) -> Result<()> {
                         ctx.stats.errors.load(Ordering::Relaxed) as f64
                     ),
                 ),
+                ("kernel", Json::str(engine.kernel_name())),
                 ("method", Json::str(engine.method_name())),
                 ("p50_ms", Json::num(lat.percentile_ms(50.0))),
                 ("p95_ms", Json::num(lat.percentile_ms(95.0))),

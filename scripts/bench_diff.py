@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Diff a freshly generated BENCH_micro.json against the committed
+baseline and shout (but never fail) when a key row regresses.
+
+Usage:
+    python3 scripts/bench_diff.py BASELINE.json CURRENT.json [--warn-pct 20]
+
+Both files use the ``write_report`` schema::
+
+    {"schema_version": 1, "meta": {...}, "benchmarks": [
+        {"name": ..., "median_ns": ..., ...}, ...]}
+
+Comparison is on ``median_ns`` (lower is better). Rows present on only
+one side are listed informationally. A regression beyond ``--warn-pct``
+emits a GitHub Actions ``::warning::`` annotation so it is loud in the
+PR checks UI, but the exit code is always 0: shared-runner noise makes
+a hard gate flakier than it is useful, and the committed baseline may
+have been produced on different hardware. Self-skips (exit 0, note on
+stderr) when the baseline file is absent — e.g. the very first PR that
+introduces the report.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Rows that carry the perf contract of the SIMD kernel layer and the
+# serving path. Substring match so bit widths / thread counts roll in.
+KEY_PREFIXES = [
+    "dequant row",
+    "packed gather",
+    "quantize_row_packed DR",
+    "fused quantize_row_packed",
+    "LPT-4bit update",
+    "LPT-8bit update",
+    "engine score",
+]
+
+
+def load_rows(path):
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    rows = {}
+    for row in doc.get("benchmarks", []):
+        name = row.get("name")
+        med = row.get("median_ns")
+        if name is not None and isinstance(med, (int, float)) and med > 0:
+            rows[name] = float(med)
+    return doc.get("meta", {}), rows
+
+
+def is_key(name):
+    return any(name.startswith(p) for p in KEY_PREFIXES)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--warn-pct", type=float, default=20.0,
+                    help="warn when median_ns grows by more than this "
+                         "percentage (default: 20)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_diff: no baseline at {args.baseline}; skipping "
+              "(first report?)", file=sys.stderr)
+        return 0
+    if not os.path.exists(args.current):
+        print(f"bench_diff: current report {args.current} missing; "
+              "did the bench run?", file=sys.stderr)
+        return 0
+
+    base_meta, base = load_rows(args.baseline)
+    cur_meta, cur = load_rows(args.current)
+    print(f"bench_diff: baseline meta={base_meta} current meta={cur_meta}")
+    if base_meta.get("kernel") != cur_meta.get("kernel"):
+        print(f"bench_diff: note: kernel differs "
+              f"({base_meta.get('kernel')} -> {cur_meta.get('kernel')}); "
+              "ratios mix kernel and hardware effects")
+
+    regressions = []
+    print(f"{'row':<48} {'base':>12} {'cur':>12} {'ratio':>7}")
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        ratio = c / b
+        flag = ""
+        if is_key(name) and ratio > 1.0 + args.warn_pct / 100.0:
+            flag = "  <-- REGRESSION"
+            regressions.append((name, b, c, ratio))
+        print(f"{name:<48} {b:>10.0f}ns {c:>10.0f}ns {ratio:>6.2f}x{flag}")
+    for name in sorted(set(base) - set(cur)):
+        print(f"{name:<48} {'(dropped from current report)':>34}")
+    for name in sorted(set(cur) - set(base)):
+        print(f"{name:<48} {'(new row, no baseline)':>34}")
+
+    if regressions:
+        for name, b, c, ratio in regressions:
+            # GitHub Actions annotation: shows up inline on the PR
+            print(f"::warning title=bench regression::{name} median "
+                  f"{b:.0f}ns -> {c:.0f}ns ({ratio:.2f}x, threshold "
+                  f"{1.0 + args.warn_pct / 100.0:.2f}x)")
+        print(f"bench_diff: {len(regressions)} key row(s) regressed "
+              f">{args.warn_pct:.0f}% (warning only, not failing CI)",
+              file=sys.stderr)
+    else:
+        print("bench_diff: no key-row regressions beyond "
+              f"{args.warn_pct:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
