@@ -7,13 +7,21 @@
 use alpt::config::{Experiment, Method, PrecisionPlan, RoundingMode};
 use alpt::coordinator::net::{self, GatherReq, GatherResp, Op, UpdateReq};
 use alpt::coordinator::sharding::step_comm;
-use alpt::coordinator::{CommStats, RowPartition};
-use alpt::data::batcher::Batcher;
+use alpt::coordinator::{
+    run_worker, CommStats, RowPartition, RpcConfig, WorkerHub, WorkerOpts,
+};
+use alpt::data::batcher::{Batch, Batcher};
 use alpt::data::synthetic::{generate, SyntheticSpec};
-use alpt::embedding::{build_store, EmbeddingStore, Persistable};
-use alpt::util::bench::fmt_rate;
+use alpt::embedding::{
+    build_store, EmbeddingStore, Persistable, RemoteStore, UpdateHp,
+};
+use alpt::quant::BitWidth;
+use alpt::util::bench::{fmt_rate, Bencher};
+use alpt::util::json::Json;
 use alpt::util::rng::Pcg32;
-use std::time::Instant;
+use anyhow::Result;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 fn alpt8_exp() -> Experiment {
     Experiment {
@@ -198,10 +206,215 @@ fn main() {
             fmt_rate(rows as f64 / dt)
         );
     }
+    // the tentpole measured end to end: real run_worker shards over
+    // loopback TCP, driven through RemoteStore in its three schedules —
+    // serial (one blocking round trip per shard in turn), fan-out
+    // (parallel shard round trips, wall-clock = max over shards), and
+    // pipelined (fan-out + the next batch's GATHER sent right behind
+    // this batch's UPDATE frames). Same math in all three; only the
+    // wire schedule changes.
+    println!(
+        "\ndistributed RPC gather+update over loopback (ALPT-8bit, \
+         B=256):"
+    );
+    let rpc_batches =
+        &batches[..batches.len().min(if quick { 20 } else { 60 })];
+    let total_rows: f64 =
+        rpc_batches.iter().map(|b| b.unique.len() as f64).sum();
+    let max_k = rpc_batches
+        .iter()
+        .map(|b| b.unique.len())
+        .max()
+        .unwrap_or(0)
+        * dim;
+    let mut out = vec![0.0f32; max_k];
+    let grads: Vec<f32> = (0..max_k)
+        .map(|i| ((i % 13) as f32 - 6.0) * 0.002)
+        .collect();
+    let hp = UpdateHp {
+        lr_emb: 0.05,
+        wd_emb: 0.0,
+        lr_delta: 1e-4,
+        wd_delta: 0.0,
+        grad_scale: 1.0,
+        lr_scale: 1.0,
+    };
+    let mut b = Bencher {
+        warmup: Duration::from_millis(if quick { 0 } else { 50 }),
+        target: Duration::from_millis(if quick { 1 } else { 400 }),
+        samples: if quick { 1 } else { 8 },
+        rows: Vec::new(),
+    };
+    for workers in [1usize, 2, 4] {
+        let (mut store, handles) =
+            attach_loopback(&exp, n, dim, workers);
+        let mut rng = Pcg32::seeded(9 + workers as u64);
+        for (cfg_name, fan, overlap) in [
+            ("serial", false, false),
+            ("fan-out", true, false),
+            ("pipelined", true, true),
+        ] {
+            store.set_fan_out(fan);
+            store.set_overlap(overlap);
+            let name =
+                format!("RPC gather+update {cfg_name} {workers}sh");
+            b.bench_units(&name, Some(total_rows), || {
+                rpc_pass(
+                    &mut store,
+                    rpc_batches,
+                    dim,
+                    overlap,
+                    &hp,
+                    &mut rng,
+                    &mut out,
+                    &grads,
+                );
+            });
+        }
+        store.shutdown().expect("worker shutdown");
+        drop(store);
+        for h in handles {
+            h.join().expect("worker thread").expect("worker exit");
+        }
+    }
+    merge_micro_report(&b, quick);
+
     println!(
         "\nshape check (paper §1/§2.3): traffic scales with the bit width \
          — 8-bit ALPT cuts total bytes ~2.4x vs FP (uplink stays f32), \
          the downlink alone shrinks ~3.2x at d=16, and real framing adds \
          only a few percent on top of the model."
     );
+}
+
+/// Bind a port-0 hub, spawn `workers` live `run_worker` serve loops
+/// against it, and attach a [`RemoteStore`] seeded from a fresh local
+/// table.
+fn attach_loopback(
+    exp: &Experiment,
+    n: usize,
+    dim: usize,
+    workers: usize,
+) -> (RemoteStore, Vec<JoinHandle<Result<()>>>) {
+    let mut rng = Pcg32::seeded(42);
+    let local = build_store(exp, n, dim, &mut rng).expect("local store");
+    let cfg = RpcConfig {
+        timeout_ms: 60_000,
+        accept_timeout_ms: 60_000,
+        ..RpcConfig::default()
+    };
+    let hub = WorkerHub::bind("127.0.0.1:0", cfg).expect("bind hub");
+    let addr = hub.local_addr().expect("hub addr").to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let opts = WorkerOpts {
+                connect: addr.clone(),
+                idle_timeout_ms: 60_000,
+                connect_retries: 200,
+                retry_delay_ms: 25,
+                ..WorkerOpts::default()
+            };
+            std::thread::spawn(move || run_worker(&opts))
+        })
+        .collect();
+    let store = RemoteStore::attach(local.as_ref(), exp, hub, workers)
+        .expect("attach workers");
+    (store, handles)
+}
+
+/// One training-shaped pass: gather + update per batch, with the
+/// batch-ahead GATHER issued behind the UPDATE frames when `pipelined`.
+/// Ends on an epoch barrier so the timing covers full completion of
+/// every in-flight frame, not just the sends.
+#[allow(clippy::too_many_arguments)]
+fn rpc_pass(
+    store: &mut RemoteStore,
+    batches: &[Batch],
+    dim: usize,
+    pipelined: bool,
+    hp: &UpdateHp,
+    rng: &mut Pcg32,
+    out: &mut [f32],
+    grads: &[f32],
+) {
+    let mut zero_sp = |_w: &[f32],
+                       dl: &[f32],
+                       _: &[BitWidth]|
+     -> Result<Vec<f32>> { Ok(vec![0.0f32; dl.len()]) };
+    for (i, batch) in batches.iter().enumerate() {
+        let k = batch.unique.len() * dim;
+        store.gather(&batch.unique, &mut out[..k]);
+        store
+            .update(&batch.unique, &out[..k], &grads[..k], hp, rng,
+                    &mut zero_sp)
+            .expect("rpc update");
+        if pipelined {
+            if let Some(next) = batches.get(i + 1) {
+                store.prefetch_ids(&next.unique);
+            }
+        }
+    }
+    store.barrier().expect("drain barrier");
+}
+
+/// Merge this bench's rows into `BENCH_micro.json` without disturbing
+/// the micro bench's rows (`scripts/bench_smoke.sh` asserts on those):
+/// read the existing report if present, drop any stale `RPC
+/// gather+update` rows, append the fresh ones, and rewrite the
+/// document. Run `cargo bench --bench micro` first for a full report.
+fn merge_micro_report(b: &Bencher, quick: bool) {
+    let path = std::path::Path::new("BENCH_micro.json");
+    let fresh = match b.to_json() {
+        Json::Array(rows) => rows,
+        _ => unreachable!("to_json returns an array"),
+    };
+    let prior = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok());
+    let mut kept: Vec<Json> = prior
+        .as_ref()
+        .and_then(|doc| doc.get("benchmarks").ok())
+        .and_then(|rows| rows.as_array().ok())
+        .map(|rows| {
+            rows.iter()
+                .filter(|row| {
+                    row.get("name")
+                        .ok()
+                        .and_then(|n| n.as_str().ok())
+                        .map(|n| !n.starts_with("RPC gather+update"))
+                        .unwrap_or(true)
+                })
+                .cloned()
+                .collect()
+        })
+        .unwrap_or_default();
+    let n_kept = kept.len();
+    kept.extend(fresh);
+    let meta = prior
+        .as_ref()
+        .and_then(|doc| doc.get("meta").ok())
+        .cloned()
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("bench", Json::str("comm")),
+                ("quick", Json::Bool(quick)),
+            ])
+        });
+    let doc = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("meta", meta),
+        ("benchmarks", Json::Array(kept)),
+    ]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!(
+            "\n[merged {} RPC rows into BENCH_micro.json alongside {} \
+             existing rows]",
+            b.rows.len(),
+            n_kept
+        ),
+        Err(e) => {
+            eprintln!("failed to write BENCH_micro.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -23,6 +23,7 @@
 //! frames without a connection; [`read_frame`]/[`write_frame`] move
 //! them over any `Read`/`Write`.
 
+use std::collections::VecDeque;
 use std::io::{ErrorKind, Read as IoRead, Write as IoWrite};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -414,10 +415,22 @@ pub const BARRIER_EPOCH: u8 = 2;
 /// Coordinator-side handle to one worker: sends requests, validates
 /// responses (magic, CRC, seq echo, response flag), surfaces remote
 /// `Err` frames as local errors naming the worker.
+///
+/// Requests and responses are decoupled ([`send_request`] /
+/// [`recv_response`]) so callers can keep several frames in flight per
+/// connection; the link tracks outstanding `(op, seq)` pairs and
+/// enforces that responses come back in FIFO order — the worker's
+/// serve loop is strictly serial, so any out-of-order or unsolicited
+/// seq is a protocol violation, not something to reorder around.
+///
+/// [`send_request`]: WorkerLink::send_request
+/// [`recv_response`]: WorkerLink::recv_response
 pub struct WorkerLink {
     stream: TcpStream,
     seq: u16,
     max_frame: u64,
+    /// Requests written but not yet answered, in send order.
+    pending: VecDeque<(Op, u16)>,
 }
 
 impl WorkerLink {
@@ -427,7 +440,12 @@ impl WorkerLink {
         stream
             .set_read_timeout(Some(Duration::from_millis(cfg.timeout_ms)))
             .context("rpc set_read_timeout")?;
-        Ok(WorkerLink { stream, seq: 0, max_frame: cfg.max_frame })
+        Ok(WorkerLink {
+            stream,
+            seq: 0,
+            max_frame: cfg.max_frame,
+            pending: VecDeque::new(),
+        })
     }
 
     /// Dial a coordinator (worker side), retrying while it boots.
@@ -458,11 +476,38 @@ impl WorkerLink {
         self.stream.peer_addr().ok()
     }
 
-    /// One request/response round trip.
-    pub fn call(&mut self, op: Op, payload: &[u8]) -> Result<Vec<u8>> {
+    /// Write one request frame without waiting for the reply; returns
+    /// the seq the eventual response must echo. The matching
+    /// [`recv_response`](WorkerLink::recv_response) may be issued any
+    /// number of sends later — the worker answers in FIFO order.
+    pub fn send_request(&mut self, op: Op, payload: &[u8]) -> Result<u16> {
         let seq = self.seq;
         self.seq = self.seq.wrapping_add(1);
         write_frame(&mut self.stream, op, 0, seq, payload)?;
+        self.pending.push_back((op, seq));
+        Ok(seq)
+    }
+
+    /// Requests sent but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Opcode of the oldest outstanding request — the one the next
+    /// [`recv_response`](WorkerLink::recv_response) will answer.
+    pub fn next_pending_op(&self) -> Option<Op> {
+        self.pending.front().map(|&(op, _)| op)
+    }
+
+    /// Read the response for the *oldest* outstanding request and
+    /// validate it (response flag, seq echo, opcode match). Responses
+    /// arriving for any other seq — reordered, duplicated, or
+    /// unsolicited — are protocol errors: the serve loop is serial, so
+    /// FIFO is the only legal order.
+    pub fn recv_response(&mut self) -> Result<Vec<u8>> {
+        let Some((op, seq)) = self.pending.pop_front() else {
+            bail!("rpc recv with no request in flight");
+        };
         let (rop, rflags, rseq, rpayload) =
             read_frame(&mut self.stream, self.max_frame)?;
         if rop == Op::Err {
@@ -475,12 +520,30 @@ impl WorkerLink {
             bail!("rpc {op:?}: peer sent a request, expected a response");
         }
         if rseq != seq {
-            bail!("rpc {op:?}: response seq {rseq} != request seq {seq}");
+            bail!(
+                "rpc {op:?}: response seq {rseq} != oldest in-flight seq \
+                 {seq} (responses must arrive in FIFO order)"
+            );
         }
         if rop != op {
             bail!("rpc {op:?}: response opcode {rop:?} does not match");
         }
         Ok(rpayload)
+    }
+
+    /// One request/response round trip. Requires no other requests in
+    /// flight (a synchronous call in the middle of a pipelined window
+    /// would steal the oldest response).
+    pub fn call(&mut self, op: Op, payload: &[u8]) -> Result<Vec<u8>> {
+        if !self.pending.is_empty() {
+            bail!(
+                "rpc {op:?}: synchronous call with {} request(s) still in \
+                 flight",
+                self.pending.len()
+            );
+        }
+        self.send_request(op, payload)?;
+        self.recv_response()
     }
 
     /// The raw stream (the worker reuses its HELLO connection as the
@@ -674,6 +737,76 @@ mod tests {
         let mut client = WorkerLink::connect(&addr, &cfg).unwrap();
         let reply = client.call(Op::Barrier, &[BARRIER_EPOCH]).unwrap();
         assert_eq!(reply, vec![BARRIER_EPOCH]);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_send_recv_matches_fifo() {
+        let cfg = RpcConfig {
+            accept_timeout_ms: 5_000,
+            timeout_ms: 5_000,
+            ..RpcConfig::default()
+        };
+        let hub = WorkerHub::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let stream = hub.accept_worker().unwrap();
+            let mut link = WorkerLink::from_stream(stream, &cfg).unwrap();
+            // serve three back-to-back requests in arrival order, like
+            // the worker's serial loop
+            for _ in 0..3 {
+                let (op, _, seq, payload) =
+                    read_frame(&mut link.stream, cfg.max_frame).unwrap();
+                write_frame(&mut link.stream, op, FLAG_RESPONSE, seq, &payload)
+                    .unwrap();
+            }
+        });
+        let mut client = WorkerLink::connect(&addr, &cfg).unwrap();
+        // window of three outstanding requests on one connection
+        client.send_request(Op::Gather, b"a").unwrap();
+        client.send_request(Op::Update, b"bb").unwrap();
+        client.send_request(Op::Gather, b"ccc").unwrap();
+        assert_eq!(client.in_flight(), 3);
+        assert_eq!(client.recv_response().unwrap(), b"a");
+        assert_eq!(client.recv_response().unwrap(), b"bb");
+        assert_eq!(client.recv_response().unwrap(), b"ccc");
+        assert_eq!(client.in_flight(), 0);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_or_unsolicited_responses_are_rejected() {
+        let cfg = RpcConfig {
+            accept_timeout_ms: 5_000,
+            timeout_ms: 5_000,
+            ..RpcConfig::default()
+        };
+        let hub = WorkerHub::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let stream = hub.accept_worker().unwrap();
+            let mut link = WorkerLink::from_stream(stream, &cfg).unwrap();
+            // answer the two requests in the WRONG order
+            let (op0, _, seq0, p0) =
+                read_frame(&mut link.stream, cfg.max_frame).unwrap();
+            let (op1, _, seq1, p1) =
+                read_frame(&mut link.stream, cfg.max_frame).unwrap();
+            write_frame(&mut link.stream, op1, FLAG_RESPONSE, seq1, &p1)
+                .unwrap();
+            write_frame(&mut link.stream, op0, FLAG_RESPONSE, seq0, &p0)
+                .unwrap();
+        });
+        let mut client = WorkerLink::connect(&addr, &cfg).unwrap();
+        // recv with nothing outstanding is an error, not a hang
+        let err = client.recv_response().unwrap_err().to_string();
+        assert!(err.contains("no request in flight"), "{err}");
+        client.send_request(Op::Gather, b"first").unwrap();
+        client.send_request(Op::Barrier, b"second").unwrap();
+        let err = client.recv_response().unwrap_err().to_string();
+        assert!(err.contains("FIFO"), "{err}");
+        // a synchronous call may not jump a non-empty pipeline
+        let err = client.call(Op::Barrier, &[]).unwrap_err().to_string();
+        assert!(err.contains("in flight"), "{err}");
         server.join().unwrap();
     }
 }

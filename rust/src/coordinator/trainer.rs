@@ -151,6 +151,9 @@ pub struct Trainer {
     /// Row ids dirtied since the last continuous save. Only maintained
     /// while a journal is open — full saves never need it.
     dirty: BTreeSet<u32>,
+    /// Batch-ahead RPC pipelining for distributed stores
+    /// (`--no-overlap` clears it). Local stores ignore it.
+    rpc_overlap: bool,
 }
 
 impl Trainer {
@@ -247,7 +250,19 @@ impl Trainer {
             early_stop: EarlyStop::default(),
             journal: None,
             dirty: BTreeSet::new(),
+            rpc_overlap: true,
         })
+    }
+
+    /// Enable/disable batch-ahead RPC pipelining (`--no-overlap`).
+    /// Takes effect immediately, including on an already-attached
+    /// remote store. Checkpoints are byte-identical either way; the
+    /// switch exists as a debugging escape hatch.
+    pub fn set_rpc_overlap(&mut self, on: bool) {
+        self.rpc_overlap = on;
+        if let Some(remote) = self.store.as_remote() {
+            remote.set_overlap(on);
+        }
     }
 
     /// Current LR decay multiplier for `epoch` (1-based).
@@ -618,10 +633,16 @@ impl Trainer {
                     .collect();
             let mut loss_sum = 0.0f64;
             let mut steps = 0usize;
-            for batch in &batches {
+            for (i, batch) in batches.iter().enumerate() {
                 let out = self.step(batch, epoch)?;
                 loss_sum += out.loss as f64;
                 steps += 1;
+                // feed the next batch's ids into the RPC pipeline: the
+                // GATHER goes out right behind this batch's UPDATE
+                // frames (a no-op for local stores / --no-overlap)
+                if let Some(next) = batches.get(i + 1) {
+                    self.store.prefetch_ids(&next.unique);
+                }
             }
             // epoch barrier: every worker acks (liveness + all updates
             // applied) before validation reads the table
@@ -830,14 +851,34 @@ impl Trainer {
                 }
                 Ok(true)
             };
+            // one-batch lookahead so the distributed store can issue
+            // batch k+1's GATHER right after batch k's UPDATE frames:
+            // hold each batch until its successor arrives, step the
+            // held one, then hand the successor's ids to the pipeline
+            let mut held: Option<Batch> = None;
             if depth > 0 {
                 with_prefetch(stream, f, b, Tail::Drop, depth, |batch| {
-                    on_batch(self, batch)
+                    if let Some(prev) = held.take() {
+                        on_batch(self, prev)?;
+                        self.store.prefetch_ids(&batch.unique);
+                    }
+                    held = Some(batch);
+                    Ok(true)
                 })?;
             } else {
                 for item in StreamBatcher::new(stream, f, b, Tail::Drop) {
-                    on_batch(self, item?)?;
+                    let batch = item?;
+                    if let Some(prev) = held.take() {
+                        on_batch(self, prev)?;
+                        self.store.prefetch_ids(&batch.unique);
+                    }
+                    held = Some(batch);
                 }
+            }
+            // the final batch has no successor, so no prefetch is left
+            // outstanding when the epoch barrier / evaluation runs
+            if let Some(last) = held.take() {
+                on_batch(self, last)?;
             }
             // a fresh epoch that yields not even one full batch means the
             // source is effectively empty for training (file too small —
@@ -934,6 +975,7 @@ impl Trainer {
             hub,
             workers,
         )?;
+        remote.set_overlap(self.rpc_overlap);
         println!(
             "embedding table sharded across {workers} worker(s): {} rows, \
              {} per shard (max)",

@@ -13,6 +13,16 @@
 //! each UPDATE frame and rows key their streams by *global* id, so a
 //! row quantizes identically whether it lives in-process or on any
 //! shard of any N-worker layout.
+//!
+//! The serve loop is strictly serial — read one frame, process it,
+//! respond, repeat — and that seriality is a load-bearing part of the
+//! coordinator's pipelining contract: when the coordinator writes
+//! UPDATE(k) and the batch-ahead GATHER(k+1) back to back, TCP's
+//! per-connection ordering plus this loop guarantee update k is fully
+//! applied before gather k+1 reads a single row. Requests queued
+//! behind the one being served sit in the buffered reader; responses
+//! go out in arrival order, which is what the coordinator's FIFO
+//! response matching asserts.
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -300,9 +310,14 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     // attach barrier (load_aux_params wants the whole shard at once).
     let mut delta_stage = vec![0.0f32; a.part.shard_rows(a.shard).max(1)];
     let mut updates_served: u64 = 0;
-    let mut stream = link.into_stream();
+    // split the connection: pipelined coordinators write several
+    // requests back to back, so reads go through a buffer (one syscall
+    // can pull in the whole burst) while responses flush per frame
+    let stream = link.into_stream();
+    let mut writer = stream.try_clone().context("worker stream clone")?;
+    let mut reader = std::io::BufReader::new(stream);
     loop {
-        let (op, flags, seq, payload) = read_frame(&mut stream, cfg.max_frame)
+        let (op, flags, seq, payload) = read_frame(&mut reader, cfg.max_frame)
             .with_context(|| {
                 format!(
                     "worker shard {}: coordinator connection lost or \
@@ -382,7 +397,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         })();
         match result {
             Ok(resp) => {
-                write_frame(&mut stream, op, FLAG_RESPONSE, seq, &resp)?;
+                write_frame(&mut writer, op, FLAG_RESPONSE, seq, &resp)?;
                 if op == Op::Shutdown {
                     eprintln!(
                         "[worker] shard {} served {} updates, shutting down",
@@ -395,7 +410,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
                 // tell the coordinator why before dying loudly
                 let msg = format!("{e:#}");
                 write_frame(
-                    &mut stream,
+                    &mut writer,
                     Op::Err,
                     FLAG_RESPONSE,
                     seq,

@@ -206,6 +206,13 @@ pub trait EmbeddingStore: Persistable + RowStats + Send + Sync {
     /// Hook for per-step housekeeping (pruning schedules).
     fn end_step(&mut self) {}
 
+    /// Hint that `ids` will be the next batch's gather. Local stores
+    /// ignore it; the distributed [`RemoteStore`] uses it to issue the
+    /// batch-ahead GATHER right behind the current batch's UPDATE
+    /// frames, overlapping the round trip with the coordinator's
+    /// forward/backward work.
+    fn prefetch_ids(&self, _ids: &[u32]) {}
+
     /// Downcast to the mixed-precision [`GroupedStore`], whose checkpoint
     /// layout (format v2) carries one section run per precision group.
     /// `None` for every single-table store.

@@ -8,6 +8,31 @@
 //! plus the `(draw, step)` pair that keys the stochastic-rounding
 //! streams, so workers quantize bit-identically to a single process.
 //!
+//! # Overlap
+//!
+//! The hot path is both *parallel* and *pipelined*:
+//!
+//! - **Fan-out**: every multi-shard wave (gather, update, aux gather,
+//!   barriers, checkpoint reads) runs one scoped thread per shard, so
+//!   per-batch wall-clock is the max over shards, not the sum. The
+//!   gather caches are locked only for the final copy-in; decode and
+//!   the network wait happen outside.
+//! - **Batch-ahead prefetch**: with overlap on (the default), `update`
+//!   only *writes* its frames, and [`prefetch`](RemoteStore::prefetch)
+//!   then writes the GATHER for the *next* batch on the same
+//!   connections. Responses are collected just-in-time — one parallel
+//!   recv wave at the next `gather` — into a second cache that is
+//!   swapped in when the ids match.
+//!
+//! Overlap does not loosen the bit-identity contract: each worker's
+//! serve loop is strictly serial and each connection is FIFO, so a
+//! worker always applies update *k* before serving the prefetched
+//! gather for batch *k+1*. Rows shared between consecutive batches are
+//! therefore observed exactly as a fully synchronous schedule would
+//! observe them, and N-worker checkpoints stay byte-identical to
+//! single-process training. `--no-overlap` restores the synchronous
+//! schedule for debugging; checkpoints are identical either way.
+//!
 //! Checkpointing is layout-free: `save_rows` reassembles rows in
 //! canonical *global* order from whatever shards own them, so a
 //! checkpoint written under N workers is byte-identical to the
@@ -17,6 +42,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -31,18 +57,50 @@ use crate::coordinator::sharding::RowPartition;
 use crate::embedding::{
     EmbeddingStore, Persistable, RowStats, SecondPass, UpdateHp,
 };
+use crate::metrics::LatencyHistogram;
 use crate::quant::{delta_from_clip, BitWidth, PackedTable};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
-/// Batch staging area: the packed rows + Δ of the last gathered batch,
-/// kept in wire form so `quantized_view` and ALPT's second pass read
-/// the exact bytes the workers hold.
+/// Batch staging area: the packed rows + Δ of one gathered batch, kept
+/// in wire form so `quantized_view` and ALPT's second pass read the
+/// exact bytes the workers hold. The store keeps two — the current
+/// batch and the prefetch target — and swaps them on a prefetch hit.
 struct GatherCache {
     ids: Vec<u32>,
     cap: usize,
     table: PackedTable,
     delta: Vec<f32>,
+}
+
+impl GatherCache {
+    fn empty(d: usize, bw: BitWidth) -> GatherCache {
+        GatherCache {
+            ids: Vec::new(),
+            cap: 0,
+            table: PackedTable::new(0, d, bw),
+            delta: Vec::new(),
+        }
+    }
+
+    /// Grow the staging table to hold `n` rows (never shrinks).
+    fn ensure_cap(&mut self, n: usize, d: usize, bw: BitWidth) {
+        if n > self.cap {
+            self.cap = n.next_power_of_two();
+            self.table = PackedTable::new(self.cap, d, bw);
+        }
+        self.delta.resize(self.cap, 0.0);
+    }
+}
+
+/// A batch-ahead GATHER in flight: ids were sent to the shards right
+/// after the previous batch's UPDATE frames; responses are still on
+/// the wire and will be drained into the `next` cache by `settle`.
+struct Prefetch {
+    ids: Vec<u32>,
+    /// Per-shard `(batch positions, global ids)` from `part.split`,
+    /// computed once at send time.
+    splits: Vec<(Vec<usize>, Vec<u32>)>,
 }
 
 /// An embedding table sharded across worker processes (see module
@@ -66,11 +124,45 @@ pub struct RemoteStore {
     part: RowPartition,
     links: Vec<Mutex<WorkerLink>>,
     max_frame: u64,
+    /// The current batch's staged rows.
     cache: Mutex<GatherCache>,
+    /// The prefetch target; swapped into `cache` on a prefetch hit.
+    next: Mutex<GatherCache>,
+    /// The batch-ahead GATHER awaiting collection, if any.
+    prefetch: Mutex<Option<Prefetch>>,
+    /// Batch-ahead pipelining on/off (`--no-overlap` clears it).
+    overlap: AtomicBool,
+    /// Parallel shard fan-out on/off (benches toggle it to measure the
+    /// serial baseline; always on in training).
+    fan_out_on: AtomicBool,
+    /// Any frames written without their responses collected yet.
+    has_inflight: AtomicBool,
+    /// Per-shard wall-clock of every response-bearing RPC wave.
+    rpc_lat: Vec<LatencyHistogram>,
     /// Δ table mirror for `aux_params`'s borrowed-slice contract;
     /// refreshed at every `prepare_save` quiesce. Empty for LPT.
     aux_cache: Vec<f32>,
     shut: AtomicBool,
+}
+
+/// Encode one GATHER payload per shard (`None` where the shard owns
+/// none of the batch), outside any lock.
+fn gather_payloads(
+    splits: &[(Vec<usize>, Vec<u32>)],
+    aux_only: bool,
+) -> Vec<Option<Vec<u8>>> {
+    splits
+        .iter()
+        .map(|(_, globals)| {
+            if globals.is_empty() {
+                None
+            } else {
+                let req =
+                    GatherReq { aux_only, ids: globals.clone() };
+                Some(req.encode())
+            }
+        })
+        .collect()
 }
 
 impl RemoteStore {
@@ -227,14 +319,17 @@ impl RemoteStore {
             infer_bytes: local.infer_bytes(),
             step: local.step_counter(),
             part,
+            rpc_lat: (0..links.len())
+                .map(|_| LatencyHistogram::new())
+                .collect(),
             links,
             max_frame: cfg.max_frame,
-            cache: Mutex::new(GatherCache {
-                ids: Vec::new(),
-                cap: 0,
-                table: PackedTable::new(0, d, bw),
-                delta: Vec::new(),
-            }),
+            cache: Mutex::new(GatherCache::empty(d, bw)),
+            next: Mutex::new(GatherCache::empty(d, bw)),
+            prefetch: Mutex::new(None),
+            overlap: AtomicBool::new(true),
+            fan_out_on: AtomicBool::new(true),
+            has_inflight: AtomicBool::new(false),
             aux_cache: aux_all.to_vec(),
             shut: AtomicBool::new(false),
         })
@@ -244,73 +339,231 @@ impl RemoteStore {
         self.part.n_shards()
     }
 
-    fn call_shard(
+    /// Enable/disable batch-ahead pipelining (`--no-overlap` clears
+    /// it). With overlap off, `update` waits for every shard's ack and
+    /// `prefetch` is a no-op — the fully synchronous schedule.
+    pub fn set_overlap(&self, on: bool) {
+        self.overlap.store(on, Ordering::SeqCst);
+    }
+
+    pub fn overlap_enabled(&self) -> bool {
+        self.overlap.load(Ordering::SeqCst)
+    }
+
+    /// Enable/disable parallel shard fan-out (benches toggle it off to
+    /// measure the serial per-shard baseline).
+    pub fn set_fan_out(&self, on: bool) {
+        self.fan_out_on.store(on, Ordering::SeqCst);
+    }
+
+    /// Per-shard wall-clock histograms of every response-bearing RPC
+    /// wave since attach (gathers, update acks/drains, barriers,
+    /// checkpoint reads). Indexed by shard.
+    pub fn rpc_latency(&self) -> &[LatencyHistogram] {
+        &self.rpc_lat
+    }
+
+    /// Run `f` once per shard against that shard's link. With more
+    /// than one shard (and fan-out enabled) the shards run on scoped
+    /// threads, so the wave costs the slowest shard, not the sum.
+    /// Results come back in shard order; the first error wins and is
+    /// annotated with the shard index. `record` adds each shard's
+    /// wall-clock to its latency histogram (off for send-only waves,
+    /// which complete in microseconds and would drown the signal).
+    fn fan_out<R, F>(&self, record: bool, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize, &mut WorkerLink) -> Result<R> + Sync,
+    {
+        let run_one = |shard: usize| -> Result<R> {
+            let start = Instant::now();
+            let mut link = self.links[shard].lock().unwrap();
+            let out = f(shard, &mut link)
+                .with_context(|| format!("worker shard {shard}"));
+            if record {
+                self.rpc_lat[shard]
+                    .record_ms(start.elapsed().as_secs_f64() * 1e3);
+            }
+            out
+        };
+        let n = self.links.len();
+        if n == 1 || !self.fan_out_on.load(Ordering::Relaxed) {
+            return (0..n).map(run_one).collect();
+        }
+        std::thread::scope(|scope| {
+            let run_one = &run_one;
+            let handles: Vec<_> = (0..n)
+                .map(|shard| scope.spawn(move || run_one(shard)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Copy one shard's GATHER reply into a staging cache at the
+    /// batch positions the shard owns. The caller holds the cache lock
+    /// only for this copy-in; decode happened outside it.
+    fn store_shard_rows(
         &self,
+        cache: &mut GatherCache,
         shard: usize,
-        op: Op,
-        payload: &[u8],
-    ) -> Result<Vec<u8>> {
-        self.links[shard]
-            .lock()
-            .unwrap()
-            .call(op, payload)
-            .with_context(|| format!("worker shard {shard}"))
+        positions: &[usize],
+        resp: &GatherResp,
+    ) -> Result<()> {
+        let rb = self.row_bytes;
+        ensure!(
+            resp.row_bytes as usize == rb
+                && resp.rows.len() == positions.len() * rb,
+            "shard {shard} GATHER returned {} bytes of {}-byte rows \
+             for {} ids",
+            resp.rows.len(),
+            resp.row_bytes,
+            positions.len()
+        );
+        if self.is_alpt {
+            ensure!(
+                resp.aux.len() == positions.len(),
+                "shard {shard} GATHER returned {} deltas for {} ids",
+                resp.aux.len(),
+                positions.len()
+            );
+        }
+        for (k, &pos) in positions.iter().enumerate() {
+            cache
+                .table
+                .load_raw_rows(pos, &resp.rows[k * rb..(k + 1) * rb])?;
+            cache.delta[pos] = if self.is_alpt {
+                resp.aux[k]
+            } else {
+                self.lpt_delta
+            };
+        }
+        Ok(())
+    }
+
+    /// Drain every outstanding response: pipelined UPDATE acks are
+    /// checked and discarded, the batch-ahead GATHER replies land in
+    /// the `next` cache. One parallel recv wave per call; a no-op when
+    /// nothing is in flight. Every response-bearing RPC goes through
+    /// here first, so a synchronous caller can never steal a frame
+    /// that belongs to the pipeline.
+    fn settle(&self) -> Result<()> {
+        let pf = self.prefetch.lock().unwrap().take();
+        if !self.has_inflight.swap(false, Ordering::SeqCst) {
+            return Ok(());
+        }
+        if let Some(pf) = &pf {
+            let mut next = self.next.lock().unwrap();
+            next.ensure_cap(pf.ids.len(), self.d, self.bw);
+            next.ids.clear();
+        }
+        let pf_ref = &pf;
+        self.fan_out(true, |shard, link| {
+            while link.in_flight() > 0 {
+                let op = link.next_pending_op().unwrap();
+                let payload = link.recv_response()?;
+                if op != Op::Gather {
+                    continue; // an UPDATE ack: validated, nothing to keep
+                }
+                let pf = pf_ref.as_ref().with_context(|| {
+                    format!(
+                        "shard {shard} sent a GATHER reply with no \
+                         prefetch outstanding"
+                    )
+                })?;
+                let resp = GatherResp::decode(&payload)?;
+                let mut next = self.next.lock().unwrap();
+                self.store_shard_rows(
+                    &mut next,
+                    shard,
+                    &pf.splits[shard].0,
+                    &resp,
+                )?;
+            }
+            Ok(())
+        })?;
+        if let Some(pf) = pf {
+            let mut next = self.next.lock().unwrap();
+            next.ids = pf.ids;
+        }
+        Ok(())
+    }
+
+    /// Issue the GATHER for the *next* batch without waiting for the
+    /// replies. Called by the trainer right after `update` wrote batch
+    /// k's frames, so on every connection the worker sees UPDATE(k)
+    /// before GATHER(k+1) — FIFO order is the determinism argument.
+    /// No-op with overlap off. Infallible like `gather`, and for the
+    /// same reason: a dead worker means training cannot continue.
+    pub fn prefetch(&self, ids: &[u32]) {
+        if ids.is_empty() || !self.overlap.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Err(e) = self.send_prefetch(ids) {
+            panic!("distributed prefetch failed: {e:#}");
+        }
+    }
+
+    fn send_prefetch(&self, ids: &[u32]) -> Result<()> {
+        let mut pf = self.prefetch.lock().unwrap();
+        if pf.is_some() {
+            // one batch-ahead window only; keep the earlier prefetch
+            return Ok(());
+        }
+        let splits = self.part.split(ids);
+        let payloads = gather_payloads(&splits, false);
+        self.fan_out(false, |shard, link| {
+            if let Some(p) = &payloads[shard] {
+                link.send_request(Op::Gather, p)?;
+            }
+            Ok(())
+        })?;
+        *pf = Some(Prefetch { ids: ids.to_vec(), splits });
+        self.has_inflight.store(true, Ordering::SeqCst);
+        Ok(())
     }
 
     /// Fetch packed rows + Δ for `ids` into the cache (the fallible
-    /// core of `gather`).
+    /// core of `gather`): drain the pipeline, then either swap in the
+    /// prefetched batch (the hot path) or fan a synchronous GATHER
+    /// out to all shards.
     fn fetch_batch(&self, ids: &[u32]) -> Result<()> {
-        let rb = self.row_bytes;
-        let mut cache = self.cache.lock().unwrap();
-        if ids.len() > cache.cap {
-            cache.cap = ids.len().next_power_of_two();
-            cache.table = PackedTable::new(cache.cap, self.d, self.bw);
-        }
-        cache.delta.resize(cache.cap, 0.0);
-        for (shard, (positions, globals)) in
-            self.part.split(ids).into_iter().enumerate()
+        self.settle()?;
         {
-            if globals.is_empty() {
-                continue;
-            }
-            let req = GatherReq { aux_only: false, ids: globals };
-            let resp = self.call_shard(shard, Op::Gather, &req.encode())?;
-            let resp = GatherResp::decode(&resp)?;
-            ensure!(
-                resp.row_bytes as usize == rb
-                    && resp.rows.len() == positions.len() * rb,
-                "shard {shard} GATHER returned {} bytes of {}-byte rows \
-                 for {} ids",
-                resp.rows.len(),
-                resp.row_bytes,
-                positions.len()
-            );
-            if self.is_alpt {
-                ensure!(
-                    resp.aux.len() == positions.len(),
-                    "shard {shard} GATHER returned {} deltas for {} ids",
-                    resp.aux.len(),
-                    positions.len()
-                );
-            }
-            for (k, &pos) in positions.iter().enumerate() {
-                cache
-                    .table
-                    .load_raw_rows(pos, &resp.rows[k * rb..(k + 1) * rb])?;
-                cache.delta[pos] = if self.is_alpt {
-                    resp.aux[k]
-                } else {
-                    self.lpt_delta
-                };
+            let mut next = self.next.lock().unwrap();
+            if next.ids == ids {
+                let mut cache = self.cache.lock().unwrap();
+                std::mem::swap(&mut *cache, &mut *next);
+                next.ids.clear();
+                return Ok(());
             }
         }
+        let splits = self.part.split(ids);
+        let payloads = gather_payloads(&splits, false);
+        {
+            let mut cache = self.cache.lock().unwrap();
+            cache.ensure_cap(ids.len(), self.d, self.bw);
+            cache.ids.clear();
+        }
+        self.fan_out(true, |shard, link| {
+            let Some(p) = &payloads[shard] else { return Ok(()) };
+            let resp = GatherResp::decode(&link.call(Op::Gather, p)?)?;
+            let mut cache = self.cache.lock().unwrap();
+            self.store_shard_rows(
+                &mut cache,
+                shard,
+                &splits[shard].0,
+                &resp,
+            )
+        })?;
+        let mut cache = self.cache.lock().unwrap();
         cache.ids.clear();
         cache.ids.extend_from_slice(ids);
         Ok(())
     }
 
     /// Per-id Δ for the batch, from the cache when it matches (the
-    /// trainer always gathers first) or a fresh aux round trip.
+    /// trainer always gathers first) or a fresh fanned-out aux round
+    /// trip.
     fn deltas_for(&self, ids: &[u32]) -> Result<Vec<f32>> {
         {
             let cache = self.cache.lock().unwrap();
@@ -323,23 +576,25 @@ impl RemoteStore {
             out.fill(self.lpt_delta);
             return Ok(out);
         }
-        for (shard, (positions, globals)) in
-            self.part.split(ids).into_iter().enumerate()
-        {
-            if globals.is_empty() {
-                continue;
-            }
-            let req = GatherReq { aux_only: true, ids: globals };
-            let resp = self.call_shard(shard, Op::Gather, &req.encode())?;
-            let resp = GatherResp::decode(&resp)?;
+        self.settle()?;
+        let splits = self.part.split(ids);
+        let payloads = gather_payloads(&splits, true);
+        let shard_aux = self.fan_out(true, |shard, link| {
+            let Some(p) = &payloads[shard] else {
+                return Ok(Vec::new());
+            };
+            let resp = GatherResp::decode(&link.call(Op::Gather, p)?)?;
             ensure!(
-                resp.aux.len() == positions.len(),
+                resp.aux.len() == splits[shard].0.len(),
                 "shard {shard} aux GATHER returned {} deltas for {} ids",
                 resp.aux.len(),
-                positions.len()
+                splits[shard].0.len()
             );
-            for (k, &pos) in positions.iter().enumerate() {
-                out[pos] = resp.aux[k];
+            Ok(resp.aux)
+        })?;
+        for (shard, aux) in shard_aux.into_iter().enumerate() {
+            for (k, &pos) in splits[shard].0.iter().enumerate() {
+                out[pos] = aux[k];
             }
         }
         Ok(out)
@@ -348,12 +603,11 @@ impl RemoteStore {
     /// Epoch barrier: every worker acks, proving it is alive and has
     /// applied all updates sent so far.
     pub fn barrier(&self) -> Result<()> {
-        for shard in 0..self.part.n_shards() {
-            self.call_shard(shard, Op::Barrier, &[BARRIER_EPOCH])
-                .with_context(|| {
-                    format!("epoch barrier: worker shard {shard}")
-                })?;
-        }
+        self.settle()?;
+        self.fan_out(true, |_, link| {
+            link.call(Op::Barrier, &[BARRIER_EPOCH]).map(|_| ())
+        })
+        .context("epoch barrier")?;
         Ok(())
     }
 
@@ -363,9 +617,10 @@ impl RemoteStore {
         if self.shut.swap(true, Ordering::SeqCst) {
             return Ok(());
         }
-        for shard in 0..self.part.n_shards() {
-            self.call_shard(shard, Op::Shutdown, &[])?;
-        }
+        self.settle()?;
+        self.fan_out(true, |_, link| {
+            link.call(Op::Shutdown, &[]).map(|_| ())
+        })?;
         Ok(())
     }
 }
@@ -373,6 +628,7 @@ impl RemoteStore {
 impl Drop for RemoteStore {
     fn drop(&mut self) {
         if !self.shut.swap(true, Ordering::SeqCst) {
+            self.settle().ok();
             for link in &self.links {
                 if let Ok(mut link) = link.lock() {
                     link.call(Op::Shutdown, &[]).ok();
@@ -402,7 +658,9 @@ impl EmbeddingStore for RemoteStore {
 
     /// Infallible by trait contract: a dead worker here means the
     /// training step cannot produce correct results, so fail the
-    /// process loudly rather than return garbage.
+    /// process loudly rather than return garbage. This is also where a
+    /// worker lost *between* batches surfaces — the settle drain finds
+    /// the broken connection before the swap.
     fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
         if let Err(e) = self.fetch_batch(ids) {
@@ -412,6 +670,12 @@ impl EmbeddingStore for RemoteStore {
         // them with the batch-sequential SIMD dequantize
         let cache = self.cache.lock().unwrap();
         cache.table.dequant_rows(ids.len(), &cache.delta, out);
+    }
+
+    /// Feed the ids of the batch after next into the pipeline (see
+    /// [`RemoteStore::prefetch`]).
+    fn prefetch_ids(&self, ids: &[u32]) {
+        self.prefetch(ids);
     }
 
     fn update(
@@ -458,10 +722,12 @@ impl EmbeddingStore for RemoteStore {
         let hp_arr =
             [hp.lr_emb, hp.wd_emb, hp.lr_delta, hp.wd_delta, hp.grad_scale,
              hp.lr_scale];
-        for (shard, (positions, globals)) in
-            self.part.split(ids).into_iter().enumerate()
-        {
+        // encode every shard's frame before touching any link
+        let mut payloads: Vec<Option<Vec<u8>>> =
+            Vec::with_capacity(self.part.n_shards());
+        for (positions, globals) in self.part.split(ids) {
             if globals.is_empty() {
+                payloads.push(None);
                 continue;
             }
             let mut shard_grads = Vec::with_capacity(positions.len() * d);
@@ -484,8 +750,29 @@ impl EmbeddingStore for RemoteStore {
                 grads: shard_grads,
                 d_delta: shard_dd,
             };
-            self.call_shard(shard, Op::Update, &req.encode())
-                .context("distributed update")?;
+            payloads.push(Some(req.encode()));
+        }
+        if self.overlap.load(Ordering::Relaxed) {
+            // pipelined: write the frames and move on; the acks ride
+            // back with the prefetched GATHER replies at the next
+            // settle. FIFO per connection keeps the worker's apply
+            // order identical to the synchronous schedule.
+            self.fan_out(false, |shard, link| {
+                if let Some(p) = &payloads[shard] {
+                    link.send_request(Op::Update, p)?;
+                }
+                Ok(())
+            })
+            .context("distributed update (pipelined send)")?;
+            self.has_inflight.store(true, Ordering::SeqCst);
+        } else {
+            self.fan_out(true, |shard, link| {
+                if let Some(p) = &payloads[shard] {
+                    link.call(Op::Update, p)?;
+                }
+                Ok(())
+            })
+            .context("distributed update")?;
         }
         Ok(())
     }
@@ -541,33 +828,34 @@ impl Persistable for RemoteStore {
     /// Reassemble rows `[lo, lo + count)` in canonical global order
     /// from whatever shards own them — this is what makes checkpoints
     /// layout-free (byte-identical to single-process, reloadable under
-    /// any worker count).
+    /// any worker count). Each chunk is one parallel GATHER wave.
     fn save_rows(&self, lo: usize, dst: &mut [u8]) -> Result<()> {
         let rb = self.row_bytes;
         ensure!(dst.len() % rb == 0, "unaligned row payload");
         let count = dst.len() / rb;
         ensure!(lo + count <= self.n, "rows out of range");
+        self.settle()?;
         let chunk = frame_chunk_rows(self.max_frame, rb);
         let mut c_lo = lo;
         while c_lo < lo + count {
             let c_hi = (c_lo + chunk).min(lo + count);
             let ids: Vec<u32> = (c_lo..c_hi).map(|g| g as u32).collect();
-            for (shard, (positions, globals)) in
-                self.part.split(&ids).into_iter().enumerate()
-            {
-                if globals.is_empty() {
-                    continue;
-                }
-                let req = GatherReq { aux_only: false, ids: globals };
+            let splits = self.part.split(&ids);
+            let payloads = gather_payloads(&splits, false);
+            let shard_resps = self.fan_out(true, |shard, link| {
+                let Some(p) = &payloads[shard] else { return Ok(None) };
                 let resp =
-                    self.call_shard(shard, Op::Gather, &req.encode())?;
-                let resp = GatherResp::decode(&resp)?;
+                    GatherResp::decode(&link.call(Op::Gather, p)?)?;
                 ensure!(
                     resp.row_bytes as usize == rb
-                        && resp.rows.len() == positions.len() * rb,
+                        && resp.rows.len() == splits[shard].0.len() * rb,
                     "shard {shard} returned a malformed checkpoint GATHER"
                 );
-                for (k, &pos) in positions.iter().enumerate() {
+                Ok(Some(resp))
+            })?;
+            for (shard, resp) in shard_resps.into_iter().enumerate() {
+                let Some(resp) = resp else { continue };
+                for (k, &pos) in splits[shard].0.iter().enumerate() {
                     let g = c_lo + pos;
                     dst[(g - lo) * rb..(g - lo + 1) * rb]
                         .copy_from_slice(&resp.rows[k * rb..(k + 1) * rb]);
@@ -605,14 +893,14 @@ impl Persistable for RemoteStore {
     }
 
     /// Quiesce every worker, then mirror the Δ table so the subsequent
-    /// `aux_params` calls serve checkpoint-coherent values.
+    /// `aux_params` calls serve checkpoint-coherent values. Both the
+    /// quiesce and the aux sweep are parallel waves.
     fn prepare_save(&mut self) -> Result<()> {
-        for shard in 0..self.part.n_shards() {
-            self.call_shard(shard, Op::Barrier, &[BARRIER_QUIESCE])
-                .with_context(|| {
-                    format!("checkpoint quiesce: worker shard {shard}")
-                })?;
-        }
+        self.settle()?;
+        self.fan_out(true, |_, link| {
+            link.call(Op::Barrier, &[BARRIER_QUIESCE]).map(|_| ())
+        })
+        .context("checkpoint quiesce")?;
         if !self.is_alpt {
             return Ok(());
         }
@@ -623,24 +911,25 @@ impl Persistable for RemoteStore {
         while lo < self.n {
             let hi = (lo + chunk).min(self.n);
             let ids: Vec<u32> = (lo..hi).map(|g| g as u32).collect();
-            for (shard, (positions, globals)) in
-                self.part.split(&ids).into_iter().enumerate()
-            {
-                if globals.is_empty() {
-                    continue;
-                }
-                let req = GatherReq { aux_only: true, ids: globals };
+            let splits = self.part.split(&ids);
+            let payloads = gather_payloads(&splits, true);
+            let shard_aux = self.fan_out(true, |shard, link| {
+                let Some(p) = &payloads[shard] else {
+                    return Ok(Vec::new());
+                };
                 let resp =
-                    self.call_shard(shard, Op::Gather, &req.encode())?;
-                let resp = GatherResp::decode(&resp)?;
+                    GatherResp::decode(&link.call(Op::Gather, p)?)?;
                 ensure!(
-                    resp.aux.len() == positions.len(),
+                    resp.aux.len() == splits[shard].0.len(),
                     "shard {shard} returned {} deltas for {} ids",
                     resp.aux.len(),
-                    positions.len()
+                    splits[shard].0.len()
                 );
-                for (k, &pos) in positions.iter().enumerate() {
-                    aux[lo + pos] = resp.aux[k];
+                Ok(resp.aux)
+            })?;
+            for (shard, sa) in shard_aux.into_iter().enumerate() {
+                for (k, &pos) in splits[shard].0.iter().enumerate() {
+                    aux[lo + pos] = sa[k];
                 }
             }
             lo = hi;

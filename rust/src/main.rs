@@ -41,7 +41,10 @@ USAGE:
                worker` processes; bit-identical to single-process)
               [--listen-worker HOST:PORT]  (worker registration address,
                127.0.0.1:4700)
+              [--no-overlap]  (disable batch-ahead RPC pipelining; the
+               synchronous schedule — checkpoints are identical either way)
               [--rpc-timeout-ms MS] [--max-frame BYTES[k|m|g]]
+              [--connect-retries N] [--retry-delay-ms MS]
   alpt worker [--connect HOST:PORT]  (serve one embedding shard to a
                coordinator started with --workers; 127.0.0.1:4700)
               [--idle-timeout-ms MS]  (exit if the coordinator goes
@@ -78,7 +81,10 @@ plan (`cat:4,num:8`, `f3:2,f7:16,default:8`, structural kinds `hash` /
 
 fn main() -> Result<()> {
     let args =
-        Args::from_env(true, &["no-runtime", "quiet", "help", "watch"])?;
+        Args::from_env(
+            true,
+            &["no-runtime", "no-overlap", "quiet", "help", "watch"],
+        )?;
     if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -202,12 +208,17 @@ fn train(args: &Args) -> Result<()> {
         let d = alpt::coordinator::RpcConfig::default();
         let cfg = alpt::coordinator::RpcConfig {
             timeout_ms: args.get_parse("rpc-timeout-ms", d.timeout_ms)?,
+            connect_retries: args
+                .get_parse("connect-retries", d.connect_retries)?,
+            retry_delay_ms: args
+                .get_parse("retry-delay-ms", d.retry_delay_ms)?,
             max_frame: match args.get("max-frame") {
                 Some(s) => alpt::cli::parse_bytes("max-frame", s)?,
                 None => d.max_frame,
             },
             ..d
         };
+        trainer.set_rpc_overlap(!args.flag("no-overlap"));
         trainer.attach_workers(&listen, n_workers, cfg)?;
     }
     let exp = trainer.exp.clone();
@@ -242,9 +253,31 @@ fn train(args: &Args) -> Result<()> {
         println!("checkpoint saved to {path}");
     }
     if let Some(remote) = trainer.store.as_remote() {
+        print_rpc_latency(remote);
         remote.shutdown()?;
     }
     Ok(())
+}
+
+/// Per-shard RPC latency lines for the train report: one line per
+/// worker, covering every response-bearing wave (gathers, update
+/// acks/drains, barriers, checkpoint reads) since attach. A shard
+/// whose p99 stands out is the straggler bounding the fan-out.
+fn print_rpc_latency(remote: &alpt::embedding::RemoteStore) {
+    for (shard, h) in remote.rpc_latency().iter().enumerate() {
+        if h.count() == 0 {
+            continue;
+        }
+        println!(
+            "  rpc shard {shard}: {} waves  mean {:.2} ms  p50 {:.2} ms  \
+             p99 {:.2} ms  max {:.2} ms",
+            h.count(),
+            h.mean_ms(),
+            h.percentile_ms(50.0),
+            h.percentile_ms(99.0),
+            h.max_ms()
+        );
+    }
 }
 
 /// The streaming training path (`criteo:<path>` / `synthetic[:name]`):
@@ -316,6 +349,7 @@ fn train_streaming(trainer: &mut Trainer, args: &Args) -> Result<()> {
         println!("checkpoint saved to {}", path.display());
     }
     if let Some(remote) = trainer.store.as_remote() {
+        print_rpc_latency(remote);
         remote.shutdown()?;
     }
     Ok(())

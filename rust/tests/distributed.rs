@@ -13,7 +13,9 @@ use alpt::coordinator::{
     run_worker, sample_requests, RpcConfig, Trainer, WorkerHub, WorkerOpts,
 };
 use alpt::data::registry;
-use alpt::embedding::EmbeddingStore;
+use alpt::embedding::{EmbeddingStore, UpdateHp};
+use alpt::quant::{lsq_delta_grad_row, BitWidth};
+use alpt::util::rng::Pcg32;
 use anyhow::Result;
 
 fn tmp(name: &str) -> PathBuf {
@@ -145,6 +147,189 @@ fn two_workers_train_bit_identical_to_single_process() {
     }
     std::fs::remove_file(&p_single).ok();
     std::fs::remove_file(&p_dist).ok();
+}
+
+/// The overlap acceptance matrix: pipelined (the default) and
+/// `--no-overlap` (synchronous) runs at 1, 2 and 3 workers must all
+/// produce a checkpoint byte-identical to the single-process file —
+/// batch-ahead pipelining changes the wire schedule, never the math.
+#[test]
+fn overlap_matrix_bit_identical_across_worker_counts() {
+    let exp = tiny_exp();
+    let n = registry::open_source(&exp).unwrap().schema().n_features();
+
+    let p_single = tmp("matrix_single.ckpt");
+    {
+        let source = registry::open_source(&exp).unwrap();
+        let mut tr = Trainer::new(exp.clone(), n).unwrap();
+        tr.train_stream(source.as_ref(), false, None).unwrap();
+        tr.save_checkpoint(&p_single).unwrap();
+    }
+    let reference = std::fs::read(&p_single).unwrap();
+    std::fs::remove_file(&p_single).ok();
+
+    for workers in [1usize, 2, 3] {
+        for overlap in [true, false] {
+            let p = tmp(&format!("matrix_{workers}w_ovl{overlap}.ckpt"));
+            let source = registry::open_source(&exp).unwrap();
+            let mut tr = Trainer::new(exp.clone(), n).unwrap();
+            tr.set_rpc_overlap(overlap);
+            let handles = attach(&mut tr, workers);
+            tr.train_stream(source.as_ref(), false, None).unwrap();
+            tr.save_checkpoint(&p).unwrap();
+            shutdown_and_join(tr, handles);
+            assert_eq!(
+                std::fs::read(&p).unwrap(),
+                reference,
+                "{workers}-worker run (overlap={overlap}) is not \
+                 byte-identical to single-process"
+            );
+            std::fs::remove_file(&p).ok();
+        }
+    }
+}
+
+/// The shared per-row hyperparameters / second pass the direct
+/// store-level tests below drive `update` with (the trainer normally
+/// supplies these from the model).
+fn test_hp() -> UpdateHp {
+    UpdateHp {
+        lr_emb: 0.1,
+        wd_emb: 0.0,
+        lr_delta: 1e-3,
+        wd_delta: 0.0,
+        grad_scale: 1.0,
+        lr_scale: 1.0,
+    }
+}
+
+fn eq7_second_pass(
+) -> impl FnMut(&[f32], &[f32], &[BitWidth]) -> Result<Vec<f32>> {
+    move |w_new: &[f32], delta: &[f32], bws: &[BitWidth]| {
+        let d = w_new.len() / delta.len();
+        let ups = vec![1.0f32; d];
+        Ok(delta
+            .iter()
+            .enumerate()
+            .map(|(i, &dl)| {
+                lsq_delta_grad_row(&w_new[i * d..(i + 1) * d], dl, bws[i],
+                                   &ups)
+            })
+            .collect())
+    }
+}
+
+/// Regression for the `deltas_for` cache-miss branch: when `update`
+/// runs for a batch the gather cache no longer holds, the store takes
+/// the fanned-out aux-only round trip — and the result must still be
+/// bit-identical to a local store doing the same update.
+#[test]
+fn update_after_cache_eviction_matches_local_store() {
+    let exp = tiny_exp();
+    let n = registry::open_source(&exp).unwrap().schema().n_features();
+    let mut tr_local = Trainer::new(exp.clone(), n).unwrap();
+    let mut tr_remote = Trainer::new(exp.clone(), n).unwrap();
+    let handles = attach(&mut tr_remote, 2);
+    let d = tr_local.store.dim();
+
+    let ids_b: Vec<u32> = vec![0, 1, 2, 3, 5, 8, 13, 21];
+    let ids_a: Vec<u32> = vec![4, 6, 7];
+
+    let mut emb_l = vec![0.0f32; ids_b.len() * d];
+    tr_local.store.gather(&ids_b, &mut emb_l);
+    let mut emb_r = vec![0.0f32; ids_b.len() * d];
+    tr_remote.store.gather(&ids_b, &mut emb_r);
+    assert_eq!(emb_l, emb_r, "remote gather diverged before the update");
+
+    // evict batch B from the remote gather cache so the update's
+    // deltas_for(B) misses and must take the aux round trip
+    let mut scratch = vec![0.0f32; ids_a.len() * d];
+    tr_remote.store.gather(&ids_a, &mut scratch);
+
+    let grads: Vec<f32> = (0..ids_b.len() * d)
+        .map(|i| ((i % 7) as f32 - 3.0) * 0.01)
+        .collect();
+    let hp = test_hp();
+    let mut sp = eq7_second_pass();
+    let mut rng_l = Pcg32::seeded(77);
+    let mut rng_r = Pcg32::seeded(77);
+    tr_local
+        .store
+        .update(&ids_b, &emb_l, &grads, &hp, &mut rng_l, &mut sp)
+        .unwrap();
+    tr_remote
+        .store
+        .update(&ids_b, &emb_r, &grads, &hp, &mut rng_r, &mut sp)
+        .unwrap();
+
+    let mut after_l = vec![0.0f32; ids_b.len() * d];
+    tr_local.store.gather(&ids_b, &mut after_l);
+    let mut after_r = vec![0.0f32; ids_b.len() * d];
+    tr_remote.store.gather(&ids_b, &mut after_r);
+    assert_eq!(
+        after_l.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        after_r.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "cache-miss update diverged from the local store"
+    );
+    shutdown_and_join(tr_remote, handles);
+}
+
+/// A worker dying with pipelined frames in flight — its UPDATE unacked
+/// and the batch-ahead GATHER already sent — must surface as a loud
+/// failure at the next settle (the drain finds the Err frame or the
+/// closed socket), never as a hang or silently wrong data.
+#[test]
+fn worker_death_with_inflight_prefetch_fails_loudly() {
+    let exp = tiny_exp();
+    let n = registry::open_source(&exp).unwrap().schema().n_features();
+    let mut tr = Trainer::new(exp.clone(), n).unwrap();
+    let hub = WorkerHub::bind("127.0.0.1:0", test_cfg()).unwrap();
+    let addr = hub.local_addr().unwrap().to_string();
+    // shard 0 dies when its second UPDATE frame arrives
+    let handles = spawn_workers(&addr, 2, &[Some(1), None]);
+    tr.attach_workers_hub(hub, 2).unwrap();
+
+    let d = tr.store.dim();
+    let ids: Vec<u32> = (0..16u32).collect();
+    let hp = test_hp();
+    let mut sp = eq7_second_pass();
+    let mut rng = Pcg32::seeded(3);
+    let grads = vec![0.01f32; ids.len() * d];
+
+    // round 1 survives: pipelined UPDATE + prefetch, settled by the
+    // next gather
+    let mut emb = vec![0.0f32; ids.len() * d];
+    tr.store.gather(&ids, &mut emb);
+    tr.store
+        .update(&ids, &emb, &grads, &hp, &mut rng, &mut sp)
+        .unwrap();
+    tr.store.prefetch_ids(&ids);
+
+    // round 2 trips shard 0's failpoint with the prefetch in flight;
+    // the failure must surface by the end of round 3's settle
+    let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let mut out = vec![0.0f32; ids.len() * d];
+        tr.store.gather(&ids, &mut out);
+        tr.store
+            .update(&ids, &out, &grads, &hp, &mut rng, &mut sp)
+            .unwrap();
+        tr.store.prefetch_ids(&ids);
+        let mut out2 = vec![0.0f32; ids.len() * d];
+        tr.store.gather(&ids, &mut out2);
+    }));
+    assert!(
+        outcome.is_err(),
+        "worker death with in-flight prefetches did not fail the run"
+    );
+
+    drop(tr); // best-effort shutdown releases the survivor
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        results[0].is_err(),
+        "the rigged worker should report its injected crash"
+    );
+    assert!(results[1].is_ok(), "the healthy worker should exit cleanly");
 }
 
 /// A worker crashing mid-epoch must fail the run loudly (no hang, no
